@@ -1,0 +1,73 @@
+//! Design-space explorer for the Splatonic accelerator: sweeps unit
+//! counts and feature toggles (preemptive α-checking, Γ/C cache,
+//! aggregation scoreboard) over a real tracking workload and prints
+//! latency / energy / area for each point — the tool a hardware team
+//! would use to re-balance the paper's Sec. VI configuration.
+//!
+//! ```text
+//! cargo run --release --example accel_explorer
+//! ```
+
+use splatonic::bench::{run_variant, print_table};
+use splatonic::config::Variant;
+use splatonic::dataset::Flavor;
+use splatonic::sim::area::area;
+use splatonic::sim::{AccelConfig, AccelModel};
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() {
+    println!("collecting tracking workload (SplaTAM, pixel-based pipeline)...");
+    let run = run_variant(Algorithm::SplaTam, Variant::Splatonic, 0, Flavor::Replica);
+    let iters = run.track_iters;
+
+    // --- unit-count sweep -------------------------------------------------
+    let mut rows = Vec::new();
+    for n_proj in [2u32, 4, 8, 16] {
+        for n_engines in [2u32, 4, 8] {
+            let mut cfg = AccelConfig::splatonic();
+            cfg.n_proj_units = n_proj;
+            cfg.n_raster_engines = n_engines;
+            let m = AccelModel::new(cfg);
+            let cost = m.cost(&run.track, iters);
+            let a = area(&cfg);
+            rows.push((
+                format!("proj={n_proj:<2} engines={n_engines}"),
+                vec![
+                    cost.seconds * 1e3,
+                    cost.joules * 1e3,
+                    a.total(),
+                    cost.seconds * 1e3 * a.total(), // latency-area product
+                ],
+            ));
+        }
+    }
+    print_table(
+        "accelerator design space (tracking workload)",
+        &["ms", "mJ", "mm^2", "ms*mm^2"],
+        &rows,
+    );
+
+    // --- feature ablation ---------------------------------------------------
+    let mut rows = Vec::new();
+    let full = AccelModel::splatonic().cost(&run.track, iters);
+    rows.push(("full Splatonic".to_string(), vec![full.seconds * 1e3, 1.0]));
+    for (name, f) in [
+        ("no Γ/C cache", Box::new(|c: &mut AccelConfig| c.gamma_cache = false)
+            as Box<dyn Fn(&mut AccelConfig)>),
+        ("no scoreboard", Box::new(|c: &mut AccelConfig| c.agg_scoreboard = false)),
+        ("half sorters", Box::new(|c: &mut AccelConfig| c.n_sort_units = 2)),
+        ("half α-filters", Box::new(|c: &mut AccelConfig| c.alpha_filters_per_proj = 2)),
+    ] {
+        let mut cfg = AccelConfig::splatonic();
+        f(&mut cfg);
+        let cost = AccelModel::new(cfg).cost(&run.track, iters);
+        rows.push((
+            name.to_string(),
+            vec![cost.seconds * 1e3, cost.seconds / full.seconds],
+        ));
+    }
+    print_table("feature ablation", &["ms", "slowdown x"], &rows);
+
+    println!("\nworkload: {} tracked frames, ATE {:.2} cm, PSNR {:.1} dB",
+        run.frames_tracked, run.ate_m * 100.0, run.psnr_db);
+}

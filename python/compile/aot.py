@@ -1,0 +1,148 @@
+"""AOT lowering: JAX model (+ Pallas kernel) → HLO **text** artifacts.
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Each artifact is a flat-positional-argument function so the Rust runtime
+can feed plain literals:
+
+  render.hlo.txt     (params..., pose_q, pose_t, intr, pixels, idx)
+                     -> (color [P,3], depth [P], final_t [P])
+  track_step.hlo.txt (..., ref_c, ref_d) -> (loss, dq [4], dt [3])
+  map_step.hlo.txt   (..., ref_c, ref_d) -> (loss, d_means, d_quats,
+                     d_log_scales, d_opacity_logits, d_colors)
+
+Shapes are static: G Gaussians / P pixels / K list slots (manifest.json
+records them; the Rust side pads).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default AOT shapes: P = one pixel per 16x16 tile of a 320x240 frame.
+G_DEFAULT = 32768
+P_DEFAULT = 300
+K_DEFAULT = 32
+
+
+def _param_specs(g):
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((g, 3), f32),   # means
+        jax.ShapeDtypeStruct((g, 4), f32),   # quats
+        jax.ShapeDtypeStruct((g, 3), f32),   # log_scales
+        jax.ShapeDtypeStruct((g,), f32),     # opacity_logits
+        jax.ShapeDtypeStruct((g, 3), f32),   # colors
+    ]
+
+
+def _common_specs(g, p, k):
+    f32 = jnp.float32
+    return _param_specs(g) + [
+        jax.ShapeDtypeStruct((4,), f32),     # pose_q
+        jax.ShapeDtypeStruct((3,), f32),     # pose_t
+        jax.ShapeDtypeStruct((4,), f32),     # intr (fx, fy, cx, cy)
+        jax.ShapeDtypeStruct((p, 2), f32),   # pixels
+        jax.ShapeDtypeStruct((p, k), jnp.int32),  # idx
+    ]
+
+
+def _pack(means, quats, log_scales, opacity_logits, colors):
+    return {
+        "means": means,
+        "quats": quats,
+        "log_scales": log_scales,
+        "opacity_logits": opacity_logits,
+        "colors": colors,
+    }
+
+
+def render_flat(means, quats, log_scales, opacity_logits, colors, pose_q, pose_t, intr, pixels, idx):
+    params = _pack(means, quats, log_scales, opacity_logits, colors)
+    return model.render_sparse(params, pose_q, pose_t, intr, pixels, idx)
+
+
+def track_step_flat(
+    means, quats, log_scales, opacity_logits, colors, pose_q, pose_t, intr, pixels, idx, ref_c, ref_d
+):
+    params = _pack(means, quats, log_scales, opacity_logits, colors)
+    return model.track_step(params, pose_q, pose_t, intr, pixels, idx, ref_c, ref_d)
+
+
+def map_step_flat(
+    means, quats, log_scales, opacity_logits, colors, pose_q, pose_t, intr, pixels, idx, ref_c, ref_d
+):
+    params = _pack(means, quats, log_scales, opacity_logits, colors)
+    loss, grads = model.map_step(params, pose_q, pose_t, intr, pixels, idx, ref_c, ref_d)
+    return (
+        loss,
+        grads["means"],
+        grads["quats"],
+        grads["log_scales"],
+        grads["opacity_logits"],
+        grads["colors"],
+    )
+
+
+def to_hlo_text(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir, g, p, k):
+    os.makedirs(out_dir, exist_ok=True)
+    f32 = jnp.float32
+    common = _common_specs(g, p, k)
+    loss_specs = common + [
+        jax.ShapeDtypeStruct((p, 3), f32),   # ref_c
+        jax.ShapeDtypeStruct((p,), f32),     # ref_d
+    ]
+
+    artifacts = {
+        "render": (render_flat, common),
+        "track_step": (track_step_flat, loss_specs),
+        "map_step": (map_step_flat, loss_specs),
+    }
+    manifest = {"g": g, "p": p, "k": k, "artifacts": {}}
+    for name, (fn, specs) in artifacts.items():
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "n_inputs": len(specs),
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(specs)} inputs)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json (G={g} P={p} K={k})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--g", type=int, default=G_DEFAULT)
+    ap.add_argument("--p", type=int, default=P_DEFAULT)
+    ap.add_argument("--k", type=int, default=K_DEFAULT)
+    args = ap.parse_args()
+    build(args.out, args.g, args.p, args.k)
+
+
+if __name__ == "__main__":
+    main()

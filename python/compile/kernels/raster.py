@@ -1,0 +1,145 @@
+"""L1 — the Pallas Gaussian-parallel compositing kernel.
+
+This is the paper's rasterization hot-spot re-thought for a TPU-style
+target (DESIGN.md §2): preemptive alpha-checking guarantees dense padded
+per-pixel Gaussian lists ``[P, K]``, so the kernel is pure dense VPU
+math — no divergence, no gather:
+
+  * the paper's first cross-thread reduction (transmittance Gamma_i) is an
+    exclusive ``cumprod`` along K;
+  * Gaussian-parallel partial colors + the color-reduction unit become a
+    weighted sum along K.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are identical (see tests vs ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size over the pixel axis. With K=32 and f32, one block
+# holds P_BLK*K*(1+3+1)*4 B = 80 KB in VMEM at P_BLK=128 — comfortably
+# double-bufferable in a 16 MB VMEM.
+P_BLOCK = 128
+
+
+def _composite_kernel(alpha_ref, color_ref, depth_ref, out_c_ref, out_d_ref, out_t_ref):
+    """Composite one block of pixels.
+
+    alpha: [B, K]   per pixel-Gaussian pair alpha (0 for padding)
+    color: [B, K, 3]
+    depth: [B, K]
+    outputs: color [B, 3], depth [B, 1], final transmittance [B, 1]
+    """
+    a = alpha_ref[...]
+    one_minus = 1.0 - a
+    # exclusive cumulative product: Gamma_i = prod_{j<i} (1 - a_j)
+    cp = jnp.cumprod(one_minus, axis=-1)
+    t_excl = jnp.concatenate([jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=-1)
+    w = t_excl * a                                   # [B, K]
+    out_c_ref[...] = jnp.einsum("bk,bkc->bc", w, color_ref[...])
+    out_d_ref[...] = jnp.sum(w * depth_ref[...], axis=-1, keepdims=True)
+    out_t_ref[...] = cp[:, -1:]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def composite(alpha, color, depth, block=P_BLOCK):
+    """Gaussian-parallel alpha compositing of padded per-pixel lists.
+
+    Forward runs the Pallas kernel; the backward pass is a custom VJP
+    implementing the paper's *reverse rasterization* analytically
+    (suffix-accumulator form of dC/d-alpha_i = Gamma_i*c_i - S_i/(1-a_i)) —
+    interpret-mode pallas_call does not support reverse-mode autodiff.
+
+    Args:
+      alpha: ``[P, K]`` f32 — pre-alpha-checked alphas, 0 where padded.
+      color: ``[P, K, 3]`` f32.
+      depth: ``[P, K]`` f32.
+      block: pixel-axis block size (static).
+
+    Returns:
+      (color ``[P, 3]``, depth ``[P]``, final_t ``[P]``)
+    """
+    return _composite_fwd_only(alpha, color, depth, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _composite_fwd_only(alpha, color, depth, block=P_BLOCK):
+    p, k = alpha.shape
+    assert color.shape == (p, k, 3), color.shape
+    assert depth.shape == (p, k), depth.shape
+    blk = min(block, p) if p > 0 else 1
+    # pad P to a multiple of the block
+    pad = (-p) % blk
+    if pad:
+        alpha = jnp.pad(alpha, ((0, pad), (0, 0)))
+        color = jnp.pad(color, ((0, pad), (0, 0), (0, 0)))
+        depth = jnp.pad(depth, ((0, pad), (0, 0)))
+    pp = alpha.shape[0]
+    grid = (pp // blk,)
+
+    out_c, out_d, out_t = pl.pallas_call(
+        _composite_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, k), lambda i: (i, 0)),
+            pl.BlockSpec((blk, k, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, 3), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pp, 3), alpha.dtype),
+            jax.ShapeDtypeStruct((pp, 1), alpha.dtype),
+            jax.ShapeDtypeStruct((pp, 1), alpha.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(alpha, color, depth)
+
+    return out_c[:p], out_d[:p, 0], out_t[:p, 0]
+
+
+def _composite_fwd(alpha, color, depth, block):
+    out = _composite_fwd_only(alpha, color, depth, block)
+    return out, (alpha, color, depth)
+
+
+def _composite_bwd(block, res, cotangents):
+    """Reverse rasterization (paper Sec. IV-B backward walk-through):
+
+      Gamma_i  = prod_{j<i} (1 - a_j)                 (first reduction)
+      dL/da_i  = Gamma_i*g_i - S_i/(1 - a_i)
+                 - dT * T_final/(1 - a_i)
+      where g_i = <dC, c_i> + dD*d_i and S_i = sum_{k>i} Gamma_k a_k g_k
+      (the suffix accumulator), then per-pair color/depth grads
+      dL/dc_i = Gamma_i a_i dC, dL/dd_i = Gamma_i a_i dD.
+    """
+    del block
+    alpha, color, depth = res
+    d_outc, d_outd, d_outt = cotangents  # [P,3], [P], [P]
+
+    one_minus = 1.0 - alpha
+    cp = jnp.cumprod(one_minus, axis=-1)
+    t_excl = jnp.concatenate([jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=-1)
+    w = t_excl * alpha                                   # [P,K]
+
+    g = jnp.einsum("pc,pkc->pk", d_outc, color) + d_outd[:, None] * depth
+    wg = w * g
+    # suffix sum S_i = sum_{k>i} w_k g_k (exclusive, from the right)
+    rev_incl = jnp.cumsum(wg[:, ::-1], axis=-1)[:, ::-1]
+    suffix = rev_incl - wg
+    inv_om = 1.0 / jnp.maximum(one_minus, 1e-6)
+    d_alpha = t_excl * g - suffix * inv_om - (d_outt * cp[:, -1])[:, None] * inv_om
+
+    d_color = w[..., None] * d_outc[:, None, :]
+    d_depth = w * d_outd[:, None]
+    return d_alpha, d_color, d_depth
+
+
+composite.defvjp(_composite_fwd, _composite_bwd)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Pallas compositing kernel.
+
+Implements Eqn. 1 of the paper (front-to-back alpha compositing with
+transmittance Gamma) in the most literal way possible — the correctness
+reference every kernel change is validated against.
+"""
+
+import jax.numpy as jnp
+
+
+def composite_ref(alpha, color, depth):
+    """Reference compositing; same contract as ``raster.composite``."""
+    one_minus = 1.0 - alpha                             # [P, K]
+    cp = jnp.cumprod(one_minus, axis=-1)
+    t_excl = jnp.concatenate([jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=-1)
+    w = t_excl * alpha                                  # [P, K]
+    out_c = jnp.sum(w[..., None] * color, axis=1)       # [P, 3]
+    out_d = jnp.sum(w * depth, axis=1)                  # [P]
+    final_t = cp[:, -1]                                 # [P]
+    return out_c, out_d, final_t
+
+
+def composite_loop_ref(alpha, color, depth):
+    """Even more literal oracle: explicit python loop over the list
+    (matches the Rust renderer's sequential integration)."""
+    import numpy as np
+
+    alpha = np.asarray(alpha)
+    color = np.asarray(color)
+    depth = np.asarray(depth)
+    p, k = alpha.shape
+    out_c = np.zeros((p, 3), np.float32)
+    out_d = np.zeros((p,), np.float32)
+    final_t = np.ones((p,), np.float32)
+    for i in range(p):
+        t = 1.0
+        for j in range(k):
+            a = alpha[i, j]
+            out_c[i] += t * a * color[i, j]
+            out_d[i] += t * a * depth[i, j]
+            t *= 1.0 - a
+        final_t[i] = t
+    return out_c, out_d, final_t

@@ -1,0 +1,212 @@
+"""L2 — the differentiable sparse-pixel render step in JAX.
+
+Mirrors the Rust renderer's math exactly (EWA projection, preemptive
+alpha-checking against gathered per-pixel Gaussian lists, Eqn.-1
+compositing via the L1 Pallas kernel, SplaTAM-style Huber losses with
+silhouette masking) so the PJRT-executed artifacts and the pure-Rust
+backend are interchangeable, which the Rust runtime tests assert.
+
+Shapes are static per artifact (AOT): G Gaussians (padded), P sampled
+pixels, K list slots per pixel. The Rust coordinator pads its inputs to
+these shapes; padding is masked via ``idx < 0`` and zero opacity.
+
+The trainable quantities are the camera pose (tracking) and the Gaussian
+parameter arrays (mapping); ``jax.grad`` provides the backward pass that
+Sec. IV-B of the paper implements with Gaussian-parallel reductions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import raster
+
+# Loss / render constants — keep in sync with rust RenderConfig + LossCfg.
+ALPHA_THRESH = 1.0 / 255.0
+ALPHA_MAX = 0.99
+BLUR = 0.3
+NEAR = 0.01
+COLOR_W = 0.5
+DEPTH_W = 1.0
+HUBER_C = 0.01
+HUBER_D = 0.02
+SIL_MASK_T = 0.05
+OUTLIER_K = 10.0
+
+
+def quat_to_mat(q):
+    """Rotation matrix of a (raw) quaternion [w,x,y,z]; normalizes inside
+    so gradients flow through the normalization (as in Rust)."""
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    w, x, y, z = q[..., 0], q[..., 1], q[..., 2], q[..., 3]
+    return jnp.stack(
+        [
+            jnp.stack([1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)], -1),
+            jnp.stack([2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)], -1),
+            jnp.stack([2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)], -1),
+        ],
+        -2,
+    )
+
+
+def project(params, pose_q, pose_t, intr):
+    """EWA-project all Gaussians.
+
+    Args:
+      params: dict with means [G,3], quats [G,4], log_scales [G,3],
+        opacity_logits [G], colors [G,3].
+      pose_q: [4] raw w2c quaternion; pose_t: [3] w2c translation.
+      intr: [4] = (fx, fy, cx, cy).
+
+    Returns dict: mean2d [G,2], conic [G,3], depth [G], opacity [G],
+      color [G,3], valid [G] (in front of the near plane).
+    """
+    means = params["means"]
+    w = quat_to_mat(pose_q)                                   # [3,3]
+    t_cam = means @ w.T + pose_t                              # [G,3]
+    depth = t_cam[:, 2]
+    valid = depth > NEAR
+    zsafe = jnp.where(valid, depth, 1.0)
+
+    fx, fy, cx, cy = intr[0], intr[1], intr[2], intr[3]
+    mean2d = jnp.stack(
+        [fx * t_cam[:, 0] / zsafe + cx, fy * t_cam[:, 1] / zsafe + cy], -1
+    )
+
+    # T = J W  (rows r0, r1)
+    inv_z = 1.0 / zsafe
+    inv_z2 = inv_z * inv_z
+    j00 = fx * inv_z
+    j02 = -fx * t_cam[:, 0] * inv_z2
+    j11 = fy * inv_z
+    j12 = -fy * t_cam[:, 1] * inv_z2
+    r0 = j00[:, None] * w[0][None, :] + j02[:, None] * w[2][None, :]   # [G,3]
+    r1 = j11[:, None] * w[1][None, :] + j12[:, None] * w[2][None, :]
+
+    # Sigma_3D = (R S)(R S)^T
+    rot = quat_to_mat(params["quats"])                        # [G,3,3]
+    scale = jnp.exp(params["log_scales"])                     # [G,3]
+    m = rot * scale[:, None, :]                               # R @ diag(s)
+    cov3d = m @ jnp.swapaxes(m, -1, -2)                       # [G,3,3]
+
+    s_r0 = jnp.einsum("gij,gj->gi", cov3d, r0)
+    s_r1 = jnp.einsum("gij,gj->gi", cov3d, r1)
+    a = jnp.einsum("gi,gi->g", r0, s_r0) + BLUR
+    b = jnp.einsum("gi,gi->g", r0, s_r1)
+    c = jnp.einsum("gi,gi->g", r1, s_r1) + BLUR
+    det = jnp.maximum(a * c - b * b, 1e-12)
+    conic = jnp.stack([c / det, -b / det, a / det], -1)       # [G,3]
+
+    opacity = jax.nn.sigmoid(params["opacity_logits"]) * valid.astype(means.dtype)
+    return {
+        "mean2d": mean2d,
+        "conic": conic,
+        "depth": depth,
+        "opacity": opacity,
+        "color": params["colors"],
+        "valid": valid,
+    }
+
+
+def gather_alpha(proj, pixels, idx):
+    """Preemptive alpha-checking over the gathered per-pixel lists.
+
+    Args:
+      proj: output of :func:`project`.
+      pixels: [P,2] pixel centers; idx: [P,K] int32 (-1 = padding),
+        depth-sorted by the coordinator.
+
+    Returns (alpha [P,K], color [P,K,3], depth [P,K]).
+    """
+    mask = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    mean2d = proj["mean2d"][safe]                             # [P,K,2]
+    conic = proj["conic"][safe]                               # [P,K,3]
+    opac = proj["opacity"][safe]                              # [P,K]
+    color = proj["color"][safe]                               # [P,K,3]
+    depth = proj["depth"][safe]                               # [P,K]
+
+    d = pixels[:, None, :] - mean2d                           # [P,K,2]
+    power = (
+        0.5 * (conic[..., 0] * d[..., 0] ** 2 + conic[..., 2] * d[..., 1] ** 2)
+        + conic[..., 1] * d[..., 0] * d[..., 1]
+    )
+    g = jnp.exp(-jnp.maximum(power, 0.0)) * (power >= 0.0)
+    alpha = jnp.minimum(opac * g, ALPHA_MAX)
+    alpha = jnp.where(mask & (alpha >= ALPHA_THRESH), alpha, 0.0)
+    return alpha, color, depth
+
+
+def render_sparse(params, pose_q, pose_t, intr, pixels, idx):
+    """Sparse forward render: per-pixel color/depth/final-T."""
+    proj = project(params, pose_q, pose_t, intr)
+    alpha, color, depth = gather_alpha(proj, pixels, idx)
+    return raster.composite(alpha, color, depth)
+
+
+def _huber(x, delta):
+    ax = jnp.abs(x)
+    return jnp.where(ax <= delta, 0.5 * x * x / delta, ax - 0.5 * delta)
+
+
+def sparse_loss(out_c, out_d, final_t, ref_c, ref_d, tracking=True):
+    """SplaTAM-style Huber color+depth loss over the sampled pixels,
+    with silhouette masking and depth-outlier rejection in tracking mode
+    (mirrors rust slam::loss)."""
+    p = out_c.shape[0]
+    inv_n = 1.0 / p
+    sil = final_t <= (SIL_MASK_T if tracking else 1.0)
+
+    l_c = jnp.mean(_huber(out_c - ref_c, HUBER_C), axis=-1)   # [P]
+    l_c = jnp.where(sil, l_c, 0.0)
+
+    d_err = out_d - ref_d
+    d_valid = (ref_d > 0.0) & sil
+    if tracking:
+        # median of the valid |residuals| (masked entries pushed to +inf).
+        # The cutoff is a mask, not a differentiable quantity —
+        # stop_gradient also keeps sort's JVP (a gather that lowers
+        # poorly on this jax/jaxlib combination) out of the AD graph.
+        abs_sg = jax.lax.stop_gradient(jnp.abs(d_err))
+        errs = jnp.sort(jnp.where(d_valid, abs_sg, jnp.inf))
+        nv = jnp.sum(d_valid.astype(jnp.int32))
+        med = jnp.where(
+            nv > 0, errs[jnp.clip(nv // 2, 0, p - 1)], jnp.asarray(0.0, errs.dtype)
+        )
+        cut = jnp.maximum(OUTLIER_K * med, 5.0 * HUBER_D)
+        d_valid = d_valid & (jnp.abs(d_err) <= cut)
+    l_d = jnp.where(d_valid, _huber(d_err, HUBER_D), 0.0)
+
+    return jnp.sum(COLOR_W * l_c + DEPTH_W * l_d) * inv_n
+
+
+def track_step(params, pose_q, pose_t, intr, pixels, idx, ref_c, ref_d):
+    """One tracking iteration: loss + pose gradients."""
+
+    def loss_fn(q, t):
+        out_c, out_d, final_t = render_sparse(params, q, t, intr, pixels, idx)
+        return sparse_loss(out_c, out_d, final_t, ref_c, ref_d, tracking=True)
+
+    loss, (dq, dt) = jax.value_and_grad(loss_fn, argnums=(0, 1))(pose_q, pose_t)
+    return loss, dq, dt
+
+
+def map_step(params, pose_q, pose_t, intr, pixels, idx, ref_c, ref_d):
+    """One mapping iteration: loss + Gaussian-parameter gradients."""
+
+    def loss_fn(p):
+        out_c, out_d, final_t = render_sparse(p, pose_q, pose_t, intr, pixels, idx)
+        return sparse_loss(out_c, out_d, final_t, ref_c, ref_d, tracking=False)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return loss, grads
+
+
+def make_params(g):
+    """Zeroed parameter dict of the AOT shapes (for lowering)."""
+    return {
+        "means": jnp.zeros((g, 3), jnp.float32),
+        "quats": jnp.zeros((g, 4), jnp.float32),
+        "log_scales": jnp.zeros((g, 3), jnp.float32),
+        "opacity_logits": jnp.zeros((g,), jnp.float32),
+        "colors": jnp.zeros((g, 3), jnp.float32),
+    }

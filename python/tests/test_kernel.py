@@ -1,0 +1,127 @@
+"""L1 correctness: the Pallas compositing kernel against the pure-jnp
+oracle and the literal python loop, swept over shapes with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.raster import composite
+from compile.kernels.ref import composite_loop_ref, composite_ref
+
+
+def random_lists(rng, p, k):
+    alpha = rng.uniform(0.0, 0.99, (p, k)).astype(np.float32)
+    # zero some entries to emulate padding / alpha-check misses
+    alpha *= (rng.uniform(size=(p, k)) > 0.3).astype(np.float32)
+    color = rng.uniform(0.0, 1.0, (p, k, 3)).astype(np.float32)
+    depth = rng.uniform(0.5, 5.0, (p, k)).astype(np.float32)
+    return alpha, color, depth
+
+
+def test_kernel_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    alpha, color, depth = random_lists(rng, 64, 16)
+    kc, kd, kt = composite(alpha, color, depth)
+    rc, rd, rt = composite_ref(alpha, color, depth)
+    np.testing.assert_allclose(kc, rc, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kd, rd, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kt, rt, rtol=1e-5, atol=1e-6)
+
+
+def test_ref_matches_literal_loop():
+    rng = np.random.default_rng(1)
+    alpha, color, depth = random_lists(rng, 8, 8)
+    rc, rd, rt = composite_ref(alpha, color, depth)
+    lc, ld, lt = composite_loop_ref(alpha, color, depth)
+    np.testing.assert_allclose(rc, lc, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rd, ld, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rt, lt, rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    p=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_shape_sweep(p, k, seed):
+    rng = np.random.default_rng(seed)
+    alpha, color, depth = random_lists(rng, p, k)
+    kc, kd, kt = composite(alpha, color, depth)
+    rc, rd, rt = composite_ref(alpha, color, depth)
+    np.testing.assert_allclose(kc, rc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(kd, rd, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(kt, rt, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(
+    block=st.sampled_from([1, 2, 32, 64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_block_size_invariance(block, seed):
+    rng = np.random.default_rng(seed)
+    alpha, color, depth = random_lists(rng, 100, 8)
+    kc, _, _ = composite(alpha, color, depth, block=block)
+    rc, _, _ = composite_ref(alpha, color, depth)
+    np.testing.assert_allclose(kc, rc, rtol=1e-4, atol=1e-5)
+
+
+def test_empty_lists_are_transparent():
+    alpha = np.zeros((4, 8), np.float32)
+    color = np.ones((4, 8, 3), np.float32)
+    depth = np.ones((4, 8), np.float32)
+    kc, kd, kt = composite(alpha, color, depth)
+    np.testing.assert_allclose(kc, 0.0)
+    np.testing.assert_allclose(kd, 0.0)
+    np.testing.assert_allclose(kt, 1.0)
+
+
+def test_opaque_front_gaussian_wins():
+    p, k = 2, 4
+    alpha = np.zeros((p, k), np.float32)
+    alpha[:, 0] = 0.99
+    alpha[:, 1] = 0.9
+    color = np.zeros((p, k, 3), np.float32)
+    color[:, 0] = [1.0, 0.0, 0.0]
+    color[:, 1] = [0.0, 1.0, 0.0]
+    depth = np.full((p, k), 2.0, np.float32)
+    kc, _, kt = composite(alpha, color, depth)
+    assert kc[0, 0] > 0.98
+    assert kc[0, 1] < 0.01 + 0.01
+    assert kt[0] < 0.01
+
+
+def test_transmittance_conservation():
+    """final_t == prod(1 - alpha)."""
+    rng = np.random.default_rng(3)
+    alpha, color, depth = random_lists(rng, 32, 12)
+    _, _, kt = composite(alpha, color, depth)
+    expect = np.prod(1.0 - alpha, axis=-1)
+    np.testing.assert_allclose(kt, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_is_differentiable():
+    """The Pallas kernel must be differentiable (the backward pass of the
+    paper flows through it via jax.grad)."""
+    rng = np.random.default_rng(4)
+    alpha, color, depth = random_lists(rng, 16, 8)
+
+    def loss(a):
+        c, d, t = composite(a, jnp.asarray(color), jnp.asarray(depth))
+        return jnp.sum(c) + jnp.sum(d) + jnp.sum(t)
+
+    g = jax.grad(loss)(jnp.asarray(alpha))
+    assert np.isfinite(np.asarray(g)).all()
+    # finite-difference spot check
+    eps = 1e-3
+    i, j = 3, 2
+    ap = alpha.copy()
+    ap[i, j] += eps
+    am = alpha.copy()
+    am[i, j] -= eps
+    fd = (float(loss(jnp.asarray(ap))) - float(loss(jnp.asarray(am)))) / (2 * eps)
+    assert abs(fd - float(g[i, j])) < 2e-2 * max(1.0, abs(fd)), (fd, float(g[i, j]))

@@ -1,0 +1,131 @@
+"""L2 correctness: projection geometry, render invariants, gradient
+sanity of track/map steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def simple_scene(g=8):
+    """A line of Gaussians in front of an identity camera."""
+    rng = np.random.default_rng(0)
+    params = {
+        "means": jnp.asarray(
+            np.stack(
+                [
+                    rng.uniform(-0.3, 0.3, g),
+                    rng.uniform(-0.3, 0.3, g),
+                    np.linspace(1.5, 4.0, g),
+                ],
+                -1,
+            ),
+            jnp.float32,
+        ),
+        "quats": jnp.tile(jnp.asarray([1.0, 0.0, 0.0, 0.0]), (g, 1)),
+        "log_scales": jnp.full((g, 3), np.log(0.45), jnp.float32),
+        "opacity_logits": jnp.full((g,), 2.5, jnp.float32),
+        "colors": jnp.asarray(rng.uniform(0.1, 0.9, (g, 3)), jnp.float32),
+    }
+    pose_q = jnp.asarray([1.0, 0.0, 0.0, 0.0], jnp.float32)
+    pose_t = jnp.zeros(3, jnp.float32)
+    intr = jnp.asarray([32.0, 32.0, 31.5, 31.5], jnp.float32)  # 64x64 90deg
+    return params, pose_q, pose_t, intr
+
+
+def test_projection_center_gaussian():
+    params, q, t, intr = simple_scene(1)
+    params["means"] = jnp.asarray([[0.0, 0.0, 2.0]], jnp.float32)
+    proj = model.project(params, q, t, intr)
+    np.testing.assert_allclose(proj["mean2d"][0], [31.5, 31.5], atol=1e-4)
+    np.testing.assert_allclose(proj["depth"][0], 2.0, atol=1e-5)
+    assert bool(proj["valid"][0])
+
+
+def test_projection_behind_camera_invalid():
+    params, q, t, intr = simple_scene(1)
+    params["means"] = jnp.asarray([[0.0, 0.0, -2.0]], jnp.float32)
+    proj = model.project(params, q, t, intr)
+    assert not bool(proj["valid"][0])
+    assert float(proj["opacity"][0]) == 0.0
+
+
+def test_conic_is_inverse_of_cov():
+    params, q, t, intr = simple_scene(1)
+    proj = model.project(params, q, t, intr)
+    a_c, b_c, c_c = [float(v) for v in proj["conic"][0]]
+    # reconstruct cov from conic: conic = [c,-b,a]/det(cov)
+    det_conic = a_c * c_c - b_c * b_c
+    assert det_conic > 0.0
+
+
+def test_render_alpha_threshold_and_padding():
+    params, q, t, intr = simple_scene(4)
+    pixels = jnp.asarray([[31.5, 31.5], [5.0, 5.0]], jnp.float32)
+    idx = jnp.asarray([[0, 1, 2, 3], [-1, -1, -1, -1]], jnp.int32)
+    c, d, ft = model.render_sparse(params, q, t, intr, pixels, idx)
+    # padded pixel renders transparent black
+    np.testing.assert_allclose(c[1], 0.0, atol=1e-7)
+    np.testing.assert_allclose(ft[1], 1.0, atol=1e-7)
+    # center pixel composites something
+    assert float(ft[0]) < 0.9
+    assert float(d[0]) > 1.0
+
+
+def test_track_step_gradients_point_downhill():
+    params, q, t, intr = simple_scene(6)
+    pixels = jnp.asarray(
+        [[x * 8.0 + 4.0, y * 8.0 + 4.0] for y in range(8) for x in range(8)], jnp.float32
+    )
+    k = 6
+    idx = jnp.tile(jnp.arange(k, dtype=jnp.int32), (64, 1))
+    # reference = render at the true pose
+    ref_c, ref_d, _ = model.render_sparse(params, q, t, intr, pixels, idx)
+    # perturb the pose
+    t_bad = t + jnp.asarray([0.05, -0.02, 0.03])
+    loss0, dq, dt = model.track_step(params, q, t_bad, intr, pixels, idx, ref_c, ref_d)
+    assert float(loss0) > 0.0
+    assert np.isfinite(np.asarray(dq)).all() and np.isfinite(np.asarray(dt)).all()
+    # one gradient step reduces the loss
+    t_better = t_bad - 0.02 * dt / (jnp.linalg.norm(dt) + 1e-9)
+    loss1, _, _ = model.track_step(params, q, t_better, intr, pixels, idx, ref_c, ref_d)
+    assert float(loss1) < float(loss0), (float(loss0), float(loss1))
+
+
+def test_track_step_zero_at_truth():
+    params, q, t, intr = simple_scene(6)
+    pixels = jnp.asarray([[31.5, 31.5]], jnp.float32)
+    idx = jnp.asarray([[0, 1, 2, 3, 4, 5]], jnp.int32)
+    ref_c, ref_d, _ = model.render_sparse(params, q, t, intr, pixels, idx)
+    loss, dq, dt = model.track_step(params, q, t, intr, pixels, idx, ref_c, ref_d)
+    assert float(loss) < 1e-8
+    np.testing.assert_allclose(np.asarray(dt), 0.0, atol=1e-6)
+
+
+def test_map_step_gradients_shapes_and_direction():
+    params, q, t, intr = simple_scene(5)
+    pixels = jnp.asarray(
+        [[x * 8.0 + 4.0, y * 8.0 + 4.0] for y in range(8) for x in range(8)], jnp.float32
+    )
+    idx = jnp.tile(jnp.arange(5, dtype=jnp.int32), (64, 1))
+    ref_c, ref_d, _ = model.render_sparse(params, q, t, intr, pixels, idx)
+    # perturb colors; map_step should push them back
+    bad = dict(params)
+    bad["colors"] = params["colors"] + 0.2
+    loss0, grads = model.map_step(bad, q, t, intr, pixels, idx, ref_c, ref_d)
+    assert grads["colors"].shape == params["colors"].shape
+    assert grads["means"].shape == params["means"].shape
+    assert float(loss0) > 0.0
+    stepped = dict(bad)
+    stepped["colors"] = bad["colors"] - 0.1 * jnp.sign(grads["colors"])
+    loss1, _ = model.map_step(stepped, q, t, intr, pixels, idx, ref_c, ref_d)
+    assert float(loss1) < float(loss0)
+
+
+def test_quat_to_mat_orthonormal():
+    q = jnp.asarray([0.4, -0.3, 0.7, 0.2], jnp.float32)
+    r = model.quat_to_mat(q)
+    eye = r @ r.T
+    np.testing.assert_allclose(np.asarray(eye), np.eye(3), atol=1e-5)
+    assert abs(float(jnp.linalg.det(r)) - 1.0) < 1e-5

@@ -1,0 +1,36 @@
+//! Fig. 5 — normalized execution breakdown of the dense pipeline across
+//! algorithms. Paper shape: rasterization + reverse rasterization
+//! account for ~94.7% of fwd+bwd time.
+
+use splatonic::bench::{print_paper_note, print_table, run_variant};
+use splatonic::config::Variant;
+use splatonic::dataset::Flavor;
+use splatonic::sim::GpuModel;
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() {
+    let gpu = GpuModel::orin();
+    let mut rows = Vec::new();
+    for algo in Algorithm::ALL {
+        let r = run_variant(algo, Variant::Baseline, 0, Flavor::Replica);
+        let b = gpu.breakdown(&r.track, r.track_iters);
+        let total = b.forward() + b.backward();
+        rows.push((
+            algo.name().to_string(),
+            vec![
+                100.0 * b.projection / total,
+                100.0 * b.sorting / total,
+                100.0 * b.raster / total,
+                100.0 * (b.bwd_raster + b.aggregation) / total,
+                100.0 * b.reproject / total,
+                100.0 * b.raster_share(),
+            ],
+        ));
+    }
+    print_table(
+        "Fig. 5: dense-pipeline stage breakdown (% of fwd+bwd)",
+        &["proj", "sort", "raster", "rev-raster", "reproj", "r+rr %"],
+        &rows,
+    );
+    print_paper_note("raster + reverse raster = 94.7% on average");
+}

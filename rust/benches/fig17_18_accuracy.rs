@@ -1,0 +1,39 @@
+//! Fig. 17/18 — tracking accuracy (ATE) and reconstruction quality
+//! (PSNR): baselines vs Splatonic sampling, four algorithms, Replica-like
+//! and TUM-like sequences. Paper shape: Splatonic matches or slightly
+//! beats the dense baselines on both metrics.
+
+use splatonic::bench::{print_paper_note, print_table, run_variant_sized};
+use splatonic::config::Variant;
+use splatonic::dataset::Flavor;
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() {
+    for (flavor, seqs, label) in [
+        (Flavor::Replica, 3usize, "Replica-like"),
+        (Flavor::Tum, 2usize, "TUM-like"),
+    ] {
+        let mut rows = Vec::new();
+        for algo in Algorithm::ALL {
+            let mut vals = Vec::new();
+            for variant in [Variant::Baseline, Variant::Splatonic] {
+                let mut ate = 0.0f64;
+                let mut psnr = 0.0f64;
+                for seq in 0..seqs {
+                    let r = run_variant_sized(algo, variant, seq, flavor, 96, 72, 7, 0.6);
+                    ate += r.ate_m as f64 * 100.0;
+                    psnr += r.psnr_db;
+                }
+                vals.push(ate / seqs as f64);
+                vals.push(psnr / seqs as f64);
+            }
+            rows.push((algo.name().to_string(), vals));
+        }
+        print_table(
+            &format!("Fig. 17/18 ({label}): ATE cm / PSNR dB, baseline vs Splatonic"),
+            &["base ATE", "base PSNR", "ours ATE", "ours PSNR"],
+            &rows,
+        );
+    }
+    print_paper_note("Splatonic ATE within ~0.01-0.03 of baseline (often better); PSNR +0.8 dB on SplaTAM");
+}

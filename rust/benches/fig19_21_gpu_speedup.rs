@@ -1,0 +1,75 @@
+//! Fig. 19/20/21 — GPU-only results (no dedicated hardware):
+//!  * Fig. 19: end-to-end tracking speedup + energy savings of
+//!    Splatonic-SW and Org.+S over the dense baselines (paper: 14.6x,
+//!    86.1% energy saved; Org.+S only 3.4x / 55.5%).
+//!  * Fig. 20: mapping-only speedup (paper: 3.2x, 60.0% energy).
+//!  * Fig. 21: bottleneck-stage speedups (paper: 64.4x / 77.2x vs
+//!    4.1x / 4.3x for sampling alone).
+
+use splatonic::bench::{print_paper_note, print_table, run_variant};
+use splatonic::config::Variant;
+use splatonic::dataset::Flavor;
+use splatonic::sim::GpuModel;
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() {
+    let gpu = GpuModel::orin();
+    let mut fig19 = Vec::new();
+    let mut fig20 = Vec::new();
+    let mut fig21 = Vec::new();
+    for algo in Algorithm::ALL {
+        let base = run_variant(algo, Variant::Baseline, 0, Flavor::Replica);
+        let orgs = run_variant(algo, Variant::OrgS, 0, Flavor::Replica);
+        let ours = run_variant(algo, Variant::Splatonic, 0, Flavor::Replica);
+
+        let c_base = gpu.cost(&base.track, base.track_iters);
+        let c_orgs = gpu.cost(&orgs.track, orgs.track_iters);
+        let c_ours = gpu.cost(&ours.track, ours.track_iters);
+        fig19.push((
+            algo.name().to_string(),
+            vec![
+                c_base.seconds / c_orgs.seconds,
+                c_base.seconds / c_ours.seconds,
+                100.0 * (1.0 - c_orgs.joules / c_base.joules),
+                100.0 * (1.0 - c_ours.joules / c_base.joules),
+            ],
+        ));
+
+        let m_base = gpu.cost(&base.map, base.map_iters);
+        let m_ours = gpu.cost(&ours.map, ours.map_iters);
+        fig20.push((
+            algo.name().to_string(),
+            vec![
+                m_base.seconds / m_ours.seconds,
+                100.0 * (1.0 - m_ours.joules / m_base.joules),
+            ],
+        ));
+
+        let b_base = gpu.breakdown(&base.track, base.track_iters);
+        let b_orgs = gpu.breakdown(&orgs.track, orgs.track_iters);
+        let b_ours = gpu.breakdown(&ours.track, ours.track_iters);
+        fig21.push((
+            algo.name().to_string(),
+            vec![
+                b_base.raster / b_orgs.raster,
+                b_base.raster / b_ours.raster,
+                (b_base.bwd_raster + b_base.aggregation) / (b_orgs.bwd_raster + b_orgs.aggregation),
+                (b_base.bwd_raster + b_base.aggregation) / (b_ours.bwd_raster + b_ours.aggregation),
+            ],
+        ));
+    }
+    print_table(
+        "Fig. 19: end-to-end (tracking) on GPU — speedup and energy savings",
+        &["Org+S x", "Ours x", "Org+S E%", "Ours E%"],
+        &fig19,
+    );
+    print_paper_note("Ours 14.6x / 86.1%; Org.+S 3.4x / 55.5%");
+    print_table("Fig. 20: mapping on GPU", &["Ours x", "Ours E%"], &fig20);
+    print_paper_note("mapping only 3.2x / 60.0% (more pixels per 4x4 tile)");
+    print_table(
+        "Fig. 21: bottleneck-stage speedups during tracking",
+        &["rast O+S", "rast Ours", "rr O+S", "rr Ours"],
+        &fig21,
+    );
+    print_paper_note("sampling alone 4.1x/4.3x; pipeline 64.4x/77.2x");
+}

@@ -1,0 +1,45 @@
+//! Fig. 24 — ablation of the mapping sampling strategy (SplaTAM):
+//! unseen-only, weighted-texture-only, unweighted-random, and the
+//! combined strategy. Paper: "Comb" is best on both ATE and PSNR
+//! (-0.05 cm, +1.0 dB vs baseline).
+
+use splatonic::bench::{print_paper_note, print_table};
+use splatonic::config::{RunConfig, Variant};
+use splatonic::dataset::{Flavor, SyntheticDataset};
+use splatonic::sampling::MappingSamplerConfig;
+use splatonic::slam::algorithms::Algorithm;
+use splatonic::slam::system::SlamSystem;
+
+fn main() {
+    let (w, h, frames) = (96u32, 72u32, 9usize);
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, w, h, frames);
+    let variants: [(&str, MappingSamplerConfig); 4] = [
+        ("Unseen only", MappingSamplerConfig { use_weighted: false, ..Default::default() }),
+        ("Weighted only", MappingSamplerConfig { use_unseen: false, ..Default::default() }),
+        ("Random (unweighted)", MappingSamplerConfig { texture_weighted: false, ..Default::default() }),
+        ("Comb (ours)", MappingSamplerConfig::default()),
+    ];
+    let mut rows = Vec::new();
+    for (name, sampler) in variants {
+        let cfg = RunConfig {
+            width: w, height: h, frames,
+            variant: Variant::Splatonic,
+            algorithm: Algorithm::SplaTam,
+            budget: 0.6,
+            ..Default::default()
+        };
+        let mut slam = cfg.slam_config();
+        slam.mapping.sampler = sampler;
+        let stats = SlamSystem::run(slam, &data);
+        rows.push((
+            name.to_string(),
+            vec![stats.ate_rmse_m as f64 * 100.0, stats.psnr_db, stats.n_gaussians as f64],
+        ));
+    }
+    print_table(
+        "Fig. 24: mapping-sampler ablation (SplaTAM)",
+        &["ATE cm", "PSNR dB", "gaussians"],
+        &rows,
+    );
+    print_paper_note("Comb best: -0.05 cm pose error, +1.0 dB vs baseline");
+}

@@ -1,0 +1,54 @@
+//! Fig. 27 — sensitivity of Splatonic-HW performance to the number of
+//! projection units and render units. Paper shape: projection units
+//! matter most when few (the preemptive-α-check load); once projection
+//! stops being the bottleneck, render units take over.
+
+use splatonic::bench::{print_paper_note, print_table, run_variant_sized};
+use splatonic::config::Variant;
+use splatonic::dataset::Flavor;
+use splatonic::sim::{AccelConfig, AccelModel};
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() {
+    // 4x4 sampling: enough pixels that the rasterization engines are
+    // exercised alongside the projection units
+    let mut run = run_variant_sized(Algorithm::SplaTam, Variant::Splatonic, 0, Flavor::Replica, 96, 72, 9, 0.6);
+    {
+        // rebuild with a denser tracking tile
+        let cfg = splatonic::config::RunConfig {
+            width: 96, height: 72, frames: 9,
+            variant: Variant::Splatonic,
+            algorithm: Algorithm::SplaTam,
+            track_tile: 4,
+            budget: 0.6,
+            ..Default::default()
+        };
+        let data = splatonic::dataset::SyntheticDataset::generate(Flavor::Replica, 0, 96, 72, 9);
+        let slam = cfg.slam_config();
+        let mut sys = splatonic::slam::system::SlamSystem::new(slam, data.intr);
+        for f in &data.frames { sys.process_frame(f); }
+        run.track = sys.track_counters;
+        run.track_iters = sys.track_stats.iter().map(|s| s.iterations as u64).sum();
+    }
+    let default_cost = AccelModel::splatonic().cost(&run.track, run.track_iters);
+
+    let mut rows = Vec::new();
+    for n_proj in [1u32, 2, 4, 8, 16] {
+        let mut vals = Vec::new();
+        for n_ru in [1u32, 2, 4, 8] {
+            let mut cfg = AccelConfig::splatonic();
+            cfg.n_proj_units = n_proj;
+            cfg.render_units_per_engine = n_ru;
+            cfg.reverse_units_per_engine = n_ru;
+            let c = AccelModel::new(cfg).cost(&run.track, run.track_iters);
+            vals.push(default_cost.seconds / c.seconds); // normalized perf
+        }
+        rows.push((format!("{n_proj} proj units"), vals));
+    }
+    print_table(
+        "Fig. 27: normalized performance vs (projection units x render units)",
+        &["1 RU", "2 RU", "4 RU", "8 RU"],
+        &rows,
+    );
+    print_paper_note("projection units dominate when scarce; render units matter after");
+}

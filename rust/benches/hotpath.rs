@@ -1,0 +1,63 @@
+//! Hot-path wall-clock microbenchmarks of the Rust renderer (criterion is
+//! unavailable offline; median-of-N timing via bench::time_it). These are
+//! the numbers the §Perf pass in EXPERIMENTS.md tracks.
+
+use splatonic::bench::time_it;
+use splatonic::camera::Camera;
+use splatonic::dataset::{Flavor, SyntheticDataset};
+use splatonic::math::Pcg32;
+use splatonic::render::pixel_pipeline::{backward_sparse, render_sparse};
+use splatonic::render::tile_pipeline::render_dense;
+use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::sampling::{sample_tracking, TrackingStrategy};
+use splatonic::slam::loss::{sparse_loss, LossCfg};
+
+fn main() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 320, 240, 2);
+    let frame = &data.frames[1];
+    let cam = Camera::new(data.intr, frame.gt_w2c);
+    let rcfg = RenderConfig::default();
+    let mut rng = Pcg32::new(1);
+    let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
+    println!("workload: {} Gaussians, 320x240, {} sampled pixels", data.gt_store.len(), px.len());
+
+    let reps = 15;
+    let d = time_it(reps, || {
+        let mut c = StageCounters::new();
+        let _ = std::hint::black_box(render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c));
+    });
+    println!("render_sparse (fwd, proj+lists+composite): {:>10.3} ms", d.as_secs_f64() * 1e3);
+
+    let mut c = StageCounters::new();
+    let (render, proj) = render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c);
+    let loss = sparse_loss(&render, &px, frame, &LossCfg::tracking());
+    let d = time_it(reps, || {
+        let mut c = StageCounters::new();
+        let _ = std::hint::black_box(backward_sparse(
+            &data.gt_store, &cam, &rcfg, &proj, &render, &px, &loss.dl_dcolor,
+            &loss.dl_ddepth, true, true, false, &mut c,
+        ));
+    });
+    println!("backward_sparse (pose grads):              {:>10.3} ms", d.as_secs_f64() * 1e3);
+
+    let d = time_it(5, || {
+        let mut c = StageCounters::new();
+        let _ = std::hint::black_box(render_dense(&data.gt_store, &cam, &rcfg, &mut c));
+    });
+    println!("render_dense (320x240 full frame):         {:>10.3} ms", d.as_secs_f64() * 1e3);
+
+    // end-to-end tracking iteration (the latency that bounds Hz)
+    let d = time_it(reps, || {
+        let mut rng = Pcg32::new(2);
+        let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
+        let mut c = StageCounters::new();
+        let (r, p) = render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c);
+        let l = sparse_loss(&r, &px, frame, &LossCfg::tracking());
+        let _ = std::hint::black_box(backward_sparse(
+            &data.gt_store, &cam, &rcfg, &p, &r, &px, &l.dl_dcolor, &l.dl_ddepth, true, true,
+            false, &mut c,
+        ));
+    });
+    println!("full tracking iteration (sample+fwd+bwd):  {:>10.3} ms  ({:.0} iter/s)",
+        d.as_secs_f64() * 1e3, 1.0 / d.as_secs_f64());
+}

@@ -1,0 +1,28 @@
+//! Sec. VI area table — Splatonic vs GSCore vs GSArch (16 nm), plus the
+//! component breakdown (paper: 1.07 mm^2; raster engines 28%, other
+//! compute 57%, SRAM 15%).
+
+use splatonic::bench::{print_paper_note, print_table};
+use splatonic::sim::area::{area, area_table, sram_kb};
+use splatonic::sim::AccelConfig;
+
+fn main() {
+    let rows: Vec<(String, Vec<f64>)> = area_table()
+        .into_iter()
+        .map(|(n, a)| (n.to_string(), vec![a]))
+        .collect();
+    print_table("Area comparison (mm^2 @ 16 nm)", &["area"], &rows);
+
+    let cfg = AccelConfig::splatonic();
+    let a = area(&cfg);
+    let rows = vec![
+        ("projection units (8)".to_string(), vec![a.projection_units, 100.0 * a.projection_units / a.total()]),
+        ("sorting units (4)".to_string(), vec![a.sorting_units, 100.0 * a.sorting_units / a.total()]),
+        ("raster engines (4)".to_string(), vec![a.raster_engines, 100.0 * a.raster_engines / a.total()]),
+        ("aggregation unit".to_string(), vec![a.aggregation_unit, 100.0 * a.aggregation_unit / a.total()]),
+        (format!("SRAM ({:.0} KB)", sram_kb(&cfg)), vec![a.sram, 100.0 * a.sram / a.total()]),
+        ("TOTAL".to_string(), vec![a.total(), 100.0]),
+    ];
+    print_table("Splatonic area breakdown", &["mm^2", "%"], &rows);
+    print_paper_note("1.07 mm^2 total; raster engines 28%, SRAM 15%, rest 57%");
+}

@@ -1,0 +1,148 @@
+//! Shared harness for the paper-figure benchmarks (`rust/benches/`):
+//! workload generation, counter collection per pipeline variant, and
+//! table printing. Criterion is not available offline, so benches are
+//! `harness = false` binaries built on these helpers plus [`time_it`].
+
+use crate::config::{RunConfig, Variant};
+use crate::dataset::{Flavor, SyntheticDataset};
+use crate::render::StageCounters;
+use crate::slam::algorithms::Algorithm;
+use crate::slam::system::SlamSystem;
+
+/// Standard bench workload scale (kept small enough that the full bench
+/// suite finishes in minutes; the *ratios* are scale-stable).
+pub const BENCH_W: u32 = 96;
+pub const BENCH_H: u32 = 72;
+pub const BENCH_FRAMES: usize = 9;
+pub const BENCH_BUDGET: f32 = 0.6;
+
+/// Result of one SLAM run for counter-driven benches.
+pub struct CounterRun {
+    pub track: StageCounters,
+    pub map: StageCounters,
+    pub track_iters: u64,
+    pub map_iters: u64,
+    pub frames_tracked: u64,
+    pub map_invocations: u64,
+    pub ate_m: f32,
+    pub psnr_db: f64,
+}
+
+/// Run SLAM for (algorithm, variant) on a standard bench sequence and
+/// return the accumulated work streams + accuracy.
+pub fn run_variant(algo: Algorithm, variant: Variant, seq: usize, flavor: Flavor) -> CounterRun {
+    run_variant_sized(algo, variant, seq, flavor, BENCH_W, BENCH_H, BENCH_FRAMES, BENCH_BUDGET)
+}
+
+/// Fully parameterized variant run.
+#[allow(clippy::too_many_arguments)]
+pub fn run_variant_sized(
+    algo: Algorithm,
+    variant: Variant,
+    seq: usize,
+    flavor: Flavor,
+    w: u32,
+    h: u32,
+    frames: usize,
+    budget: f32,
+) -> CounterRun {
+    let cfg = RunConfig {
+        flavor,
+        sequence: seq,
+        width: w,
+        height: h,
+        frames,
+        algorithm: algo,
+        variant,
+        budget,
+        ..Default::default()
+    };
+    let data = SyntheticDataset::generate(flavor, seq, w, h, frames);
+    let slam_cfg = cfg.slam_config();
+    let mut sys = SlamSystem::new(slam_cfg, data.intr);
+    for f in &data.frames {
+        sys.process_frame(f);
+    }
+    let stats = sys.evaluate(&data);
+    CounterRun {
+        track: sys.track_counters,
+        map: sys.map_counters,
+        track_iters: sys.track_stats.iter().map(|s| s.iterations as u64).sum(),
+        map_iters: (sys.per_map.len() as u64) * slam_cfg.mapping.iters as u64,
+        frames_tracked: sys.per_frame_track.len() as u64,
+        map_invocations: sys.per_map.len() as u64,
+        ate_m: stats.ate_rmse_m,
+        psnr_db: stats.psnr_db,
+    }
+}
+
+/// Wall-clock timing helper (median of `reps` runs).
+pub fn time_it<F: FnMut()>(reps: usize, mut f: F) -> std::time::Duration {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// Pretty-print a figure table: rows of (label, values per column).
+pub fn print_table(title: &str, columns: &[&str], rows: &[(String, Vec<f64>)]) {
+    println!("\n=== {title} ===");
+    print!("{:<24}", "");
+    for c in columns {
+        print!("{c:>14}");
+    }
+    println!();
+    for (label, vals) in rows {
+        print!("{label:<24}");
+        for v in vals {
+            if v.abs() >= 1000.0 {
+                print!("{v:>14.1}");
+            } else if v.abs() >= 1.0 {
+                print!("{v:>14.2}");
+            } else {
+                print!("{v:>14.4}");
+            }
+        }
+        println!();
+    }
+}
+
+/// Paper-vs-measured footnote.
+pub fn print_paper_note(note: &str) {
+    println!("    [paper] {note}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_variant_produces_counters() {
+        let r = run_variant_sized(
+            Algorithm::FlashSlam,
+            Variant::Splatonic,
+            0,
+            Flavor::Replica,
+            48,
+            32,
+            5,
+            0.3,
+        );
+        assert!(r.track.raster_pairs_integrated > 0);
+        assert!(r.map.proj_gaussians_in > 0);
+        assert!(r.frames_tracked == 4);
+        assert!(r.ate_m < 0.5);
+    }
+
+    #[test]
+    fn time_it_returns_positive() {
+        let d = time_it(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(d.as_nanos() > 0);
+    }
+}

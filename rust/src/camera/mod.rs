@@ -1,0 +1,172 @@
+//! Pinhole camera model: intrinsics + world→camera pose, frustum tests.
+
+use crate::math::{Mat3, Se3, Vec2, Vec3};
+
+
+/// Pinhole intrinsics (no distortion — same assumption as the 3DGS-SLAM
+/// algorithms the paper evaluates).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Intrinsics {
+    pub fx: f32,
+    pub fy: f32,
+    pub cx: f32,
+    pub cy: f32,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl Intrinsics {
+    /// Replica-like camera: 90° horizontal FoV.
+    pub fn replica_like(width: u32, height: u32) -> Self {
+        let fx = width as f32 * 0.5; // 90 deg hfov
+        Intrinsics {
+            fx,
+            fy: fx,
+            cx: width as f32 * 0.5 - 0.5,
+            cy: height as f32 * 0.5 - 0.5,
+            width,
+            height,
+        }
+    }
+
+    /// TUM-like camera (fr1 calibration ratio scaled to resolution).
+    pub fn tum_like(width: u32, height: u32) -> Self {
+        let fx = width as f32 * (517.3 / 640.0);
+        let fy = height as f32 * (516.5 / 480.0);
+        Intrinsics {
+            fx,
+            fy,
+            cx: width as f32 * (318.6 / 640.0),
+            cy: height as f32 * (255.3 / 480.0),
+            width,
+            height,
+        }
+    }
+
+    pub fn n_pixels(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+
+    /// Project a camera-space point to pixel coordinates.
+    #[inline]
+    pub fn project(&self, p_cam: Vec3) -> Vec2 {
+        Vec2::new(
+            self.fx * p_cam.x / p_cam.z + self.cx,
+            self.fy * p_cam.y / p_cam.z + self.cy,
+        )
+    }
+
+    /// Back-project pixel + depth to a camera-space point.
+    #[inline]
+    pub fn backproject(&self, px: Vec2, depth: f32) -> Vec3 {
+        Vec3::new(
+            (px.x - self.cx) / self.fx * depth,
+            (px.y - self.cy) / self.fy * depth,
+            depth,
+        )
+    }
+
+    pub fn contains(&self, px: Vec2, margin: f32) -> bool {
+        px.x >= -margin
+            && px.y >= -margin
+            && px.x < self.width as f32 + margin
+            && px.y < self.height as f32 + margin
+    }
+}
+
+/// A camera = intrinsics + world→camera pose.
+#[derive(Clone, Copy, Debug)]
+pub struct Camera {
+    pub intr: Intrinsics,
+    /// World → camera transform (the quantity tracking optimizes).
+    pub w2c: Se3,
+}
+
+impl Camera {
+    pub fn new(intr: Intrinsics, w2c: Se3) -> Self {
+        Camera { intr, w2c }
+    }
+
+    pub fn c2w(&self) -> Se3 {
+        self.w2c.inverse()
+    }
+
+    pub fn position(&self) -> Vec3 {
+        self.c2w().t
+    }
+
+    /// World→camera rotation matrix (the `W` of EWA splatting).
+    pub fn rotation(&self) -> Mat3 {
+        self.w2c.rotation()
+    }
+
+    /// World point → camera space.
+    #[inline]
+    pub fn to_cam(&self, p_world: Vec3) -> Vec3 {
+        self.w2c.transform(p_world)
+    }
+
+    /// World point → pixel coords + depth; None if behind near plane.
+    pub fn project_world(&self, p_world: Vec3, near: f32) -> Option<(Vec2, f32)> {
+        let pc = self.to_cam(p_world);
+        if pc.z <= near {
+            return None;
+        }
+        Some((self.intr.project(pc), pc.z))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Quat;
+
+    #[test]
+    fn project_backproject_round_trip() {
+        let intr = Intrinsics::replica_like(640, 480);
+        let p = Vec3::new(0.3, -0.2, 2.5);
+        let px = intr.project(p);
+        let back = intr.backproject(px, p.z);
+        assert!((back - p).norm() < 1e-4);
+    }
+
+    #[test]
+    fn principal_point_is_center_ray() {
+        let intr = Intrinsics::replica_like(640, 480);
+        let px = intr.project(Vec3::new(0.0, 0.0, 1.0));
+        assert!((px.x - intr.cx).abs() < 1e-5);
+        assert!((px.y - intr.cy).abs() < 1e-5);
+    }
+
+    #[test]
+    fn behind_camera_rejected() {
+        let cam = Camera::new(Intrinsics::replica_like(64, 64), Se3::IDENTITY);
+        assert!(cam.project_world(Vec3::new(0.0, 0.0, -1.0), 0.01).is_none());
+        assert!(cam.project_world(Vec3::new(0.0, 0.0, 1.0), 0.01).is_some());
+    }
+
+    #[test]
+    fn camera_position_matches_inverse_pose() {
+        let w2c = Se3::new(Quat::from_axis_angle(Vec3::Y, 0.4), Vec3::new(1.0, 2.0, 3.0));
+        let cam = Camera::new(Intrinsics::replica_like(64, 64), w2c);
+        // camera center maps to origin of camera frame
+        let origin = cam.to_cam(cam.position());
+        assert!(origin.norm() < 1e-4);
+    }
+
+    #[test]
+    fn contains_respects_margin() {
+        let intr = Intrinsics::replica_like(100, 100);
+        assert!(intr.contains(Vec2::new(50.0, 50.0), 0.0));
+        assert!(!intr.contains(Vec2::new(-5.0, 50.0), 0.0));
+        assert!(intr.contains(Vec2::new(-5.0, 50.0), 10.0));
+    }
+
+    #[test]
+    fn tum_like_intrinsics_scale() {
+        let a = Intrinsics::tum_like(640, 480);
+        let b = Intrinsics::tum_like(320, 240);
+        assert!((a.fx / b.fx - 2.0).abs() < 1e-5);
+        assert!((a.cy / b.cy - 2.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,241 @@
+//! Configuration system: a dependency-free TOML-subset parser plus the
+//! typed run configuration consumed by the coordinator and the CLI.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! ("…"), integer, float, and boolean values, `#` comments. That covers
+//! every launcher config this project ships; exotic TOML (arrays, inline
+//! tables) is intentionally rejected with an error.
+
+pub mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::dataset::Flavor;
+use crate::slam::algorithms::{Algorithm, SlamConfig};
+
+use anyhow::{anyhow, Result};
+
+/// Which compute backend executes the tracking math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust renderer (always available).
+    Cpu,
+    /// AOT artifacts via PJRT (requires `make artifacts`).
+    Xla,
+}
+
+/// Which pipeline variant to run (paper's comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Dense baseline ("Org.").
+    Baseline,
+    /// Sparse sampling on the tile pipeline ("Org.+S").
+    OrgS,
+    /// Full Splatonic (sparse + pixel-based rendering).
+    Splatonic,
+}
+
+/// Complete launcher configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub flavor: Flavor,
+    pub sequence: usize,
+    pub width: u32,
+    pub height: u32,
+    pub frames: usize,
+    pub algorithm: Algorithm,
+    pub variant: Variant,
+    pub backend: Backend,
+    /// Tracking sample tile w_t.
+    pub track_tile: u32,
+    /// Mapping sample tile w_m.
+    pub map_tile: u32,
+    /// Optional iteration-budget scale (1.0 = algorithm profile).
+    pub budget: f32,
+    pub seed: u64,
+    /// Run mapping on a worker thread (Fig. 2's concurrent schedule).
+    pub threaded_mapping: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            flavor: Flavor::Replica,
+            sequence: 0,
+            width: 160,
+            height: 120,
+            frames: 24,
+            algorithm: Algorithm::SplaTam,
+            variant: Variant::Splatonic,
+            backend: Backend::Cpu,
+            track_tile: 16,
+            map_tile: 4,
+            budget: 1.0,
+            seed: 7,
+            threaded_mapping: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Materialize the SLAM configuration for this run.
+    pub fn slam_config(&self) -> SlamConfig {
+        let mut cfg = match self.variant {
+            Variant::Baseline => SlamConfig::baseline(self.algorithm),
+            Variant::OrgS => SlamConfig::org_s(self.algorithm),
+            Variant::Splatonic => SlamConfig::splatonic(self.algorithm),
+        };
+        if self.variant != Variant::Baseline {
+            cfg.tracking.tile = self.track_tile;
+        }
+        cfg.mapping.sampler.tile = self.map_tile;
+        cfg.seed = self.seed;
+        cfg.scaled(self.budget)
+    }
+
+    /// Load from a TOML file (section `[run]`, keys matching the field
+    /// names; unknown keys are an error to catch typos).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+        for (key, value) in doc.section("run") {
+            cfg.apply(key, &value.to_string_value())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides of the form `--key=value` / `--key value`.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    self.apply(k, v)?;
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    let v = args[i + 1].clone();
+                    self.apply(rest, &v)?;
+                    i += 1;
+                } else {
+                    self.apply(rest, "true")?;
+                }
+            } else {
+                return Err(anyhow!("unexpected argument: {a}"));
+            }
+            i += 1;
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "flavor" | "dataset" => {
+                self.flavor = match v {
+                    "replica" => Flavor::Replica,
+                    "tum" => Flavor::Tum,
+                    _ => return Err(anyhow!("unknown dataset flavor {v}")),
+                }
+            }
+            "sequence" | "seq" => self.sequence = v.parse()?,
+            "width" => self.width = v.parse()?,
+            "height" => self.height = v.parse()?,
+            "frames" => self.frames = v.parse()?,
+            "algorithm" | "algo" => {
+                self.algorithm = match v.to_ascii_lowercase().as_str() {
+                    "splatam" => Algorithm::SplaTam,
+                    "monogs" => Algorithm::MonoGs,
+                    "gsslam" | "gs-slam" => Algorithm::GsSlam,
+                    "flashslam" => Algorithm::FlashSlam,
+                    _ => return Err(anyhow!("unknown algorithm {v}")),
+                }
+            }
+            "variant" => {
+                self.variant = match v.to_ascii_lowercase().as_str() {
+                    "baseline" | "org" => Variant::Baseline,
+                    "org+s" | "orgs" | "org_s" => Variant::OrgS,
+                    "splatonic" => Variant::Splatonic,
+                    _ => return Err(anyhow!("unknown variant {v}")),
+                }
+            }
+            "backend" => {
+                self.backend = match v.to_ascii_lowercase().as_str() {
+                    "cpu" => Backend::Cpu,
+                    "xla" => Backend::Xla,
+                    _ => return Err(anyhow!("unknown backend {v}")),
+                }
+            }
+            "track_tile" => self.track_tile = v.parse()?,
+            "map_tile" => self.map_tile = v.parse()?,
+            "budget" => self.budget = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "threaded_mapping" => self.threaded_mapping = v.parse()?,
+            _ => return Err(anyhow!("unknown config key: {key}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slam::tracking::TrackPipeline;
+
+    #[test]
+    fn toml_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            # launcher config
+            [run]
+            dataset = "tum"
+            sequence = 2
+            width = 320
+            height = 240
+            algorithm = "MonoGS"
+            variant = "org+s"
+            track_tile = 8
+            budget = 0.5
+            threaded_mapping = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.flavor, Flavor::Tum);
+        assert_eq!(cfg.sequence, 2);
+        assert_eq!(cfg.algorithm, Algorithm::MonoGs);
+        assert_eq!(cfg.variant, Variant::OrgS);
+        assert_eq!(cfg.track_tile, 8);
+        assert!(cfg.threaded_mapping);
+        assert!((cfg.budget - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&[
+            "--algo=flashslam".into(),
+            "--frames".into(),
+            "10".into(),
+            "--backend=xla".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::FlashSlam);
+        assert_eq!(cfg.frames, 10);
+        assert_eq!(cfg.backend, Backend::Xla);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_args(&["--no_such_key=1".into()]).is_err());
+    }
+
+    #[test]
+    fn slam_config_respects_variant() {
+        let mut cfg = RunConfig { variant: Variant::Baseline, ..Default::default() };
+        assert_eq!(cfg.slam_config().tracking.pipeline, TrackPipeline::DenseTile);
+        cfg.variant = Variant::Splatonic;
+        cfg.track_tile = 8;
+        let sc = cfg.slam_config();
+        assert_eq!(sc.tracking.pipeline, TrackPipeline::SparsePixel);
+        assert_eq!(sc.tracking.tile, 8);
+    }
+}

@@ -1,0 +1,146 @@
+//! Dependency-free TOML-subset parser (see module docs in `config`).
+
+use anyhow::{anyhow, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// String form used by the config `apply` path.
+    pub fn to_string_value(&self) -> String {
+        match self {
+            TomlValue::Str(s) => s.clone(),
+            TomlValue::Int(i) => i.to_string(),
+            TomlValue::Float(f) => f.to_string(),
+            TomlValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// A parsed document: ordered (section, key, value) triples.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            doc.entries.push((section.clone(), k.trim().to_string(), value));
+        }
+        Ok(doc)
+    }
+
+    /// Iterate (key, value) pairs of one section.
+    pub fn section<'a>(&'a self, name: &'a str) -> impl Iterator<Item = (&'a str, &'a TomlValue)> {
+        self.entries
+            .iter()
+            .filter(move |(s, _, _)| s == name)
+            .map(|(_, k, v)| (k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is honored
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(inner) = v.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(anyhow!("cannot parse value: {v} (arrays/tables unsupported)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nname = \"x\" # comment\nn = 42\nf = 1.5\nflag = false\n[b]\nn = 7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "name"), Some(&TomlValue::Str("x".into())));
+        assert_eq!(doc.get("a", "n"), Some(&TomlValue::Int(42)));
+        assert_eq!(doc.get("a", "f"), Some(&TomlValue::Float(1.5)));
+        assert_eq!(doc.get("a", "flag"), Some(&TomlValue::Bool(false)));
+        assert_eq!(doc.get("b", "n"), Some(&TomlValue::Int(7)));
+        assert_eq!(doc.section("a").count(), 4);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "v"), Some(&TomlValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("[s]\nno_equals\n").is_err());
+        assert!(TomlDoc::parse("[s]\nv = [1,2]\n").is_err());
+    }
+
+    #[test]
+    fn value_to_string() {
+        assert_eq!(TomlValue::Int(3).to_string_value(), "3");
+        assert_eq!(TomlValue::Bool(true).to_string_value(), "true");
+        assert_eq!(TomlValue::Str("x".into()).to_string_value(), "x");
+    }
+}

@@ -1,0 +1,199 @@
+//! Synthetic RGB-D SLAM dataset substrate.
+//!
+//! Substitutes the paper's Replica [70] and TUM RGB-D [71] datasets
+//! (DESIGN.md §1): procedurally generated indoor scenes made of
+//! *ground-truth Gaussians*, rendered to RGB-D frames along smooth
+//! (Replica-like) or fast/noisy (TUM-like) trajectories. Because the GT
+//! scene is itself a Gaussian map, frames are photometrically consistent
+//! with what a perfectly converged 3DGS-SLAM could reconstruct, ATE has
+//! an exact reference trajectory, and PSNR an exact reference image —
+//! which is what the paper's accuracy figures (17/18, 24, 26) require.
+
+pub mod scene;
+pub mod trajectory;
+
+pub use scene::SceneSpec;
+pub use trajectory::TrajectorySpec;
+
+use crate::camera::{Camera, Intrinsics};
+use crate::gaussian::GaussianStore;
+use crate::math::{Pcg32, Se3, Vec3};
+use crate::render::image::{Image, Plane};
+use crate::render::{tile_pipeline, RenderConfig, StageCounters};
+
+/// One RGB-D observation with its ground-truth pose.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub rgb: Image,
+    pub depth: Plane,
+    /// Ground-truth world→camera pose (used for ATE only, never given to
+    /// the tracker beyond frame 0).
+    pub gt_w2c: Se3,
+}
+
+/// Dataset flavor — controls trajectory dynamics and sensor noise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    /// Replica-like: smooth motion, clean sensor.
+    Replica,
+    /// TUM-like: fast, jerky motion; RGB noise + depth holes.
+    Tum,
+}
+
+/// A generated sequence.
+pub struct SyntheticDataset {
+    pub name: String,
+    pub flavor: Flavor,
+    pub intr: Intrinsics,
+    pub frames: Vec<Frame>,
+    /// The ground-truth Gaussian scene the frames were rendered from.
+    pub gt_store: GaussianStore,
+}
+
+/// The 8 Replica sequences the paper averages over.
+pub const REPLICA_SEQUENCES: [&str; 8] = [
+    "room0", "room1", "room2", "office0", "office1", "office2", "office3", "office4",
+];
+
+/// The 3 TUM sequences (Fig. 18).
+pub const TUM_SEQUENCES: [&str; 3] = ["fr1_desk", "fr2_xyz", "fr3_office"];
+
+impl SyntheticDataset {
+    /// Generate a named sequence. `seq` indexes REPLICA_SEQUENCES /
+    /// TUM_SEQUENCES; the name seeds the scene so every sequence has
+    /// distinct geometry, deterministically.
+    pub fn generate(
+        flavor: Flavor,
+        seq: usize,
+        width: u32,
+        height: u32,
+        n_frames: usize,
+    ) -> Self {
+        let (name, seed) = match flavor {
+            Flavor::Replica => {
+                let n = REPLICA_SEQUENCES[seq % REPLICA_SEQUENCES.len()];
+                (n.to_string(), 1000 + seq as u64)
+            }
+            Flavor::Tum => {
+                let n = TUM_SEQUENCES[seq % TUM_SEQUENCES.len()];
+                (n.to_string(), 2000 + seq as u64)
+            }
+        };
+        let intr = match flavor {
+            Flavor::Replica => Intrinsics::replica_like(width, height),
+            Flavor::Tum => Intrinsics::tum_like(width, height),
+        };
+        let scene_spec = SceneSpec::for_seed(seed);
+        let gt_store = scene_spec.build();
+        let traj_spec = match flavor {
+            Flavor::Replica => TrajectorySpec::smooth(seed),
+            Flavor::Tum => TrajectorySpec::fast(seed),
+        };
+        let poses = traj_spec.generate(n_frames, &scene_spec);
+
+        let cfg = RenderConfig::default();
+        let mut rng = Pcg32::new_stream(seed, 77);
+        let frames = poses
+            .into_iter()
+            .map(|gt_w2c| {
+                let cam = Camera::new(intr, gt_w2c);
+                let mut c = StageCounters::new();
+                let (r, _) = tile_pipeline::render_dense(&gt_store, &cam, &cfg, &mut c);
+                let (mut rgb, mut depth) = (r.image, r.depth);
+                if flavor == Flavor::Tum {
+                    apply_sensor_noise(&mut rgb, &mut depth, &mut rng);
+                }
+                Frame { rgb, depth, gt_w2c }
+            })
+            .collect();
+
+        SyntheticDataset { name, flavor, intr, frames, gt_store }
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+}
+
+/// TUM-style sensor imperfections: additive RGB noise and depth holes.
+fn apply_sensor_noise(rgb: &mut Image, depth: &mut Plane, rng: &mut Pcg32) {
+    for px in rgb.data.iter_mut() {
+        *px = (*px
+            + Vec3::new(
+                rng.normal() * 0.01,
+                rng.normal() * 0.01,
+                rng.normal() * 0.01,
+            ))
+        .clamp01();
+    }
+    for d in depth.data.iter_mut() {
+        if rng.next_f32() < 0.02 {
+            *d = 0.0; // depth dropout (hole)
+        } else {
+            *d += rng.normal() * 0.005 * *d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SyntheticDataset {
+        SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, 4)
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.frames.len(), b.frames.len());
+        for (fa, fb) in a.frames.iter().zip(&b.frames) {
+            assert_eq!(fa.rgb.data, fb.rgb.data);
+            assert_eq!(fa.gt_w2c, fb.gt_w2c);
+        }
+    }
+
+    #[test]
+    fn frames_have_content() {
+        let d = tiny();
+        for f in &d.frames {
+            let mean: f32 = f.rgb.data.iter().map(|c| c.x + c.y + c.z).sum::<f32>()
+                / (3.0 * f.rgb.data.len() as f32);
+            assert!(mean > 0.02, "frame too dark: {mean}");
+            let covered = f.depth.data.iter().filter(|&&d| d > 0.0).count();
+            assert!(
+                covered as f32 / f.depth.data.len() as f32 > 0.5,
+                "little depth coverage"
+            );
+        }
+    }
+
+    #[test]
+    fn sequences_differ() {
+        let a = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 1);
+        let b = SyntheticDataset::generate(Flavor::Replica, 1, 48, 32, 1);
+        assert_ne!(a.frames[0].rgb.data, b.frames[0].rgb.data);
+        assert_ne!(a.name, b.name);
+    }
+
+    #[test]
+    fn tum_has_noise_and_holes() {
+        let d = SyntheticDataset::generate(Flavor::Tum, 0, 64, 48, 2);
+        let holes = d.frames[0].depth.data.iter().filter(|&&x| x == 0.0).count();
+        assert!(holes > 0, "expected depth dropouts");
+    }
+
+    #[test]
+    fn consecutive_poses_are_close() {
+        let d = SyntheticDataset::generate(Flavor::Replica, 2, 48, 32, 6);
+        for w in d.frames.windows(2) {
+            let dt = (w[0].gt_w2c.t - w[1].gt_w2c.t).norm();
+            assert!(dt < 0.35, "jump too large: {dt}");
+        }
+    }
+}

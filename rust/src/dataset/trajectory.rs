@@ -1,0 +1,154 @@
+//! Camera trajectory generator: smooth (Replica-like) and fast/jerky
+//! (TUM-like) paths through the room, always looking at textured scene
+//! content.
+
+use super::scene::SceneSpec;
+use crate::math::{Mat3, Pcg32, Quat, Se3, Vec3};
+
+/// Trajectory dynamics parameters.
+#[derive(Clone, Debug)]
+pub struct TrajectorySpec {
+    pub seed: u64,
+    /// Angular progress per frame along the orbit (radians).
+    pub step: f32,
+    /// Per-frame pose jitter (TUM-like fast motion).
+    pub jitter_t: f32,
+    pub jitter_r: f32,
+}
+
+impl TrajectorySpec {
+    /// Replica-like: slow, smooth.
+    pub fn smooth(seed: u64) -> Self {
+        TrajectorySpec { seed, step: 0.015, jitter_t: 0.0, jitter_r: 0.0 }
+    }
+
+    /// TUM-like: ~4× faster with translational/rotational jitter.
+    pub fn fast(seed: u64) -> Self {
+        TrajectorySpec { seed, step: 0.06, jitter_t: 0.02, jitter_r: 0.015 }
+    }
+
+    /// Generate `n` world→camera poses orbiting inside the room.
+    pub fn generate(&self, n: usize, scene: &SceneSpec) -> Vec<Se3> {
+        let mut rng = Pcg32::new_stream(self.seed, 29);
+        let h = scene.half;
+        let rx = h.x * 0.45;
+        let rz = h.z * 0.45;
+        let phase = rng.uniform(0.0, std::f32::consts::TAU);
+        let mut poses = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = phase + self.step * i as f32;
+            // orbit position with mild vertical bob
+            let pos = Vec3::new(
+                rx * t.cos(),
+                0.15 * (t * 0.7).sin(),
+                rz * t.sin(),
+            );
+            // look outward toward the walls, slightly ahead of the motion
+            let ahead = t + 0.9;
+            let target = Vec3::new(
+                h.x * ahead.cos() * 1.2,
+                0.1 * (ahead * 0.5).sin(),
+                h.z * ahead.sin() * 1.2,
+            );
+            let mut c2w = look_at(pos, target);
+            if self.jitter_t > 0.0 {
+                c2w.t += Vec3::new(
+                    rng.normal() * self.jitter_t,
+                    rng.normal() * self.jitter_t,
+                    rng.normal() * self.jitter_t,
+                );
+                let axis = Vec3::new(rng.normal(), rng.normal(), rng.normal());
+                let dq = Quat::from_axis_angle(axis, rng.normal() * self.jitter_r);
+                c2w.q = dq.mul(c2w.q).normalized();
+            }
+            poses.push(c2w.inverse()); // store w2c
+        }
+        poses
+    }
+}
+
+/// Build a camera→world pose at `eye` looking toward `target`
+/// (camera convention: +z forward, y down-ish; right-handed).
+pub fn look_at(eye: Vec3, target: Vec3) -> Se3 {
+    let f = (target - eye).normalized();
+    let world_up = Vec3::new(0.0, 1.0, 0.0);
+    let mut r = world_up.cross(f);
+    if r.norm() < 1e-5 {
+        r = Vec3::X; // degenerate: looking straight up/down
+    }
+    let right = r.normalized();
+    let down = f.cross(right);
+    let rot = Mat3::from_cols(right, down, f);
+    Se3::new(Quat::from_mat3(&rot), eye)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn look_at_forward_axis_points_at_target() {
+        let eye = Vec3::new(1.0, 0.5, -2.0);
+        let target = Vec3::new(0.0, 0.0, 1.0);
+        let c2w = look_at(eye, target);
+        // camera-space forward (0,0,1) mapped to world should align with
+        // the eye→target direction
+        let f_world = c2w.rotation().mul_vec(Vec3::Z);
+        let expect = (target - eye).normalized();
+        assert!((f_world - expect).norm() < 1e-4);
+        assert_eq!(c2w.t, eye);
+    }
+
+    #[test]
+    fn look_at_rotation_is_orthonormal() {
+        let c2w = look_at(Vec3::new(0.5, 0.2, 0.1), Vec3::new(-1.0, 0.0, 2.0));
+        let r = c2w.rotation();
+        assert!((r.det() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn target_projects_to_image_center_ray() {
+        let eye = Vec3::new(1.0, 0.0, 0.0);
+        let target = Vec3::new(-1.0, 0.3, 1.5);
+        let w2c = look_at(eye, target).inverse();
+        let t_cam = w2c.transform(target);
+        // target lies on the +z axis of the camera
+        assert!(t_cam.x.abs() < 1e-4 && t_cam.y.abs() < 1e-4);
+        assert!(t_cam.z > 0.0);
+    }
+
+    #[test]
+    fn smooth_trajectory_is_smooth() {
+        let scene = SceneSpec::for_seed(1);
+        let poses = TrajectorySpec::smooth(1).generate(20, &scene);
+        assert_eq!(poses.len(), 20);
+        for w in poses.windows(2) {
+            let d = (w[0].inverse().t - w[1].inverse().t).norm();
+            assert!(d < 0.08, "step too large: {d}");
+            let ang = w[0].q.angle_to(w[1].q);
+            assert!(ang < 0.08, "rotation step too large: {ang}");
+        }
+    }
+
+    #[test]
+    fn fast_trajectory_moves_faster() {
+        let scene = SceneSpec::for_seed(1);
+        let slow = TrajectorySpec::smooth(1).generate(10, &scene);
+        let fast = TrajectorySpec::fast(1).generate(10, &scene);
+        let dist = |p: &Vec<Se3>| -> f32 {
+            p.windows(2)
+                .map(|w| (w[0].inverse().t - w[1].inverse().t).norm())
+                .sum()
+        };
+        assert!(dist(&fast) > 2.0 * dist(&slow));
+    }
+
+    #[test]
+    fn cameras_stay_inside_room() {
+        let scene = SceneSpec::for_seed(3);
+        for pose in TrajectorySpec::fast(3).generate(50, &scene) {
+            let p = pose.inverse().t;
+            assert!(p.x.abs() < scene.half.x && p.z.abs() < scene.half.z, "{p:?}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Adam optimizer over flat f32 parameter slices.
+//!
+//! Both tracking (7 pose params) and mapping (14 params per Gaussian) use
+//! Adam, matching the SLAM algorithms the paper evaluates. The state is a
+//! plain SoA so mapping can grow it when densification inserts Gaussians.
+
+/// Adam hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl AdamConfig {
+    pub fn with_lr(lr: f32) -> Self {
+        AdamConfig { lr, ..Default::default() }
+    }
+}
+
+/// Adam state for a parameter vector of fixed (but growable) length.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, cfg: AdamConfig) -> Self {
+        Adam { cfg, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Grow state for newly inserted parameters (densification).
+    pub fn grow(&mut self, additional: usize) {
+        self.m.extend(std::iter::repeat(0.0).take(additional));
+        self.v.extend(std::iter::repeat(0.0).take(additional));
+    }
+
+    /// Drop state for removed parameter indices given a keep-compaction
+    /// map (same order the store's prune used).
+    pub fn compact(&mut self, keep: &[bool], params_per_item: usize) {
+        assert_eq!(keep.len() * params_per_item, self.m.len());
+        let mut j = 0;
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                if i != j {
+                    for p in 0..params_per_item {
+                        self.m[j * params_per_item + p] = self.m[i * params_per_item + p];
+                        self.v[j * params_per_item + p] = self.v[i * params_per_item + p];
+                    }
+                }
+                j += 1;
+            }
+        }
+        self.m.truncate(j * params_per_item);
+        self.v.truncate(j * params_per_item);
+    }
+
+    /// One Adam step: `params -= lr * m̂ / (sqrt(v̂) + eps)`.
+    /// `lr_scale` lets callers use per-group learning rates over one state.
+    pub fn step_scaled(&mut self, params: &mut [f32], grads: &[f32], lr_scale: &dyn Fn(usize) -> f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            if !g.is_finite() {
+                continue;
+            }
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.cfg.lr * lr_scale(i) * mhat / (vhat.sqrt() + self.cfg.eps);
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.step_scaled(params, grads, &|_| 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (x-3)^2 + (y+2)^2
+        let mut adam = Adam::new(2, AdamConfig::with_lr(0.1));
+        let mut p = [0.0f32, 0.0];
+        for _ in 0..500 {
+            let g = [2.0 * (p[0] - 3.0), 2.0 * (p[1] + 2.0)];
+            adam.step(&mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{p:?}");
+        assert!((p[1] + 2.0).abs() < 0.05, "{p:?}");
+    }
+
+    #[test]
+    fn skips_nonfinite_grads() {
+        let mut adam = Adam::new(2, AdamConfig::with_lr(0.1));
+        let mut p = [1.0f32, 1.0];
+        adam.step(&mut p, &[f32::NAN, 1.0]);
+        assert_eq!(p[0], 1.0); // untouched
+        assert!(p[1] < 1.0);
+    }
+
+    #[test]
+    fn grow_preserves_existing_state() {
+        let mut adam = Adam::new(1, AdamConfig::with_lr(0.5));
+        let mut p = [0.0f32];
+        adam.step(&mut p, &[1.0]);
+        let m_before = adam.m[0];
+        adam.grow(2);
+        assert_eq!(adam.len(), 3);
+        assert_eq!(adam.m[0], m_before);
+        assert_eq!(adam.m[1], 0.0);
+    }
+
+    #[test]
+    fn compact_removes_pruned_state() {
+        let mut adam = Adam::new(6, AdamConfig::default());
+        for i in 0..6 {
+            adam.m[i] = i as f32;
+            adam.v[i] = i as f32 * 10.0;
+        }
+        // 3 items of 2 params, drop the middle item
+        adam.compact(&[true, false, true], 2);
+        assert_eq!(adam.len(), 4);
+        assert_eq!(adam.m, vec![0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(adam.v, vec![0.0, 10.0, 40.0, 50.0]);
+    }
+
+    #[test]
+    fn per_group_lr_scaling() {
+        let mut adam = Adam::new(2, AdamConfig::with_lr(0.1));
+        let mut p = [0.0f32, 0.0];
+        // same grad, second param has 0 lr => unchanged
+        adam.step_scaled(&mut p, &[1.0, 1.0], &|i| if i == 0 { 1.0 } else { 0.0 });
+        assert!(p[0] < 0.0);
+        assert_eq!(p[1], 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! 3D Gaussian primitives and their SoA store, covariance construction,
+//! activation functions, and the map-maintenance ops (densify / prune)
+//! the mapping process needs.
+
+pub mod adam;
+pub mod store;
+
+pub use adam::{Adam, AdamConfig};
+pub use store::GaussianStore;
+
+use crate::math::{sigmoid, Mat3, Quat, Vec3};
+
+/// One 3D Gaussian, AoS view (the store keeps SoA; this is the exchange
+/// type for construction and tests).
+#[derive(Clone, Copy, Debug)]
+pub struct Gaussian {
+    /// World-space mean.
+    pub mean: Vec3,
+    /// Orientation (raw/unnormalized trainable quaternion).
+    pub rot: Quat,
+    /// Log-scale per axis (activation: exp).
+    pub log_scale: Vec3,
+    /// Opacity logit (activation: sigmoid).
+    pub opacity_logit: f32,
+    /// RGB color in [0,1] (SLAM pipelines use RGB, not SH).
+    pub color: Vec3,
+}
+
+impl Gaussian {
+    /// Isotropic Gaussian from a point + radius + color (SplaTAM-style
+    /// initialization from back-projected depth).
+    pub fn isotropic(mean: Vec3, radius: f32, color: Vec3, opacity: f32) -> Self {
+        let r = radius.max(1e-6);
+        let o = opacity.clamp(1e-4, 1.0 - 1e-4);
+        Gaussian {
+            mean,
+            rot: Quat::IDENTITY,
+            log_scale: Vec3::splat(r.ln()),
+            opacity_logit: (o / (1.0 - o)).ln(),
+            color,
+        }
+    }
+
+    #[inline]
+    pub fn scale(&self) -> Vec3 {
+        self.log_scale.exp()
+    }
+
+    #[inline]
+    pub fn opacity(&self) -> f32 {
+        sigmoid(self.opacity_logit)
+    }
+
+    /// World-space 3x3 covariance Σ = R S Sᵀ Rᵀ.
+    pub fn covariance(&self) -> Mat3 {
+        let r = self.rot.to_mat3();
+        let s = self.scale();
+        let m = r * Mat3::diag(s); // M = R S
+        m * m.transpose()
+    }
+
+    /// Largest scale axis — used as a conservative bounding radius basis.
+    pub fn max_scale(&self) -> f32 {
+        self.scale().max_elem()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isotropic_covariance_is_diagonal() {
+        let g = Gaussian::isotropic(Vec3::ZERO, 0.5, Vec3::ONE, 0.8);
+        let cov = g.covariance();
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 0.25 } else { 0.0 };
+                assert!((cov.m[i][j] - expect).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn opacity_round_trip() {
+        for o in [0.05f32, 0.5, 0.9, 0.99] {
+            let g = Gaussian::isotropic(Vec3::ZERO, 1.0, Vec3::ONE, o);
+            assert!((g.opacity() - o).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn covariance_positive_semidefinite() {
+        let mut g = Gaussian::isotropic(Vec3::ZERO, 0.3, Vec3::ONE, 0.5);
+        g.rot = Quat::new(0.4, 0.2, -0.7, 0.5);
+        g.log_scale = Vec3::new(-1.0, 0.5, -2.0);
+        let cov = g.covariance();
+        // PSD check along random directions
+        let dirs = [
+            Vec3::X,
+            Vec3::Y,
+            Vec3::Z,
+            Vec3::new(1.0, 1.0, 1.0).normalized(),
+            Vec3::new(-0.3, 0.8, 0.2).normalized(),
+        ];
+        for d in dirs {
+            assert!(d.dot(cov.mul_vec(d)) >= -1e-6);
+        }
+        // symmetric
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((cov.m[i][j] - cov.m[j][i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn covariance_rotation_invariant_for_isotropic() {
+        let mut g = Gaussian::isotropic(Vec3::ZERO, 0.7, Vec3::ONE, 0.5);
+        g.rot = Quat::from_axis_angle(Vec3::new(1.0, 2.0, 3.0), 1.2);
+        let cov = g.covariance();
+        assert!((cov.m[0][0] - 0.49).abs() < 1e-4);
+        assert!(cov.m[0][1].abs() < 1e-5);
+    }
+}

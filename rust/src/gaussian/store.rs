@@ -1,0 +1,198 @@
+//! SoA Gaussian store — the map representation shared by rendering,
+//! mapping (densify/prune) and the optimizers.
+
+use super::Gaussian;
+use crate::math::{sigmoid, Quat, Vec3};
+
+/// Structure-of-arrays Gaussian map. SoA keeps the render hot loops
+/// cache-friendly and matches the layout the AOT (L2) artifacts consume.
+#[derive(Clone, Debug, Default)]
+pub struct GaussianStore {
+    pub means: Vec<Vec3>,
+    pub rots: Vec<Quat>,
+    pub log_scales: Vec<Vec3>,
+    pub opacity_logits: Vec<f32>,
+    pub colors: Vec<Vec3>,
+}
+
+impl GaussianStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        GaussianStore {
+            means: Vec::with_capacity(n),
+            rots: Vec::with_capacity(n),
+            log_scales: Vec::with_capacity(n),
+            opacity_logits: Vec::with_capacity(n),
+            colors: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.means.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.means.is_empty()
+    }
+
+    pub fn push(&mut self, g: Gaussian) {
+        self.means.push(g.mean);
+        self.rots.push(g.rot);
+        self.log_scales.push(g.log_scale);
+        self.opacity_logits.push(g.opacity_logit);
+        self.colors.push(g.color);
+    }
+
+    pub fn get(&self, i: usize) -> Gaussian {
+        Gaussian {
+            mean: self.means[i],
+            rot: self.rots[i],
+            log_scale: self.log_scales[i],
+            opacity_logit: self.opacity_logits[i],
+            color: self.colors[i],
+        }
+    }
+
+    pub fn set(&mut self, i: usize, g: Gaussian) {
+        self.means[i] = g.mean;
+        self.rots[i] = g.rot;
+        self.log_scales[i] = g.log_scale;
+        self.opacity_logits[i] = g.opacity_logit;
+        self.colors[i] = g.color;
+    }
+
+    pub fn opacity(&self, i: usize) -> f32 {
+        sigmoid(self.opacity_logits[i])
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Gaussian> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Remove Gaussians whose opacity fell below `min_opacity` or whose
+    /// largest scale exceeds `max_scale` (mapping's prune step). Returns
+    /// the number removed.
+    pub fn prune(&mut self, min_opacity: f32, max_scale: f32) -> usize {
+        let keep: Vec<bool> = (0..self.len())
+            .map(|i| {
+                self.opacity(i) >= min_opacity && self.get(i).max_scale() <= max_scale
+            })
+            .collect();
+        let removed = keep.iter().filter(|&&k| !k).count();
+        if removed == 0 {
+            return 0;
+        }
+        let mut j = 0;
+        for i in 0..keep.len() {
+            if keep[i] {
+                if i != j {
+                    self.means[j] = self.means[i];
+                    self.rots[j] = self.rots[i];
+                    self.log_scales[j] = self.log_scales[i];
+                    self.opacity_logits[j] = self.opacity_logits[i];
+                    self.colors[j] = self.colors[i];
+                }
+                j += 1;
+            }
+        }
+        self.truncate(j);
+        removed
+    }
+
+    fn truncate(&mut self, n: usize) {
+        self.means.truncate(n);
+        self.rots.truncate(n);
+        self.log_scales.truncate(n);
+        self.opacity_logits.truncate(n);
+        self.colors.truncate(n);
+    }
+
+    /// Append all Gaussians of `other`.
+    pub fn extend_from(&mut self, other: &GaussianStore) {
+        self.means.extend_from_slice(&other.means);
+        self.rots.extend_from_slice(&other.rots);
+        self.log_scales.extend_from_slice(&other.log_scales);
+        self.opacity_logits.extend_from_slice(&other.opacity_logits);
+        self.colors.extend_from_slice(&other.colors);
+    }
+
+    /// Approximate parameter memory footprint in bytes (for the sims'
+    /// DRAM-traffic model: 14 f32 attributes per Gaussian).
+    pub fn param_bytes(&self) -> usize {
+        self.len() * 14 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_store(n: usize) -> GaussianStore {
+        let mut s = GaussianStore::new();
+        for i in 0..n {
+            let t = i as f32;
+            s.push(Gaussian::isotropic(
+                Vec3::new(t, -t, t * 0.5),
+                0.1 + 0.01 * t,
+                Vec3::splat(0.5),
+                0.9,
+            ));
+        }
+        s
+    }
+
+    #[test]
+    fn push_get_round_trip() {
+        let s = sample_store(5);
+        assert_eq!(s.len(), 5);
+        let g = s.get(3);
+        assert_eq!(g.mean, Vec3::new(3.0, -3.0, 1.5));
+        assert!((g.opacity() - 0.9).abs() < 1e-5);
+    }
+
+    #[test]
+    fn prune_by_opacity() {
+        let mut s = sample_store(4);
+        s.opacity_logits[1] = -10.0; // ~0 opacity
+        s.opacity_logits[2] = -10.0;
+        let removed = s.prune(0.05, f32::INFINITY);
+        assert_eq!(removed, 2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(0).mean.x, 0.0);
+        assert_eq!(s.get(1).mean.x, 3.0);
+    }
+
+    #[test]
+    fn prune_by_scale() {
+        let mut s = sample_store(3);
+        s.log_scales[0] = Vec3::splat(10.0); // huge
+        let removed = s.prune(0.0, 1.0);
+        assert_eq!(removed, 1);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn prune_noop_when_all_valid() {
+        let mut s = sample_store(3);
+        assert_eq!(s.prune(0.01, 100.0), 0);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn extend_concatenates() {
+        let mut a = sample_store(2);
+        let b = sample_store(3);
+        a.extend_from(&b);
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.get(2).mean, b.get(0).mean);
+    }
+
+    #[test]
+    fn param_bytes_counts_attributes() {
+        let s = sample_store(10);
+        assert_eq!(s.param_bytes(), 10 * 14 * 4);
+    }
+}

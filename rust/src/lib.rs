@@ -1,0 +1,33 @@
+//! # Splatonic
+//!
+//! Full-system reproduction of *"Splatonic: Architecture Support for 3D
+//! Gaussian Splatting SLAM via Sparse Processing"* (CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Rust (this crate)** — the SLAM coordinator, a complete
+//!   differentiable 3DGS renderer (tile-based baseline and the paper's
+//!   pixel-based pipeline), adaptive sparse pixel sampling, a synthetic
+//!   RGB-D dataset substrate, and cycle-level performance/energy models
+//!   of the mobile-GPU baseline, the Splatonic accelerator, and the
+//!   GSArch / GauSPU prior accelerators.
+//! * **JAX (build time)** — the sparse render step's forward/backward
+//!   lowered AOT to HLO text ([`runtime`] loads it via PJRT).
+//! * **Pallas (build time)** — the Gaussian-parallel compositing kernel
+//!   inside the JAX model.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod camera;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod gaussian;
+pub mod math;
+pub mod render;
+pub mod sampling;
+pub mod sim;
+pub mod slam;
+
+pub mod runtime;

@@ -1,0 +1,48 @@
+//! Splatonic launcher: run a 3DGS-SLAM session from a config file and/or
+//! CLI overrides.
+//!
+//! ```text
+//! splatonic [--config run.toml] [--key=value ...]
+//!   keys: dataset (replica|tum), seq, width, height, frames,
+//!         algo (splatam|monogs|gsslam|flashslam),
+//!         variant (baseline|org+s|splatonic),
+//!         backend (cpu|xla), track_tile, map_tile, budget, seed,
+//!         threaded_mapping
+//! ```
+
+use anyhow::Result;
+use splatonic::config::RunConfig;
+use splatonic::coordinator;
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("splatonic — sparse 3DGS-SLAM (paper reproduction)");
+        println!("usage: splatonic [--config run.toml] [--key=value ...]");
+        println!("see rust/src/main.rs docs for keys");
+        return Ok(());
+    }
+    // optional --config file first, then CLI overrides
+    let mut cfg = RunConfig::default();
+    if let Some(pos) = args.iter().position(|a| a == "--config" || a.starts_with("--config=")) {
+        let path = if let Some(eq) = args[pos].strip_prefix("--config=") {
+            let p = eq.to_string();
+            args.remove(pos);
+            p
+        } else {
+            let p = args
+                .get(pos + 1)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+            args.drain(pos..=pos + 1);
+            p
+        };
+        let text = std::fs::read_to_string(&path)?;
+        cfg = RunConfig::from_toml(&text)?;
+    }
+    cfg.apply_args(&args)?;
+
+    let report = coordinator::run(&cfg)?;
+    report.print();
+    Ok(())
+}

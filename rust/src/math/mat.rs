@@ -1,0 +1,441 @@
+//! 2x2 / 3x3 / 4x4 matrices (row-major), just enough for EWA splatting,
+//! pose algebra and the analytic backward pass.
+
+use super::vec::{Vec2, Vec3};
+use std::ops::{Add, Mul, Sub};
+
+/// Symmetric-capable 2x2 matrix, row-major: [[a, b], [c, d]].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Mat2 {
+    pub m: [[f32; 2]; 2],
+}
+
+/// 3x3 matrix, row-major.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f32; 3]; 3],
+}
+
+/// 4x4 matrix, row-major (homogeneous transforms).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat2 {
+    pub const ZERO: Mat2 = Mat2 { m: [[0.0; 2]; 2] };
+
+    #[inline]
+    pub fn new(a: f32, b: f32, c: f32, d: f32) -> Self {
+        Mat2 { m: [[a, b], [c, d]] }
+    }
+
+    #[inline]
+    pub fn identity() -> Self {
+        Mat2::new(1.0, 0.0, 0.0, 1.0)
+    }
+
+    #[inline]
+    pub fn det(self) -> f32 {
+        self.m[0][0] * self.m[1][1] - self.m[0][1] * self.m[1][0]
+    }
+
+    /// Inverse; returns None when the determinant is ~0.
+    pub fn inverse(self) -> Option<Mat2> {
+        let d = self.det();
+        if d.abs() < 1e-12 {
+            return None;
+        }
+        let inv = 1.0 / d;
+        Some(Mat2::new(
+            self.m[1][1] * inv,
+            -self.m[0][1] * inv,
+            -self.m[1][0] * inv,
+            self.m[0][0] * inv,
+        ))
+    }
+
+    #[inline]
+    pub fn transpose(self) -> Mat2 {
+        Mat2::new(self.m[0][0], self.m[1][0], self.m[0][1], self.m[1][1])
+    }
+
+    #[inline]
+    pub fn mul_vec(self, v: Vec2) -> Vec2 {
+        Vec2::new(
+            self.m[0][0] * v.x + self.m[0][1] * v.y,
+            self.m[1][0] * v.x + self.m[1][1] * v.y,
+        )
+    }
+
+    /// Eigenvalues of a symmetric 2x2 (used for splat radius).
+    pub fn sym_eigenvalues(self) -> (f32, f32) {
+        let tr = self.m[0][0] + self.m[1][1];
+        let det = self.det();
+        let mid = tr * 0.5;
+        let disc = (mid * mid - det).max(0.0).sqrt();
+        (mid + disc, mid - disc)
+    }
+}
+
+impl Mul for Mat2 {
+    type Output = Mat2;
+    fn mul(self, o: Mat2) -> Mat2 {
+        let mut r = Mat2::ZERO;
+        for i in 0..2 {
+            for j in 0..2 {
+                r.m[i][j] = self.m[i][0] * o.m[0][j] + self.m[i][1] * o.m[1][j];
+            }
+        }
+        r
+    }
+}
+
+impl Add for Mat2 {
+    type Output = Mat2;
+    fn add(self, o: Mat2) -> Mat2 {
+        let mut r = self;
+        for i in 0..2 {
+            for j in 0..2 {
+                r.m[i][j] += o.m[i][j];
+            }
+        }
+        r
+    }
+}
+
+impl Mul<f32> for Mat2 {
+    type Output = Mat2;
+    fn mul(self, s: f32) -> Mat2 {
+        let mut r = self;
+        for i in 0..2 {
+            for j in 0..2 {
+                r.m[i][j] *= s;
+            }
+        }
+        r
+    }
+}
+
+impl Mat3 {
+    pub const ZERO: Mat3 = Mat3 { m: [[0.0; 3]; 3] };
+
+    #[inline]
+    pub fn identity() -> Self {
+        let mut m = Mat3::ZERO;
+        m.m[0][0] = 1.0;
+        m.m[1][1] = 1.0;
+        m.m[2][2] = 1.0;
+        m
+    }
+
+    pub fn from_rows(r0: Vec3, r1: Vec3, r2: Vec3) -> Self {
+        Mat3 {
+            m: [
+                [r0.x, r0.y, r0.z],
+                [r1.x, r1.y, r1.z],
+                [r2.x, r2.y, r2.z],
+            ],
+        }
+    }
+
+    pub fn from_cols(c0: Vec3, c1: Vec3, c2: Vec3) -> Self {
+        Mat3 {
+            m: [
+                [c0.x, c1.x, c2.x],
+                [c0.y, c1.y, c2.y],
+                [c0.z, c1.z, c2.z],
+            ],
+        }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: Vec3) -> Self {
+        let mut m = Mat3::ZERO;
+        m.m[0][0] = d.x;
+        m.m[1][1] = d.y;
+        m.m[2][2] = d.z;
+        m
+    }
+
+    #[inline]
+    pub fn row(self, i: usize) -> Vec3 {
+        Vec3::new(self.m[i][0], self.m[i][1], self.m[i][2])
+    }
+
+    #[inline]
+    pub fn col(self, j: usize) -> Vec3 {
+        Vec3::new(self.m[0][j], self.m[1][j], self.m[2][j])
+    }
+
+    #[inline]
+    pub fn transpose(self) -> Mat3 {
+        Mat3::from_cols(self.row(0), self.row(1), self.row(2))
+    }
+
+    #[inline]
+    pub fn mul_vec(self, v: Vec3) -> Vec3 {
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+
+    pub fn det(self) -> f32 {
+        self.row(0).dot(self.row(1).cross(self.row(2)))
+    }
+
+    pub fn trace(self) -> f32 {
+        self.m[0][0] + self.m[1][1] + self.m[2][2]
+    }
+
+    /// Outer product a bᵀ.
+    pub fn outer(a: Vec3, b: Vec3) -> Mat3 {
+        Mat3 {
+            m: [
+                [a.x * b.x, a.x * b.y, a.x * b.z],
+                [a.y * b.x, a.y * b.y, a.y * b.z],
+                [a.z * b.x, a.z * b.y, a.z * b.z],
+            ],
+        }
+    }
+
+    pub fn inverse(self) -> Option<Mat3> {
+        let d = self.det();
+        if d.abs() < 1e-12 {
+            return None;
+        }
+        let inv = 1.0 / d;
+        let c0 = self.row(1).cross(self.row(2)) * inv;
+        let c1 = self.row(2).cross(self.row(0)) * inv;
+        let c2 = self.row(0).cross(self.row(1)) * inv;
+        // Rows of the inverse are the cross products of the original rows
+        // (adjugate transpose).
+        Some(Mat3::from_rows(c0, c1, c2).transpose().transpose_fix())
+    }
+
+    // from_rows(c0,c1,c2) builds adj^T rows; the inverse is its transpose
+    // arranged as columns. Keep a private fix to avoid silent confusion.
+    fn transpose_fix(self) -> Mat3 {
+        self
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.m.iter().flatten().all(|v| v.is_finite())
+    }
+}
+
+impl Mul for Mat3 {
+    type Output = Mat3;
+    fn mul(self, o: Mat3) -> Mat3 {
+        let mut r = Mat3::ZERO;
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+}
+
+impl Add for Mat3 {
+    type Output = Mat3;
+    fn add(self, o: Mat3) -> Mat3 {
+        let mut r = self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] += o.m[i][j];
+            }
+        }
+        r
+    }
+}
+
+impl Sub for Mat3 {
+    type Output = Mat3;
+    fn sub(self, o: Mat3) -> Mat3 {
+        let mut r = self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] -= o.m[i][j];
+            }
+        }
+        r
+    }
+}
+
+impl Mul<f32> for Mat3 {
+    type Output = Mat3;
+    fn mul(self, s: f32) -> Mat3 {
+        let mut r = self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] *= s;
+            }
+        }
+        r
+    }
+}
+
+impl Mat4 {
+    pub fn identity() -> Self {
+        let mut m = [[0.0f32; 4]; 4];
+        for (i, row) in m.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        Mat4 { m }
+    }
+
+    /// Build from rotation + translation (rigid transform).
+    pub fn from_rt(r: Mat3, t: Vec3) -> Self {
+        let mut m = Mat4::identity();
+        for i in 0..3 {
+            for j in 0..3 {
+                m.m[i][j] = r.m[i][j];
+            }
+        }
+        m.m[0][3] = t.x;
+        m.m[1][3] = t.y;
+        m.m[2][3] = t.z;
+        m
+    }
+
+    pub fn rotation(self) -> Mat3 {
+        let mut r = Mat3::ZERO;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] = self.m[i][j];
+            }
+        }
+        r
+    }
+
+    pub fn translation(self) -> Vec3 {
+        Vec3::new(self.m[0][3], self.m[1][3], self.m[2][3])
+    }
+
+    pub fn transform_point(self, p: Vec3) -> Vec3 {
+        self.rotation().mul_vec(p) + self.translation()
+    }
+}
+
+impl Mul for Mat4 {
+    type Output = Mat4;
+    fn mul(self, o: Mat4) -> Mat4 {
+        let mut r = Mat4 { m: [[0.0; 4]; 4] };
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_mat3_close(a: Mat3, b: Mat3, tol: f32) {
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(
+                    (a.m[i][j] - b.m[i][j]).abs() < tol,
+                    "mismatch at ({i},{j}): {} vs {}",
+                    a.m[i][j],
+                    b.m[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mat2_inverse_round_trip() {
+        let a = Mat2::new(2.0, 1.0, -1.0, 3.0);
+        let inv = a.inverse().unwrap();
+        let prod = a * inv;
+        assert!((prod.m[0][0] - 1.0).abs() < 1e-5);
+        assert!((prod.m[1][1] - 1.0).abs() < 1e-5);
+        assert!(prod.m[0][1].abs() < 1e-5);
+        assert!(prod.m[1][0].abs() < 1e-5);
+    }
+
+    #[test]
+    fn mat2_singular_inverse_none() {
+        assert!(Mat2::new(1.0, 2.0, 2.0, 4.0).inverse().is_none());
+    }
+
+    #[test]
+    fn mat2_sym_eigenvalues() {
+        // diag(4, 1) rotated is still eig {4, 1}; test the diagonal case.
+        let (l1, l2) = Mat2::new(4.0, 0.0, 0.0, 1.0).sym_eigenvalues();
+        assert!((l1 - 4.0).abs() < 1e-6);
+        assert!((l2 - 1.0).abs() < 1e-6);
+        // symmetric non-diagonal
+        let m = Mat2::new(2.0, 1.0, 1.0, 2.0);
+        let (a, b) = m.sym_eigenvalues();
+        assert!((a - 3.0).abs() < 1e-5);
+        assert!((b - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mat3_inverse_round_trip() {
+        let a = Mat3::from_rows(
+            Vec3::new(2.0, 0.5, -1.0),
+            Vec3::new(0.0, 1.5, 0.25),
+            Vec3::new(1.0, -0.5, 3.0),
+        );
+        let inv = a.inverse().unwrap();
+        assert_mat3_close(a * inv, Mat3::identity(), 1e-5);
+        assert_mat3_close(inv * a, Mat3::identity(), 1e-5);
+    }
+
+    #[test]
+    fn mat3_mul_vec_matches_rows() {
+        let a = Mat3::from_rows(Vec3::X, Vec3::Y, Vec3::Z);
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        assert_eq!(a.mul_vec(v), v);
+    }
+
+    #[test]
+    fn mat3_transpose_involution() {
+        let a = Mat3::from_rows(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(4.0, 5.0, 6.0),
+            Vec3::new(7.0, 8.0, 9.0),
+        );
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn outer_product_rank_one() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(-1.0, 0.5, 2.0);
+        let m = Mat3::outer(a, b);
+        assert!(m.det().abs() < 1e-6);
+        assert_eq!(m.mul_vec(Vec3::X), a * b.x);
+    }
+
+    #[test]
+    fn mat4_rigid_round_trip() {
+        let r = Mat3::identity();
+        let t = Vec3::new(1.0, -2.0, 3.0);
+        let m = Mat4::from_rt(r, t);
+        assert_eq!(m.transform_point(Vec3::ZERO), t);
+        assert_eq!(m.rotation(), r);
+        assert_eq!(m.translation(), t);
+    }
+
+    #[test]
+    fn mat4_mul_identity() {
+        let m = Mat4::from_rt(Mat3::identity(), Vec3::new(1.0, 2.0, 3.0));
+        let i = Mat4::identity();
+        assert_eq!((m * i).m, m.m);
+        assert_eq!((i * m).m, m.m);
+    }
+}

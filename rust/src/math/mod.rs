@@ -1,0 +1,75 @@
+//! Small, dependency-free linear algebra + numerics substrate.
+//!
+//! Everything the renderer, SLAM layer, and simulators need: 2/3-vectors,
+//! 2x2/3x3/4x4 matrices, quaternions, SE(3) poses, a deterministic PRNG
+//! (so every experiment is reproducible bit-for-bit), and the 64-entry
+//! exponential lookup table from the paper's projection unit (Sec. V-C).
+
+pub mod exp_lut;
+pub mod mat;
+pub mod quat;
+pub mod rng;
+pub mod se3;
+pub mod vec;
+
+pub use exp_lut::ExpLut;
+pub use mat::{Mat2, Mat3, Mat4};
+pub use quat::Quat;
+pub use rng::Pcg32;
+pub use se3::Se3;
+pub use vec::{Vec2, Vec3, Vec4};
+
+/// Numerical epsilon used throughout gradient checks and inversions.
+pub const EPS: f32 = 1e-8;
+
+/// Clamp helper that is NaN-safe (NaN maps to `lo`).
+#[inline]
+pub fn clampf(x: f32, lo: f32, hi: f32) -> f32 {
+    if x.is_nan() {
+        lo
+    } else {
+        x.max(lo).min(hi)
+    }
+}
+
+/// Sigmoid, used for opacity activation.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Derivative of sigmoid expressed through its output.
+#[inline]
+pub fn dsigmoid_from_y(y: f32) -> f32 {
+    y * (1.0 - y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_handles_nan() {
+        assert_eq!(clampf(f32::NAN, -1.0, 1.0), -1.0);
+        assert_eq!(clampf(2.0, -1.0, 1.0), 1.0);
+        assert_eq!(clampf(-2.0, -1.0, 1.0), -1.0);
+        assert_eq!(clampf(0.5, -1.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for x in [-3.0f32, -1.0, 0.0, 0.5, 2.0] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dsigmoid_matches_finite_difference() {
+        let h = 1e-3f32;
+        for x in [-2.0f32, -0.5, 0.0, 1.0, 2.5] {
+            let fd = (sigmoid(x + h) - sigmoid(x - h)) / (2.0 * h);
+            let an = dsigmoid_from_y(sigmoid(x));
+            assert!((fd - an).abs() < 1e-4, "x={x} fd={fd} an={an}");
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! Unit quaternions for Gaussian orientation and camera poses,
+//! plus the analytic ∂R/∂q Jacobians needed by the backward pass.
+
+use super::mat::Mat3;
+use super::vec::Vec3;
+
+/// Quaternion (w, x, y, z). Not necessarily normalized — 3DGS stores the
+/// raw (unnormalized) quaternion as the trainable parameter and
+/// normalizes inside the forward pass, so gradients flow through the
+/// normalization.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline]
+    pub fn new(w: f32, x: f32, y: f32, z: f32) -> Self {
+        Quat { w, x, y, z }
+    }
+
+    /// Axis-angle constructor (axis need not be unit).
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Self {
+        let a = axis.normalized();
+        let (s, c) = (angle * 0.5).sin_cos();
+        Quat::new(c, a.x * s, a.y * s, a.z * s)
+    }
+
+    #[inline]
+    pub fn norm(self) -> f32 {
+        (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt()
+    }
+
+    pub fn normalized(self) -> Quat {
+        let n = self.norm();
+        if n < 1e-12 {
+            return Quat::IDENTITY;
+        }
+        Quat::new(self.w / n, self.x / n, self.y / n, self.z / n)
+    }
+
+    #[inline]
+    pub fn conjugate(self) -> Quat {
+        Quat::new(self.w, -self.x, -self.y, -self.z)
+    }
+
+    /// Hamilton product.
+    pub fn mul(self, o: Quat) -> Quat {
+        Quat::new(
+            self.w * o.w - self.x * o.x - self.y * o.y - self.z * o.z,
+            self.w * o.x + self.x * o.w + self.y * o.z - self.z * o.y,
+            self.w * o.y - self.x * o.z + self.y * o.w + self.z * o.x,
+            self.w * o.z + self.x * o.y - self.y * o.x + self.z * o.w,
+        )
+    }
+
+    /// Rotation matrix of the *normalized* quaternion.
+    pub fn to_mat3(self) -> Mat3 {
+        let q = self.normalized();
+        let (w, x, y, z) = (q.w, q.x, q.y, q.z);
+        Mat3 {
+            m: [
+                [
+                    1.0 - 2.0 * (y * y + z * z),
+                    2.0 * (x * y - w * z),
+                    2.0 * (x * z + w * y),
+                ],
+                [
+                    2.0 * (x * y + w * z),
+                    1.0 - 2.0 * (x * x + z * z),
+                    2.0 * (y * z - w * x),
+                ],
+                [
+                    2.0 * (x * z - w * y),
+                    2.0 * (y * z + w * x),
+                    1.0 - 2.0 * (x * x + y * y),
+                ],
+            ],
+        }
+    }
+
+    pub fn rotate(self, v: Vec3) -> Vec3 {
+        self.to_mat3().mul_vec(v)
+    }
+
+    /// ∂R/∂q of the *normalized-inside* rotation: given dL/dR (3x3),
+    /// returns dL/d(raw q) including the normalization chain.
+    pub fn backward_rotation(self, dl_dr: &Mat3) -> Quat {
+        let n = self.norm().max(1e-12);
+        let q = Quat::new(self.w / n, self.x / n, self.y / n, self.z / n);
+        let (w, x, y, z) = (q.w, q.x, q.y, q.z);
+
+        // dR/d(unit q) — derivative of each matrix entry wrt (w,x,y,z).
+        // R entries as in to_mat3.
+        let g = |i: usize, j: usize| dl_dr.m[i][j];
+        // accumulate dL/d(unit q)
+        let dw = 2.0
+            * (-z * g(0, 1) + y * g(0, 2) + z * g(1, 0) - x * g(1, 2) - y * g(2, 0)
+                + x * g(2, 1));
+        let dx = 2.0
+            * (y * g(0, 1) + z * g(0, 2) + y * g(1, 0) - 2.0 * x * g(1, 1) - w * g(1, 2)
+                + z * g(2, 0)
+                + w * g(2, 1)
+                - 2.0 * x * g(2, 2));
+        let dy = 2.0
+            * (-2.0 * y * g(0, 0) + x * g(0, 1) + w * g(0, 2) + x * g(1, 0) + z * g(1, 2)
+                - w * g(2, 0)
+                + z * g(2, 1)
+                - 2.0 * y * g(2, 2));
+        let dz = 2.0
+            * (-2.0 * z * g(0, 0) - w * g(0, 1) + x * g(0, 2) + w * g(1, 0) - 2.0 * z * g(1, 1)
+                + y * g(1, 2)
+                + x * g(2, 0)
+                + y * g(2, 1));
+        let d_unit = Quat::new(dw, dx, dy, dz);
+
+        // chain through normalization: d(unit)/d(raw) = (I - u uᵀ)/n
+        let dot = d_unit.w * q.w + d_unit.x * q.x + d_unit.y * q.y + d_unit.z * q.z;
+        Quat::new(
+            (d_unit.w - q.w * dot) / n,
+            (d_unit.x - q.x * dot) / n,
+            (d_unit.y - q.y * dot) / n,
+            (d_unit.z - q.z * dot) / n,
+        )
+    }
+
+    /// Quaternion from a rotation matrix (Shepperd's method).
+    pub fn from_mat3(r: &Mat3) -> Quat {
+        let m = &r.m;
+        let tr = m[0][0] + m[1][1] + m[2][2];
+        let q = if tr > 0.0 {
+            let s = (tr + 1.0).sqrt() * 2.0;
+            Quat::new(
+                0.25 * s,
+                (m[2][1] - m[1][2]) / s,
+                (m[0][2] - m[2][0]) / s,
+                (m[1][0] - m[0][1]) / s,
+            )
+        } else if m[0][0] > m[1][1] && m[0][0] > m[2][2] {
+            let s = (1.0 + m[0][0] - m[1][1] - m[2][2]).sqrt() * 2.0;
+            Quat::new(
+                (m[2][1] - m[1][2]) / s,
+                0.25 * s,
+                (m[0][1] + m[1][0]) / s,
+                (m[0][2] + m[2][0]) / s,
+            )
+        } else if m[1][1] > m[2][2] {
+            let s = (1.0 + m[1][1] - m[0][0] - m[2][2]).sqrt() * 2.0;
+            Quat::new(
+                (m[0][2] - m[2][0]) / s,
+                (m[0][1] + m[1][0]) / s,
+                0.25 * s,
+                (m[1][2] + m[2][1]) / s,
+            )
+        } else {
+            let s = (1.0 + m[2][2] - m[0][0] - m[1][1]).sqrt() * 2.0;
+            Quat::new(
+                (m[1][0] - m[0][1]) / s,
+                (m[0][2] + m[2][0]) / s,
+                (m[1][2] + m[2][1]) / s,
+                0.25 * s,
+            )
+        };
+        q.normalized()
+    }
+
+    pub fn to_array(self) -> [f32; 4] {
+        [self.w, self.x, self.y, self.z]
+    }
+
+    pub fn from_array(a: [f32; 4]) -> Self {
+        Quat::new(a[0], a[1], a[2], a[3])
+    }
+
+    /// Angular distance (radians) between the rotations of two quats.
+    pub fn angle_to(self, o: Quat) -> f32 {
+        let a = self.normalized();
+        let b = o.normalized();
+        let dot = (a.w * b.w + a.x * b.x + a.y * b.y + a.z * b.z).abs().min(1.0);
+        2.0 * dot.acos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg32;
+
+    #[test]
+    fn identity_rotation() {
+        let r = Quat::IDENTITY.to_mat3();
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((r.m[i][j] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn axis_angle_quarter_turn_z() {
+        let q = Quat::from_axis_angle(Vec3::Z, std::f32::consts::FRAC_PI_2);
+        let v = q.rotate(Vec3::X);
+        assert!((v - Vec3::Y).norm() < 1e-5);
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let q = Quat::new(0.3, -0.5, 0.7, 0.2);
+        let r = q.to_mat3();
+        let rt_r = r.transpose() * r;
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((rt_r.m[i][j] - expect).abs() < 1e-5);
+            }
+        }
+        assert!((r.det() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hamilton_product_composes_rotations() {
+        let a = Quat::from_axis_angle(Vec3::Z, 0.7);
+        let b = Quat::from_axis_angle(Vec3::X, -0.4);
+        let v = Vec3::new(0.3, 1.0, -2.0);
+        let lhs = a.mul(b).rotate(v);
+        let rhs = a.rotate(b.rotate(v));
+        assert!((lhs - rhs).norm() < 1e-5);
+    }
+
+    #[test]
+    fn backward_rotation_matches_finite_difference() {
+        // scalar loss L = sum(W .* R(q)) for random W; check dL/dq.
+        let mut rng = Pcg32::new(7);
+        for _ in 0..10 {
+            let q = Quat::new(
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+            );
+            if q.norm() < 0.3 {
+                continue;
+            }
+            let mut w = Mat3::ZERO;
+            for i in 0..3 {
+                for j in 0..3 {
+                    w.m[i][j] = rng.uniform(-1.0, 1.0);
+                }
+            }
+            let loss = |q: Quat| -> f32 {
+                let r = q.to_mat3();
+                let mut s = 0.0;
+                for i in 0..3 {
+                    for j in 0..3 {
+                        s += w.m[i][j] * r.m[i][j];
+                    }
+                }
+                s
+            };
+            let grad = q.backward_rotation(&w);
+            let h = 1e-3f32;
+            for k in 0..4 {
+                let mut qp = q;
+                let mut qm = q;
+                match k {
+                    0 => {
+                        qp.w += h;
+                        qm.w -= h;
+                    }
+                    1 => {
+                        qp.x += h;
+                        qm.x -= h;
+                    }
+                    2 => {
+                        qp.y += h;
+                        qm.y -= h;
+                    }
+                    _ => {
+                        qp.z += h;
+                        qm.z -= h;
+                    }
+                }
+                let fd = (loss(qp) - loss(qm)) / (2.0 * h);
+                let an = [grad.w, grad.x, grad.y, grad.z][k];
+                assert!(
+                    (fd - an).abs() < 3e-2 * (1.0 + fd.abs()),
+                    "component {k}: fd={fd} an={an} q={q:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_mat3_round_trip() {
+        let mut rng = Pcg32::new(21);
+        for _ in 0..20 {
+            let q = Quat::new(
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(-1.0, 1.0),
+            )
+            .normalized();
+            let q2 = Quat::from_mat3(&q.to_mat3());
+            // q and -q encode the same rotation
+            assert!(q.angle_to(q2) < 1e-3, "{q:?} vs {q2:?}");
+        }
+    }
+
+    #[test]
+    fn angle_to_self_is_zero() {
+        let q = Quat::from_axis_angle(Vec3::new(1.0, 2.0, 0.5), 1.1);
+        assert!(q.angle_to(q) < 1e-3);
+    }
+
+    #[test]
+    fn angle_to_known_rotation() {
+        let a = Quat::IDENTITY;
+        let b = Quat::from_axis_angle(Vec3::Y, 0.5);
+        assert!((a.angle_to(b) - 0.5).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,118 @@
+//! SE(3) rigid transforms stored as (quaternion, translation).
+//!
+//! SLAM tracking optimizes the world→camera transform directly as an
+//! unnormalized quaternion + translation (SplaTAM's parametrization), so
+//! gradients flow through `Quat::backward_rotation`.
+
+use super::mat::{Mat3, Mat4};
+use super::quat::Quat;
+use super::vec::Vec3;
+
+/// Rigid transform: `x' = R(q) x + t`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Se3 {
+    pub q: Quat,
+    pub t: Vec3,
+}
+
+impl Default for Se3 {
+    fn default() -> Self {
+        Se3::IDENTITY
+    }
+}
+
+impl Se3 {
+    pub const IDENTITY: Se3 = Se3 { q: Quat::IDENTITY, t: Vec3::ZERO };
+
+    pub fn new(q: Quat, t: Vec3) -> Self {
+        Se3 { q, t }
+    }
+
+    pub fn rotation(self) -> Mat3 {
+        self.q.to_mat3()
+    }
+
+    pub fn to_mat4(self) -> Mat4 {
+        Mat4::from_rt(self.rotation(), self.t)
+    }
+
+    pub fn transform(self, p: Vec3) -> Vec3 {
+        self.rotation().mul_vec(p) + self.t
+    }
+
+    /// Composition: `(self ∘ other)(x) = self(other(x))`.
+    pub fn compose(self, other: Se3) -> Se3 {
+        Se3 {
+            q: self.q.normalized().mul(other.q.normalized()),
+            t: self.rotation().mul_vec(other.t) + self.t,
+        }
+    }
+
+    pub fn inverse(self) -> Se3 {
+        let qi = self.q.normalized().conjugate();
+        let ri = qi.to_mat3();
+        Se3 { q: qi, t: -ri.mul_vec(self.t) }
+    }
+
+    /// Relative transform taking `self` to `other`: other ∘ self⁻¹.
+    pub fn relative_to(self, other: Se3) -> Se3 {
+        other.compose(self.inverse())
+    }
+
+    /// Translation distance between two poses (for ATE).
+    pub fn translation_error(self, other: Se3) -> f32 {
+        (self.t - other.t).norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Vec3, b: Vec3, tol: f32) -> bool {
+        (a - b).norm() < tol
+    }
+
+    #[test]
+    fn identity_transform() {
+        let p = Vec3::new(1.0, -2.0, 3.0);
+        assert_eq!(Se3::IDENTITY.transform(p), p);
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        let pose = Se3::new(
+            Quat::from_axis_angle(Vec3::new(0.2, 1.0, -0.5), 0.8),
+            Vec3::new(1.0, 2.0, -0.5),
+        );
+        let p = Vec3::new(-0.3, 0.7, 2.0);
+        let back = pose.inverse().transform(pose.transform(p));
+        assert!(close(back, p, 1e-5), "{back:?} vs {p:?}");
+    }
+
+    #[test]
+    fn compose_matches_sequential_apply() {
+        let a = Se3::new(Quat::from_axis_angle(Vec3::Z, 0.3), Vec3::new(1.0, 0.0, 0.0));
+        let b = Se3::new(Quat::from_axis_angle(Vec3::X, -0.6), Vec3::new(0.0, 2.0, 0.5));
+        let p = Vec3::new(0.5, -1.0, 2.0);
+        assert!(close(a.compose(b).transform(p), a.transform(b.transform(p)), 1e-5));
+    }
+
+    #[test]
+    fn compose_matches_mat4() {
+        let a = Se3::new(Quat::from_axis_angle(Vec3::Y, 1.0), Vec3::new(0.1, 0.2, 0.3));
+        let b = Se3::new(Quat::from_axis_angle(Vec3::X, -0.4), Vec3::new(-1.0, 0.0, 2.0));
+        let m = a.to_mat4() * b.to_mat4();
+        let c = a.compose(b);
+        let p = Vec3::new(2.0, -0.5, 1.0);
+        assert!(close(m.transform_point(p), c.transform(p), 1e-4));
+    }
+
+    #[test]
+    fn relative_to_identity_when_equal() {
+        let pose = Se3::new(Quat::from_axis_angle(Vec3::X, 0.5), Vec3::new(3.0, 1.0, 2.0));
+        let rel = pose.relative_to(pose);
+        assert!(rel.t.norm() < 1e-5);
+        assert!(rel.q.angle_to(Quat::IDENTITY) < 1e-3);
+    }
+}

@@ -1,0 +1,182 @@
+//! Per-stage work counters.
+//!
+//! The renderer is the single source of truth for *how much work exists*;
+//! the timing/energy simulators (GPU, Splatonic, GSArch, GauSPU) convert
+//! these counts into cycles and joules. Keeping the counts in the
+//! renderer (not the sims) guarantees every architecture is charged for
+//! exactly the same algorithmic work.
+
+/// Counters for one forward+backward render invocation (or accumulated
+/// over many — they are additive).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageCounters {
+    // ---- projection (forward) ----
+    /// Gaussians examined for view culling.
+    pub proj_gaussians_in: u64,
+    /// Gaussians surviving frustum culling (projected).
+    pub proj_gaussians_out: u64,
+    /// Pixel-candidate α-checks performed *in projection* (preemptive
+    /// α-checking of the pixel-based pipeline; 0 in the tile pipeline).
+    pub proj_alpha_checks: u64,
+    /// BBox–pixel candidate enumerations in projection (direct indexing).
+    pub proj_bbox_candidates: u64,
+
+    // ---- binning / sorting ----
+    /// (tile,Gaussian) or (pixel,Gaussian) pairs emitted to sorting.
+    pub sort_pairs: u64,
+    /// Comparison operations spent sorting (Σ n·log₂n per list).
+    pub sort_compares: u64,
+
+    // ---- rasterization (forward) ----
+    /// Pixel–Gaussian pairs *iterated* (α-checked inside rasterization;
+    /// in the pixel pipeline this equals pairs integrated — preemptive
+    /// α-checking removed the misses).
+    pub raster_pairs_iterated: u64,
+    /// Pixel–Gaussian pairs actually integrated (α ≥ α*).
+    pub raster_pairs_integrated: u64,
+    /// exp() evaluations in rasterization (SFU work on GPUs).
+    pub raster_exp_evals: u64,
+    /// SIMT lane-occupancy: active lanes and total lane-slots during the
+    /// color-integration inner loop (tile pipeline models 32-wide warps
+    /// over pixels; pixel pipeline is Gaussian-parallel and dense).
+    pub warp_lanes_active: u64,
+    pub warp_lanes_total: u64,
+
+    // ---- backward ----
+    /// Pixel–Gaussian pairs α-checked in reverse rasterization.
+    pub bwd_pairs_iterated: u64,
+    /// Pixel–Gaussian pairs whose gradients were computed.
+    pub bwd_pairs_integrated: u64,
+    /// exp() evaluations in reverse rasterization.
+    pub bwd_exp_evals: u64,
+    /// Scalar atomic adds during gradient aggregation (tile pipeline:
+    /// one per Gaussian-gradient channel per contributing pair).
+    pub bwd_atomic_adds: u64,
+    /// Cross-lane reduction steps (pixel pipeline Γ-prefix + color
+    /// reductions; the work the Splatonic Γ/C cache eliminates).
+    pub bwd_reduction_ops: u64,
+    /// Γ/C intermediate values served from the forward-pass cache
+    /// (Splatonic reverse render units; 0 when recomputing).
+    pub bwd_cache_hits: u64,
+    /// SIMT lane occupancy of the backward gradient math (mirrors the
+    /// forward warp counters; pixel pipeline packs densely, tile
+    /// pipelines idle lanes).
+    pub bwd_lanes_active: u64,
+    pub bwd_lanes_total: u64,
+
+    // ---- memory traffic (bytes) ----
+    /// Gaussian parameter bytes read (projection + raster loads).
+    pub bytes_gauss_read: u64,
+    /// Intermediate list bytes written+read (tile/pixel lists, keys).
+    pub bytes_list_rw: u64,
+    /// Gradient bytes read-modify-written during aggregation.
+    pub bytes_grad_rw: u64,
+    /// Image-plane bytes written (color/depth/T).
+    pub bytes_image_w: u64,
+}
+
+impl StageCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate another counter set into this one.
+    pub fn merge(&mut self, o: &StageCounters) {
+        macro_rules! acc {
+            ($($f:ident),+ $(,)?) => { $( self.$f += o.$f; )+ };
+        }
+        acc!(
+            proj_gaussians_in,
+            proj_gaussians_out,
+            proj_alpha_checks,
+            proj_bbox_candidates,
+            sort_pairs,
+            sort_compares,
+            raster_pairs_iterated,
+            raster_pairs_integrated,
+            raster_exp_evals,
+            warp_lanes_active,
+            warp_lanes_total,
+            bwd_pairs_iterated,
+            bwd_pairs_integrated,
+            bwd_exp_evals,
+            bwd_atomic_adds,
+            bwd_reduction_ops,
+            bwd_cache_hits,
+            bwd_lanes_active,
+            bwd_lanes_total,
+            bytes_gauss_read,
+            bytes_list_rw,
+            bytes_grad_rw,
+            bytes_image_w,
+        );
+    }
+
+    /// SIMT thread utilization during color integration (paper Fig. 7).
+    pub fn thread_utilization(&self) -> f64 {
+        if self.warp_lanes_total == 0 {
+            return 1.0;
+        }
+        self.warp_lanes_active as f64 / self.warp_lanes_total as f64
+    }
+
+    /// Fraction of forward rasterization pairs that passed α-checking.
+    pub fn alpha_pass_rate(&self) -> f64 {
+        if self.raster_pairs_iterated == 0 {
+            return 0.0;
+        }
+        self.raster_pairs_integrated as f64 / self.raster_pairs_iterated as f64
+    }
+
+    /// Count sort-compare cost for one list of length n (n·log₂n model).
+    pub fn charge_sort(&mut self, n: usize) {
+        self.sort_pairs += n as u64;
+        if n > 1 {
+            self.sort_compares += (n as f64 * (n as f64).log2()).ceil() as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = StageCounters::new();
+        a.proj_gaussians_in = 10;
+        a.raster_pairs_integrated = 5;
+        let mut b = StageCounters::new();
+        b.proj_gaussians_in = 3;
+        b.bwd_atomic_adds = 7;
+        a.merge(&b);
+        assert_eq!(a.proj_gaussians_in, 13);
+        assert_eq!(a.raster_pairs_integrated, 5);
+        assert_eq!(a.bwd_atomic_adds, 7);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut c = StageCounters::new();
+        assert_eq!(c.thread_utilization(), 1.0);
+        c.warp_lanes_total = 100;
+        c.warp_lanes_active = 25;
+        assert!((c.thread_utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_charge_nlogn() {
+        let mut c = StageCounters::new();
+        c.charge_sort(8);
+        assert_eq!(c.sort_pairs, 8);
+        assert_eq!(c.sort_compares, 24); // 8 * 3
+        c.charge_sort(1);
+        assert_eq!(c.sort_compares, 24); // length-1 lists are free
+    }
+
+    #[test]
+    fn alpha_pass_rate_no_div_by_zero() {
+        let c = StageCounters::new();
+        assert_eq!(c.alpha_pass_rate(), 0.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Simple image buffers (RGB f32 + scalar planes).
+
+use crate::math::Vec3;
+
+/// RGB image, row-major, f32 channels in [0,1].
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub width: u32,
+    pub height: u32,
+    pub data: Vec<Vec3>,
+}
+
+impl Image {
+    pub fn new(width: u32, height: u32) -> Self {
+        Image { width, height, data: vec![Vec3::ZERO; (width * height) as usize] }
+    }
+
+    pub fn filled(width: u32, height: u32, v: Vec3) -> Self {
+        Image { width, height, data: vec![v; (width * height) as usize] }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: u32, y: u32) -> usize {
+        (y * self.width + x) as usize
+    }
+
+    #[inline]
+    pub fn get(&self, x: u32, y: u32) -> Vec3 {
+        self.data[self.idx(x, y)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: u32, y: u32, v: Vec3) {
+        let i = self.idx(x, y);
+        self.data[i] = v;
+    }
+
+    pub fn n_pixels(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Mean squared error against another image.
+    pub fn mse(&self, other: &Image) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = *a - *b;
+            acc += (d.dot(d) / 3.0) as f64;
+        }
+        acc / self.data.len() as f64
+    }
+
+    /// PSNR in dB against a reference (peak = 1.0).
+    pub fn psnr(&self, reference: &Image) -> f64 {
+        let mse = self.mse(reference);
+        if mse <= 0.0 {
+            return f64::INFINITY;
+        }
+        10.0 * (1.0 / mse).log10()
+    }
+
+    /// Grayscale luminance plane (for Sobel / Harris).
+    pub fn luminance(&self) -> Plane {
+        let mut p = Plane::new(self.width, self.height);
+        for (i, c) in self.data.iter().enumerate() {
+            p.data[i] = 0.299 * c.x + 0.587 * c.y + 0.114 * c.z;
+        }
+        p
+    }
+
+    /// Box-downsample by an integer factor (the "Low-Res." baseline in
+    /// Fig. 10 renders at reduced resolution).
+    pub fn downsample(&self, factor: u32) -> Image {
+        assert!(factor >= 1);
+        let w = (self.width / factor).max(1);
+        let h = (self.height / factor).max(1);
+        let mut out = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = Vec3::ZERO;
+                let mut n = 0;
+                for dy in 0..factor {
+                    for dx in 0..factor {
+                        let sx = x * factor + dx;
+                        let sy = y * factor + dy;
+                        if sx < self.width && sy < self.height {
+                            acc += self.get(sx, sy);
+                            n += 1;
+                        }
+                    }
+                }
+                out.set(x, y, acc / n.max(1) as f32);
+            }
+        }
+        out
+    }
+}
+
+/// Scalar image plane (depth, transmittance, luminance, gradients).
+#[derive(Clone, Debug)]
+pub struct Plane {
+    pub width: u32,
+    pub height: u32,
+    pub data: Vec<f32>,
+}
+
+impl Plane {
+    pub fn new(width: u32, height: u32) -> Self {
+        Plane { width, height, data: vec![0.0; (width * height) as usize] }
+    }
+
+    pub fn filled(width: u32, height: u32, v: f32) -> Self {
+        Plane { width, height, data: vec![v; (width * height) as usize] }
+    }
+
+    #[inline]
+    pub fn get(&self, x: u32, y: u32) -> f32 {
+        self.data[(y * self.width + x) as usize]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: u32, y: u32, v: f32) {
+        self.data[(y * self.width + x) as usize] = v;
+    }
+
+    /// Clamped read (replicate border).
+    #[inline]
+    pub fn get_clamped(&self, x: i64, y: i64) -> f32 {
+        let xc = x.clamp(0, self.width as i64 - 1) as u32;
+        let yc = y.clamp(0, self.height as i64 - 1) as u32;
+        self.get(xc, yc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let img = Image::filled(4, 4, Vec3::splat(0.5));
+        assert!(img.psnr(&img).is_infinite());
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        let a = Image::filled(8, 8, Vec3::splat(0.5));
+        let b = Image::filled(8, 8, Vec3::splat(0.6));
+        // mse = 0.01 -> psnr = 20 dB (f32 accumulation tolerance)
+        assert!((a.psnr(&b) - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn downsample_halves_dims_and_averages() {
+        let mut img = Image::new(4, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                img.set(x, y, Vec3::splat((x + y) as f32));
+            }
+        }
+        let d = img.downsample(2);
+        assert_eq!(d.width, 2);
+        assert_eq!(d.height, 2);
+        // top-left block: (0,0)=(0),(1,0)=1,(0,1)=1,(1,1)=2 -> mean 1
+        assert!((d.get(0, 0).x - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn luminance_white_is_one() {
+        let img = Image::filled(2, 2, Vec3::ONE);
+        let l = img.luminance();
+        assert!((l.get(0, 0) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn plane_clamped_reads() {
+        let mut p = Plane::new(2, 2);
+        p.set(0, 0, 5.0);
+        assert_eq!(p.get_clamped(-3, -3), 5.0);
+        p.set(1, 1, 7.0);
+        assert_eq!(p.get_clamped(10, 10), 7.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! Differentiable 3D Gaussian splatting renderer.
+//!
+//! Two complete pipelines, mirroring the paper (Fig. 3 vs Fig. 13):
+//!
+//! * [`tile_pipeline`] — the conventional **tile-based** pipeline used by
+//!   all 3DGS systems (and by the GPU/GSArch/GauSPU baselines): tile-level
+//!   projection + binning, per-tile depth sort, per-pixel rasterization
+//!   with α-checking inside the inner loop (the source of warp
+//!   divergence), reverse rasterization with atomic gradient aggregation.
+//! * [`pixel_pipeline`] — Splatonic's **pixel-based** pipeline: pixel-level
+//!   projection with *preemptive α-checking* and BBox direct indexing,
+//!   per-pixel depth sort, Gaussian-parallel rasterization, and a backward
+//!   pass that reuses cached per-pixel transmittance (the paper's Γ/C
+//!   on-chip buffer).
+//!
+//! Both pipelines produce *bit-identical work streams* to what the timing
+//! simulators consume: every stage increments [`counters::StageCounters`].
+
+pub mod backward_geom;
+pub mod counters;
+pub mod image;
+pub mod pixel_pipeline;
+pub mod projection;
+pub mod tile_pipeline;
+
+pub use backward_geom::{geometry_backward, Grad2d, GaussianGrads, PoseGrad};
+pub use counters::StageCounters;
+pub use image::Image;
+pub use pixel_pipeline::{PixelHit, SampleGrid, SampledPixels, SparseBackward, SparseRender};
+pub use projection::Projected;
+pub use tile_pipeline::{DenseBackward, DenseRender};
+
+/// Renderer configuration shared by both pipelines.
+#[derive(Clone, Copy, Debug)]
+pub struct RenderConfig {
+    /// Rendering tile size of the *tile-based* pipeline (GPU convention).
+    pub tile_size: u32,
+    /// Near plane for frustum culling.
+    pub near: f32,
+    /// α* threshold: Gaussians contributing less are skipped (1/255).
+    pub alpha_thresh: f32,
+    /// Max α per Gaussian (official 3DGS clips at 0.99).
+    pub alpha_max: f32,
+    /// Transmittance floor: integration stops below this (ray saturated).
+    pub t_min: f32,
+    /// Screen-space low-pass filter added to Σ₂D's diagonal.
+    pub blur: f32,
+    /// Floor on the splat bounding radius in pixels (keeps sub-pixel
+    /// splats visible to at least their own pixel).
+    pub radius_min: f32,
+    /// Evaluate exp() via the 64-entry LUT (accelerator mode) instead of
+    /// libm (GPU SFU mode). Accuracy impact is validated in tests/benches.
+    pub use_exp_lut: bool,
+}
+
+impl Default for RenderConfig {
+    fn default() -> Self {
+        RenderConfig {
+            tile_size: 16,
+            near: 0.01,
+            alpha_thresh: 1.0 / 255.0,
+            alpha_max: 0.99,
+            t_min: 1e-4,
+            blur: 0.3,
+            radius_min: 1.0,
+            use_exp_lut: false,
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! EWA projection of 3D Gaussians to screen space (the `projection`
+//! stage of Fig. 3), shared by both pipelines.
+
+use super::{RenderConfig, StageCounters};
+use crate::camera::Camera;
+use crate::gaussian::GaussianStore;
+use crate::math::{ExpLut, Mat2, Mat3, Vec2, Vec3};
+
+/// A view-frustum-surviving Gaussian with its screen-space footprint and
+/// the saved forward context the backward pass needs.
+#[derive(Clone, Copy, Debug)]
+pub struct Projected {
+    /// Index into the source `GaussianStore`.
+    pub id: u32,
+    /// Screen-space mean (pixels).
+    pub mean2d: Vec2,
+    /// Inverse 2D covariance, symmetric packed [a, b, c]:
+    /// dᵀΣ⁻¹d = a·dx² + 2b·dx·dy + c·dy².
+    pub conic: [f32; 3],
+    /// Blurred 2D covariance, symmetric packed [a, b, c].
+    pub cov2d: [f32; 3],
+    /// Camera-space depth (t.z).
+    pub depth: f32,
+    /// Bounding radius in pixels (radius_sigma · sqrt(λmax)).
+    pub radius: f32,
+    /// Activated opacity (sigmoid of the logit).
+    pub opacity: f32,
+    /// RGB color.
+    pub color: Vec3,
+    /// Camera-space mean (saved for backward).
+    pub t_cam: Vec3,
+    /// Mahalanobis half-distance at which α drops below α*
+    /// (= ln(opacity/α*)); lets α-checking reject misses *before* the
+    /// exponential — the same trick the LUT hardware exploits.
+    pub cutoff_power: f32,
+}
+
+impl Projected {
+    /// Evaluate the (clamped) splat alpha at a pixel center.
+    /// Returns (alpha, power) — power is the Mahalanobis half-distance,
+    /// callers count exp evals.
+    #[inline]
+    pub fn alpha_at(&self, px: Vec2, cfg: &RenderConfig, lut: Option<&ExpLut>) -> (f32, f32) {
+        let d = px - self.mean2d;
+        let power = 0.5 * (self.conic[0] * d.x * d.x + self.conic[2] * d.y * d.y)
+            + self.conic[1] * d.x * d.y;
+        if power < 0.0 {
+            // numerically invalid (non-PSD after clipping) — treat as miss
+            return (0.0, power);
+        }
+        if power >= self.cutoff_power {
+            // α provably below α*: skip the exponential entirely
+            return (0.0, power);
+        }
+        let g = match lut {
+            Some(l) => l.exp_neg(power),
+            None => (-power).exp(),
+        };
+        let alpha = (self.opacity * g).min(cfg.alpha_max);
+        (alpha, power)
+    }
+}
+
+/// Project every Gaussian in the store; cull against the near plane and
+/// image bounds (with the splat radius as margin). Charges the counters
+/// for the projection stage. This is the *shared geometry math*; the
+/// tile pipeline bins the result into tiles, the pixel pipeline runs
+/// preemptive α-checking against the sampled pixel set.
+pub fn project_all(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    counters: &mut StageCounters,
+) -> Vec<Projected> {
+    let w = cam.rotation();
+    counters.proj_gaussians_in += store.len() as u64;
+    counters.bytes_gauss_read += store.param_bytes() as u64;
+
+    // parallel over Gaussian chunks for large stores (threads are only
+    // worth their spawn cost above a few thousand Gaussians); chunk
+    // results are concatenated in order, so the output is deterministic
+    let n = store.len();
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let out = if n >= 4096 && threads > 1 {
+        let chunk = n.div_ceil(threads);
+        let mut parts: Vec<Vec<Projected>> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .step_by(chunk)
+                .map(|start| {
+                    let end = (start + chunk).min(n);
+                    let w = &w;
+                    scope.spawn(move || {
+                        let mut local = Vec::with_capacity((end - start) / 2);
+                        for i in start..end {
+                            if let Some(p) = project_one(store, i, cam, w, cfg) {
+                                local.push(p);
+                            }
+                        }
+                        local
+                    })
+                })
+                .collect();
+            parts = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        });
+        let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+        for p in parts {
+            out.extend(p);
+        }
+        out
+    } else {
+        let mut out = Vec::with_capacity(n / 2);
+        for i in 0..n {
+            if let Some(p) = project_one(store, i, cam, &w, cfg) {
+                out.push(p);
+            }
+        }
+        out
+    };
+    counters.proj_gaussians_out += out.len() as u64;
+    out
+}
+
+/// Project a single Gaussian (internal; exposed for tests).
+pub fn project_one(
+    store: &GaussianStore,
+    i: usize,
+    cam: &Camera,
+    w: &Mat3,
+    cfg: &RenderConfig,
+) -> Option<Projected> {
+    let mean = store.means[i];
+    let t = cam.w2c.transform(mean);
+    if t.z <= cfg.near {
+        return None;
+    }
+    let intr = &cam.intr;
+    let mean2d = intr.project(t);
+
+    // J: perspective Jacobian (2x3) at t.
+    let inv_z = 1.0 / t.z;
+    let inv_z2 = inv_z * inv_z;
+    let j00 = intr.fx * inv_z;
+    let j02 = -intr.fx * t.x * inv_z2;
+    let j11 = intr.fy * inv_z;
+    let j12 = -intr.fy * t.y * inv_z2;
+
+    // T = J W (2x3)
+    let r0 = Vec3::new(
+        j00 * w.m[0][0] + j02 * w.m[2][0],
+        j00 * w.m[0][1] + j02 * w.m[2][1],
+        j00 * w.m[0][2] + j02 * w.m[2][2],
+    );
+    let r1 = Vec3::new(
+        j11 * w.m[1][0] + j12 * w.m[2][0],
+        j11 * w.m[1][1] + j12 * w.m[2][1],
+        j11 * w.m[1][2] + j12 * w.m[2][2],
+    );
+
+    // Σ₂D = T Σ Tᵀ + blur·I
+    let cov3d = store.get(i).covariance();
+    let s_r0 = cov3d.mul_vec(r0);
+    let s_r1 = cov3d.mul_vec(r1);
+    let a = r0.dot(s_r0) + cfg.blur;
+    let b = r0.dot(s_r1);
+    let c = r1.dot(s_r1) + cfg.blur;
+
+    let cov = Mat2::new(a, b, b, c);
+    let det = cov.det();
+    if det <= 1e-12 {
+        return None;
+    }
+    let inv = 1.0 / det;
+    let conic = [c * inv, -b * inv, a * inv];
+
+    let opacity = store.opacity(i);
+    if opacity < cfg.alpha_thresh {
+        return None;
+    }
+
+    // Exact α-cutoff bounding radius: alpha(d) = o·exp(-d²/(2λ)) drops
+    // below α* at d = sqrt(2·ln(o/α*)·λmax). Using the exact cutoff (not
+    // a fixed 3σ) makes the BBox a *true superset* of the α-passing
+    // region, so pixel-level preemptive α-checking provably loses no
+    // contribution vs tile-based rendering (tested: the two pipelines
+    // match bit-for-bit-ish).
+    let (l1, _l2) = cov.sym_eigenvalues();
+    let cut = (2.0 * (opacity / cfg.alpha_thresh).ln()).max(0.0);
+    let radius = (cut * l1.max(0.0)).sqrt().max(cfg.radius_min);
+
+    // Frustum cull, official-3DGS style: the projected *mean* must lie
+    // within 1.3× the image bounds. The margin is deliberately NOT the
+    // splat radius: a splat grazing the near plane at the frustum edge
+    // (e.g. a ceiling splat almost perpendicular to the view axis,
+    // t.z → 0⁺) projects to a quasi-infinite radius and would otherwise
+    // survive the cull and occlude the entire frame.
+    let margin_x = 0.3 * intr.width as f32;
+    let margin_y = 0.3 * intr.height as f32;
+    if mean2d.x < -margin_x
+        || mean2d.y < -margin_y
+        || mean2d.x >= intr.width as f32 + margin_x
+        || mean2d.y >= intr.height as f32 + margin_y
+    {
+        return None;
+    }
+    // additionally require the splat to actually reach the image
+    if !intr.contains(mean2d, radius) {
+        return None;
+    }
+
+    Some(Projected {
+        id: i as u32,
+        mean2d,
+        conic,
+        cov2d: [a, b, c],
+        depth: t.z,
+        radius,
+        opacity,
+        color: store.colors[i],
+        t_cam: t,
+        cutoff_power: (opacity / cfg.alpha_thresh).ln().max(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::Intrinsics;
+    use crate::gaussian::Gaussian;
+    use crate::math::Se3;
+
+    fn test_cam() -> Camera {
+        Camera::new(Intrinsics::replica_like(128, 128), Se3::IDENTITY)
+    }
+
+    fn store_with(gaussians: &[Gaussian]) -> GaussianStore {
+        let mut s = GaussianStore::new();
+        for g in gaussians {
+            s.push(*g);
+        }
+        s
+    }
+
+    #[test]
+    fn center_gaussian_projects_to_principal_point() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(0.0, 0.0, 2.0),
+            0.1,
+            Vec3::ONE,
+            0.9,
+        )]);
+        let cam = test_cam();
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &cam, &RenderConfig::default(), &mut c);
+        assert_eq!(proj.len(), 1);
+        let p = proj[0];
+        assert!((p.mean2d.x - cam.intr.cx).abs() < 1e-3);
+        assert!((p.mean2d.y - cam.intr.cy).abs() < 1e-3);
+        assert!((p.depth - 2.0).abs() < 1e-5);
+        assert_eq!(c.proj_gaussians_in, 1);
+        assert_eq!(c.proj_gaussians_out, 1);
+    }
+
+    #[test]
+    fn behind_camera_culled() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(0.0, 0.0, -2.0),
+            0.1,
+            Vec3::ONE,
+            0.9,
+        )]);
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &test_cam(), &RenderConfig::default(), &mut c);
+        assert!(proj.is_empty());
+        assert_eq!(c.proj_gaussians_out, 0);
+    }
+
+    #[test]
+    fn off_screen_culled() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(100.0, 0.0, 2.0),
+            0.05,
+            Vec3::ONE,
+            0.9,
+        )]);
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &test_cam(), &RenderConfig::default(), &mut c);
+        assert!(proj.is_empty());
+    }
+
+    #[test]
+    fn transparent_culled() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(0.0, 0.0, 2.0),
+            0.1,
+            Vec3::ONE,
+            0.001,
+        )]);
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &test_cam(), &RenderConfig::default(), &mut c);
+        assert!(proj.is_empty());
+    }
+
+    #[test]
+    fn conic_is_inverse_of_cov() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(0.2, -0.1, 1.5),
+            0.2,
+            Vec3::ONE,
+            0.8,
+        )]);
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &test_cam(), &RenderConfig::default(), &mut c);
+        let p = proj[0];
+        let cov = Mat2::new(p.cov2d[0], p.cov2d[1], p.cov2d[1], p.cov2d[2]);
+        let con = Mat2::new(p.conic[0], p.conic[1], p.conic[1], p.conic[2]);
+        let prod = cov * con;
+        assert!((prod.m[0][0] - 1.0).abs() < 1e-4);
+        assert!((prod.m[1][1] - 1.0).abs() < 1e-4);
+        assert!(prod.m[0][1].abs() < 1e-4);
+    }
+
+    #[test]
+    fn alpha_peaks_at_center_and_decays() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(0.0, 0.0, 2.0),
+            0.3,
+            Vec3::ONE,
+            0.8,
+        )]);
+        let cfg = RenderConfig::default();
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &test_cam(), &cfg, &mut c);
+        let p = proj[0];
+        let (a0, _) = p.alpha_at(p.mean2d, &cfg, None);
+        let (a1, _) = p.alpha_at(p.mean2d + Vec2::new(p.radius / 2.0, 0.0), &cfg, None);
+        let (a2, _) = p.alpha_at(p.mean2d + Vec2::new(p.radius, 0.0), &cfg, None);
+        assert!(a0 > a1 && a1 > a2, "{a0} {a1} {a2}");
+        assert!((a0 - 0.8).abs() < 0.02); // blur slightly reduces peak
+        // at radius (3 sigma) alpha is below threshold order
+        assert!(a2 < 0.02);
+    }
+
+    #[test]
+    fn lut_alpha_close_to_exact() {
+        let store = store_with(&[Gaussian::isotropic(
+            Vec3::new(0.0, 0.0, 2.0),
+            0.3,
+            Vec3::ONE,
+            0.8,
+        )]);
+        let cfg = RenderConfig::default();
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &test_cam(), &cfg, &mut c);
+        let p = proj[0];
+        let lut = ExpLut::new_paper();
+        for r in [0.0f32, 1.0, 3.0, 7.0, 12.0] {
+            let px = p.mean2d + Vec2::new(r, 0.0);
+            let (exact, _) = p.alpha_at(px, &cfg, None);
+            let (approx, _) = p.alpha_at(px, &cfg, Some(&lut));
+            assert!((exact - approx).abs() < 4e-3, "r={r}: {exact} vs {approx}");
+        }
+    }
+
+    #[test]
+    fn bigger_gaussian_bigger_radius() {
+        let mk = |r: f32| {
+            let store = store_with(&[Gaussian::isotropic(Vec3::new(0.0, 0.0, 2.0), r, Vec3::ONE, 0.9)]);
+            let mut c = StageCounters::new();
+            project_all(&store, &test_cam(), &RenderConfig::default(), &mut c)[0].radius
+        };
+        assert!(mk(0.4) > mk(0.1));
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal manifest.json reader (no external JSON dependency): extracts
+//! the integer fields `g`, `p`, `k` written by `python/compile/aot.py`.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// AOT artifact shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub g: usize,
+    pub p: usize,
+    pub k: usize,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the three shape fields out of the JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(Manifest {
+            g: json_usize(text, "g")?,
+            p: json_usize(text, "p")?,
+            k: json_usize(text, "k")?,
+        })
+    }
+}
+
+/// Extract `"key": <int>` from a JSON document (top-level keys only need
+/// apply; the first match wins, which is fine for the manifest layout).
+fn json_usize(text: &str, key: &str) -> Result<usize> {
+    let pat = format!("\"{key}\"");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| anyhow!("manifest missing key {key}"))?;
+    let rest = &text[at + pat.len()..];
+    let colon = rest.find(':').ok_or_else(|| anyhow!("malformed manifest at {key}"))?;
+    let digits: String = rest[colon + 1..]
+        .chars()
+        .skip_while(|c| c.is_whitespace())
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits
+        .parse()
+        .with_context(|| format!("parsing value of {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_aot_manifest() {
+        let m = Manifest::parse(r#"{"g": 4096, "p": 300, "k": 32, "artifacts": {}}"#).unwrap();
+        assert_eq!(m, Manifest { g: 4096, p: 300, k: 32 });
+    }
+
+    #[test]
+    fn parses_multiline() {
+        let m = Manifest::parse("{\n  \"g\": 1,\n  \"p\": 2,\n  \"k\": 3\n}").unwrap();
+        assert_eq!((m.g, m.p, m.k), (1, 2, 3));
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse(r#"{"g": 1, "p": 2}"#).is_err());
+    }
+}

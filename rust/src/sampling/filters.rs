@@ -1,0 +1,133 @@
+//! Image filters used by the samplers: Sobel gradient magnitude (Eqn. 3)
+//! and the Harris corner response (Fig. 10's "Harris" baseline).
+
+use crate::render::image::Plane;
+
+/// Sobel gradient magnitude: w_R(p) = sqrt(Gx² + Gy²) per Eqn. 3.
+pub fn sobel_magnitude(lum: &Plane) -> Plane {
+    let (w, h) = (lum.width, lum.height);
+    let mut out = Plane::new(w, h);
+    for y in 0..h as i64 {
+        for x in 0..w as i64 {
+            let gx = -lum.get_clamped(x - 1, y - 1) + lum.get_clamped(x + 1, y - 1)
+                - 2.0 * lum.get_clamped(x - 1, y)
+                + 2.0 * lum.get_clamped(x + 1, y)
+                - lum.get_clamped(x - 1, y + 1)
+                + lum.get_clamped(x + 1, y + 1);
+            let gy = -lum.get_clamped(x - 1, y - 1) - 2.0 * lum.get_clamped(x, y - 1)
+                - lum.get_clamped(x + 1, y - 1)
+                + lum.get_clamped(x - 1, y + 1)
+                + 2.0 * lum.get_clamped(x, y + 1)
+                + lum.get_clamped(x + 1, y + 1);
+            out.set(x as u32, y as u32, (gx * gx + gy * gy).sqrt());
+        }
+    }
+    out
+}
+
+/// Harris corner response R = det(M) − k·tr(M)² with a 3×3 structure
+/// tensor window (k = 0.04, the classic constant [28]).
+pub fn harris_response(lum: &Plane) -> Plane {
+    let (w, h) = (lum.width, lum.height);
+    // image gradients (central differences)
+    let mut ix = Plane::new(w, h);
+    let mut iy = Plane::new(w, h);
+    for y in 0..h as i64 {
+        for x in 0..w as i64 {
+            ix.set(
+                x as u32,
+                y as u32,
+                0.5 * (lum.get_clamped(x + 1, y) - lum.get_clamped(x - 1, y)),
+            );
+            iy.set(
+                x as u32,
+                y as u32,
+                0.5 * (lum.get_clamped(x, y + 1) - lum.get_clamped(x, y - 1)),
+            );
+        }
+    }
+    let mut out = Plane::new(w, h);
+    let k = 0.04f32;
+    for y in 0..h as i64 {
+        for x in 0..w as i64 {
+            let (mut sxx, mut sxy, mut syy) = (0.0f32, 0.0f32, 0.0f32);
+            for dy in -1..=1 {
+                for dx in -1..=1 {
+                    let gx = ix.get_clamped(x + dx, y + dy);
+                    let gy = iy.get_clamped(x + dx, y + dy);
+                    sxx += gx * gx;
+                    sxy += gx * gy;
+                    syy += gy * gy;
+                }
+            }
+            let det = sxx * syy - sxy * sxy;
+            let tr = sxx + syy;
+            out.set(x as u32, y as u32, det - k * tr * tr);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge_plane(w: u32, h: u32) -> Plane {
+        let mut p = Plane::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                p.set(x, y, if x < w / 2 { 0.0 } else { 1.0 });
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn sobel_zero_on_flat() {
+        let p = Plane::filled(8, 8, 0.7);
+        let g = sobel_magnitude(&p);
+        assert!(g.data.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn sobel_peaks_at_edge() {
+        let g = sobel_magnitude(&edge_plane(16, 16));
+        // the edge is between x=7 and x=8
+        assert!(g.get(7, 8) > 1.0);
+        assert!(g.get(8, 8) > 1.0);
+        assert!(g.get(2, 8) < 1e-6);
+        assert!(g.get(13, 8) < 1e-6);
+    }
+
+    #[test]
+    fn sobel_isotropic_for_transposed_edge() {
+        let mut p = Plane::new(16, 16);
+        for y in 0..16 {
+            for x in 0..16 {
+                p.set(x, y, if y < 8 { 0.0 } else { 1.0 });
+            }
+        }
+        let gv = sobel_magnitude(&edge_plane(16, 16));
+        let gh = sobel_magnitude(&p);
+        assert!((gv.get(7, 8) - gh.get(8, 7)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn harris_flat_and_edge_low_corner_high() {
+        // corner: quadrant image
+        let mut p = Plane::new(16, 16);
+        for y in 0..16 {
+            for x in 0..16 {
+                p.set(x, y, if x >= 8 && y >= 8 { 1.0 } else { 0.0 });
+            }
+        }
+        let r = harris_response(&p);
+        let corner = r.get(8, 8).max(r.get(7, 7)).max(r.get(8, 7)).max(r.get(7, 8));
+        let edge = r.get(8, 2); // pure vertical edge region
+        let flat = r.get(2, 2);
+        assert!(corner > 0.0, "corner response {corner}");
+        assert!(corner > edge, "corner {corner} vs edge {edge}");
+        assert!(flat.abs() < 1e-6);
+        assert!(edge <= 1e-3, "edges should not score high: {edge}");
+    }
+}

@@ -1,0 +1,360 @@
+//! Adaptive sparse pixel sampling (paper Sec. IV-A).
+//!
+//! Tracking: one pixel per `w_t × w_t` tile, selected uniformly at random
+//! (the paper's chosen strategy), with the Fig. 10 comparison baselines:
+//! Harris-scored selection, low-resolution downsampling, and GauSPU's
+//! tile-granularity loss-guided sampling.
+//!
+//! Mapping: unseen pixels (final transmittance Γ > 0.5, Eqn. 2) plus one
+//! texture-weighted pixel per `w_m × w_m` tile, scored by Sobel gradient
+//! magnitude × uniform random (Eqn. 3).
+
+pub mod filters;
+
+pub use filters::{harris_response, sobel_magnitude};
+
+use crate::math::Pcg32;
+use crate::render::image::{Image, Plane};
+use crate::render::pixel_pipeline::SampledPixels;
+
+/// Tracking-time sampling strategies (Fig. 10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrackingStrategy {
+    /// One uniformly-random pixel per tile (the paper's choice).
+    Random,
+    /// One pixel per tile at the Harris-response argmax.
+    Harris,
+    /// Downsample: the tile-center pixel (= rendering at low resolution).
+    LowRes,
+    /// GauSPU-style: sample at *tile* granularity, guided by the previous
+    /// iteration's per-tile loss — the same pixel budget concentrated in
+    /// the highest-loss tiles, all pixels of a chosen tile rendered.
+    LossTile,
+}
+
+/// Build the tracking pixel set for a frame.
+///
+/// * `tile` — w_t (16 default → 256× fewer pixels).
+/// * `reference` — current camera frame (needed by Harris).
+/// * `prev_loss` — per-pixel loss map from the previous tracking
+///   iteration (needed by LossTile; pass None on the first iteration —
+///   it falls back to uniform tile choice).
+pub fn sample_tracking(
+    strategy: TrackingStrategy,
+    reference: &Image,
+    tile: u32,
+    prev_loss: Option<&Plane>,
+    rng: &mut Pcg32,
+) -> SampledPixels {
+    let (w, h) = (reference.width, reference.height);
+    match strategy {
+        TrackingStrategy::Random => {
+            let regular = per_tile(w, h, tile, |x0, y0, tw, th| {
+                (x0 + rng.next_below(tw), y0 + rng.next_below(th))
+            });
+            SampledPixels::new(w, h, tile, &regular, &[])
+        }
+        TrackingStrategy::LowRes => {
+            let regular = per_tile(w, h, tile, |x0, y0, tw, th| (x0 + tw / 2, y0 + th / 2));
+            SampledPixels::new(w, h, tile, &regular, &[])
+        }
+        TrackingStrategy::Harris => {
+            let lum = reference.luminance();
+            let score = harris_response(&lum);
+            let regular = per_tile(w, h, tile, |x0, y0, tw, th| {
+                let mut best = (x0, y0);
+                let mut best_s = f32::NEG_INFINITY;
+                for dy in 0..th {
+                    for dx in 0..tw {
+                        let s = score.get(x0 + dx, y0 + dy);
+                        if s > best_s {
+                            best_s = s;
+                            best = (x0 + dx, y0 + dy);
+                        }
+                    }
+                }
+                best
+            });
+            SampledPixels::new(w, h, tile, &regular, &[])
+        }
+        TrackingStrategy::LossTile => {
+            // pixel budget = number of tiles; tiles chosen = budget/tile².
+            let gw = w.div_ceil(tile);
+            let gh = h.div_ceil(tile);
+            let budget_tiles = ((gw * gh) as usize / (tile * tile) as usize).max(1);
+            let mut tiles: Vec<(u32, u32, f32)> = Vec::with_capacity((gw * gh) as usize);
+            for ty in 0..gh {
+                for tx in 0..gw {
+                    let score = match prev_loss {
+                        Some(loss) => {
+                            let mut s = 0.0f32;
+                            for dy in 0..tile.min(h - ty * tile) {
+                                for dx in 0..tile.min(w - tx * tile) {
+                                    s += loss.get(tx * tile + dx, ty * tile + dy);
+                                }
+                            }
+                            s
+                        }
+                        None => rng.next_f32(),
+                    };
+                    tiles.push((tx, ty, score));
+                }
+            }
+            tiles.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            let mut extra = Vec::new();
+            for &(tx, ty, _) in tiles.iter().take(budget_tiles) {
+                for dy in 0..tile.min(h - ty * tile) {
+                    for dx in 0..tile.min(w - tx * tile) {
+                        extra.push((tx * tile + dx, ty * tile + dy));
+                    }
+                }
+            }
+            // all pixels live in the "extra" buckets: LossTile clusters
+            // many pixels per cell, which the regular grid cannot hold.
+            SampledPixels::new(w, h, tile, &[], &extra)
+        }
+    }
+}
+
+fn per_tile<F: FnMut(u32, u32, u32, u32) -> (u32, u32)>(
+    w: u32,
+    h: u32,
+    tile: u32,
+    mut pick: F,
+) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut y0 = 0;
+    while y0 < h {
+        let th = tile.min(h - y0);
+        let mut x0 = 0;
+        while x0 < w {
+            let tw = tile.min(w - x0);
+            out.push(pick(x0, y0, tw, th));
+            x0 += tile;
+        }
+        y0 += tile;
+    }
+    out
+}
+
+/// Mapping sampler configuration (Sec. IV-A, Fig. 12).
+#[derive(Clone, Copy, Debug)]
+pub struct MappingSamplerConfig {
+    /// w_m: one texture-weighted pixel per tile (4 default).
+    pub tile: u32,
+    /// Γ threshold above which a pixel counts as unseen (Eqn. 2).
+    pub unseen_t: f32,
+    /// Include the unseen-pixel set.
+    pub use_unseen: bool,
+    /// Include the texture-weighted per-tile set.
+    pub use_weighted: bool,
+    /// Weight by Sobel texture richness (vs pure random) — the "Comb"
+    /// vs "Random" ablation of Fig. 24.
+    pub texture_weighted: bool,
+    /// Cap on the unseen-pixel set as a fraction of the frame (the
+    /// paper's unseen sets are sparse by construction; without a cap the
+    /// bootstrap phase would sample nearly every pixel). Uniformly
+    /// subsampled when exceeded.
+    pub max_unseen_frac: f32,
+}
+
+impl Default for MappingSamplerConfig {
+    fn default() -> Self {
+        MappingSamplerConfig {
+            tile: 4,
+            unseen_t: 0.5,
+            use_unseen: true,
+            use_weighted: true,
+            texture_weighted: true,
+            max_unseen_frac: 1.0 / 16.0,
+        }
+    }
+}
+
+/// Build the mapping pixel set from the first forward pass's final
+/// transmittance (Γ) plane and the reference frame's texture.
+pub fn sample_mapping(
+    cfg: &MappingSamplerConfig,
+    reference: &Image,
+    final_t: &Plane,
+    rng: &mut Pcg32,
+) -> SampledPixels {
+    let (w, h) = (reference.width, reference.height);
+    // unseen pixels: Γ > threshold (stored separately — paper Sec. V-C)
+    let mut extra = Vec::new();
+    if cfg.use_unseen {
+        for y in 0..h {
+            for x in 0..w {
+                if final_t.get(x, y) > cfg.unseen_t {
+                    extra.push((x, y));
+                }
+            }
+        }
+        let cap = ((w * h) as f32 * cfg.max_unseen_frac).ceil() as usize;
+        if extra.len() > cap {
+            rng.shuffle(&mut extra);
+            extra.truncate(cap);
+        }
+    }
+
+    let mut regular = Vec::new();
+    if cfg.use_weighted {
+        let grad = sobel_magnitude(&reference.luminance());
+        let mut y0 = 0;
+        while y0 < h {
+            let th = cfg.tile.min(h - y0);
+            let mut x0 = 0;
+            while x0 < w {
+                let tw = cfg.tile.min(w - x0);
+                // P(p) = w_R(p) · r  (Eqn. 3): argmax over the tile
+                let mut best = (x0, y0);
+                let mut best_p = f32::NEG_INFINITY;
+                for dy in 0..th {
+                    for dx in 0..tw {
+                        let wr = if cfg.texture_weighted {
+                            grad.get(x0 + dx, y0 + dy)
+                        } else {
+                            1.0
+                        };
+                        let p = wr * rng.next_f32();
+                        if p > best_p {
+                            best_p = p;
+                            best = (x0 + dx, y0 + dy);
+                        }
+                    }
+                }
+                // avoid double-adding a pixel that is already unseen
+                if !(cfg.use_unseen && final_t.get(best.0, best.1) > cfg.unseen_t) {
+                    regular.push(best);
+                }
+                x0 += cfg.tile;
+            }
+            y0 += cfg.tile;
+        }
+    }
+    SampledPixels::new(w, h, cfg.tile, &regular, &extra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+
+    fn textured_image(w: u32, h: u32) -> Image {
+        let mut img = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                // sharp vertical edge at x = w/2 + smooth gradient
+                let v = if x < w / 2 { 0.2 } else { 0.8 };
+                img.set(x, y, Vec3::splat(v + 0.1 * (y as f32 / h as f32)));
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn random_sampling_one_per_tile_in_bounds() {
+        let img = textured_image(64, 48);
+        let mut rng = Pcg32::new(1);
+        let s = sample_tracking(TrackingStrategy::Random, &img, 16, None, &mut rng);
+        assert_eq!(s.len(), (64 / 16) * (48 / 16));
+        for &(x, y) in &s.pixels {
+            assert!(x < 64 && y < 48);
+        }
+        // each sample in its own tile cell
+        let mut cells: Vec<u32> = s.pixels.iter().map(|&(x, y)| (y / 16) * 4 + x / 16).collect();
+        cells.sort_unstable();
+        cells.dedup();
+        assert_eq!(cells.len(), s.len());
+    }
+
+    #[test]
+    fn sampling_reduction_factor_256() {
+        let img = textured_image(256, 256);
+        let mut rng = Pcg32::new(2);
+        let s = sample_tracking(TrackingStrategy::Random, &img, 16, None, &mut rng);
+        assert_eq!(s.len() * 256, 256 * 256);
+    }
+
+    #[test]
+    fn lowres_picks_tile_centers() {
+        let img = textured_image(32, 32);
+        let mut rng = Pcg32::new(3);
+        let s = sample_tracking(TrackingStrategy::LowRes, &img, 16, None, &mut rng);
+        assert_eq!(s.pixels, vec![(8, 8), (24, 8), (8, 24), (24, 24)]);
+    }
+
+    #[test]
+    fn harris_prefers_structure() {
+        let img = textured_image(64, 64);
+        let mut rng = Pcg32::new(4);
+        let s = sample_tracking(TrackingStrategy::Harris, &img, 32, None, &mut rng);
+        // the only structure is the vertical edge at x=32; Harris picks
+        // should hug it (within a couple of pixels of the edge or borders)
+        let near_edge = s
+            .pixels
+            .iter()
+            .filter(|&&(x, _)| (x as i32 - 32).unsigned_abs() <= 4)
+            .count();
+        assert!(near_edge >= s.len() / 2, "{:?}", s.pixels);
+    }
+
+    #[test]
+    fn loss_tile_concentrates_budget() {
+        let img = textured_image(64, 64);
+        let mut loss = Plane::new(64, 64);
+        // all loss in the top-left tile
+        for y in 0..16 {
+            for x in 0..16 {
+                loss.set(x, y, 1.0);
+            }
+        }
+        let mut rng = Pcg32::new(5);
+        let s = sample_tracking(TrackingStrategy::LossTile, &img, 16, Some(&loss), &mut rng);
+        // 16 tiles, budget = 16/256 -> 1 tile = 256 pixels, all top-left
+        assert_eq!(s.len(), 256);
+        assert!(s.pixels.iter().all(|&(x, y)| x < 16 && y < 16));
+    }
+
+    #[test]
+    fn mapping_selects_unseen() {
+        let img = textured_image(32, 32);
+        let mut t = Plane::filled(32, 32, 0.0);
+        t.set(5, 7, 0.9);
+        t.set(20, 10, 0.8);
+        let mut rng = Pcg32::new(6);
+        let cfg = MappingSamplerConfig { use_weighted: false, ..Default::default() };
+        let s = sample_mapping(&cfg, &img, &t, &mut rng);
+        assert_eq!(s.len(), 2);
+        assert!(s.pixels.contains(&(5, 7)));
+        assert!(s.pixels.contains(&(20, 10)));
+    }
+
+    #[test]
+    fn mapping_weighted_covers_tiles() {
+        let img = textured_image(32, 32);
+        let t = Plane::filled(32, 32, 0.0); // everything seen
+        let mut rng = Pcg32::new(7);
+        let s = sample_mapping(&MappingSamplerConfig::default(), &img, &t, &mut rng);
+        assert_eq!(s.len(), (32 / 4) * (32 / 4));
+    }
+
+    #[test]
+    fn mapping_combined_more_than_weighted_alone() {
+        let img = textured_image(32, 32);
+        let mut t = Plane::filled(32, 32, 0.0);
+        for x in 0..8 {
+            t.set(x, 0, 1.0); // a strip of unseen pixels
+        }
+        let mut rng = Pcg32::new(8);
+        let comb = sample_mapping(&MappingSamplerConfig::default(), &img, &t, &mut rng);
+        let mut rng = Pcg32::new(8);
+        let weighted_only = sample_mapping(
+            &MappingSamplerConfig { use_unseen: false, ..Default::default() },
+            &img,
+            &t,
+            &mut rng,
+        );
+        assert!(comb.len() > weighted_only.len());
+    }
+}

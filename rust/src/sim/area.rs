@@ -1,0 +1,110 @@
+//! Area model (paper Sec. VI "Area"): per-component areas at 16 nm that
+//! reproduce the reported totals — Splatonic 1.07 mm² (28% rasterization
+//! engines, 57% other compute, 15% SRAM) vs GSCore 1.77 mm² and GSArch
+//! 3.42 mm² — and scale with the unit counts for the Fig. 27 sweeps.
+
+use super::accel::AccelConfig;
+
+/// Component areas in mm² (TSMC 16 nm, DeepScaleTool-normalized).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AreaBreakdown {
+    pub projection_units: f64,
+    pub sorting_units: f64,
+    pub raster_engines: f64,
+    pub aggregation_unit: f64,
+    pub sram: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.projection_units
+            + self.sorting_units
+            + self.raster_engines
+            + self.aggregation_unit
+            + self.sram
+    }
+
+    pub fn raster_share(&self) -> f64 {
+        self.raster_engines / self.total()
+    }
+
+    pub fn sram_share(&self) -> f64 {
+        self.sram / self.total()
+    }
+}
+
+// Per-unit areas (mm² @16nm) chosen so the default config totals 1.07 mm²
+// with the paper's 28% / 57% / 15% split.
+const AREA_PER_PROJ_UNIT: f64 = 0.0430; // incl. its 4 α-filter units
+const AREA_PER_SORT_UNIT: f64 = 0.0300;
+const AREA_PER_RASTER_ENGINE: f64 = 0.0749; // 2×2 RU + 2×2 RRU + reduction
+const AREA_AGG_UNIT: f64 = 0.1460; // merge + scoreboard logic + 4 channels
+const SRAM_MM2_PER_KB: f64 = 0.00118;
+
+/// SRAM capacity of a configuration in KB: per-engine 8 KB Γ/C double
+/// buffers, 64 KB global buffer, 32 KB Gaussian cache + 8 KB scoreboard.
+pub fn sram_kb(cfg: &AccelConfig) -> f64 {
+    let engines = cfg.n_raster_engines as f64 * 8.0;
+    let agg = if cfg.agg_scoreboard { 32.0 + 8.0 } else { 32.0 };
+    engines + 64.0 + agg
+}
+
+/// Area of an accelerator configuration.
+pub fn area(cfg: &AccelConfig) -> AreaBreakdown {
+    AreaBreakdown {
+        projection_units: cfg.n_proj_units as f64 * AREA_PER_PROJ_UNIT,
+        sorting_units: cfg.n_sort_units as f64 * AREA_PER_SORT_UNIT,
+        raster_engines: cfg.n_raster_engines as f64 * AREA_PER_RASTER_ENGINE,
+        aggregation_unit: AREA_AGG_UNIT,
+        sram: sram_kb(cfg) * SRAM_MM2_PER_KB,
+    }
+}
+
+/// The paper's area comparison row: (design, mm² @16 nm).
+pub fn area_table() -> Vec<(&'static str, f64)> {
+    vec![
+        ("Splatonic", area(&AccelConfig::splatonic()).total()),
+        ("GSCore", 1.77),
+        ("GSArch", 3.42),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_total_matches_paper() {
+        let a = area(&AccelConfig::splatonic());
+        assert!((a.total() - 1.07).abs() < 0.02, "total {}", a.total());
+    }
+
+    #[test]
+    fn raster_engine_share_28_percent() {
+        let a = area(&AccelConfig::splatonic());
+        assert!((a.raster_share() - 0.28).abs() < 0.02, "{}", a.raster_share());
+    }
+
+    #[test]
+    fn sram_share_15_percent() {
+        let a = area(&AccelConfig::splatonic());
+        assert!((a.sram_share() - 0.15).abs() < 0.02, "{}", a.sram_share());
+    }
+
+    #[test]
+    fn smaller_than_prior_accelerators() {
+        let t = area_table();
+        let spl = t[0].1;
+        assert!(spl < t[1].1 && spl < t[2].1);
+    }
+
+    #[test]
+    fn area_scales_with_units() {
+        let mut cfg = AccelConfig::splatonic();
+        cfg.n_raster_engines = 8;
+        let bigger = area(&cfg);
+        let base = area(&AccelConfig::splatonic());
+        assert!(bigger.total() > base.total());
+        assert!(bigger.raster_engines > base.raster_engines * 1.9);
+    }
+}

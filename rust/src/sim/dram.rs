@@ -1,0 +1,88 @@
+//! LPDDR3-1600 ×4 DRAM model (Micron 16 Gb, paper Sec. VI): bandwidth
+//! ceiling and access energy after the Micron system-power-calculator
+//! methodology (activate + read/write + background terms folded into an
+//! effective pJ/byte at a given row-hit rate).
+
+/// DRAM timing/energy model.
+#[derive(Clone, Copy, Debug)]
+pub struct DramModel {
+    pub channels: u32,
+    /// Peak bytes/second per channel.
+    pub bytes_per_s_per_ch: f64,
+    /// Achievable fraction of peak (command overheads, refresh).
+    pub efficiency: f64,
+    /// Energy per byte for a row-hit access.
+    pub hit_j_per_byte: f64,
+    /// Extra energy per row activation (amortized per `row_bytes`).
+    pub act_j: f64,
+    pub row_bytes: f64,
+    /// Background/refresh power.
+    pub background_w: f64,
+}
+
+impl DramModel {
+    /// 4 channels of LPDDR3-1600 (32-bit each): 4 × 6.4 GB/s.
+    pub fn lpddr3_1600_x4() -> Self {
+        DramModel {
+            channels: 4,
+            bytes_per_s_per_ch: 6.4e9,
+            efficiency: 0.7,
+            hit_j_per_byte: 40e-12,
+            act_j: 2e-9,
+            row_bytes: 2048.0,
+            background_w: 0.15,
+        }
+    }
+
+    pub fn peak_bw(&self) -> f64 {
+        self.channels as f64 * self.bytes_per_s_per_ch
+    }
+
+    /// Seconds to transfer `bytes` at the achievable bandwidth.
+    pub fn transfer_s(&self, bytes: f64) -> f64 {
+        bytes / (self.peak_bw() * self.efficiency)
+    }
+
+    /// Energy to transfer `bytes` with a given row-hit rate (0..1) over
+    /// `seconds` of activity (for background power).
+    pub fn energy_j(&self, bytes: f64, hit_rate: f64, seconds: f64) -> f64 {
+        let misses = bytes * (1.0 - hit_rate.clamp(0.0, 1.0)) / self.row_bytes;
+        bytes * self.hit_j_per_byte + misses * self.act_j + self.background_w * seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_bandwidth() {
+        let d = DramModel::lpddr3_1600_x4();
+        assert!((d.peak_bw() - 25.6e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let d = DramModel::lpddr3_1600_x4();
+        let t1 = d.transfer_s(1e9);
+        let t2 = d.transfer_s(2e9);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        // 1 GB at ~17.9 GB/s effective ≈ 56 ms
+        assert!(t1 > 0.04 && t1 < 0.08, "{t1}");
+    }
+
+    #[test]
+    fn random_access_costs_more_than_streaming() {
+        let d = DramModel::lpddr3_1600_x4();
+        let stream = d.energy_j(1e6, 0.95, 0.0);
+        let random = d.energy_j(1e6, 0.1, 0.0);
+        assert!(random > stream);
+    }
+
+    #[test]
+    fn background_power_accrues_with_time() {
+        let d = DramModel::lpddr3_1600_x4();
+        let e = d.energy_j(0.0, 1.0, 2.0);
+        assert!((e - 0.3).abs() < 1e-12);
+    }
+}

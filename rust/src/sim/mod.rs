@@ -1,0 +1,63 @@
+//! Timing / energy models for the four hardware targets the paper
+//! evaluates: the Orin mobile GPU, the Splatonic accelerator, and the
+//! GSArch / GauSPU prior accelerators.
+//!
+//! All models are **work-counter driven** (DESIGN.md §5): the renderer
+//! counts exactly what work exists per stage ([`crate::render::StageCounters`]);
+//! each model converts counts → cycles → seconds and → joules with an
+//! architecture-specific cost table. Speedups *emerge* from the counter
+//! deltas between pipelines; only the dense-baseline *shape* (Fig. 5, 7,
+//! 8, 9) is calibrated.
+
+pub mod accel;
+pub mod area;
+pub mod dram;
+pub mod gpu;
+
+pub use accel::{AccelConfig, AccelModel, AccelStyle};
+pub use area::{area_table, AreaBreakdown};
+pub use dram::DramModel;
+pub use gpu::{GpuModel, StageBreakdown};
+
+/// A time+energy result for one workload on one architecture.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cost {
+    pub seconds: f64,
+    pub joules: f64,
+}
+
+impl Cost {
+    pub fn speedup_vs(&self, baseline: &Cost) -> f64 {
+        baseline.seconds / self.seconds.max(1e-18)
+    }
+
+    pub fn energy_saving_vs(&self, baseline: &Cost) -> f64 {
+        baseline.joules / self.joules.max(1e-18)
+    }
+
+    pub fn add(&mut self, o: &Cost) {
+        self.seconds += o.seconds;
+        self.joules += o.joules;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_saving() {
+        let base = Cost { seconds: 10.0, joules: 100.0 };
+        let fast = Cost { seconds: 1.0, joules: 4.0 };
+        assert!((fast.speedup_vs(&base) - 10.0).abs() < 1e-12);
+        assert!((fast.energy_saving_vs(&base) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = Cost { seconds: 1.0, joules: 2.0 };
+        a.add(&Cost { seconds: 0.5, joules: 0.25 });
+        assert_eq!(a.seconds, 1.5);
+        assert_eq!(a.joules, 2.25);
+    }
+}

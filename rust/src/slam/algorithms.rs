@@ -1,0 +1,163 @@
+//! The four 3DGS-SLAM algorithm profiles the paper evaluates
+//! (SplaTAM [36], MonoGS [56], GS-SLAM [81], FlashSLAM [61]).
+//!
+//! All four share the differentiable-rendering core; they differ in
+//! iteration budgets, loss weighting, learning rates, and mapping
+//! cadence. The profiles below encode those published differences at the
+//! scale of our synthetic testbed (absolute iteration counts are scaled
+//! down with frame size; the *ratios* across algorithms follow the
+//! papers: MonoGS uses more tracking iterations than SplaTAM, FlashSLAM
+//! is optimized for few iterations, GS-SLAM sits between).
+
+use super::loss::LossCfg;
+use super::mapping::MappingConfig;
+use super::tracking::{TrackPipeline, TrackingConfig};
+use crate::sampling::{MappingSamplerConfig, TrackingStrategy};
+
+/// The evaluated 3DGS-SLAM algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    SplaTam,
+    MonoGs,
+    GsSlam,
+    FlashSlam,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 4] = [
+        Algorithm::SplaTam,
+        Algorithm::MonoGs,
+        Algorithm::GsSlam,
+        Algorithm::FlashSlam,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::SplaTam => "SplaTAM",
+            Algorithm::MonoGs => "MonoGS",
+            Algorithm::GsSlam => "GS-SLAM",
+            Algorithm::FlashSlam => "FlashSLAM",
+        }
+    }
+}
+
+/// Complete system configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SlamConfig {
+    pub algo: Algorithm,
+    pub tracking: TrackingConfig,
+    pub mapping: MappingConfig,
+    pub seed: u64,
+}
+
+impl SlamConfig {
+    /// The paper's default Splatonic configuration for `algo`:
+    /// w_t = 16 tracking tile, w_m = 4 mapping tile, random tracking
+    /// sampling, pixel-based pipeline.
+    pub fn splatonic(algo: Algorithm) -> Self {
+        let (track_iters, map_iters, depth_w, lr_scale) = match algo {
+            // (S_t, S_m, depth weight, lr multiplier)
+            Algorithm::SplaTam => (16, 20, 1.0, 1.0),
+            Algorithm::MonoGs => (24, 16, 0.4, 0.8),
+            Algorithm::GsSlam => (12, 24, 0.8, 1.2),
+            Algorithm::FlashSlam => (6, 10, 1.0, 2.0),
+        };
+        let track_loss = LossCfg { color_w: 0.5, depth_w, ..LossCfg::tracking() };
+        let map_loss = LossCfg { color_w: 0.5, depth_w, ..Default::default() };
+        SlamConfig {
+            algo,
+            tracking: TrackingConfig {
+                iters: track_iters,
+                lr_q: 5e-4 * lr_scale,
+                lr_t: 2e-3 * lr_scale,
+                tile: 16,
+                strategy: TrackingStrategy::Random,
+                pipeline: TrackPipeline::SparsePixel,
+                loss: track_loss,
+            },
+            mapping: MappingConfig {
+                every: 4,
+                iters: map_iters,
+                sampler: MappingSamplerConfig::default(),
+                loss: map_loss,
+                ..Default::default()
+            },
+            seed: 7,
+        }
+    }
+
+    /// The unmodified dense baseline ("Org."): every pixel, tile pipeline,
+    /// and full-frame mapping (one sample per 1×1 tile = every pixel).
+    pub fn baseline(algo: Algorithm) -> Self {
+        let mut cfg = Self::splatonic(algo);
+        cfg.tracking.pipeline = TrackPipeline::DenseTile;
+        cfg.tracking.tile = 1;
+        cfg.mapping.sampler = MappingSamplerConfig {
+            tile: 1,
+            use_unseen: false,
+            use_weighted: true,
+            texture_weighted: false,
+            ..MappingSamplerConfig::default()
+        };
+        cfg.mapping.tile_pipeline = true;
+        cfg
+    }
+
+    /// Sparse sampling on the unmodified tile pipeline ("Org.+S").
+    pub fn org_s(algo: Algorithm) -> Self {
+        let mut cfg = Self::splatonic(algo);
+        cfg.tracking.pipeline = TrackPipeline::SparseTile;
+        cfg.mapping.tile_pipeline = true;
+        cfg
+    }
+
+    /// Scale iteration budgets for quick tests (budget in [0,1]).
+    pub fn scaled(mut self, budget: f32) -> Self {
+        self.tracking.iters = ((self.tracking.iters as f32 * budget) as u32).max(2);
+        self.mapping.iters = ((self.mapping.iters as f32 * budget) as u32).max(2);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_profiles_distinct() {
+        let cfgs: Vec<SlamConfig> = Algorithm::ALL.iter().map(|&a| SlamConfig::splatonic(a)).collect();
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert!(
+                    cfgs[i].tracking.iters != cfgs[j].tracking.iters
+                        || cfgs[i].mapping.iters != cfgs[j].mapping.iters,
+                    "{} and {} identical",
+                    cfgs[i].algo.name(),
+                    cfgs[j].algo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variant_pipelines() {
+        let a = Algorithm::SplaTam;
+        assert_eq!(SlamConfig::splatonic(a).tracking.pipeline, TrackPipeline::SparsePixel);
+        assert_eq!(SlamConfig::org_s(a).tracking.pipeline, TrackPipeline::SparseTile);
+        assert_eq!(SlamConfig::baseline(a).tracking.pipeline, TrackPipeline::DenseTile);
+        assert_eq!(SlamConfig::baseline(a).tracking.tile, 1);
+    }
+
+    #[test]
+    fn scaled_preserves_minimum() {
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.01);
+        assert!(cfg.tracking.iters >= 2);
+        assert!(cfg.mapping.iters >= 2);
+    }
+
+    #[test]
+    fn names_are_papers() {
+        assert_eq!(Algorithm::SplaTam.name(), "SplaTAM");
+        assert_eq!(Algorithm::ALL.len(), 4);
+    }
+}

@@ -1,0 +1,307 @@
+//! Mapping: map reconstruction (paper Sec. II-A).
+//!
+//! Every N frames: run one dense forward pass to obtain the final
+//! transmittance Γ (the unseen test of Eqn. 2), densify the map with new
+//! Gaussians back-projected from unseen/under-covered pixels, then run
+//! `S_m` optimization iterations over the mapping pixel set (unseen +
+//! texture-weighted, Sec. IV-A) updating Gaussian parameters with Adam,
+//! and finally prune degenerate Gaussians.
+
+use super::loss::{sparse_loss, LossCfg};
+use crate::camera::Camera;
+use crate::dataset::Frame;
+use crate::gaussian::{Adam, Gaussian, GaussianStore};
+use crate::math::{Pcg32, Vec2};
+use crate::render::backward_geom::{flatten_params, unflatten_params, GaussianGrads};
+use crate::render::pixel_pipeline::{backward_sparse, render_sparse, SampledPixels};
+use crate::render::tile_pipeline::render_dense;
+use crate::render::{RenderConfig, StageCounters};
+use crate::sampling::{sample_mapping, MappingSamplerConfig};
+
+/// Mapping configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MappingConfig {
+    /// Run mapping every `every` frames (paper: 4–8).
+    pub every: u32,
+    /// Optimization iterations per mapping invocation (S_m).
+    pub iters: u32,
+    /// Adam learning rate for Gaussian parameters (scaled per group).
+    pub lr: f32,
+    pub sampler: MappingSamplerConfig,
+    pub loss: LossCfg,
+    /// Densify at most this many new Gaussians per mapping call.
+    pub max_new: usize,
+    /// Densification stride over unseen pixels.
+    pub densify_stride: u32,
+    pub prune_opacity: f32,
+    pub prune_scale: f32,
+    /// Execute the optimization iterations on the unmodified tile-based
+    /// pipeline (the dense/Org.+S baselines) instead of the pixel-based
+    /// one. Numerics are identical; the work stream differs.
+    pub tile_pipeline: bool,
+}
+
+impl Default for MappingConfig {
+    fn default() -> Self {
+        MappingConfig {
+            every: 4,
+            iters: 20,
+            lr: 2e-4,
+            sampler: MappingSamplerConfig::default(),
+            loss: LossCfg::default(),
+            max_new: 6000,
+            densify_stride: 1,
+            prune_opacity: 0.005,
+            prune_scale: 3.0,
+            tile_pipeline: false,
+        }
+    }
+}
+
+/// Mapping invocation outcome.
+#[derive(Clone, Debug, Default)]
+pub struct MappingStats {
+    pub added: usize,
+    pub pruned: usize,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub sampled_pixels: usize,
+    pub unseen_pixels: usize,
+}
+
+/// Per-group Adam learning-rate scaling relative to the base (mean) rate,
+/// following the SplaTAM/3DGS convention: means slowest (Adam's
+/// scale-free steps otherwise displace converged geometry), opacity
+/// fastest (logit scale), colors in between.
+fn lr_scale(i: usize) -> f32 {
+    match i % GaussianGrads::PARAMS {
+        0..=2 => 1.0,  // mean            (base, default 2e-4)
+        3..=6 => 5.0,  // rotation        (1e-3)
+        7..=9 => 5.0,  // log-scale       (1e-3)
+        10 => 100.0,   // opacity logit   (2e-2)
+        _ => 12.5,     // color           (2.5e-3)
+    }
+}
+
+/// One mapping invocation at the (fixed) pose of `frame`.
+///
+/// `adam` must have `store.len() * 14` entries; it is grown/compacted in
+/// step with densification and pruning so optimizer state survives.
+#[allow(clippy::too_many_arguments)]
+pub fn map_update(
+    store: &mut GaussianStore,
+    adam: &mut Adam,
+    cam: &Camera,
+    frame: &Frame,
+    cfg: &MappingConfig,
+    rcfg: &RenderConfig,
+    rng: &mut Pcg32,
+    counters: &mut StageCounters,
+) -> MappingStats {
+    let mut stats = MappingStats::default();
+
+    // ---- first forward pass (dense, once per mapping — Sec. IV-A) ----
+    let (dense, _) = render_dense(store, cam, rcfg, counters);
+
+    // ---- densification from unseen / depth-uncovered pixels ----------
+    let mut added = 0usize;
+    let stride = cfg.densify_stride.max(1);
+    'outer: for y in (0..frame.depth.height).step_by(stride as usize) {
+        for x in (0..frame.depth.width).step_by(stride as usize) {
+            if added >= cfg.max_new {
+                break 'outer;
+            }
+            let unseen = dense.final_t.get(x, y) > cfg.sampler.unseen_t;
+            let d_ref = frame.depth.get(x, y);
+            if !unseen || d_ref <= 0.0 {
+                continue;
+            }
+            // back-project pixel to a world point; splat sized to the
+            // pixel footprint at that depth (SplaTAM-style init)
+            let p_cam = cam
+                .intr
+                .backproject(Vec2::new(x as f32 + 0.5, y as f32 + 0.5), d_ref);
+            let p_world = cam.c2w().transform(p_cam);
+            let radius = d_ref / cam.intr.fx * 0.7;
+            store.push(Gaussian::isotropic(
+                p_world,
+                radius.max(1e-3),
+                frame.rgb.get(x, y),
+                0.6,
+            ));
+            added += 1;
+        }
+    }
+    adam.grow(added * GaussianGrads::PARAMS);
+    stats.added = added;
+
+    // ---- sampled optimization iterations ------------------------------
+    for it in 0..cfg.iters {
+        // Γ from the latest geometry: reuse the pre-densify dense pass
+        // for iteration 0 (the paper computes Γ once per mapping) —
+        // afterwards the unseen set is whatever densification left.
+        let pixels: SampledPixels =
+            sample_mapping(&cfg.sampler, &frame.rgb, &dense.final_t, rng);
+        if pixels.is_empty() {
+            break;
+        }
+        if it == 0 {
+            stats.sampled_pixels = pixels.len();
+            stats.unseen_pixels = pixels
+                .pixels
+                .iter()
+                .filter(|&&(x, y)| dense.final_t.get(x, y) > cfg.sampler.unseen_t)
+                .count();
+        }
+
+        let (render, projected, bwd) = if cfg.tile_pipeline {
+            let projected =
+                crate::render::projection::project_all(store, cam, rcfg, counters);
+            let render = crate::render::tile_pipeline::render_org_s(
+                &projected, cam, rcfg, &pixels, counters,
+            );
+            let loss = sparse_loss(&render, &pixels, frame, &cfg.loss);
+            if it == 0 {
+                stats.first_loss = loss.value;
+            }
+            stats.final_loss = loss.value;
+            let bwd = crate::render::tile_pipeline::backward_org_s(
+                store, cam, rcfg, &projected, &render, &pixels, &loss.dl_dcolor,
+                &loss.dl_ddepth, false, true, counters,
+            );
+            (render, projected, bwd)
+        } else {
+            let (render, projected) = render_sparse(store, cam, rcfg, &pixels, counters);
+            let loss = sparse_loss(&render, &pixels, frame, &cfg.loss);
+            if it == 0 {
+                stats.first_loss = loss.value;
+            }
+            stats.final_loss = loss.value;
+            let bwd = backward_sparse(
+                store, cam, rcfg, &projected, &render, &pixels, &loss.dl_dcolor,
+                &loss.dl_ddepth, true, false, true, counters,
+            );
+            (render, projected, bwd)
+        };
+        let _ = (&render, &projected);
+        let grads = bwd.gauss.expect("gauss grads requested").flatten();
+        let mut params = flatten_params(store);
+        let base_lr = cfg.lr;
+        let mut scaled_adam = std::mem::replace(adam, Adam::new(0, adam.cfg));
+        scaled_adam.cfg.lr = base_lr;
+        scaled_adam.step_scaled(&mut params, &grads, &lr_scale);
+        *adam = scaled_adam;
+        unflatten_params(store, &params);
+    }
+
+    // ---- prune ---------------------------------------------------------
+    let keep: Vec<bool> = (0..store.len())
+        .map(|i| {
+            store.opacity(i) >= cfg.prune_opacity
+                && store.get(i).max_scale() <= cfg.prune_scale
+        })
+        .collect();
+    let pruned = store.prune(cfg.prune_opacity, cfg.prune_scale);
+    if pruned > 0 {
+        adam.compact(&keep, GaussianGrads::PARAMS);
+    }
+    stats.pruned = pruned;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{Flavor, SyntheticDataset};
+    use crate::gaussian::AdamConfig;
+
+    /// Mapping from an empty store must reconstruct enough to drop Γ.
+    #[test]
+    fn mapping_bootstraps_empty_map() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, 1);
+        let frame = &data.frames[0];
+        let cam = Camera::new(data.intr, frame.gt_w2c);
+        let mut store = GaussianStore::new();
+        let mut adam = Adam::new(0, AdamConfig::default());
+        let cfg = MappingConfig { iters: 5, max_new: 3000, ..Default::default() };
+        let mut rng = Pcg32::new(1);
+        let mut c = StageCounters::new();
+        let stats = map_update(
+            &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
+        );
+        assert!(stats.added > 200, "added {}", stats.added);
+        assert_eq!(adam.len(), store.len() * GaussianGrads::PARAMS);
+
+        // after densify+optimize, the frame is mostly covered
+        let (dense, _) = render_dense(&store, &cam, &RenderConfig::default(), &mut c);
+        let covered = dense.final_t.data.iter().filter(|&&t| t < 0.5).count();
+        assert!(
+            covered as f32 / dense.final_t.data.len() as f32 > 0.6,
+            "coverage {}",
+            covered as f32 / dense.final_t.data.len() as f32
+        );
+    }
+
+    #[test]
+    fn mapping_improves_loss() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 1, 64, 48, 1);
+        let frame = &data.frames[0];
+        let cam = Camera::new(data.intr, frame.gt_w2c);
+        let mut store = GaussianStore::new();
+        let mut adam = Adam::new(0, AdamConfig::default());
+        let cfg = MappingConfig { iters: 12, ..Default::default() };
+        let mut rng = Pcg32::new(2);
+        let mut c = StageCounters::new();
+        let stats = map_update(
+            &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
+        );
+        assert!(
+            stats.final_loss < stats.first_loss,
+            "{} -> {}",
+            stats.first_loss,
+            stats.final_loss
+        );
+    }
+
+    #[test]
+    fn mapping_on_complete_map_adds_little() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 2, 64, 48, 1);
+        let frame = &data.frames[0];
+        let cam = Camera::new(data.intr, frame.gt_w2c);
+        let mut store = data.gt_store.clone();
+        let n0 = store.len();
+        let mut adam = Adam::new(n0 * GaussianGrads::PARAMS, AdamConfig::default());
+        let cfg = MappingConfig { iters: 2, ..Default::default() };
+        let mut rng = Pcg32::new(3);
+        let mut c = StageCounters::new();
+        let stats = map_update(
+            &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
+        );
+        // GT map already explains the frame: few unseen pixels
+        assert!(
+            stats.added < n0 / 10,
+            "added {} on a complete map of {}",
+            stats.added,
+            n0
+        );
+    }
+
+    #[test]
+    fn adam_state_tracks_store_len_through_prune() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 3, 48, 32, 1);
+        let frame = &data.frames[0];
+        let cam = Camera::new(data.intr, frame.gt_w2c);
+        let mut store = GaussianStore::new();
+        let mut adam = Adam::new(0, AdamConfig::default());
+        let cfg = MappingConfig { iters: 3, ..Default::default() };
+        let mut rng = Pcg32::new(4);
+        let mut c = StageCounters::new();
+        for _ in 0..2 {
+            let _ = map_update(
+                &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng,
+                &mut c,
+            );
+            assert_eq!(adam.len(), store.len() * GaussianGrads::PARAMS);
+        }
+    }
+}

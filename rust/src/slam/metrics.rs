@@ -1,0 +1,145 @@
+//! Accuracy metrics: absolute trajectory error (ATE RMSE) and PSNR of
+//! re-rendered frames — the two metrics of the paper's evaluation.
+
+use crate::camera::Camera;
+use crate::dataset::Frame;
+use crate::gaussian::GaussianStore;
+use crate::math::Se3;
+use crate::render::tile_pipeline::render_dense;
+use crate::render::{RenderConfig, StageCounters};
+
+/// ATE RMSE in scene units (meters; the paper reports cm).
+///
+/// Trajectories are aligned at the first pose (SLAM systems are anchored
+/// to frame 0 by construction), then the RMS of camera-center distances
+/// is taken — the standard ATE-RMSE up to the (identity) alignment.
+pub fn ate_rmse(estimated: &[Se3], ground_truth: &[Se3]) -> f32 {
+    assert_eq!(estimated.len(), ground_truth.len());
+    assert!(!estimated.is_empty());
+    // align frame 0: Ê_i = E_i ∘ C with C = E_0⁻¹ ∘ G_0, so Ê_0 = G_0
+    let correction = estimated[0].inverse().compose(ground_truth[0]);
+    let mut acc = 0.0f64;
+    for (e, g) in estimated.iter().zip(ground_truth) {
+        let e_aligned = e.compose(correction).inverse().t; // camera center
+        let g_center = g.inverse().t;
+        acc += ((e_aligned - g_center).norm() as f64).powi(2);
+    }
+    (acc / estimated.len() as f64).sqrt() as f32
+}
+
+/// Mean PSNR of the reconstructed map re-rendered at the *estimated*
+/// poses against the reference frames, evaluated every `stride` frames.
+pub fn psnr_over_sequence(
+    store: &GaussianStore,
+    intr: crate::camera::Intrinsics,
+    poses: &[Se3],
+    frames: &[Frame],
+    stride: usize,
+    rcfg: &RenderConfig,
+) -> f64 {
+    assert_eq!(poses.len(), frames.len());
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    let mut c = StageCounters::new();
+    for i in (0..frames.len()).step_by(stride.max(1)) {
+        let cam = Camera::new(intr, poses[i]);
+        let (r, _) = render_dense(store, &cam, rcfg, &mut c);
+        let p = r.image.psnr(&frames[i].rgb);
+        if p.is_finite() {
+            acc += p;
+            n += 1;
+        } else {
+            // identical images — cap contribution (PSNR of a perfect
+            // render) to keep the mean finite
+            acc += 60.0;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    acc / n as f64
+}
+
+/// Mean depth L1 over a sequence (auxiliary reconstruction metric).
+pub fn depth_l1_over_sequence(
+    store: &GaussianStore,
+    intr: crate::camera::Intrinsics,
+    poses: &[Se3],
+    frames: &[Frame],
+    stride: usize,
+    rcfg: &RenderConfig,
+) -> f64 {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    let mut c = StageCounters::new();
+    for i in (0..frames.len()).step_by(stride.max(1)) {
+        let cam = Camera::new(intr, poses[i]);
+        let (r, _) = render_dense(store, &cam, rcfg, &mut c);
+        for (d, gt) in r.depth.data.iter().zip(&frames[i].depth.data) {
+            if *gt > 0.0 {
+                acc += (*d - *gt).abs() as f64;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Quat, Vec3};
+
+    fn pose(t: Vec3) -> Se3 {
+        Se3::new(Quat::IDENTITY, t)
+    }
+
+    #[test]
+    fn ate_zero_for_identical() {
+        let traj = vec![pose(Vec3::ZERO), pose(Vec3::X), pose(Vec3::Y)];
+        assert!(ate_rmse(&traj, &traj) < 1e-6);
+    }
+
+    #[test]
+    fn ate_known_offset() {
+        // estimated equals GT except one pose off by 0.3 in x:
+        // rmse = sqrt(0.09/3)
+        let gt = vec![pose(Vec3::ZERO), pose(Vec3::X), pose(Vec3::Y)];
+        let mut est = gt.clone();
+        est[1] = pose(Vec3::X + Vec3::new(-0.3, 0.0, 0.0));
+        let e = ate_rmse(&est, &gt);
+        assert!((e - (0.09f32 / 3.0).sqrt()).abs() < 1e-5, "{e}");
+    }
+
+    #[test]
+    fn ate_invariant_to_shared_start_offset() {
+        // both trajectories shifted by the same first-frame anchor: the
+        // frame-0 alignment removes a constant offset
+        let gt = vec![pose(Vec3::ZERO), pose(Vec3::X)];
+        let shift = Vec3::new(0.5, -0.2, 0.1);
+        let est = vec![pose(shift), pose(Vec3::X + shift)];
+        assert!(ate_rmse(&est, &gt) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ate_length_mismatch_panics() {
+        let _ = ate_rmse(&[Se3::IDENTITY], &[Se3::IDENTITY, Se3::IDENTITY]);
+    }
+
+    #[test]
+    fn psnr_of_gt_map_is_high() {
+        use crate::dataset::{Flavor, SyntheticDataset};
+        let d = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 2);
+        let poses: Vec<Se3> = d.frames.iter().map(|f| f.gt_w2c).collect();
+        let p = psnr_over_sequence(
+            &d.gt_store, d.intr, &poses, &d.frames, 1, &RenderConfig::default(),
+        );
+        assert!(p > 45.0, "GT map re-render should be near-perfect: {p}");
+    }
+}

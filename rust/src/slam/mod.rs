@@ -1,0 +1,17 @@
+//! The 3DGS-SLAM layer: tracking (per-frame pose optimization), mapping
+//! (map reconstruction with densification/pruning), the four algorithm
+//! profiles the paper evaluates, and the accuracy metrics (ATE, PSNR).
+
+pub mod algorithms;
+pub mod loss;
+pub mod mapping;
+pub mod metrics;
+pub mod system;
+pub mod tracking;
+
+pub use algorithms::{Algorithm, SlamConfig};
+pub use loss::{sparse_loss, LossCfg, SparseLoss};
+pub use mapping::{MappingConfig, MappingStats};
+pub use metrics::{ate_rmse, psnr_over_sequence};
+pub use system::{PipelineMode, SlamStats, SlamSystem};
+pub use tracking::{TrackingConfig, TrackingStats};

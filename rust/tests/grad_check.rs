@@ -1,0 +1,49 @@
+// Integration gradient check: single-Gaussian pose gradient against
+// central finite differences, with a tiny alpha-threshold so the splat
+// cutoff discontinuity does not pollute the FD signal.
+use splatonic::camera::{Camera, Intrinsics};
+use splatonic::gaussian::{Gaussian, GaussianStore};
+use splatonic::math::{Quat, Se3, Vec3};
+use splatonic::render::pixel_pipeline::{backward_sparse, render_sparse, SampledPixels};
+use splatonic::render::{RenderConfig, StageCounters};
+
+fn loss(store: &GaussianStore, cam: &Camera, cfg: &RenderConfig, px: &SampledPixels) -> f64 {
+    let mut c = StageCounters::new();
+    let (r, _) = render_sparse(store, cam, cfg, px, &mut c);
+    r.colors.iter().map(|v| (v.x + v.y + v.z) as f64).sum()
+}
+
+#[test]
+fn single_gaussian_pose_gradient_fd() {
+    let mut store = GaussianStore::new();
+    store.push(Gaussian::isotropic(Vec3::new(0.1, -0.05, 2.0), 0.3, Vec3::new(0.5, 0.5, 0.5), 0.8));
+    let cam = Camera::new(
+        Intrinsics::replica_like(32, 32),
+        Se3::new(Quat::from_axis_angle(Vec3::Y, 0.03), Vec3::new(0.01, 0.0, 0.0)),
+    );
+    let cfg = RenderConfig { alpha_thresh: 1e-6, ..Default::default() };
+    let all: Vec<(u32, u32)> = (0..32u32).flat_map(|y| (0..32u32).map(move |x| (x, y))).collect();
+    let px = SampledPixels::new(32, 32, 1, &all, &[]);
+
+    let mut c = StageCounters::new();
+    let (r, proj) = render_sparse(&store, &cam, &cfg, &px, &mut c);
+    let dldc = vec![Vec3::ONE; r.colors.len()];
+    let dldd = vec![0.0; r.colors.len()];
+    let b = backward_sparse(&store, &cam, &cfg, &proj, &r, &px, &dldc, &dldd, true, true, false, &mut c);
+    let an = b.pose.unwrap().flatten();
+    let h = 1e-3f32;
+    for k in 0..7 {
+        let perturb = |s: f32| -> f64 {
+            let mut cam2 = cam;
+            match k {
+                0 => cam2.w2c.q.w += s, 1 => cam2.w2c.q.x += s, 2 => cam2.w2c.q.y += s,
+                3 => cam2.w2c.q.z += s, 4 => cam2.w2c.t.x += s, 5 => cam2.w2c.t.y += s,
+                _ => cam2.w2c.t.z += s,
+            }
+            loss(&store, &cam2, &cfg, &px)
+        };
+        let fd = ((perturb(h) - perturb(-h)) / (2.0 * h as f64)) as f32;
+        let tol = 0.03 * fd.abs().max(an[k].abs()).max(0.05);
+        assert!((fd - an[k]).abs() < tol, "param {k}: fd={fd} analytic={}", an[k]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Randomized property sweeps (in-tree PCG32 in place of proptest):
+//! invariants that must hold for *any* scene, camera, seed, and sampling
+//! configuration — pipeline equivalence, sampler contracts, optimizer
+//! state consistency, and counter sanity.
+
+use splatonic::camera::{Camera, Intrinsics};
+use splatonic::gaussian::{Adam, AdamConfig, Gaussian, GaussianStore};
+use splatonic::math::{Pcg32, Quat, Se3, Vec3};
+use splatonic::render::pixel_pipeline::{render_sparse, SampledPixels};
+use splatonic::render::projection::project_all;
+use splatonic::render::tile_pipeline::{render_dense, render_org_s};
+use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::sampling::{sample_mapping, sample_tracking, MappingSamplerConfig, TrackingStrategy};
+
+fn random_store(rng: &mut Pcg32, n: usize) -> GaussianStore {
+    let mut store = GaussianStore::new();
+    for _ in 0..n {
+        let mut g = Gaussian::isotropic(
+            Vec3::new(
+                rng.uniform(-1.5, 1.5),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(0.5, 5.0),
+            ),
+            rng.uniform(0.05, 0.5),
+            Vec3::new(rng.next_f32(), rng.next_f32(), rng.next_f32()),
+            rng.uniform(0.1, 0.95),
+        );
+        g.rot = Quat::new(
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+            rng.uniform(-1.0, 1.0),
+        );
+        g.log_scale += Vec3::new(
+            rng.uniform(-0.6, 0.6),
+            rng.uniform(-0.6, 0.6),
+            rng.uniform(-0.6, 0.6),
+        );
+        store.push(g);
+    }
+    store
+}
+
+fn random_camera(rng: &mut Pcg32, w: u32, h: u32) -> Camera {
+    Camera::new(
+        Intrinsics::replica_like(w, h),
+        Se3::new(
+            Quat::from_axis_angle(
+                Vec3::new(rng.normal(), rng.normal(), rng.normal()),
+                rng.uniform(-0.15, 0.15),
+            ),
+            Vec3::new(rng.uniform(-0.2, 0.2), rng.uniform(-0.2, 0.2), rng.uniform(-0.2, 0.2)),
+        ),
+    )
+}
+
+/// For any random scene/camera, the three rendering paths (dense tile,
+/// Org.+S, pixel-based) must produce identical pixel values.
+#[test]
+fn pipelines_agree_on_random_scenes() {
+    let mut rng = Pcg32::new(0xbeef);
+    for case in 0..12 {
+        let store = random_store(&mut rng, 40 + case * 15);
+        let (w, h) = (48u32, 40u32);
+        let cam = random_camera(&mut rng, w, h);
+        let cfg = RenderConfig::default();
+
+        let mut c = StageCounters::new();
+        let (dense, proj) = render_dense(&store, &cam, &cfg, &mut c);
+
+        // random sparse subset
+        let px_list: Vec<(u32, u32)> = (0..24)
+            .map(|_| (rng.next_below(w), rng.next_below(h)))
+            .collect();
+        let mut dedup: Vec<(u32, u32)> = Vec::new();
+        for p in px_list {
+            if !dedup.iter().any(|q| (q.0 / 8, q.1 / 8) == (p.0 / 8, p.1 / 8)) {
+                dedup.push(p);
+            }
+        }
+        let px = SampledPixels::new(w, h, 8, &dedup, &[]);
+        let (sparse, _) = render_sparse(&store, &cam, &cfg, &px, &mut c);
+        let orgs = render_org_s(&proj, &cam, &cfg, &px, &mut c);
+
+        for (i, &(x, y)) in px.pixels.iter().enumerate() {
+            let d = dense.image.get(x, y);
+            assert!(
+                (d - sparse.colors[i]).norm() < 1e-4,
+                "case {case}: dense vs sparse at ({x},{y})"
+            );
+            assert!(
+                (d - orgs.colors[i]).norm() < 1e-4,
+                "case {case}: dense vs org_s at ({x},{y})"
+            );
+            assert!((dense.final_t.get(x, y) - sparse.final_t[i]).abs() < 1e-4);
+        }
+    }
+}
+
+/// Transmittance is in (0,1], colors bounded by the sum of weights, and
+/// hit lists depth-sorted — for arbitrary scenes.
+#[test]
+fn render_invariants_random_sweep() {
+    let mut rng = Pcg32::new(77);
+    for case in 0..10 {
+        let store = random_store(&mut rng, 30 + case * 20);
+        let cam = random_camera(&mut rng, 40, 32);
+        let cfg = RenderConfig::default();
+        let all: Vec<(u32, u32)> = (0..32u32)
+            .step_by(2)
+            .flat_map(|y| (0..40u32).step_by(2).map(move |x| (x, y)))
+            .collect();
+        let px = SampledPixels::new(40, 32, 2, &all, &[]);
+        let mut c = StageCounters::new();
+        let (r, _) = render_sparse(&store, &cam, &cfg, &px, &mut c);
+        for i in 0..px.len() {
+            assert!(r.final_t[i] > 0.0 && r.final_t[i] <= 1.0 + 1e-6);
+            let csum = 1.0 - r.final_t[i]; // total integrated weight
+            for ch in [r.colors[i].x, r.colors[i].y, r.colors[i].z] {
+                assert!(ch >= -1e-6 && ch <= csum + 1e-4, "color {ch} vs weight {csum}");
+            }
+            for w2 in r.lists[i].windows(2) {
+                assert!(w2[0].depth <= w2[1].depth);
+            }
+        }
+        assert!(c.raster_pairs_integrated <= c.proj_alpha_checks);
+        assert_eq!(c.proj_alpha_checks, c.proj_bbox_candidates);
+    }
+}
+
+/// Tracking samplers: exactly one pixel per tile, in bounds, all cells
+/// covered — for arbitrary frame sizes and tile sizes.
+#[test]
+fn tracking_sampler_contract_random_sizes() {
+    let mut rng = Pcg32::new(5);
+    let img_rng = &mut Pcg32::new(6);
+    for _ in 0..20 {
+        let w = 16 + img_rng.next_below(120);
+        let h = 16 + img_rng.next_below(100);
+        let tile = [4u32, 8, 16][img_rng.next_below(3) as usize];
+        let img = splatonic::render::image::Image::filled(
+            w,
+            h,
+            Vec3::splat(0.5),
+        );
+        for strat in [TrackingStrategy::Random, TrackingStrategy::LowRes] {
+            let s = sample_tracking(strat, &img, tile, None, &mut rng);
+            let expect = w.div_ceil(tile) * h.div_ceil(tile);
+            assert_eq!(s.len() as u32, expect, "{w}x{h} tile {tile}");
+            let mut cells: Vec<u32> = s
+                .pixels
+                .iter()
+                .map(|&(x, y)| (y / tile) * w.div_ceil(tile) + x / tile)
+                .collect();
+            cells.sort_unstable();
+            cells.dedup();
+            assert_eq!(cells.len(), s.len(), "one sample per cell");
+            assert!(s.pixels.iter().all(|&(x, y)| x < w && y < h));
+        }
+    }
+}
+
+/// Mapping sampler: unseen cap respected, no duplicate regular cells,
+/// unseen pixels all above the Γ threshold.
+#[test]
+fn mapping_sampler_contract_random() {
+    let mut rng = Pcg32::new(9);
+    for case in 0..10 {
+        let (w, h) = (40u32, 32u32);
+        let img = splatonic::render::image::Image::filled(w, h, Vec3::splat(0.4));
+        let mut t = splatonic::render::image::Plane::new(w, h);
+        for v in t.data.iter_mut() {
+            *v = rng.next_f32();
+        }
+        let cfg = MappingSamplerConfig::default();
+        let s = sample_mapping(&cfg, &img, &t, &mut rng);
+        let n_regular = s.len()
+            - s.pixels
+                .iter()
+                .filter(|&&(x, y)| t.get(x, y) > cfg.unseen_t)
+                .count();
+        let cap = ((w * h) as f32 * cfg.max_unseen_frac).ceil() as usize;
+        let n_unseen = s.len() - n_regular;
+        assert!(n_unseen <= cap, "case {case}: unseen {n_unseen} > cap {cap}");
+        assert!(s.pixels.iter().all(|&(x, y)| x < w && y < h));
+    }
+}
+
+/// Adam state stays aligned with the parameter vector through arbitrary
+/// interleavings of grow/compact/step.
+#[test]
+fn adam_state_random_ops() {
+    let mut rng = Pcg32::new(21);
+    let ppi = 3; // params per item
+    for _ in 0..20 {
+        let mut n_items = 4usize;
+        let mut adam = Adam::new(n_items * ppi, AdamConfig::with_lr(0.01));
+        let mut params = vec![0.5f32; n_items * ppi];
+        for _ in 0..30 {
+            match rng.next_below(3) {
+                0 => {
+                    let add = 1 + rng.next_below(3) as usize;
+                    n_items += add;
+                    adam.grow(add * ppi);
+                    params.extend(std::iter::repeat(0.5).take(add * ppi));
+                }
+                1 if n_items > 1 => {
+                    let keep: Vec<bool> =
+                        (0..n_items).map(|_| rng.next_f32() > 0.3).collect();
+                    let kept = keep.iter().filter(|&&k| k).count().max(1);
+                    let keep: Vec<bool> = if keep.iter().all(|&k| !k) {
+                        let mut k = keep;
+                        k[0] = true;
+                        k
+                    } else {
+                        keep
+                    };
+                    adam.compact(&keep, ppi);
+                    let mut new_params = Vec::new();
+                    for (i, &k) in keep.iter().enumerate() {
+                        if k {
+                            new_params.extend_from_slice(&params[i * ppi..(i + 1) * ppi]);
+                        }
+                    }
+                    params = new_params;
+                    n_items = kept.max(params.len() / ppi);
+                    n_items = params.len() / ppi;
+                }
+                _ => {
+                    let grads: Vec<f32> =
+                        (0..params.len()).map(|_| rng.normal() * 0.1).collect();
+                    adam.step(&mut params, &grads);
+                }
+            }
+            assert_eq!(adam.len(), params.len(), "state/param desync");
+            assert!(params.iter().all(|p| p.is_finite()));
+        }
+    }
+}
+
+/// Counter merge is order-independent (the threaded coordinator relies
+/// on this to accumulate worker counters).
+#[test]
+fn counters_merge_commutative_random() {
+    let mut rng = Pcg32::new(31);
+    for _ in 0..10 {
+        let mk = |rng: &mut Pcg32| {
+            let store = random_store(rng, 25);
+            let cam = random_camera(rng, 32, 24);
+            let mut c = StageCounters::new();
+            let _ = project_all(&store, &cam, &RenderConfig::default(), &mut c);
+            c
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration tests over the SLAM stack: loss-landscape geometry,
+//! tracking convergence, mapping stability, dataset sanity.
+
+use splatonic::camera::Camera;
+use splatonic::dataset::{Flavor, SyntheticDataset};
+use splatonic::gaussian::{Adam, AdamConfig, GaussianStore};
+use splatonic::math::{Pcg32, Se3, Vec3};
+use splatonic::render::pixel_pipeline::{render_sparse, SampledPixels};
+use splatonic::render::tile_pipeline::render_dense;
+use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::slam::loss::{dense_loss, sparse_loss, LossCfg};
+use splatonic::slam::mapping::{map_update, MappingConfig};
+use splatonic::slam::tracking::{track_frame, TrackingConfig};
+
+/// Frames must be well-formed: sensible depth range, textured content.
+#[test]
+fn dataset_frames_are_sane() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 80, 60, 3);
+    for f in &data.frames {
+        let dmin = f.depth.data.iter().cloned().fold(f32::MAX, f32::min);
+        let dmax = f.depth.data.iter().cloned().fold(0.0f32, f32::max);
+        assert!(dmin > 0.2, "depth too close: {dmin}");
+        assert!(dmax < 10.0, "depth too far: {dmax}");
+        let mean = f.rgb.data.iter().fold(Vec3::ZERO, |a, &b| a + b) / f.rgb.data.len() as f32;
+        let var: f32 =
+            f.rgb.data.iter().map(|c| (*c - mean).norm_sq()).sum::<f32>() / f.rgb.data.len() as f32;
+        assert!(var > 0.01, "frame is texture-poor: {var}");
+    }
+}
+
+/// The tracking loss landscape must be a well-behaved basin: loss grows
+/// monotonically with pose offset and the analytic gradient points back
+/// toward the optimum.
+#[test]
+fn tracking_loss_landscape_is_a_basin() {
+    use splatonic::render::pixel_pipeline::backward_sparse;
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 80, 60, 2);
+    let frame = &data.frames[1];
+    let gt = frame.gt_w2c;
+    let rcfg = RenderConfig::default();
+    let reg: Vec<(u32, u32)> = (0..60u32)
+        .step_by(4)
+        .flat_map(|y| (0..80u32).step_by(4).map(move |x| (x, y)))
+        .collect();
+    let px = SampledPixels::new(80, 60, 4, &reg, &[]);
+    let offset = Vec3::new(0.02, -0.01, 0.015);
+    let mut prev = -1.0f32;
+    for s in [0.25f32, 0.5, 0.75, 1.0, 1.25] {
+        let pose = Se3::new(gt.q, gt.t + offset * s);
+        let cam = Camera::new(data.intr, pose);
+        let mut c = StageCounters::new();
+        let (r, proj) = render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c);
+        let l = sparse_loss(&r, &px, frame, &LossCfg::tracking());
+        assert!(l.value > prev, "loss not monotone at s={s}: {} <= {prev}", l.value);
+        prev = l.value;
+        let b = backward_sparse(
+            &data.gt_store, &cam, &rcfg, &proj, &r, &px, &l.dl_dcolor, &l.dl_ddepth, true,
+            true, false, &mut c,
+        );
+        let along = b.pose.unwrap().t.dot(offset.normalized());
+        assert!(along > 0.0, "gradient points away from optimum at s={s}");
+    }
+}
+
+/// Tracking recovers a centimeter-scale perturbation to sub-centimeter.
+#[test]
+fn tracking_converges_to_millimeters() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 80, 60, 2);
+    let frame = &data.frames[1];
+    let gt = frame.gt_w2c;
+    let init = Se3::new(gt.q, gt.t + Vec3::new(0.02, -0.01, 0.015));
+    let cfg = TrackingConfig { iters: 30, tile: 8, ..Default::default() };
+    let mut rng = Pcg32::new(3);
+    let mut c = StageCounters::new();
+    let (p, stats) = track_frame(
+        &data.gt_store, data.intr, init, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
+    );
+    let err = (p.t - gt.t).norm();
+    assert!(err < 0.01, "tracking error {err} m (loss {} -> {})", stats.first_loss, stats.final_loss);
+}
+
+/// Repeated mapping on an already-converged map must not destroy it
+/// (Adam scale-free-step stability).
+#[test]
+fn mapping_is_stable_at_convergence() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, 1);
+    let frame = &data.frames[0];
+    let cam = Camera::new(data.intr, frame.gt_w2c);
+    let rcfg = RenderConfig::default();
+    let mut store = GaussianStore::new();
+    let mut adam = Adam::new(0, AdamConfig::default());
+    let mut rng = Pcg32::new(1);
+    let mut c = StageCounters::new();
+    // bootstrap
+    let cfg = MappingConfig { iters: 5, ..Default::default() };
+    let _ = map_update(&mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c);
+    let (d0, _) = render_dense(&store, &cam, &rcfg, &mut c);
+    let (l0, _, _) = dense_loss(&d0, frame, &LossCfg::default());
+    // hammer it with more mapping rounds
+    for _ in 0..4 {
+        let cfg2 = MappingConfig { iters: 5, max_new: 50, ..Default::default() };
+        let _ = map_update(&mut store, &mut adam, &cam, frame, &cfg2, &rcfg, &mut rng, &mut c);
+    }
+    let (d1, _) = render_dense(&store, &cam, &rcfg, &mut c);
+    let (l1, _, _) = dense_loss(&d1, frame, &LossCfg::default());
+    assert!(
+        l1 < l0 * 3.0 + 0.01,
+        "mapping destabilized a converged map: {l0} -> {l1}"
+    );
+}
+
+/// PSNR of the bootstrapped map against its own training frame is decent.
+#[test]
+fn mapping_bootstrap_psnr() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 1, 64, 48, 1);
+    let frame = &data.frames[0];
+    let cam = Camera::new(data.intr, frame.gt_w2c);
+    let rcfg = RenderConfig::default();
+    let mut store = GaussianStore::new();
+    let mut adam = Adam::new(0, AdamConfig::default());
+    let mut rng = Pcg32::new(2);
+    let mut c = StageCounters::new();
+    let cfg = MappingConfig { iters: 15, ..Default::default() };
+    let _ = map_update(&mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c);
+    let (d, _) = render_dense(&store, &cam, &rcfg, &mut c);
+    let psnr = d.image.psnr(&frame.rgb);
+    assert!(psnr > 25.0, "bootstrap PSNR {psnr}");
+}

@@ -1,0 +1,219 @@
+//! Cross-language integration: the AOT HLO artifacts executed through
+//! PJRT must agree with the pure-Rust renderer on identical inputs —
+//! forward colors/depths, tracking loss, pose gradients, and Gaussian
+//! gradients. This is the proof that the three layers (Pallas kernel →
+//! JAX model → Rust coordinator) compose.
+//!
+//! Requires `make artifacts` (the Makefile test target runs it first).
+
+use splatonic::camera::Camera;
+use splatonic::config::{Backend, RunConfig};
+use splatonic::coordinator;
+use splatonic::dataset::{Flavor, SyntheticDataset};
+use splatonic::math::{Pcg32, Se3, Vec3};
+use splatonic::render::backward_geom::flatten_params;
+use splatonic::render::pixel_pipeline::{backward_sparse, render_sparse};
+use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::runtime::{store_index_lists, XlaRuntime};
+use splatonic::sampling::{sample_tracking, TrackingStrategy};
+use splatonic::slam::loss::{sparse_loss, LossCfg};
+
+fn runtime() -> XlaRuntime {
+    XlaRuntime::load(splatonic::runtime::default_artifacts_dir())
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+struct Setup {
+    data: SyntheticDataset,
+    cam: Camera,
+    rcfg: RenderConfig,
+}
+
+fn setup() -> Setup {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 80, 60, 2);
+    let cam = Camera::new(data.intr, data.frames[1].gt_w2c);
+    Setup { data, cam, rcfg: RenderConfig::default() }
+}
+
+/// Truncate per-pixel hit lists to the artifact's K and recompute the
+/// composited outputs, so the Rust reference matches what the fixed-K
+/// XLA executable can express.
+fn truncate_to_k(
+    render: &splatonic::render::pixel_pipeline::SparseRender,
+    proj: &[splatonic::render::projection::Projected],
+    k: usize,
+) -> splatonic::render::pixel_pipeline::SparseRender {
+    let mut out = render.clone();
+    for (i, hits) in out.lists.iter_mut().enumerate() {
+        if hits.len() > k {
+            hits.truncate(k);
+        }
+        let mut t = 1.0f32;
+        let mut color = Vec3::ZERO;
+        let mut depth = 0.0f32;
+        for h in hits.iter() {
+            let p = &proj[h.proj as usize];
+            let w = t * h.alpha;
+            color += p.color * w;
+            depth += h.depth * w;
+            t *= 1.0 - h.alpha;
+        }
+        out.colors[i] = color;
+        out.depths[i] = depth;
+        out.final_t[i] = t;
+    }
+    out
+}
+
+#[test]
+fn xla_render_matches_rust_renderer() {
+    let rt = runtime();
+    let s = setup();
+    let mut rng = Pcg32::new(11);
+    let px = sample_tracking(TrackingStrategy::Random, &s.data.frames[1].rgb, 8, None, &mut rng);
+    let mut c = StageCounters::new();
+    let (render, proj) = render_sparse(&s.data.gt_store, &s.cam, &s.rcfg, &px, &mut c);
+    let lists = store_index_lists(&render, &proj, rt.manifest.k);
+    let out = rt.render(&s.data.gt_store, &s.cam, &px, &lists).unwrap();
+
+    let mut max_c = 0.0f32;
+    let mut max_t = 0.0f32;
+    for i in 0..px.len() {
+        // pixels whose Rust list exceeded K are not comparable (truncated)
+        if render.lists[i].len() >= rt.manifest.k {
+            continue;
+        }
+        max_c = max_c.max((out.colors[i] - render.colors[i]).norm());
+        max_t = max_t.max((out.final_t[i] - render.final_t[i]).abs());
+    }
+    assert!(max_c < 1e-3, "color mismatch {max_c}");
+    assert!(max_t < 1e-3, "transmittance mismatch {max_t}");
+}
+
+#[test]
+fn xla_track_step_matches_rust_gradients() {
+    let rt = runtime();
+    let s = setup();
+    let frame = &s.data.frames[1];
+    // perturbed pose so the loss and gradients are non-trivial
+    let mut cam = s.cam;
+    cam.w2c = Se3::new(cam.w2c.q, cam.w2c.t + Vec3::new(0.01, -0.005, 0.008));
+
+    let mut rng = Pcg32::new(13);
+    let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 8, None, &mut rng);
+    let mut c = StageCounters::new();
+    let (render, proj) = render_sparse(&s.data.gt_store, &cam, &s.rcfg, &px, &mut c);
+    let lists = store_index_lists(&render, &proj, rt.manifest.k);
+    let render = truncate_to_k(&render, &proj, rt.manifest.k);
+
+    // Rust loss + pose gradient
+    let loss = sparse_loss(&render, &px, frame, &LossCfg::tracking());
+    let bwd = backward_sparse(
+        &s.data.gt_store, &cam, &s.rcfg, &proj, &render, &px, &loss.dl_dcolor,
+        &loss.dl_ddepth, true, true, false, &mut c,
+    );
+    let rust_grad = bwd.pose.unwrap().flatten();
+
+    // XLA loss + pose gradient
+    let out = rt.track_step(&s.data.gt_store, &cam, &px, &lists, frame).unwrap();
+    let xla_grad = out.pose_grad.flatten();
+
+    let rel = (out.loss - loss.value).abs() / loss.value.max(1e-6);
+    assert!(rel < 0.05, "loss mismatch: rust {} xla {}", loss.value, out.loss);
+    for k in 0..7 {
+        let tol = 0.08 * rust_grad[k].abs().max(xla_grad[k].abs()).max(0.02);
+        assert!(
+            (rust_grad[k] - xla_grad[k]).abs() < tol,
+            "pose grad {k}: rust {} xla {}",
+            rust_grad[k],
+            xla_grad[k]
+        );
+    }
+}
+
+#[test]
+fn xla_map_step_gradients_align_with_rust() {
+    let rt = runtime();
+    let s = setup();
+    let frame = &s.data.frames[1];
+    // perturb colors so mapping gradients are non-trivial
+    let mut store = s.data.gt_store.clone();
+    for c in store.colors.iter_mut() {
+        *c = (*c + Vec3::splat(0.1)).clamp01();
+    }
+
+    let mut rng = Pcg32::new(17);
+    let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 8, None, &mut rng);
+    let mut c = StageCounters::new();
+    let (render, proj) = render_sparse(&store, &s.cam, &s.rcfg, &px, &mut c);
+    let lists = store_index_lists(&render, &proj, rt.manifest.k);
+    let render = truncate_to_k(&render, &proj, rt.manifest.k);
+
+    let loss = sparse_loss(&render, &px, frame, &LossCfg::default());
+    let bwd = backward_sparse(
+        &store, &s.cam, &s.rcfg, &proj, &render, &px, &loss.dl_dcolor, &loss.dl_ddepth,
+        true, false, true, &mut c,
+    );
+    let rust_flat = bwd.gauss.unwrap().flatten();
+
+    let (xla_loss, xla_flat) = rt.map_step(&store, &s.cam, &px, &lists, frame).unwrap();
+    assert_eq!(rust_flat.len(), xla_flat.len());
+    let rel = (xla_loss - loss.value).abs() / loss.value.max(1e-6);
+    assert!(rel < 0.05, "loss mismatch: rust {} xla {xla_loss}", loss.value);
+
+    // cosine similarity of the full gradient vectors (padding/K-truncation
+    // produce small elementwise differences; the update direction is what
+    // the optimizer consumes)
+    let dot: f64 = rust_flat.iter().zip(&xla_flat).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    let na: f64 = rust_flat.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = xla_flat.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+    let cos = dot / (na * nb).max(1e-12);
+    assert!(cos > 0.98, "gradient direction mismatch: cos {cos}");
+    // flatten layout sanity
+    assert_eq!(rust_flat.len(), flatten_params(&store).len());
+}
+
+#[test]
+fn xla_backed_tracking_converges() {
+    let rt = runtime();
+    let s = setup();
+    let frame = &s.data.frames[1];
+    let gt = frame.gt_w2c;
+    let init = Se3::new(gt.q, gt.t + Vec3::new(0.015, -0.01, 0.01));
+    let cfg = splatonic::slam::tracking::TrackingConfig {
+        iters: 25,
+        tile: 8,
+        ..Default::default()
+    };
+    let mut rng = Pcg32::new(19);
+    let mut c = StageCounters::new();
+    let (pose, stats) = coordinator::track_frame_xla(
+        &rt, &s.data.gt_store, s.data.intr, init, frame, &cfg, &s.rcfg, &mut rng, &mut c,
+    )
+    .unwrap();
+    let e0 = (init.t - gt.t).norm();
+    let e1 = (pose.t - gt.t).norm();
+    assert!(
+        e1 < e0 * 0.5,
+        "XLA tracking did not converge: {e0} -> {e1} (loss {} -> {})",
+        stats.first_loss,
+        stats.final_loss
+    );
+}
+
+#[test]
+fn xla_end_to_end_slam_run() {
+    let cfg = RunConfig {
+        width: 64,
+        height: 48,
+        frames: 5,
+        budget: 0.3,
+        backend: Backend::Xla,
+        track_tile: 8,
+        ..Default::default()
+    };
+    let report = coordinator::run(&cfg).unwrap();
+    assert_eq!(report.frames, 5);
+    assert!(report.ate_rmse_m < 0.2, "ATE {}", report.ate_rmse_m);
+    assert!(report.n_gaussians > 100);
+}
