@@ -1,63 +1,158 @@
 //! Hot-path wall-clock microbenchmarks of the Rust renderer (criterion is
 //! unavailable offline; median-of-N timing via bench::time_it). These are
 //! the numbers the §Perf pass in EXPERIMENTS.md tracks.
+//!
+//! The main section sweeps Gaussian count (10k / 50k / 200k) × thread
+//! count (1 / 2 / all) over the sparse forward and backward passes,
+//! reporting α-checked pairs/sec. The *forward* output is bit-identical
+//! across thread counts (see tests/parallel_determinism.rs), so its
+//! column measures pure scheduling/layout speedup; backward gradients are
+//! deterministic per thread count but only tolerance-equal across counts
+//! (partition-dependent float accumulation order).
 
 use splatonic::bench::time_it;
-use splatonic::camera::Camera;
+use splatonic::camera::{Camera, Intrinsics};
 use splatonic::dataset::{Flavor, SyntheticDataset};
-use splatonic::math::Pcg32;
-use splatonic::render::pixel_pipeline::{backward_sparse, render_sparse};
-use splatonic::render::tile_pipeline::render_dense;
-use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::gaussian::{Gaussian, GaussianStore};
+use splatonic::math::{Pcg32, Se3, Vec3};
+use splatonic::render::pixel_pipeline::{
+    backward_sparse_with, render_sparse_projected_with, render_sparse_with, RenderScratch,
+    SampledPixels, SparseRender,
+};
+use splatonic::render::projection::project_all;
+use splatonic::render::{auto_threads, RenderConfig, StageCounters};
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::slam::loss::{sparse_loss, LossCfg};
 
+fn synth_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
+    let mut store = GaussianStore::with_capacity(n);
+    for _ in 0..n {
+        store.push(Gaussian::isotropic(
+            Vec3::new(
+                rng.uniform(-1.4, 1.4),
+                rng.uniform(-1.0, 1.0),
+                rng.uniform(0.6, 7.0),
+            ),
+            rng.uniform(0.01, 0.12),
+            Vec3::new(rng.next_f32(), rng.next_f32(), rng.next_f32()),
+            rng.uniform(0.2, 0.9),
+        ));
+    }
+    store
+}
+
 fn main() {
+    let rcfg = RenderConfig::default();
+    let cam = Camera::new(Intrinsics::replica_like(320, 240), Se3::IDENTITY);
+    let px = SampledPixels::full_grid(320, 240, 16);
+    let hw = auto_threads();
+    println!(
+        "sparse hot-path sweep: 320x240, {} sampled pixels, {} hw threads",
+        px.len(),
+        hw
+    );
+    println!(
+        "{:>9} {:>8} | {:>12} {:>14} {:>8} | {:>12} {:>14}",
+        "gaussians", "threads", "fwd ms", "fwd pairs/s", "speedup", "bwd ms", "bwd pairs/s"
+    );
+
+    let mut thread_counts = vec![1usize, 2];
+    if hw > 2 {
+        thread_counts.push(hw);
+    }
+
+    for &n in &[10_000usize, 50_000, 200_000] {
+        let mut rng = Pcg32::new(42);
+        let store = synth_store(n, &mut rng);
+        let mut c = StageCounters::new();
+        let projected = project_all(&store, &cam, &rcfg, &mut c);
+
+        // per-call work for pairs/sec: α-checked pairs (stage 1) forward,
+        // integrated pairs backward
+        let mut c_probe = StageCounters::new();
+        let mut scratch = RenderScratch::with_threads(1);
+        let mut render = SparseRender::default();
+        render_sparse_projected_with(&projected, &rcfg, &px, &mut c_probe, &mut scratch, &mut render);
+        let fwd_pairs = c_probe.proj_alpha_checks.max(1);
+        let loss = {
+            // synthetic loss gradients so backward has realistic inputs
+            let dldc: Vec<Vec3> = (0..px.len()).map(|i| Vec3::splat(0.1 + (i % 7) as f32 * 0.01)).collect();
+            let dldd: Vec<f32> = (0..px.len()).map(|i| 0.02 * ((i % 3) as f32)).collect();
+            (dldc, dldd)
+        };
+        let mut c_bwd = StageCounters::new();
+        let _ = backward_sparse_with(
+            &store, &cam, &rcfg, &projected, &render, &px, &loss.0, &loss.1, true, true,
+            false, &mut c_bwd, &mut scratch,
+        );
+        let bwd_pairs = c_bwd.bwd_pairs_integrated.max(1);
+
+        let reps = if n >= 200_000 { 5 } else { 9 };
+        let mut fwd_t1 = 0.0f64;
+        for &threads in &thread_counts {
+            let mut scratch = RenderScratch::with_threads(threads);
+            let mut out = SparseRender::default();
+            // warm the arena so the timed runs are steady-state
+            let mut cw = StageCounters::new();
+            render_sparse_projected_with(&projected, &rcfg, &px, &mut cw, &mut scratch, &mut out);
+
+            let d_fwd = time_it(reps, || {
+                let mut c = StageCounters::new();
+                render_sparse_projected_with(&projected, &rcfg, &px, &mut c, &mut scratch, &mut out);
+                std::hint::black_box(&out);
+            });
+            let d_bwd = time_it(reps, || {
+                let mut c = StageCounters::new();
+                let b = backward_sparse_with(
+                    &store, &cam, &rcfg, &projected, &out, &px, &loss.0, &loss.1, true,
+                    true, false, &mut c, &mut scratch,
+                );
+                std::hint::black_box(&b);
+            });
+            let fwd_s = d_fwd.as_secs_f64();
+            let bwd_s = d_bwd.as_secs_f64();
+            if threads == 1 {
+                fwd_t1 = fwd_s;
+            }
+            println!(
+                "{:>9} {:>8} | {:>12.3} {:>14.3e} {:>7.2}x | {:>12.3} {:>14.3e}",
+                n,
+                threads,
+                fwd_s * 1e3,
+                fwd_pairs as f64 / fwd_s,
+                fwd_t1 / fwd_s,
+                bwd_s * 1e3,
+                bwd_pairs as f64 / bwd_s,
+            );
+        }
+    }
+
+    // -- end-to-end tracking iteration on the dataset workload ----------
+    // (the latency that bounds tracking Hz; scratch reused as tracking
+    // does across its optimization iterations)
     let data = SyntheticDataset::generate(Flavor::Replica, 0, 320, 240, 2);
     let frame = &data.frames[1];
     let cam = Camera::new(data.intr, frame.gt_w2c);
-    let rcfg = RenderConfig::default();
-    let mut rng = Pcg32::new(1);
-    let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
-    println!("workload: {} Gaussians, 320x240, {} sampled pixels", data.gt_store.len(), px.len());
-
-    let reps = 15;
-    let d = time_it(reps, || {
-        let mut c = StageCounters::new();
-        let _ = std::hint::black_box(render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c));
-    });
-    println!("render_sparse (fwd, proj+lists+composite): {:>10.3} ms", d.as_secs_f64() * 1e3);
-
-    let mut c = StageCounters::new();
-    let (render, proj) = render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c);
-    let loss = sparse_loss(&render, &px, frame, &LossCfg::tracking());
-    let d = time_it(reps, || {
-        let mut c = StageCounters::new();
-        let _ = std::hint::black_box(backward_sparse(
-            &data.gt_store, &cam, &rcfg, &proj, &render, &px, &loss.dl_dcolor,
-            &loss.dl_ddepth, true, true, false, &mut c,
-        ));
-    });
-    println!("backward_sparse (pose grads):              {:>10.3} ms", d.as_secs_f64() * 1e3);
-
-    let d = time_it(5, || {
-        let mut c = StageCounters::new();
-        let _ = std::hint::black_box(render_dense(&data.gt_store, &cam, &rcfg, &mut c));
-    });
-    println!("render_dense (320x240 full frame):         {:>10.3} ms", d.as_secs_f64() * 1e3);
-
-    // end-to-end tracking iteration (the latency that bounds Hz)
-    let d = time_it(reps, || {
+    let mut scratch = RenderScratch::new();
+    let mut render = SparseRender::default();
+    let d = time_it(15, || {
         let mut rng = Pcg32::new(2);
         let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
         let mut c = StageCounters::new();
-        let (r, p) = render_sparse(&data.gt_store, &cam, &rcfg, &px, &mut c);
-        let l = sparse_loss(&r, &px, frame, &LossCfg::tracking());
-        let _ = std::hint::black_box(backward_sparse(
-            &data.gt_store, &cam, &rcfg, &p, &r, &px, &l.dl_dcolor, &l.dl_ddepth, true, true,
-            false, &mut c,
-        ));
+        let proj = render_sparse_with(
+            &data.gt_store, &cam, &rcfg, &px, &mut c, &mut scratch, &mut render,
+        );
+        let l = sparse_loss(&render, &px, frame, &LossCfg::tracking());
+        let b = backward_sparse_with(
+            &data.gt_store, &cam, &rcfg, &proj, &render, &px, &l.dl_dcolor, &l.dl_ddepth,
+            true, true, false, &mut c, &mut scratch,
+        );
+        std::hint::black_box(&b);
     });
-    println!("full tracking iteration (sample+fwd+bwd):  {:>10.3} ms  ({:.0} iter/s)",
-        d.as_secs_f64() * 1e3, 1.0 / d.as_secs_f64());
+    println!(
+        "\nfull tracking iteration ({} Gaussians, sample+proj+fwd+bwd): {:.3} ms  ({:.0} iter/s)",
+        data.gt_store.len(),
+        d.as_secs_f64() * 1e3,
+        1.0 / d.as_secs_f64()
+    );
 }

@@ -10,7 +10,7 @@ use crate::config::{Backend, RunConfig};
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::math::{Pcg32, Quat, Se3, Vec3};
-use crate::render::pixel_pipeline::render_sparse_projected;
+use crate::render::pixel_pipeline::{render_sparse_projected_with, RenderScratch, SparseRender};
 use crate::render::projection::project_all;
 use crate::render::{RenderConfig, StageCounters};
 use crate::runtime::{store_index_lists, XlaRuntime};
@@ -222,13 +222,17 @@ pub fn track_frame_xla(
     let mut first_loss = 0.0;
     let mut final_loss = 0.0;
     let mut pixels_per_iter = 0;
+    // arena + output buffers reused across the optimization iterations:
+    // steady-state iterations render without per-pixel heap allocation
+    let mut scratch = RenderScratch::new();
+    let mut render = SparseRender::default();
     for it in 0..cfg.iters {
         let cam = Camera::new(intr, pose);
         // L3 prepares the work: projection + preemptive α-checked lists
         let projected = project_all(store, &cam, rcfg, counters);
         let pixels = sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, None, rng);
         pixels_per_iter = pixels.len();
-        let render = render_sparse_projected(&projected, rcfg, &pixels, counters);
+        render_sparse_projected_with(&projected, rcfg, &pixels, counters, &mut scratch, &mut render);
         let lists = store_index_lists(&render, &projected, rt.manifest.k);
         // L1/L2 compute the differentiable step through PJRT
         let out = rt.track_step(store, &cam, &pixels, &lists, frame)?;

@@ -26,9 +26,31 @@ pub mod tile_pipeline;
 pub use backward_geom::{geometry_backward, Grad2d, GaussianGrads, PoseGrad};
 pub use counters::StageCounters;
 pub use image::Image;
-pub use pixel_pipeline::{PixelHit, SampleGrid, SampledPixels, SparseBackward, SparseRender};
+pub use pixel_pipeline::{
+    HitLists, PixelHit, RenderScratch, SampleGrid, SampledPixels, SparseBackward, SparseRender,
+};
 pub use projection::Projected;
 pub use tile_pipeline::{DenseBackward, DenseRender};
+
+/// Worker-thread count for the parallel render stages: the
+/// `SPLATONIC_THREADS` env var when set (≥ 1), else the machine's
+/// available parallelism. Shared by `projection::project_all` and the
+/// pixel pipeline so one knob pins the whole hot path. Resolved once —
+/// this sits on the per-iteration hot path, and the env lock / syscall
+/// per call would otherwise be paid several times per render.
+pub fn auto_threads() -> usize {
+    static CACHE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPLATONIC_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    })
+}
 
 /// Renderer configuration shared by both pipelines.
 #[derive(Clone, Copy, Debug)]

@@ -13,6 +13,28 @@
 //! 4. the backward pass can reuse cached per-pair transmittance Γᵢ (the
 //!    Splatonic Γ/C on-chip buffer) or recompute it with cross-lane
 //!    reductions (the SW variant) — both are modeled and counted.
+//!
+//! # Hot-path architecture
+//!
+//! This is the most-executed code in the crate (tracking runs it dozens
+//! of iterations per frame), so the forward/backward pair is built around
+//! a reusable flat **CSR arena** instead of per-pixel `Vec`s:
+//!
+//! * stage 1 (pixel-level projection + preemptive α-check) runs parallel
+//!   over Gaussian chunks on `std::thread::scope`, each worker appending
+//!   `(pixel, hit)` pairs to its own retained buffer and counting into a
+//!   private [`StageCounters`] merged afterwards;
+//! * a count → prefix-sum → fill pass scatters the pairs into one flat
+//!   [`HitLists`] (entries + starts + truncated lens) held by the caller;
+//! * stage 2 (per-pixel sort + front-to-back composite) runs parallel
+//!   over hit-balanced pixel ranges on disjoint slices of the arena.
+//!
+//! Hit lists are sorted by `(depth, proj)` — a strict total order — so
+//! the rendered output is **bit-identical regardless of thread count**
+//! (asserted by `tests/parallel_determinism.rs`). Callers that iterate
+//! (tracking, mapping, the XLA coordinator) hold a [`RenderScratch`] and
+//! a [`SparseRender`] across iterations, making steady-state iterations
+//! free of per-pixel heap allocation.
 
 use super::backward_geom::{geometry_backward, GaussianGrads, Grad2d, PoseGrad};
 use super::projection::{project_all, Projected};
@@ -23,6 +45,14 @@ use crate::math::{ExpLut, Vec2, Vec3};
 
 /// GPU warp width used for lane-occupancy accounting.
 pub const WARP: u64 = 32;
+
+/// Minimum projected-Gaussian count before stage 1 fans out to threads
+/// (same spawn-cost rationale as `projection::project_all`).
+pub const PARALLEL_GAUSSIANS: usize = 4096;
+
+/// Minimum pixel–Gaussian pair count before the sort+composite and
+/// backward stages fan out to threads.
+pub const PARALLEL_HITS: usize = 4096;
 
 /// The sampled pixel set: one pixel per `cell×cell` tile (directly
 /// indexable) plus an optional free-form "extra" set (mapping's unseen
@@ -86,6 +116,21 @@ impl SampledPixels {
         }
     }
 
+    /// One sample per `cell×cell` tile at the tile center — the regular
+    /// tracking-density grid (shared by tests and benches).
+    pub fn full_grid(width: u32, height: u32, cell: u32) -> Self {
+        let mut reg = Vec::new();
+        for cy in 0..height.div_ceil(cell) {
+            for cx in 0..width.div_ceil(cell) {
+                reg.push((
+                    (cx * cell + cell / 2).min(width - 1),
+                    (cy * cell + cell / 2).min(height - 1),
+                ));
+            }
+        }
+        SampledPixels::new(width, height, cell, &reg, &[])
+    }
+
     pub fn len(&self) -> usize {
         self.coords.len()
     }
@@ -96,7 +141,7 @@ impl SampledPixels {
 }
 
 /// One α-surviving pixel–Gaussian intersection.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PixelHit {
     /// Index into the `projected` array.
     pub proj: u32,
@@ -107,8 +152,124 @@ pub struct PixelHit {
     pub t_before: f32,
 }
 
-/// Output of the sparse forward pass.
-#[derive(Clone, Debug)]
+/// Per-pixel front-to-back hit lists in CSR form: one flat entry array,
+/// per-pixel region bounds (`starts`), and a *live* length per pixel
+/// (`lens` — saturation truncates the list without compacting the arena,
+/// so the storage is reused allocation-free across render calls).
+#[derive(Clone, Debug, Default)]
+pub struct HitLists {
+    pub(crate) entries: Vec<PixelHit>,
+    /// Region bounds per pixel, `len() + 1` entries (monotone).
+    pub(crate) starts: Vec<u32>,
+    /// Live (post-truncation) list length per pixel.
+    pub(crate) lens: Vec<u32>,
+}
+
+impl HitLists {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `n` empty lists (test/bench helper).
+    pub fn with_empty_lists(n: usize) -> Self {
+        let mut l = Self::default();
+        for _ in 0..n {
+            l.push_list(&[]);
+        }
+        l
+    }
+
+    /// Number of per-pixel lists.
+    pub fn len(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lens.is_empty()
+    }
+
+    /// Total live hits across all lists.
+    pub fn total_hits(&self) -> usize {
+        self.lens.iter().map(|&l| l as usize).sum()
+    }
+
+    /// The live hit list of pixel `i`.
+    pub fn get(&self, i: usize) -> &[PixelHit] {
+        let s = self.starts[i] as usize;
+        &self.entries[s..s + self.lens[i] as usize]
+    }
+
+    /// Iterate the live per-pixel lists in pixel order.
+    pub fn iter(&self) -> HitListsIter<'_> {
+        HitListsIter { lists: self, i: 0 }
+    }
+
+    /// Shorten pixel `i`'s live list to at most `k` hits.
+    pub fn truncate_list(&mut self, i: usize, k: usize) {
+        if self.lens[i] as usize > k {
+            self.lens[i] = k as u32;
+        }
+    }
+
+    /// Append one pixel's list (incremental builder used by the tile
+    /// pipeline's Org.+S path).
+    pub fn push_list(&mut self, hits: &[PixelHit]) {
+        if self.starts.is_empty() {
+            self.starts.push(0);
+        }
+        self.entries.extend_from_slice(hits);
+        self.starts.push(self.entries.len() as u32);
+        self.lens.push(hits.len() as u32);
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.starts.clear();
+        self.lens.clear();
+    }
+}
+
+impl std::ops::Index<usize> for HitLists {
+    type Output = [PixelHit];
+
+    fn index(&self, i: usize) -> &[PixelHit] {
+        self.get(i)
+    }
+}
+
+/// Iterator over the live per-pixel hit lists.
+pub struct HitListsIter<'a> {
+    lists: &'a HitLists,
+    i: usize,
+}
+
+impl<'a> Iterator for HitListsIter<'a> {
+    type Item = &'a [PixelHit];
+
+    fn next(&mut self) -> Option<&'a [PixelHit]> {
+        if self.i >= self.lists.len() {
+            return None;
+        }
+        let lists: &'a HitLists = self.lists;
+        let s = lists.get(self.i);
+        self.i += 1;
+        Some(s)
+    }
+}
+
+impl<'a> IntoIterator for &'a HitLists {
+    type Item = &'a [PixelHit];
+    type IntoIter = HitListsIter<'a>;
+
+    fn into_iter(self) -> HitListsIter<'a> {
+        self.iter()
+    }
+}
+
+/// Output of the sparse forward pass. All buffers are reused across calls
+/// when the caller holds the value and renders through
+/// [`render_sparse_projected_with`].
+#[derive(Clone, Debug, Default)]
 pub struct SparseRender {
     pub colors: Vec<Vec3>,
     pub depths: Vec<f32>,
@@ -116,12 +277,57 @@ pub struct SparseRender {
     /// (Eqn. 2 of the paper).
     pub final_t: Vec<f32>,
     /// Per-pixel front-to-back hit lists (truncated at saturation).
-    pub lists: Vec<Vec<PixelHit>>,
+    pub lists: HitLists,
     /// Per-pixel rasterization walk length (pairs *iterated* including
     /// α-misses — equals the hit count in the pixel pipeline, but is the
     /// full tile-list walk in the Org.+S path; the reverse pass re-walks
     /// the same stream).
     pub walk_len: Vec<u32>,
+}
+
+/// Reusable arena for the sparse forward/backward hot path: per-thread
+/// stage-1 hit buffers, the count/cursor array of the CSR fill, and
+/// per-thread gradient accumulators for the backward pass. Holding one of
+/// these across optimization iterations makes steady-state renders
+/// allocation-free.
+#[derive(Debug, Default)]
+pub struct RenderScratch {
+    /// Worker threads for the parallel stages; `0` = auto (the
+    /// `SPLATONIC_THREADS` env var, else `available_parallelism`).
+    pub threads: usize,
+    hit_bufs: Vec<Vec<(u32, PixelHit)>>,
+    counts: Vec<u32>,
+    grad_bufs: Vec<Vec<Grad2d>>,
+}
+
+impl RenderScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch pinned to an explicit thread count (1 forces the
+    /// sequential path — used by the determinism tests and benches).
+    pub fn with_threads(threads: usize) -> Self {
+        RenderScratch { threads, ..Self::default() }
+    }
+
+    fn pool_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            super::auto_threads()
+        }
+    }
+
+    /// Threads actually used for `work` items under `threshold`.
+    fn threads_for(&self, work: usize, threshold: usize) -> usize {
+        let t = self.pool_threads();
+        if t <= 1 || work < threshold {
+            1
+        } else {
+            t
+        }
+    }
 }
 
 /// Forward pass of the pixel-based pipeline.
@@ -148,16 +354,217 @@ pub fn render_sparse_projected(
     pixels: &SampledPixels,
     counters: &mut StageCounters,
 ) -> SparseRender {
-    let lut = cfg.use_exp_lut.then(ExpLut::new_paper);
-    let n_px = pixels.len();
-    let grid = &pixels.grid;
-    let cellf = grid.cell as f32;
+    let mut scratch = RenderScratch::new();
+    let mut out = SparseRender::default();
+    render_sparse_projected_with(projected, cfg, pixels, counters, &mut scratch, &mut out);
+    out
+}
 
-    // -- pixel-level projection with preemptive α-checking ------------
+/// Projection + forward pass reusing a caller-held arena and output
+/// buffer (the zero-allocation iteration entry point).
+pub fn render_sparse_with(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    pixels: &SampledPixels,
+    counters: &mut StageCounters,
+    scratch: &mut RenderScratch,
+    out: &mut SparseRender,
+) -> Vec<Projected> {
+    let projected = project_all(store, cam, cfg, counters);
+    render_sparse_projected_with(&projected, cfg, pixels, counters, scratch, out);
+    projected
+}
+
+/// Forward pass into caller-held buffers: stage 1 (parallel pixel-level
+/// projection with preemptive α-checking), CSR count → prefix-sum → fill,
+/// stage 2 (parallel per-pixel sort + composite).
+pub fn render_sparse_projected_with(
+    projected: &[Projected],
+    cfg: &RenderConfig,
+    pixels: &SampledPixels,
+    counters: &mut StageCounters,
+    scratch: &mut RenderScratch,
+    out: &mut SparseRender,
+) {
+    let n_px = pixels.len();
+    let lut = cfg.use_exp_lut.then(ExpLut::new_paper);
+    let lut = lut.as_ref();
+
+    // -- stage 1: pixel-level projection with preemptive α-checking ----
     // (the paper moves α-checking into projection; candidates come from
     // BBox direct indexing into the sample grid)
-    let mut lists: Vec<Vec<(f32, PixelHit)>> = vec![Vec::new(); n_px];
-    for (pi, p) in projected.iter().enumerate() {
+    let used_bufs = if projected.is_empty() || n_px == 0 {
+        0
+    } else {
+        let n_threads = scratch.threads_for(projected.len(), PARALLEL_GAUSSIANS);
+        if scratch.hit_bufs.len() < n_threads {
+            scratch.hit_bufs.resize_with(n_threads, Vec::new);
+        }
+        if n_threads > 1 {
+            let chunk = projected.len().div_ceil(n_threads);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = scratch.hit_bufs[..n_threads]
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(ti, buf)| {
+                        let start = ti * chunk;
+                        let end = ((ti + 1) * chunk).min(projected.len());
+                        s.spawn(move || {
+                            buf.clear();
+                            let mut c = StageCounters::new();
+                            if start < end {
+                                alpha_check_range(
+                                    projected, start, end, cfg, pixels, lut, buf, &mut c,
+                                );
+                            }
+                            c
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    counters.merge(&h.join().expect("stage-1 render worker panicked"));
+                }
+            });
+        } else {
+            let buf = &mut scratch.hit_bufs[0];
+            buf.clear();
+            alpha_check_range(projected, 0, projected.len(), cfg, pixels, lut, buf, counters);
+        }
+        n_threads
+    };
+
+    // -- CSR build: count -> prefix-sum -> fill -------------------------
+    scratch.counts.clear();
+    scratch.counts.resize(n_px, 0);
+    for buf in &scratch.hit_bufs[..used_bufs] {
+        for &(px, _) in buf.iter() {
+            scratch.counts[px as usize] += 1;
+        }
+    }
+    let lists = &mut out.lists;
+    lists.starts.clear();
+    lists.starts.reserve(n_px + 1);
+    lists.starts.push(0);
+    let mut acc = 0u32;
+    for &c in &scratch.counts {
+        acc += c;
+        lists.starts.push(acc);
+    }
+    let total = acc as usize;
+    // grow-only: every slot in [0, total) is overwritten by the scatter
+    // below (the cursor ranges tile the arena exactly), so shrinking
+    // renders just truncate instead of rewriting the whole arena
+    if lists.entries.len() < total {
+        lists
+            .entries
+            .resize(total, PixelHit { proj: 0, alpha: 0.0, depth: 0.0, t_before: 1.0 });
+    } else {
+        lists.entries.truncate(total);
+    }
+    lists.lens.clear();
+    lists.lens.resize(n_px, 0);
+    // counts become write cursors
+    scratch.counts.copy_from_slice(&lists.starts[..n_px]);
+    for buf in &scratch.hit_bufs[..used_bufs] {
+        for &(px, hit) in buf.iter() {
+            let cur = &mut scratch.counts[px as usize];
+            lists.entries[*cur as usize] = hit;
+            *cur += 1;
+        }
+    }
+
+    // -- stage 2: per-pixel (depth, proj) sort + Gaussian-parallel
+    //    rasterization over hit-balanced pixel ranges -------------------
+    out.colors.clear();
+    out.colors.resize(n_px, Vec3::ZERO);
+    out.depths.clear();
+    out.depths.resize(n_px, 0.0);
+    out.final_t.clear();
+    out.final_t.resize(n_px, 1.0);
+    out.walk_len.clear();
+    out.walk_len.resize(n_px, 0);
+
+    let n_blocks = scratch.threads_for(total, PARALLEL_HITS).min(n_px.max(1));
+    let HitLists { entries, starts, lens } = &mut out.lists;
+    let starts: &[u32] = starts;
+    if n_blocks <= 1 {
+        let c = composite_range(
+            projected,
+            cfg,
+            starts,
+            0,
+            n_px,
+            entries,
+            lens,
+            &mut out.colors,
+            &mut out.depths,
+            &mut out.final_t,
+            &mut out.walk_len,
+        );
+        counters.merge(&c);
+    } else {
+        let bounds =
+            balanced_bounds(n_px, n_blocks, |p| (starts[p + 1] - starts[p]) as usize);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_blocks);
+            let mut entries_rem: &mut [PixelHit] = entries;
+            let mut lens_rem: &mut [u32] = lens;
+            let mut colors_rem: &mut [Vec3] = &mut out.colors;
+            let mut depths_rem: &mut [f32] = &mut out.depths;
+            let mut final_t_rem: &mut [f32] = &mut out.final_t;
+            let mut walk_rem: &mut [u32] = &mut out.walk_len;
+            for b in 0..n_blocks {
+                let (p0, p1) = (bounds[b], bounds[b + 1]);
+                if p0 == p1 {
+                    // skewed weight distributions can leave trailing empty
+                    // blocks — consume nothing, spawn nothing
+                    continue;
+                }
+                let n_ent = (starts[p1] - starts[p0]) as usize;
+                let (e_blk, rest) = entries_rem.split_at_mut(n_ent);
+                entries_rem = rest;
+                let (len_blk, rest) = lens_rem.split_at_mut(p1 - p0);
+                lens_rem = rest;
+                let (col_blk, rest) = colors_rem.split_at_mut(p1 - p0);
+                colors_rem = rest;
+                let (dep_blk, rest) = depths_rem.split_at_mut(p1 - p0);
+                depths_rem = rest;
+                let (ft_blk, rest) = final_t_rem.split_at_mut(p1 - p0);
+                final_t_rem = rest;
+                let (wk_blk, rest) = walk_rem.split_at_mut(p1 - p0);
+                walk_rem = rest;
+                handles.push(s.spawn(move || {
+                    composite_range(
+                        projected, cfg, starts, p0, p1, e_blk, len_blk, col_blk, dep_blk,
+                        ft_blk, wk_blk,
+                    )
+                }));
+            }
+            for h in handles {
+                counters.merge(&h.join().expect("stage-2 render worker panicked"));
+            }
+        });
+    }
+}
+
+/// Stage-1 worker: α-check Gaussians `[start, end)` against the sampled
+/// pixels inside their bounding box, appending survivors to `buf`.
+#[allow(clippy::too_many_arguments)]
+fn alpha_check_range(
+    projected: &[Projected],
+    start: usize,
+    end: usize,
+    cfg: &RenderConfig,
+    pixels: &SampledPixels,
+    lut: Option<&ExpLut>,
+    buf: &mut Vec<(u32, PixelHit)>,
+    counters: &mut StageCounters,
+) {
+    let grid = &pixels.grid;
+    let cellf = grid.cell as f32;
+    for pi in start..end {
+        let p = &projected[pi];
         let x0 = ((p.mean2d.x - p.radius) / cellf).floor().max(0.0) as u32;
         let x1 = (((p.mean2d.x + p.radius) / cellf).floor() as i64).min(grid.gw as i64 - 1);
         let y0 = ((p.mean2d.y - p.radius) / cellf).floor().max(0.0) as u32;
@@ -174,10 +581,10 @@ pub fn render_sparse_projected(
                     counters.proj_bbox_candidates += 1;
                     counters.proj_alpha_checks += 1;
                     let px = pixels.coords[reg as usize];
-                    let (alpha, _) = p.alpha_at(px, cfg, lut.as_ref());
+                    let (alpha, _) = p.alpha_at(px, cfg, lut);
                     if alpha >= cfg.alpha_thresh {
-                        lists[reg as usize].push((
-                            p.depth,
+                        buf.push((
+                            reg as u32,
                             PixelHit { proj: pi as u32, alpha, depth: p.depth, t_before: 1.0 },
                         ));
                     }
@@ -187,10 +594,10 @@ pub fn render_sparse_projected(
                     counters.proj_bbox_candidates += 1;
                     counters.proj_alpha_checks += 1;
                     let px = pixels.coords[ei as usize];
-                    let (alpha, _) = p.alpha_at(px, cfg, lut.as_ref());
+                    let (alpha, _) = p.alpha_at(px, cfg, lut);
                     if alpha >= cfg.alpha_thresh {
-                        lists[ei as usize].push((
-                            p.depth,
+                        buf.push((
+                            ei,
                             PixelHit { proj: pi as u32, alpha, depth: p.depth, t_before: 1.0 },
                         ));
                     }
@@ -198,58 +605,94 @@ pub fn render_sparse_projected(
             }
         }
     }
+}
 
-    // -- per-pixel depth sort ------------------------------------------
-    for l in lists.iter_mut() {
-        counters.charge_sort(l.len());
-        l.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    }
+/// Stage-2 worker: sort each pixel's region by `(depth, proj)` (a strict
+/// total order — thread-count independent), then composite front-to-back,
+/// truncating the live list at saturation.
+#[allow(clippy::too_many_arguments)]
+fn composite_range(
+    projected: &[Projected],
+    cfg: &RenderConfig,
+    starts: &[u32],
+    p0: usize,
+    p1: usize,
+    entries: &mut [PixelHit],
+    lens: &mut [u32],
+    colors: &mut [Vec3],
+    depths: &mut [f32],
+    final_t: &mut [f32],
+    walk_len: &mut [u32],
+) -> StageCounters {
+    let mut c = StageCounters::new();
+    let base = if p1 > p0 { starts[p0] as usize } else { 0 };
+    for p in p0..p1 {
+        let li = p - p0;
+        let s = starts[p] as usize - base;
+        let e = starts[p + 1] as usize - base;
+        let list = &mut entries[s..e];
+        c.charge_sort(list.len());
+        list.sort_unstable_by(|a, b| a.depth.total_cmp(&b.depth).then(a.proj.cmp(&b.proj)));
 
-    // -- Gaussian-parallel rasterization ---------------------------------
-    let mut out = SparseRender {
-        colors: vec![Vec3::ZERO; n_px],
-        depths: vec![0.0; n_px],
-        final_t: vec![1.0; n_px],
-        lists: Vec::with_capacity(n_px),
-        walk_len: vec![0; n_px],
-    };
-    for (pi, l) in lists.into_iter().enumerate() {
         let mut t = 1.0f32;
         let mut color = Vec3::ZERO;
         let mut depth = 0.0f32;
-        let mut hits: Vec<PixelHit> = Vec::with_capacity(l.len());
-        for (_, mut hit) in l {
+        let mut n = 0usize;
+        for hit in list.iter_mut() {
             if t < cfg.t_min {
                 break;
             }
             hit.t_before = t;
             let w = t * hit.alpha;
-            let p = &projected[hit.proj as usize];
-            color += p.color * w;
+            let pr = &projected[hit.proj as usize];
+            color += pr.color * w;
             depth += hit.depth * w;
             t *= 1.0 - hit.alpha;
-            hits.push(hit);
+            n += 1;
         }
         // lane occupancy: Gaussian-parallel — all lanes busy except the
         // tail of the last warp (the utilization win over Fig. 6).
-        let n = hits.len() as u64;
-        counters.raster_pairs_iterated += n;
-        counters.raster_pairs_integrated += n;
-        counters.warp_lanes_active += n;
-        counters.warp_lanes_total += n.div_ceil(WARP) * WARP;
+        let n64 = n as u64;
+        c.raster_pairs_iterated += n64;
+        c.raster_pairs_integrated += n64;
+        c.warp_lanes_active += n64;
+        c.warp_lanes_total += n64.div_ceil(WARP) * WARP;
         // preemptive α-checking already paid the exp cost in projection;
         // rasterization re-reads alpha from the list (no SFU work).
-        counters.bytes_list_rw += n * 16; // (id, alpha, depth) entries
-        counters.bytes_image_w += 4 * 5; // rgb + depth + T per pixel
+        c.bytes_list_rw += n64 * 16; // (id, alpha, depth) entries
+        c.bytes_image_w += 4 * 5; // rgb + depth + T per pixel
 
-        out.colors[pi] = color;
-        out.depths[pi] = depth;
-        out.final_t[pi] = t;
-        out.walk_len[pi] = out.lists.len() as u32; // placeholder, set below
-        out.walk_len[pi] = hits.len() as u32;
-        out.lists.push(hits);
+        colors[li] = color;
+        depths[li] = depth;
+        final_t[li] = t;
+        walk_len[li] = n as u32;
+        lens[li] = n as u32;
     }
-    out
+    c
+}
+
+/// Split `n_items` into `n_blocks` contiguous ranges of roughly equal
+/// total `size_of` weight. Returns `n_blocks + 1` monotone bounds.
+fn balanced_bounds(
+    n_items: usize,
+    n_blocks: usize,
+    size_of: impl Fn(usize) -> usize,
+) -> Vec<usize> {
+    let total: usize = (0..n_items).map(&size_of).sum();
+    let target = total.div_ceil(n_blocks).max(1);
+    let mut bounds = Vec::with_capacity(n_blocks + 1);
+    bounds.push(0);
+    let mut acc = 0usize;
+    for p in 0..n_items {
+        acc += size_of(p);
+        if bounds.len() < n_blocks && acc >= target * bounds.len() {
+            bounds.push(p + 1);
+        }
+    }
+    while bounds.len() < n_blocks + 1 {
+        bounds.push(n_items);
+    }
+    bounds
 }
 
 /// Output of the sparse backward pass.
@@ -284,10 +727,127 @@ pub fn backward_sparse(
     want_gauss: bool,
     counters: &mut StageCounters,
 ) -> SparseBackward {
+    let mut scratch = RenderScratch::new();
+    backward_sparse_with(
+        store, cam, cfg, projected, render, pixels, dl_dcolor, dl_ddepth, cache_gamma,
+        want_pose, want_gauss, counters, &mut scratch,
+    )
+}
+
+/// [`backward_sparse`] reusing a caller-held arena: reverse rasterization
+/// re-walks the forward hit lists parallel over hit-balanced pixel
+/// ranges, each worker accumulating into a retained per-thread `Grad2d`
+/// buffer merged in block order (deterministic for a fixed thread count).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_sparse_with(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    projected: &[Projected],
+    render: &SparseRender,
+    pixels: &SampledPixels,
+    dl_dcolor: &[Vec3],
+    dl_ddepth: &[f32],
+    cache_gamma: bool,
+    want_pose: bool,
+    want_gauss: bool,
+    counters: &mut StageCounters,
+    scratch: &mut RenderScratch,
+) -> SparseBackward {
     assert_eq!(dl_dcolor.len(), render.lists.len());
+    let n_px = render.lists.len();
     let mut grad2d = vec![Grad2d::default(); projected.len()];
 
-    for (pi, hits) in render.lists.iter().enumerate() {
+    // partition on *live* hits so the two sparse call sites (pixel
+    // pipeline, Org.+S delegate) with identical lists get identical
+    // partitions — and therefore identical float accumulation order.
+    // Fan-out amortization: each worker zeroes (and the merge re-reads) a
+    // dense Grad2d buffer of projected.len(), so threading only pays when
+    // the hit walk outweighs that O(threads·G) traffic — e.g. tracking at
+    // 200k Gaussians over 300 pixels must stay sequential.
+    let live_total = render.lists.total_hits();
+    let amortized = live_total >= projected.len();
+    let n_blocks = if amortized {
+        scratch.threads_for(live_total, PARALLEL_HITS).min(n_px.max(1))
+    } else {
+        1
+    };
+    if n_blocks <= 1 {
+        let c = backward_range(
+            projected, cfg, render, pixels, dl_dcolor, dl_ddepth, cache_gamma, 0, n_px,
+            &mut grad2d,
+        );
+        counters.merge(&c);
+    } else {
+        let bounds =
+            balanced_bounds(n_px, n_blocks, |p| render.lists.lens[p] as usize);
+        // skewed weight distributions can leave trailing empty blocks;
+        // drop them so no worker (or stale grad buffer) exists for them
+        let ranges: Vec<(usize, usize)> = bounds
+            .windows(2)
+            .map(|w| (w[0], w[1]))
+            .filter(|&(p0, p1)| p0 < p1)
+            .collect();
+        let n_live = ranges.len();
+        if scratch.grad_bufs.len() < n_live {
+            scratch.grad_bufs.resize_with(n_live, Vec::new);
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = scratch.grad_bufs[..n_live]
+                .iter_mut()
+                .zip(ranges.iter().copied())
+                .map(|(buf, (p0, p1))| {
+                    s.spawn(move || {
+                        buf.clear();
+                        buf.resize(projected.len(), Grad2d::default());
+                        backward_range(
+                            projected, cfg, render, pixels, dl_dcolor, dl_ddepth,
+                            cache_gamma, p0, p1, buf,
+                        )
+                    })
+                })
+                .collect();
+            for h in handles {
+                counters.merge(&h.join().expect("backward render worker panicked"));
+            }
+        });
+        // merge per-thread partials in block order
+        for buf in &scratch.grad_bufs[..n_live] {
+            for (g, b) in grad2d.iter_mut().zip(buf.iter()) {
+                g.mean2d += b.mean2d;
+                g.conic[0] += b.conic[0];
+                g.conic[1] += b.conic[1];
+                g.conic[2] += b.conic[2];
+                g.opacity += b.opacity;
+                g.color += b.color;
+                g.depth += b.depth;
+            }
+        }
+    }
+
+    let (pose, gauss) =
+        geometry_backward(store, cam, projected, &grad2d, cfg, want_pose, want_gauss);
+    SparseBackward { pose, gauss, grad2d }
+}
+
+/// Reverse-rasterize pixels `[p0, p1)`, accumulating screen-space
+/// gradients into `grad2d` (indexed by projected id).
+#[allow(clippy::too_many_arguments)]
+fn backward_range(
+    projected: &[Projected],
+    cfg: &RenderConfig,
+    render: &SparseRender,
+    pixels: &SampledPixels,
+    dl_dcolor: &[Vec3],
+    dl_ddepth: &[f32],
+    cache_gamma: bool,
+    p0: usize,
+    p1: usize,
+    grad2d: &mut [Grad2d],
+) -> StageCounters {
+    let mut counters = StageCounters::new();
+    for pi in p0..p1 {
+        let hits = render.lists.get(pi);
         let dldc = dl_dcolor[pi];
         let dldd = dl_ddepth.get(pi).copied().unwrap_or(0.0);
         if hits.is_empty() {
@@ -359,10 +919,7 @@ pub fn backward_sparse(
             counters.bytes_grad_rw += 9 * 4;
         }
     }
-
-    let (pose, gauss) =
-        geometry_backward(store, cam, projected, &grad2d, cfg, want_pose, want_gauss);
-    SparseBackward { pose, gauss, grad2d }
+    counters
 }
 
 #[cfg(test)]
@@ -403,14 +960,7 @@ mod tests {
     }
 
     fn full_grid(w: u32, h: u32, cell: u32) -> SampledPixels {
-        // one sample per cell at the cell center
-        let mut reg = Vec::new();
-        for cy in 0..h.div_ceil(cell) {
-            for cx in 0..w.div_ceil(cell) {
-                reg.push(((cx * cell + cell / 2).min(w - 1), (cy * cell + cell / 2).min(h - 1)));
-            }
-        }
-        SampledPixels::new(w, h, cell, &reg, &[])
+        SampledPixels::full_grid(w, h, cell)
     }
 
     /// scalar test loss: Σ_p w_p·C(p) + v_p·D(p) with fixed weights.
@@ -473,7 +1023,7 @@ mod tests {
         assert!(col.x > col.y && col.x > col.z, "center color {col:?}");
         assert!(r.final_t[center] < 0.9, "front splat should absorb");
         // lists are sorted front-to-back
-        for l in &r.lists {
+        for l in r.lists.iter() {
             for w in l.windows(2) {
                 assert!(w[0].depth <= w[1].depth);
             }
@@ -522,6 +1072,54 @@ mod tests {
             }
             assert!((r.final_t[i] - t).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn scratch_reuse_is_allocation_stable_and_identical() {
+        // rendering twice through the same scratch/output buffers must
+        // reproduce the fresh-buffer result exactly (stale-state guard)
+        let (store, cam) = test_scene();
+        let cfg = RenderConfig::default();
+        let px = full_grid(64, 64, 4);
+        let mut c = StageCounters::new();
+        let proj = project_all(&store, &cam, &cfg, &mut c);
+        let fresh = render_sparse_projected(&proj, &cfg, &px, &mut c);
+
+        let mut scratch = RenderScratch::new();
+        let mut out = SparseRender::default();
+        for _ in 0..3 {
+            let mut c2 = StageCounters::new();
+            render_sparse_projected_with(&proj, &cfg, &px, &mut c2, &mut scratch, &mut out);
+            assert_eq!(out.colors.len(), fresh.colors.len());
+            for i in 0..fresh.colors.len() {
+                assert_eq!(out.colors[i], fresh.colors[i]);
+                assert_eq!(out.final_t[i], fresh.final_t[i]);
+                assert_eq!(out.walk_len[i], fresh.walk_len[i]);
+                assert_eq!(&out.lists[i], &fresh.lists[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn hit_lists_csr_contract() {
+        let h = |proj: u32, depth: f32| PixelHit { proj, alpha: 0.5, depth, t_before: 1.0 };
+        let mut l = HitLists::new();
+        l.push_list(&[h(0, 1.0), h(1, 2.0)]);
+        l.push_list(&[]);
+        l.push_list(&[h(2, 0.5)]);
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.total_hits(), 3);
+        assert_eq!(l[0].len(), 2);
+        assert!(l[1].is_empty());
+        assert_eq!(l.get(2)[0].proj, 2);
+        l.truncate_list(0, 1);
+        assert_eq!(l[0].len(), 1);
+        assert_eq!(l.total_hits(), 2);
+        let lens: Vec<usize> = l.iter().map(|s| s.len()).collect();
+        assert_eq!(lens, vec![1, 0, 1]);
+        let e = HitLists::with_empty_lists(4);
+        assert_eq!(e.len(), 4);
+        assert_eq!(e.total_hits(), 0);
     }
 
     /// FD checks use a tiny α*: the α-threshold makes the *forward* loss

@@ -80,8 +80,8 @@ pub fn project_all(
     // worth their spawn cost above a few thousand Gaussians); chunk
     // results are concatenated in order, so the output is deterministic
     let n = store.len();
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    let out = if n >= 4096 && threads > 1 {
+    let threads = super::auto_threads();
+    let out = if n >= super::pixel_pipeline::PARALLEL_GAUSSIANS && threads > 1 {
         let chunk = n.div_ceil(threads);
         let mut parts: Vec<Vec<Projected>> = Vec::new();
         std::thread::scope(|scope| {

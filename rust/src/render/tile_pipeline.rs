@@ -64,11 +64,13 @@ pub fn bin_and_sort(
     for l in lists.iter_mut() {
         counters.charge_sort(l.len());
         counters.bytes_list_rw += l.len() as u64 * 12; // key+value pairs
-        l.sort_by(|&a, &b| {
+        // total_cmp: NaN depths must not panic the renderer; the index
+        // tie-break reproduces the previous stable sort's order exactly
+        l.sort_unstable_by(|&a, &b| {
             projected[a as usize]
                 .depth
-                .partial_cmp(&projected[b as usize].depth)
-                .unwrap()
+                .total_cmp(&projected[b as usize].depth)
+                .then(a.cmp(&b))
         });
     }
     (lists, tiles_x, tiles_y)
@@ -189,7 +191,7 @@ pub fn render_org_s(
     pixels: &crate::render::pixel_pipeline::SampledPixels,
     counters: &mut StageCounters,
 ) -> crate::render::pixel_pipeline::SparseRender {
-    use crate::render::pixel_pipeline::{PixelHit, SparseRender};
+    use crate::render::pixel_pipeline::{HitLists, PixelHit, SparseRender};
     let (w, h) = (cam.intr.width, cam.intr.height);
     // full tile binning + sort — the tile pipeline cannot skip this
     let (tile_lists, tiles_x, _ty) = bin_and_sort(projected, w, h, cfg, counters);
@@ -201,7 +203,7 @@ pub fn render_org_s(
         colors: vec![Vec3::ZERO; n_px],
         depths: vec![0.0; n_px],
         final_t: vec![1.0; n_px],
-        lists: Vec::with_capacity(n_px),
+        lists: HitLists::new(),
         walk_len: vec![0; n_px],
     };
     for (i, &(x, y)) in pixels.pixels.iter().enumerate() {
@@ -246,7 +248,7 @@ pub fn render_org_s(
         out.depths[i] = depth;
         out.final_t[i] = t;
         out.walk_len[i] = walk;
-        out.lists.push(hits);
+        out.lists.push_list(&hits);
     }
     out
 }
@@ -254,6 +256,7 @@ pub fn render_org_s(
 /// Backward of the "Org.+S" variant: reverse rasterization walks the
 /// tile list per sampled pixel (α recomputed per pair — exp/SFU work),
 /// gradients aggregated with atomics; then shared re-projection.
+/// One-shot wrapper over [`backward_org_s_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn backward_org_s(
     store: &GaussianStore,
@@ -267,6 +270,31 @@ pub fn backward_org_s(
     want_pose: bool,
     want_gauss: bool,
     counters: &mut StageCounters,
+) -> crate::render::pixel_pipeline::SparseBackward {
+    let mut scratch = crate::render::pixel_pipeline::RenderScratch::new();
+    backward_org_s_with(
+        store, cam, cfg, projected, render, pixels, dl_dcolor, dl_ddepth, want_pose,
+        want_gauss, counters, &mut scratch,
+    )
+}
+
+/// [`backward_org_s`] reusing a caller-held arena, so iterating callers
+/// (tracking, mapping) avoid re-allocating the per-thread gradient
+/// buffers every optimization step — same as the pixel-pipeline path.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_org_s_with(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    projected: &[Projected],
+    render: &crate::render::pixel_pipeline::SparseRender,
+    pixels: &crate::render::pixel_pipeline::SampledPixels,
+    dl_dcolor: &[Vec3],
+    dl_ddepth: &[f32],
+    want_pose: bool,
+    want_gauss: bool,
+    counters: &mut StageCounters,
+    scratch: &mut crate::render::pixel_pipeline::RenderScratch,
 ) -> crate::render::pixel_pipeline::SparseBackward {
     // Reverse rasterization on the tile pipeline re-checks α for every
     // pair in the (tile-)list; the hits are the same as the forward's, so
@@ -291,9 +319,9 @@ pub fn backward_org_s(
         counters.bwd_lanes_active += n;
     }
     let mut sub = StageCounters::new();
-    let out = crate::render::pixel_pipeline::backward_sparse(
+    let out = crate::render::pixel_pipeline::backward_sparse_with(
         store, cam, cfg, projected, render, pixels, dl_dcolor, dl_ddepth, true, want_pose,
-        want_gauss, &mut sub,
+        want_gauss, &mut sub, scratch,
     );
     // keep the numeric-core charges except the pixel-pipeline-specific
     // lane packing and Γ-cache accounting (this is tile-style hardware)

@@ -4,28 +4,34 @@
 //! Python never runs at request time — `make artifacts` is a build step;
 //! after it, the Rust binary is self-contained. The interchange format is
 //! HLO *text* (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos).
+//!
+//! The PJRT bindings (`xla` crate) are not vendored, so the real runtime
+//! is gated behind the `splatonic_xla` cfg flag (not a cargo feature —
+//! a feature would advertise a configuration that cannot compile without
+//! the bindings). Enable by vendoring the bindings, declaring them under
+//! `[dependencies]`, and building with `RUSTFLAGS="--cfg splatonic_xla"`.
+//! The default build ships a stub [`XlaRuntime`] with the same surface
+//! that errors at [`XlaRuntime::load`] time, keeping the coordinator's
+//! `Backend::Xla` path compiling everywhere.
 
 pub mod manifest;
 
-pub use manifest::Manifest;
+#[cfg(splatonic_xla)]
+mod pjrt;
+#[cfg(not(splatonic_xla))]
+mod stub;
 
-use crate::camera::Camera;
-use crate::gaussian::GaussianStore;
+pub use manifest::Manifest;
+#[cfg(splatonic_xla)]
+pub use pjrt::XlaRuntime;
+#[cfg(not(splatonic_xla))]
+pub use stub::XlaRuntime;
+
 use crate::math::{Quat, Se3, Vec3};
 use crate::render::backward_geom::PoseGrad;
-use crate::render::pixel_pipeline::{SampledPixels, SparseRender};
+use crate::render::pixel_pipeline::SparseRender;
 use crate::render::projection::Projected;
-use anyhow::{anyhow, Context, Result};
-use std::path::{Path, PathBuf};
-
-/// Handle to the compiled executables.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    render: xla::PjRtLoadedExecutable,
-    track_step: xla::PjRtLoadedExecutable,
-    map_step: xla::PjRtLoadedExecutable,
-    pub manifest: Manifest,
-}
+use std::path::PathBuf;
 
 /// Outputs of one XLA tracking step.
 #[derive(Clone, Debug)]
@@ -40,249 +46,6 @@ pub struct XlaRenderOut {
     pub colors: Vec<Vec3>,
     pub depths: Vec<f32>,
     pub final_t: Vec<f32>,
-}
-
-impl XlaRuntime {
-    /// Load `render/track_step/map_step` from an artifacts directory and
-    /// compile them on the PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest = Manifest::load(dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {dir:?}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        Ok(XlaRuntime {
-            render: compile("render")?,
-            track_step: compile("track_step")?,
-            map_step: compile("map_step")?,
-            client,
-            manifest,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Pad the store's SoA parameters to the artifact's G and build the
-    /// five parameter literals. Padded Gaussians get opacity-logit -30
-    /// (≈0 opacity) and sit behind the camera, so they are inert.
-    fn param_literals(&self, store: &GaussianStore) -> Result<Vec<xla::Literal>> {
-        let g = self.manifest.g;
-        if store.len() > g {
-            return Err(anyhow!(
-                "store has {} Gaussians but the artifact is compiled for G={g}; \
-                 re-run `make artifacts` with a larger --g",
-                store.len()
-            ));
-        }
-        let mut means = Vec::with_capacity(g * 3);
-        let mut quats = Vec::with_capacity(g * 4);
-        let mut scales = Vec::with_capacity(g * 3);
-        let mut opac = Vec::with_capacity(g);
-        let mut colors = Vec::with_capacity(g * 3);
-        for i in 0..g {
-            if i < store.len() {
-                means.extend_from_slice(&store.means[i].to_array());
-                quats.extend_from_slice(&store.rots[i].to_array());
-                scales.extend_from_slice(&store.log_scales[i].to_array());
-                opac.push(store.opacity_logits[i]);
-                colors.extend_from_slice(&store.colors[i].to_array());
-            } else {
-                means.extend_from_slice(&[0.0, 0.0, -10.0]); // behind camera
-                quats.extend_from_slice(&[1.0, 0.0, 0.0, 0.0]);
-                scales.extend_from_slice(&[-3.0, -3.0, -3.0]);
-                opac.push(-30.0);
-                colors.extend_from_slice(&[0.0, 0.0, 0.0]);
-            }
-        }
-        Ok(vec![
-            xla::Literal::vec1(&means).reshape(&[g as i64, 3])?,
-            xla::Literal::vec1(&quats).reshape(&[g as i64, 4])?,
-            xla::Literal::vec1(&scales).reshape(&[g as i64, 3])?,
-            xla::Literal::vec1(&opac),
-            xla::Literal::vec1(&colors).reshape(&[g as i64, 3])?,
-        ])
-    }
-
-    /// Pose + intrinsics literals.
-    fn pose_literals(&self, cam: &Camera) -> Vec<xla::Literal> {
-        let q = cam.w2c.q;
-        let t = cam.w2c.t;
-        vec![
-            xla::Literal::vec1(&[q.w, q.x, q.y, q.z]),
-            xla::Literal::vec1(&[t.x, t.y, t.z]),
-            xla::Literal::vec1(&[cam.intr.fx, cam.intr.fy, cam.intr.cx, cam.intr.cy]),
-        ]
-    }
-
-    /// Pixel-coordinate + index-list literals, padded to (P, K).
-    ///
-    /// `lists` are the per-pixel depth-sorted hit lists from the Rust
-    /// projection stage; entries are *store* indices. Returns the scale
-    /// factor P/n_real that un-does the fixed-P loss normalization.
-    fn pixel_literals(
-        &self,
-        pixels: &SampledPixels,
-        lists: &[Vec<u32>],
-    ) -> Result<(Vec<xla::Literal>, f32)> {
-        let p = self.manifest.p;
-        let k = self.manifest.k;
-        if pixels.len() > p {
-            return Err(anyhow!(
-                "{} sampled pixels exceed artifact P={p}; rebuild artifacts",
-                pixels.len()
-            ));
-        }
-        let mut coords = vec![0.0f32; p * 2];
-        let mut idx = vec![-1i32; p * k];
-        for (i, c) in pixels.coords.iter().enumerate() {
-            coords[i * 2] = c.x;
-            coords[i * 2 + 1] = c.y;
-            for (j, &gid) in lists[i].iter().take(k).enumerate() {
-                idx[i * k + j] = gid as i32;
-            }
-        }
-        let scale = p as f32 / pixels.len().max(1) as f32;
-        Ok((
-            vec![
-                xla::Literal::vec1(&coords).reshape(&[p as i64, 2])?,
-                xla::Literal::vec1(&idx).reshape(&[p as i64, k as i64])?,
-            ],
-            scale,
-        ))
-    }
-
-    /// Reference color/depth literals for the loss steps.
-    fn ref_literals(
-        &self,
-        pixels: &SampledPixels,
-        frame: &crate::dataset::Frame,
-    ) -> Result<Vec<xla::Literal>> {
-        let p = self.manifest.p;
-        let mut ref_c = vec![0.0f32; p * 3];
-        let mut ref_d = vec![0.0f32; p];
-        for (i, &(x, y)) in pixels.pixels.iter().enumerate() {
-            let c = frame.rgb.get(x, y);
-            ref_c[i * 3] = c.x;
-            ref_c[i * 3 + 1] = c.y;
-            ref_c[i * 3 + 2] = c.z;
-            ref_d[i] = frame.depth.get(x, y);
-        }
-        Ok(vec![
-            xla::Literal::vec1(&ref_c).reshape(&[p as i64, 3])?,
-            xla::Literal::vec1(&ref_d),
-        ])
-    }
-
-    /// Forward render of the sampled pixels through the AOT executable.
-    pub fn render(
-        &self,
-        store: &GaussianStore,
-        cam: &Camera,
-        pixels: &SampledPixels,
-        lists: &[Vec<u32>],
-    ) -> Result<XlaRenderOut> {
-        let mut inputs = self.param_literals(store)?;
-        inputs.extend(self.pose_literals(cam));
-        let (px, _) = self.pixel_literals(pixels, lists)?;
-        inputs.extend(px);
-        let result = self.render.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let (c, d, t) = result.to_tuple3()?;
-        let cv = c.to_vec::<f32>()?;
-        let n = pixels.len();
-        Ok(XlaRenderOut {
-            colors: (0..n)
-                .map(|i| Vec3::new(cv[i * 3], cv[i * 3 + 1], cv[i * 3 + 2]))
-                .collect(),
-            depths: d.to_vec::<f32>()?[..n].to_vec(),
-            final_t: t.to_vec::<f32>()?[..n].to_vec(),
-        })
-    }
-
-    /// One tracking iteration on the AOT path: loss + pose gradients.
-    pub fn track_step(
-        &self,
-        store: &GaussianStore,
-        cam: &Camera,
-        pixels: &SampledPixels,
-        lists: &[Vec<u32>],
-        frame: &crate::dataset::Frame,
-    ) -> Result<XlaTrackOut> {
-        let mut inputs = self.param_literals(store)?;
-        inputs.extend(self.pose_literals(cam));
-        let (px, scale) = self.pixel_literals(pixels, lists)?;
-        inputs.extend(px);
-        inputs.extend(self.ref_literals(pixels, frame)?);
-        let result =
-            self.track_step.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let (loss, dq, dt) = result.to_tuple3()?;
-        let loss = loss.to_vec::<f32>()?[0] * scale;
-        let dqv = dq.to_vec::<f32>()?;
-        let dtv = dt.to_vec::<f32>()?;
-        Ok(XlaTrackOut {
-            loss,
-            pose_grad: PoseGrad {
-                q: Quat::new(
-                    dqv[0] * scale,
-                    dqv[1] * scale,
-                    dqv[2] * scale,
-                    dqv[3] * scale,
-                ),
-                t: Vec3::new(dtv[0] * scale, dtv[1] * scale, dtv[2] * scale),
-            },
-        })
-    }
-
-    /// One mapping iteration: loss + flat Gaussian-parameter gradients
-    /// (layout matches `backward_geom::flatten_params`, truncated to the
-    /// real store length).
-    pub fn map_step(
-        &self,
-        store: &GaussianStore,
-        cam: &Camera,
-        pixels: &SampledPixels,
-        lists: &[Vec<u32>],
-        frame: &crate::dataset::Frame,
-    ) -> Result<(f32, Vec<f32>)> {
-        let mut inputs = self.param_literals(store)?;
-        inputs.extend(self.pose_literals(cam));
-        let (px, scale) = self.pixel_literals(pixels, lists)?;
-        inputs.extend(px);
-        inputs.extend(self.ref_literals(pixels, frame)?);
-        let result = self.map_step.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let mut parts = result.to_tuple()?;
-        if parts.len() != 6 {
-            return Err(anyhow!("map_step returned {} outputs", parts.len()));
-        }
-        let d_colors = parts.pop().unwrap().to_vec::<f32>()?;
-        let d_opac = parts.pop().unwrap().to_vec::<f32>()?;
-        let d_scales = parts.pop().unwrap().to_vec::<f32>()?;
-        let d_quats = parts.pop().unwrap().to_vec::<f32>()?;
-        let d_means = parts.pop().unwrap().to_vec::<f32>()?;
-        let loss = parts.pop().unwrap().to_vec::<f32>()?[0] * scale;
-
-        let n = store.len();
-        let mut flat = Vec::with_capacity(n * 14);
-        for i in 0..n {
-            flat.extend_from_slice(&d_means[i * 3..i * 3 + 3]);
-            flat.extend_from_slice(&d_quats[i * 4..i * 4 + 4]);
-            flat.extend_from_slice(&d_scales[i * 3..i * 3 + 3]);
-            flat.push(d_opac[i]);
-            flat.extend_from_slice(&d_colors[i * 3..i * 3 + 3]);
-        }
-        for v in flat.iter_mut() {
-            *v *= scale;
-        }
-        Ok((loss, flat))
-    }
 }
 
 /// Convert the pixel pipeline's hit lists (projected-array indices) into

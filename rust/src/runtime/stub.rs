@@ -1,0 +1,80 @@
+//! Stub `XlaRuntime` compiled when the `splatonic_xla` cfg is off: the
+//! same surface as the PJRT-backed runtime, erroring at load time. Keeps
+//! `Backend::Xla` call sites compiling in environments without the
+//! `xla_extension` bindings.
+
+use super::{Manifest, XlaRenderOut, XlaTrackOut};
+use crate::camera::Camera;
+use crate::dataset::Frame;
+use crate::gaussian::GaussianStore;
+use crate::render::pixel_pipeline::SampledPixels;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Placeholder runtime handle; never constructible without the `xla`
+/// feature (`load` always errors).
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+}
+
+fn unavailable() -> anyhow::Error {
+    anyhow!(
+        "the XLA/PJRT runtime is unavailable in this build: vendor the \
+         xla_extension bindings, declare them as the `xla` dependency in \
+         rust/Cargo.toml, and rebuild with RUSTFLAGS=\"--cfg splatonic_xla\" \
+         (see the comment in rust/Cargo.toml)"
+    )
+}
+
+impl XlaRuntime {
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn render(
+        &self,
+        _store: &GaussianStore,
+        _cam: &Camera,
+        _pixels: &SampledPixels,
+        _lists: &[Vec<u32>],
+    ) -> Result<XlaRenderOut> {
+        Err(unavailable())
+    }
+
+    pub fn track_step(
+        &self,
+        _store: &GaussianStore,
+        _cam: &Camera,
+        _pixels: &SampledPixels,
+        _lists: &[Vec<u32>],
+        _frame: &Frame,
+    ) -> Result<XlaTrackOut> {
+        Err(unavailable())
+    }
+
+    pub fn map_step(
+        &self,
+        _store: &GaussianStore,
+        _cam: &Camera,
+        _pixels: &SampledPixels,
+        _lists: &[Vec<u32>],
+        _frame: &Frame,
+    ) -> Result<(f32, Vec<f32>)> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = XlaRuntime::load("/tmp/nowhere").unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
+    }
+}

@@ -100,7 +100,11 @@ pub fn sample_tracking(
                     tiles.push((tx, ty, score));
                 }
             }
-            tiles.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            // total_cmp: a NaN score must not panic the sampler; the
+            // (ty, tx) tie-break keeps the previous stable-sort order
+            tiles.sort_unstable_by(|a, b| {
+                b.2.total_cmp(&a.2).then((a.1, a.0).cmp(&(b.1, b.0)))
+            });
             let mut extra = Vec::new();
             for &(tx, ty, _) in tiles.iter().take(budget_tiles) {
                 for dy in 0..tile.min(h - ty * tile) {

@@ -149,7 +149,10 @@ fn depth_outlier_cut(cfg: &LossCfg, residuals: impl Iterator<Item = f32>) -> f32
         return f32::INFINITY;
     }
     let mid = errs.len() / 2;
-    errs.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN residual (e.g. from a NaN-depth splat) must not
+    // panic the loss; NaNs sort last and cannot become the median unless
+    // most residuals are NaN — in which case masking everything is right
+    errs.select_nth_unstable_by(mid, f32::total_cmp);
     (cfg.outlier_k * errs[mid]).max(5.0 * cfg.huber_d)
 }
 
@@ -220,7 +223,7 @@ mod tests {
             colors: vec![c; n],
             depths: vec![d; n],
             final_t: vec![0.5; n],
-            lists: vec![Vec::new(); n],
+            lists: crate::render::pixel_pipeline::HitLists::with_empty_lists(n),
             walk_len: vec![0; n],
         };
         (render, pixels)

@@ -13,7 +13,9 @@ use crate::dataset::Frame;
 use crate::gaussian::{Adam, Gaussian, GaussianStore};
 use crate::math::{Pcg32, Vec2};
 use crate::render::backward_geom::{flatten_params, unflatten_params, GaussianGrads};
-use crate::render::pixel_pipeline::{backward_sparse, render_sparse, SampledPixels};
+use crate::render::pixel_pipeline::{
+    backward_sparse_with, render_sparse_with, RenderScratch, SampledPixels, SparseRender,
+};
 use crate::render::tile_pipeline::render_dense;
 use crate::render::{RenderConfig, StageCounters};
 use crate::sampling::{sample_mapping, MappingSamplerConfig};
@@ -136,6 +138,9 @@ pub fn map_update(
     stats.added = added;
 
     // ---- sampled optimization iterations ------------------------------
+    // hot-path arena + render buffers reused across the S_m iterations
+    let mut scratch = RenderScratch::new();
+    let mut render_buf = SparseRender::default();
     for it in 0..cfg.iters {
         // Γ from the latest geometry: reuse the pre-densify dense pass
         // for iteration 0 (the paper computes Γ once per mapping) —
@@ -154,7 +159,7 @@ pub fn map_update(
                 .count();
         }
 
-        let (render, projected, bwd) = if cfg.tile_pipeline {
+        let bwd = if cfg.tile_pipeline {
             let projected =
                 crate::render::projection::project_all(store, cam, rcfg, counters);
             let render = crate::render::tile_pipeline::render_org_s(
@@ -165,25 +170,23 @@ pub fn map_update(
                 stats.first_loss = loss.value;
             }
             stats.final_loss = loss.value;
-            let bwd = crate::render::tile_pipeline::backward_org_s(
+            crate::render::tile_pipeline::backward_org_s_with(
                 store, cam, rcfg, &projected, &render, &pixels, &loss.dl_dcolor,
-                &loss.dl_ddepth, false, true, counters,
-            );
-            (render, projected, bwd)
+                &loss.dl_ddepth, false, true, counters, &mut scratch,
+            )
         } else {
-            let (render, projected) = render_sparse(store, cam, rcfg, &pixels, counters);
-            let loss = sparse_loss(&render, &pixels, frame, &cfg.loss);
+            let projected =
+                render_sparse_with(store, cam, rcfg, &pixels, counters, &mut scratch, &mut render_buf);
+            let loss = sparse_loss(&render_buf, &pixels, frame, &cfg.loss);
             if it == 0 {
                 stats.first_loss = loss.value;
             }
             stats.final_loss = loss.value;
-            let bwd = backward_sparse(
-                store, cam, rcfg, &projected, &render, &pixels, &loss.dl_dcolor,
-                &loss.dl_ddepth, true, false, true, counters,
-            );
-            (render, projected, bwd)
+            backward_sparse_with(
+                store, cam, rcfg, &projected, &render_buf, &pixels, &loss.dl_dcolor,
+                &loss.dl_ddepth, true, false, true, counters, &mut scratch,
+            )
         };
-        let _ = (&render, &projected);
         let grads = bwd.gauss.expect("gauss grads requested").flatten();
         let mut params = flatten_params(store);
         let base_lr = cfg.lr;

@@ -12,9 +12,12 @@ use crate::camera::Camera;
 use crate::dataset::Frame;
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::math::{Pcg32, Quat, Se3, Vec3};
-use crate::render::pixel_pipeline::{backward_sparse, render_sparse_projected, SampledPixels};
+use crate::render::pixel_pipeline::{
+    backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
+    SparseRender,
+};
 use crate::render::projection::project_all;
-use crate::render::tile_pipeline::{backward_org_s, render_org_s};
+use crate::render::tile_pipeline::{backward_org_s_with, render_org_s};
 use crate::render::{RenderConfig, StageCounters};
 use crate::sampling::{sample_tracking, TrackingStrategy};
 
@@ -84,6 +87,10 @@ pub fn track_frame(
     let mut final_loss = 0.0f32;
     let mut pixels_per_iter = 0usize;
     let mut prev_loss_map: Option<crate::render::image::Plane> = None;
+    // hot-path arena + render buffers, reused across all S_t iterations:
+    // steady-state iterations make zero per-pixel heap allocations
+    let mut scratch = RenderScratch::new();
+    let mut render = SparseRender::default();
 
     for it in 0..cfg.iters {
         let cam = Camera::new(intr, pose);
@@ -110,23 +117,25 @@ pub fn track_frame(
                 if cfg.strategy == TrackingStrategy::LossTile {
                     prev_loss_map = Some(loss_map(intr, &pixels, &l));
                 }
-                let b = backward_org_s(
+                let b = backward_org_s_with(
                     store, &cam, rcfg, &projected, &r, &pixels, &l.dl_dcolor, &l.dl_ddepth,
-                    true, false, counters,
+                    true, false, counters, &mut scratch,
                 );
                 (b.pose.expect("pose grad"), l.value, pixels.len())
             }
             TrackPipeline::SparsePixel => {
                 let pixels =
                     sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, prev_loss_map.as_ref(), rng);
-                let r = render_sparse_projected(&projected, rcfg, &pixels, counters);
-                let l = sparse_loss(&r, &pixels, frame, &cfg.loss);
+                render_sparse_projected_with(
+                    &projected, rcfg, &pixels, counters, &mut scratch, &mut render,
+                );
+                let l = sparse_loss(&render, &pixels, frame, &cfg.loss);
                 if cfg.strategy == TrackingStrategy::LossTile {
                     prev_loss_map = Some(loss_map(intr, &pixels, &l));
                 }
-                let b = backward_sparse(
-                    store, &cam, rcfg, &projected, &r, &pixels, &l.dl_dcolor, &l.dl_ddepth,
-                    true, true, false, counters,
+                let b = backward_sparse_with(
+                    store, &cam, rcfg, &projected, &render, &pixels, &l.dl_dcolor,
+                    &l.dl_ddepth, true, true, false, counters, &mut scratch,
                 );
                 (b.pose.expect("pose grad"), l.value, pixels.len())
             }

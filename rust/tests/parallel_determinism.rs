@@ -1,0 +1,160 @@
+//! The threaded sparse hot path must be *bit-identical* to the forced
+//! single-thread run: hit lists are ordered by the strict total order
+//! (depth, proj), so colors/depths/final_t/lists cannot depend on the
+//! thread count, and per-thread `StageCounters` merge to the exact
+//! sequential totals. The scene is sized to cross both parallel
+//! thresholds (stage-1 Gaussian fan-out and stage-2/backward hit
+//! fan-out), so the threaded code paths really execute.
+
+use splatonic::camera::{Camera, Intrinsics};
+use splatonic::gaussian::{Gaussian, GaussianStore};
+use splatonic::math::{Pcg32, Quat, Se3, Vec3};
+use splatonic::render::pixel_pipeline::{
+    backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
+    SparseRender, PARALLEL_GAUSSIANS, PARALLEL_HITS,
+};
+use splatonic::render::projection::project_all;
+use splatonic::render::{RenderConfig, StageCounters};
+
+fn big_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
+    let mut store = GaussianStore::new();
+    for _ in 0..n {
+        let mut g = Gaussian::isotropic(
+            Vec3::new(
+                rng.uniform(-1.2, 1.2),
+                rng.uniform(-0.9, 0.9),
+                rng.uniform(0.8, 6.0),
+            ),
+            rng.uniform(0.02, 0.18),
+            Vec3::new(rng.next_f32(), rng.next_f32(), rng.next_f32()),
+            // moderate opacities keep per-pixel lists long before
+            // saturation, so live hits comfortably amortize the parallel
+            // backward's per-thread gradient buffers
+            rng.uniform(0.15, 0.8),
+        );
+        g.log_scale += Vec3::new(
+            rng.uniform(-0.4, 0.4),
+            rng.uniform(-0.4, 0.4),
+            rng.uniform(-0.4, 0.4),
+        );
+        store.push(g);
+    }
+    store
+}
+
+struct Setup {
+    store: GaussianStore,
+    cam: Camera,
+    projected: Vec<splatonic::render::projection::Projected>,
+    px: SampledPixels,
+    cfg: RenderConfig,
+}
+
+fn setup() -> Setup {
+    let mut rng = Pcg32::new(0x5eed);
+    let store = big_store(10_000, &mut rng);
+    let cam = Camera::new(
+        Intrinsics::replica_like(160, 120),
+        Se3::new(Quat::from_axis_angle(Vec3::Y, 0.04), Vec3::new(0.02, -0.01, 0.05)),
+    );
+    let cfg = RenderConfig::default();
+    let mut c = StageCounters::new();
+    let projected = project_all(&store, &cam, &cfg, &mut c);
+    assert!(
+        projected.len() >= PARALLEL_GAUSSIANS,
+        "scene must cross the stage-1 parallel threshold: {} < {PARALLEL_GAUSSIANS}",
+        projected.len()
+    );
+    Setup { store, cam, projected, px: SampledPixels::full_grid(160, 120, 4), cfg }
+}
+
+fn render_with_threads(s: &Setup, threads: usize) -> (SparseRender, StageCounters) {
+    let mut scratch = RenderScratch::with_threads(threads);
+    let mut out = SparseRender::default();
+    let mut c = StageCounters::new();
+    render_sparse_projected_with(&s.projected, &s.cfg, &s.px, &mut c, &mut scratch, &mut out);
+    (out, c)
+}
+
+#[test]
+fn threaded_forward_is_bit_identical_to_sequential() {
+    let s = setup();
+    let (seq, c_seq) = render_with_threads(&s, 1);
+    assert!(
+        seq.lists.total_hits() >= PARALLEL_HITS,
+        "scene must cross the stage-2 parallel threshold: {} < {PARALLEL_HITS}",
+        seq.lists.total_hits()
+    );
+    for threads in [2usize, 4, 7] {
+        let (par, c_par) = render_with_threads(&s, threads);
+        // merged per-thread counters equal the sequential totals exactly
+        assert_eq!(c_seq, c_par, "counters diverge at {threads} threads");
+        assert_eq!(seq.colors.len(), par.colors.len());
+        for i in 0..seq.colors.len() {
+            assert_eq!(
+                seq.colors[i].x.to_bits(),
+                par.colors[i].x.to_bits(),
+                "color.x bits differ at pixel {i} with {threads} threads"
+            );
+            assert_eq!(seq.colors[i].y.to_bits(), par.colors[i].y.to_bits());
+            assert_eq!(seq.colors[i].z.to_bits(), par.colors[i].z.to_bits());
+            assert_eq!(seq.depths[i].to_bits(), par.depths[i].to_bits());
+            assert_eq!(seq.final_t[i].to_bits(), par.final_t[i].to_bits());
+            assert_eq!(seq.walk_len[i], par.walk_len[i]);
+            let (a, b) = (&seq.lists[i], &par.lists[i]);
+            assert_eq!(a.len(), b.len(), "list length differs at pixel {i}");
+            for (ha, hb) in a.iter().zip(b.iter()) {
+                assert_eq!(ha.proj, hb.proj);
+                assert_eq!(ha.alpha.to_bits(), hb.alpha.to_bits());
+                assert_eq!(ha.depth.to_bits(), hb.depth.to_bits());
+                assert_eq!(ha.t_before.to_bits(), hb.t_before.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_backward_matches_sequential_counters_and_grads() {
+    let s = setup();
+    let (render, _) = render_with_threads(&s, 1);
+    // the parallel backward only engages when the hit walk amortizes the
+    // per-thread gradient buffers — make sure this scene exercises it
+    assert!(
+        render.lists.total_hits() >= s.projected.len(),
+        "scene must amortize the parallel backward: {} live hits < {} projected",
+        render.lists.total_hits(),
+        s.projected.len()
+    );
+    let dldc: Vec<Vec3> = (0..render.colors.len())
+        .map(|i| Vec3::new(0.1 + (i % 3) as f32 * 0.05, 0.2, 0.15))
+        .collect();
+    let dldd: Vec<f32> = (0..render.colors.len()).map(|i| 0.02 * ((i % 5) as f32)).collect();
+
+    let run = |threads: usize| {
+        let mut scratch = RenderScratch::with_threads(threads);
+        let mut c = StageCounters::new();
+        let bwd = backward_sparse_with(
+            &s.store, &s.cam, &s.cfg, &s.projected, &render, &s.px, &dldc, &dldd, true,
+            true, true, &mut c, &mut scratch,
+        );
+        (bwd, c)
+    };
+    let (b1, c1) = run(1);
+    let (b4, c4) = run(4);
+    // work counters are additive across threads: exact equality
+    assert_eq!(c1, c4);
+    // float accumulation order differs across partitions; gradients must
+    // agree to accumulation tolerance
+    for (g1, g4) in b1.grad2d.iter().zip(b4.grad2d.iter()) {
+        let scale = 1.0 + g1.mean2d.norm() + g1.color.norm() + g1.opacity.abs();
+        assert!((g1.mean2d - g4.mean2d).norm() <= 1e-3 * scale);
+        assert!((g1.color - g4.color).norm() <= 1e-3 * scale);
+        assert!((g1.opacity - g4.opacity).abs() <= 1e-3 * scale);
+    }
+    let p1 = b1.pose.unwrap().flatten();
+    let p4 = b4.pose.unwrap().flatten();
+    for k in 0..7 {
+        let tol = 1e-3 * (1.0 + p1[k].abs());
+        assert!((p1[k] - p4[k]).abs() <= tol, "pose grad {k}: {} vs {}", p1[k], p4[k]);
+    }
+}
