@@ -13,7 +13,7 @@
 //! cargo run --release --example e2e_slam -- [--frames=24] [--backend=cpu|xla] ...
 //! ```
 
-use splatonic::config::{Backend, RunConfig};
+use splatonic::config::{BackendKind, RunConfig};
 use splatonic::coordinator;
 
 fn main() -> anyhow::Result<()> {
@@ -25,18 +25,19 @@ fn main() -> anyhow::Result<()> {
         budget: 1.0,
         ..Default::default()
     };
-    // default to the XLA path when artifacts are present (the headline
+    // default to the XLA engine when artifacts are present (the headline
     // three-layer configuration)
     if splatonic::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        cfg.backend = Backend::Xla;
+        cfg.backend = Some(BackendKind::Xla);
     }
     cfg.apply_args(&args)?;
 
     println!("=== Splatonic end-to-end SLAM ===");
     println!(
-        "dataset {:?} seq {} | {}x{} x {} frames | algo {:?} | variant {:?} | backend {:?}",
+        "dataset {:?} seq {} | {}x{} x {} frames | algo {:?} | variant {:?} | backend {}",
         cfg.flavor, cfg.sequence, cfg.width, cfg.height, cfg.frames, cfg.algorithm,
-        cfg.variant, cfg.backend
+        cfg.variant,
+        cfg.backend.map_or("auto", |k| k.name()),
     );
 
     let report = coordinator::run(&cfg)?;

@@ -1,7 +1,8 @@
-//! Quickstart: the public API in ~60 lines.
+//! Quickstart: the public API in ~70 lines.
 //!
-//! Builds a synthetic room, renders it through both pipelines, runs one
-//! tracked frame, and prints what happened.
+//! Builds a synthetic room, renders it through both [`RenderBackend`]
+//! sessions (dense tile-based and Splatonic's sparse pixel-based), runs
+//! one tracked frame, and prints what happened.
 //!
 //! ```text
 //! cargo run --release --example quickstart
@@ -10,13 +11,14 @@
 use splatonic::camera::Camera;
 use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::math::{Pcg32, Se3, Vec3};
-use splatonic::render::pixel_pipeline::render_sparse;
-use splatonic::render::tile_pipeline::render_dense;
-use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::render::{
+    create_backend, BackendKind, Image, PixelSet, RenderBackend, RenderConfig, RenderJob,
+    StageCounters,
+};
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::slam::tracking::{track_frame, TrackingConfig};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // 1. a synthetic Replica-like sequence (scene + trajectory + RGB-D)
     let data = SyntheticDataset::generate(Flavor::Replica, 0, 160, 120, 2);
     println!("scene `{}`: {} Gaussians, {} frames of {}x{}",
@@ -27,21 +29,34 @@ fn main() {
     let rcfg = RenderConfig::default();
 
     // 2. dense tile-based rendering (the conventional 3DGS pipeline)
-    let mut dense_counters = StageCounters::new();
-    let (dense, _) = render_dense(&data.gt_store, &cam, &rcfg, &mut dense_counters);
+    //    through a DenseCpu backend session
+    let mut dense = create_backend(BackendKind::DenseCpu)?;
+    let full_job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: Some(frame) };
+    let (dense_counters, dense_psnr) = {
+        let out = dense.render(&data.gt_store, &full_job)?;
+        let rendered = Image {
+            width: data.intr.width,
+            height: data.intr.height,
+            data: out.colors.to_vec(),
+        };
+        (out.counters, rendered.psnr(&frame.rgb))
+    };
     println!(
         "dense render: {} pixel-Gaussian pairs, thread utilization {:.1}% (paper Fig. 7: ~28%)",
         dense_counters.raster_pairs_iterated,
         100.0 * dense_counters.thread_utilization()
     );
-    println!("  PSNR vs reference: {:.1} dB", dense.image.psnr(&frame.rgb));
+    println!("  PSNR vs reference: {dense_psnr:.1} dB");
 
     // 3. Splatonic: sparse sampling (1 px per 16x16 tile) + pixel-based
-    //    rendering with preemptive alpha-checking
+    //    rendering with preemptive alpha-checking, through a SparseCpu
+    //    backend session
     let mut rng = Pcg32::new(1);
     let pixels = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
-    let mut sparse_counters = StageCounters::new();
-    let (_sparse, _) = render_sparse(&data.gt_store, &cam, &rcfg, &pixels, &mut sparse_counters);
+    let mut sparse = create_backend(BackendKind::SparseCpu)?;
+    let sparse_job =
+        RenderJob { cam: &cam, pixels: PixelSet::Sparse(&pixels), rcfg: &rcfg, frame: Some(frame) };
+    let sparse_counters = sparse.render(&data.gt_store, &sparse_job)?.counters;
     println!(
         "sparse render: {} pixels ({}x fewer), {} pairs ({}x fewer), utilization {:.1}%",
         pixels.len(),
@@ -51,14 +66,15 @@ fn main() {
         100.0 * sparse_counters.thread_utilization()
     );
 
-    // 4. track one frame from a perturbed pose
+    // 4. track one frame from a perturbed pose — the SLAM loop drives the
+    //    same session through the RenderBackend trait
     let gt = frame.gt_w2c;
     let init = Se3::new(gt.q, gt.t + Vec3::new(0.02, -0.01, 0.015));
     let cfg = TrackingConfig { iters: 30, ..Default::default() };
     let mut c = StageCounters::new();
     let (refined, stats) = track_frame(
-        &data.gt_store, data.intr, init, frame, &cfg, &rcfg, &mut rng, &mut c,
-    );
+        sparse.as_mut(), &data.gt_store, data.intr, init, frame, &cfg, &rcfg, &mut rng, &mut c,
+    )?;
     println!(
         "tracking: pose error {:.1} mm -> {:.2} mm in {} iterations (loss {:.4} -> {:.6})",
         (init.t - gt.t).norm() * 1000.0,
@@ -67,4 +83,5 @@ fn main() {
         stats.first_loss,
         stats.final_loss
     );
+    Ok(())
 }

@@ -21,7 +21,7 @@ fn main() {
         budget: 0.6,
         ..Default::default()
     };
-    let base = SlamSystem::run(base_cfg.slam_config(), &data);
+    let base = SlamSystem::run(base_cfg.slam_config(), &data).unwrap();
     println!("baseline (dense) ATE: {:.2} cm", base.ate_rmse_m * 100.0);
 
     let strategies = [
@@ -45,7 +45,7 @@ fn main() {
             };
             let mut slam = cfg.slam_config();
             slam.tracking.strategy = strat;
-            let stats = SlamSystem::run(slam, &data);
+            let stats = SlamSystem::run(slam, &data).unwrap();
             vals.push(stats.ate_rmse_m as f64 * 100.0);
         }
         rows.push((name.to_string(), vals));

@@ -30,7 +30,7 @@ fn main() {
         };
         let mut slam = cfg.slam_config();
         slam.mapping.sampler = sampler;
-        let stats = SlamSystem::run(slam, &data);
+        let stats = SlamSystem::run(slam, &data).unwrap();
         rows.push((
             name.to_string(),
             vec![stats.ate_rmse_m as f64 * 100.0, stats.psnr_db, stats.n_gaussians as f64],

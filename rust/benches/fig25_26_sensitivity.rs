@@ -35,7 +35,7 @@ fn main() {
             let slam = cfg.slam_config();
             let mut sys = SlamSystem::new(slam, data.intr);
             for f in &data.frames {
-                sys.process_frame(f);
+                sys.process_frame(f).unwrap();
             }
             let iters: u64 = sys.track_stats.iter().map(|s| s.iterations as u64).sum();
             (sys.track_counters, iters)
@@ -68,7 +68,7 @@ fn main() {
             budget: 0.6,
             ..Default::default()
         };
-        let stats = SlamSystem::run(cfg.slam_config(), &data);
+        let stats = SlamSystem::run(cfg.slam_config(), &data).unwrap();
         rows.push((
             format!("{wm}x{wm}"),
             vec![stats.ate_rmse_m as f64 * 100.0, stats.psnr_db],

@@ -26,7 +26,7 @@ fn main() {
         let data = splatonic::dataset::SyntheticDataset::generate(Flavor::Replica, 0, 96, 72, 9);
         let slam = cfg.slam_config();
         let mut sys = splatonic::slam::system::SlamSystem::new(slam, data.intr);
-        for f in &data.frames { sys.process_frame(f); }
+        for f in &data.frames { sys.process_frame(f).unwrap(); }
         run.track = sys.track_counters;
         run.track_iters = sys.track_stats.iter().map(|s| s.iterations as u64).sum();
     }

@@ -4,25 +4,33 @@
 //!
 //! The main section sweeps Gaussian count (10k / 50k / 200k) × thread
 //! count (1 / 2 / all) over the sparse forward and backward passes,
-//! reporting α-checked pairs/sec. The *forward* output is bit-identical
+//! reporting α-checked pairs/sec. Rendering goes through a
+//! [`SparseCpuBackend`] session per thread count — the `forward_projected`
+//! / `backward_projected` entries time the render stages in isolation
+//! (projection excluded, as in PR 2), and the end-to-end section drives
+//! the full `RenderBackend` trait. The *forward* output is bit-identical
 //! across thread counts (see tests/parallel_determinism.rs), so its
 //! column measures pure scheduling/layout speedup; backward gradients are
 //! deterministic per thread count but only tolerance-equal across counts
 //! (partition-dependent float accumulation order).
+//!
+//! Besides the table, the sweep is written to `BENCH_hotpath.json`
+//! (pairs/sec per Gaussian-count × thread-count cell) so the perf
+//! trajectory is tracked across PRs.
 
 use splatonic::bench::time_it;
 use splatonic::camera::{Camera, Intrinsics};
 use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::gaussian::{Gaussian, GaussianStore};
 use splatonic::math::{Pcg32, Se3, Vec3};
-use splatonic::render::pixel_pipeline::{
-    backward_sparse_with, render_sparse_projected_with, render_sparse_with, RenderScratch,
-    SampledPixels, SparseRender,
-};
+use splatonic::render::pixel_pipeline::SampledPixels;
 use splatonic::render::projection::project_all;
-use splatonic::render::{auto_threads, RenderConfig, StageCounters};
+use splatonic::render::{
+    auto_threads, GradRequest, PixelSet, RenderBackend, RenderConfig, RenderJob,
+    SparseCpuBackend, StageCounters,
+};
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
-use splatonic::slam::loss::{sparse_loss, LossCfg};
+use splatonic::slam::loss::{sample_loss, LossCfg};
 
 fn synth_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
     let mut store = GaussianStore::with_capacity(n);
@@ -39,6 +47,16 @@ fn synth_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
         ));
     }
     store
+}
+
+struct Cell {
+    gaussians: usize,
+    threads: usize,
+    fwd_ms: f64,
+    fwd_pairs_per_s: f64,
+    fwd_speedup: f64,
+    bwd_ms: f64,
+    bwd_pairs_per_s: f64,
 }
 
 fn main() {
@@ -61,6 +79,7 @@ fn main() {
         thread_counts.push(hw);
     }
 
+    let mut cells: Vec<Cell> = Vec::new();
     for &n in &[10_000usize, 50_000, 200_000] {
         let mut rng = Pcg32::new(42);
         let store = synth_store(n, &mut rng);
@@ -69,43 +88,44 @@ fn main() {
 
         // per-call work for pairs/sec: α-checked pairs (stage 1) forward,
         // integrated pairs backward
-        let mut c_probe = StageCounters::new();
-        let mut scratch = RenderScratch::with_threads(1);
-        let mut render = SparseRender::default();
-        render_sparse_projected_with(&projected, &rcfg, &px, &mut c_probe, &mut scratch, &mut render);
-        let fwd_pairs = c_probe.proj_alpha_checks.max(1);
-        let loss = {
+        let (fwd_pairs, bwd_pairs, loss) = {
+            let mut probe = SparseCpuBackend::with_threads(1);
+            let mut c_probe = StageCounters::new();
+            probe.forward_projected(&projected, &rcfg, &px, &mut c_probe);
             // synthetic loss gradients so backward has realistic inputs
-            let dldc: Vec<Vec3> = (0..px.len()).map(|i| Vec3::splat(0.1 + (i % 7) as f32 * 0.01)).collect();
+            let dldc: Vec<Vec3> =
+                (0..px.len()).map(|i| Vec3::splat(0.1 + (i % 7) as f32 * 0.01)).collect();
             let dldd: Vec<f32> = (0..px.len()).map(|i| 0.02 * ((i % 3) as f32)).collect();
-            (dldc, dldd)
+            let mut c_bwd = StageCounters::new();
+            let _ = probe.backward_projected(
+                &store, &cam, &rcfg, &projected, &px, &dldc, &dldd, GradRequest::pose(),
+                &mut c_bwd,
+            );
+            (
+                c_probe.proj_alpha_checks.max(1),
+                c_bwd.bwd_pairs_integrated.max(1),
+                (dldc, dldd),
+            )
         };
-        let mut c_bwd = StageCounters::new();
-        let _ = backward_sparse_with(
-            &store, &cam, &rcfg, &projected, &render, &px, &loss.0, &loss.1, true, true,
-            false, &mut c_bwd, &mut scratch,
-        );
-        let bwd_pairs = c_bwd.bwd_pairs_integrated.max(1);
 
         let reps = if n >= 200_000 { 5 } else { 9 };
         let mut fwd_t1 = 0.0f64;
         for &threads in &thread_counts {
-            let mut scratch = RenderScratch::with_threads(threads);
-            let mut out = SparseRender::default();
-            // warm the arena so the timed runs are steady-state
+            let mut backend = SparseCpuBackend::with_threads(threads);
+            // warm the session arena so the timed runs are steady-state
             let mut cw = StageCounters::new();
-            render_sparse_projected_with(&projected, &rcfg, &px, &mut cw, &mut scratch, &mut out);
+            backend.forward_projected(&projected, &rcfg, &px, &mut cw);
 
             let d_fwd = time_it(reps, || {
                 let mut c = StageCounters::new();
-                render_sparse_projected_with(&projected, &rcfg, &px, &mut c, &mut scratch, &mut out);
-                std::hint::black_box(&out);
+                let out = backend.forward_projected(&projected, &rcfg, &px, &mut c);
+                std::hint::black_box(out);
             });
             let d_bwd = time_it(reps, || {
                 let mut c = StageCounters::new();
-                let b = backward_sparse_with(
-                    &store, &cam, &rcfg, &projected, &out, &px, &loss.0, &loss.1, true,
-                    true, false, &mut c, &mut scratch,
+                let b = backend.backward_projected(
+                    &store, &cam, &rcfg, &projected, &px, &loss.0, &loss.1,
+                    GradRequest::pose(), &mut c,
                 );
                 std::hint::black_box(&b);
             });
@@ -124,35 +144,79 @@ fn main() {
                 bwd_s * 1e3,
                 bwd_pairs as f64 / bwd_s,
             );
+            cells.push(Cell {
+                gaussians: n,
+                threads,
+                fwd_ms: fwd_s * 1e3,
+                fwd_pairs_per_s: fwd_pairs as f64 / fwd_s,
+                fwd_speedup: fwd_t1 / fwd_s,
+                bwd_ms: bwd_s * 1e3,
+                bwd_pairs_per_s: bwd_pairs as f64 / bwd_s,
+            });
         }
     }
 
     // -- end-to-end tracking iteration on the dataset workload ----------
-    // (the latency that bounds tracking Hz; scratch reused as tracking
-    // does across its optimization iterations)
+    // (the latency that bounds tracking Hz; the RenderBackend session is
+    // reused as tracking does across its optimization iterations)
     let data = SyntheticDataset::generate(Flavor::Replica, 0, 320, 240, 2);
     let frame = &data.frames[1];
     let cam = Camera::new(data.intr, frame.gt_w2c);
-    let mut scratch = RenderScratch::new();
-    let mut render = SparseRender::default();
+    let mut backend = SparseCpuBackend::new();
     let d = time_it(15, || {
         let mut rng = Pcg32::new(2);
         let px = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
-        let mut c = StageCounters::new();
-        let proj = render_sparse_with(
-            &data.gt_store, &cam, &rcfg, &px, &mut c, &mut scratch, &mut render,
-        );
-        let l = sparse_loss(&render, &px, frame, &LossCfg::tracking());
-        let b = backward_sparse_with(
-            &data.gt_store, &cam, &rcfg, &proj, &render, &px, &l.dl_dcolor, &l.dl_ddepth,
-            true, true, false, &mut c, &mut scratch,
-        );
+        let job =
+            RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: Some(frame) };
+        let l = {
+            let out = backend.render(&data.gt_store, &job).unwrap();
+            sample_loss(out.colors, out.depths, out.final_t, &px, frame, &LossCfg::tracking())
+        };
+        let b = backend
+            .backward(
+                &data.gt_store,
+                &job,
+                splatonic::render::LossGrads { dl_dcolor: &l.dl_dcolor, dl_ddepth: &l.dl_ddepth },
+                GradRequest::pose(),
+            )
+            .unwrap();
         std::hint::black_box(&b);
     });
+    let iter_ms = d.as_secs_f64() * 1e3;
     println!(
         "\nfull tracking iteration ({} Gaussians, sample+proj+fwd+bwd): {:.3} ms  ({:.0} iter/s)",
         data.gt_store.len(),
-        d.as_secs_f64() * 1e3,
+        iter_ms,
         1.0 / d.as_secs_f64()
     );
+
+    // -- machine-readable record for cross-PR perf tracking -------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"hotpath\",\n");
+    json.push_str(&format!("  \"sampled_pixels\": {},\n", px.len()));
+    json.push_str(&format!("  \"hw_threads\": {hw},\n"));
+    json.push_str("  \"cells\": [\n");
+    for (i, cell) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"gaussians\": {}, \"threads\": {}, \"fwd_ms\": {:.4}, \
+             \"fwd_pairs_per_s\": {:.1}, \"fwd_speedup\": {:.3}, \"bwd_ms\": {:.4}, \
+             \"bwd_pairs_per_s\": {:.1}}}{}\n",
+            cell.gaussians,
+            cell.threads,
+            cell.fwd_ms,
+            cell.fwd_pairs_per_s,
+            cell.fwd_speedup,
+            cell.bwd_ms,
+            cell.bwd_pairs_per_s,
+            if i + 1 < cells.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"tracking_iteration_ms\": {iter_ms:.4}\n"));
+    json.push_str("}\n");
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("wrote BENCH_hotpath.json ({} cells)", cells.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

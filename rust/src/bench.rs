@@ -61,7 +61,8 @@ pub fn run_variant_sized(
     let slam_cfg = cfg.slam_config();
     let mut sys = SlamSystem::new(slam_cfg, data.intr);
     for f in &data.frames {
-        sys.process_frame(f);
+        // CPU backends are infallible; benches never select XLA
+        sys.process_frame(f).expect("bench SLAM run failed");
     }
     let stats = sys.evaluate(&data);
     CounterRun {

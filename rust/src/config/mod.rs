@@ -11,18 +11,10 @@ pub mod toml;
 pub use toml::{TomlDoc, TomlValue};
 
 use crate::dataset::Flavor;
+pub use crate::render::backend::BackendKind;
 use crate::slam::algorithms::{Algorithm, SlamConfig};
 
 use anyhow::{anyhow, Result};
-
-/// Which compute backend executes the tracking math.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Pure-Rust renderer (always available).
-    Cpu,
-    /// AOT artifacts via PJRT (requires `make artifacts`).
-    Xla,
-}
 
 /// Which pipeline variant to run (paper's comparison set).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,7 +37,13 @@ pub struct RunConfig {
     pub frames: usize,
     pub algorithm: Algorithm,
     pub variant: Variant,
-    pub backend: Backend,
+    /// Tracking [`BackendKind`] override (`backend = "sparse-cpu" |
+    /// "dense-cpu" | "xla"`); `None` (TOML `"cpu"` / `"auto"`) derives
+    /// the engine from `variant`.
+    pub backend: Option<BackendKind>,
+    /// Mapping [`BackendKind`] override (`map_backend = ...`); `None`
+    /// derives from `variant`.
+    pub map_backend: Option<BackendKind>,
     /// Tracking sample tile w_t.
     pub track_tile: u32,
     /// Mapping sample tile w_m.
@@ -67,7 +65,8 @@ impl Default for RunConfig {
             frames: 24,
             algorithm: Algorithm::SplaTam,
             variant: Variant::Splatonic,
-            backend: Backend::Cpu,
+            backend: None,
+            map_backend: None,
             track_tile: 16,
             map_tile: 4,
             budget: 1.0,
@@ -89,6 +88,13 @@ impl RunConfig {
             cfg.tracking.tile = self.track_tile;
         }
         cfg.mapping.sampler.tile = self.map_tile;
+        // explicit engine overrides on top of the variant's defaults
+        if let Some(kind) = self.backend {
+            cfg.tracking.backend = kind;
+        }
+        if let Some(kind) = self.map_backend {
+            cfg.mapping.backend = kind;
+        }
         cfg.seed = self.seed;
         cfg.scaled(self.budget)
     }
@@ -157,13 +163,8 @@ impl RunConfig {
                     _ => return Err(anyhow!("unknown variant {v}")),
                 }
             }
-            "backend" => {
-                self.backend = match v.to_ascii_lowercase().as_str() {
-                    "cpu" => Backend::Cpu,
-                    "xla" => Backend::Xla,
-                    _ => return Err(anyhow!("unknown backend {v}")),
-                }
-            }
+            "backend" => self.backend = parse_backend_override(v)?,
+            "map_backend" => self.map_backend = parse_backend_override(v)?,
             "track_tile" => self.track_tile = v.parse()?,
             "map_tile" => self.map_tile = v.parse()?,
             "budget" => self.budget = v.parse()?,
@@ -175,10 +176,18 @@ impl RunConfig {
     }
 }
 
+/// `"cpu"` / `"auto"` → no override (the variant picks the engine);
+/// otherwise a concrete [`BackendKind`].
+fn parse_backend_override(v: &str) -> Result<Option<BackendKind>> {
+    match v.to_ascii_lowercase().as_str() {
+        "cpu" | "auto" => Ok(None),
+        other => Ok(Some(BackendKind::parse(other)?)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::slam::tracking::TrackPipeline;
 
     #[test]
     fn toml_round_trip() {
@@ -219,7 +228,10 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.algorithm, Algorithm::FlashSlam);
         assert_eq!(cfg.frames, 10);
-        assert_eq!(cfg.backend, Backend::Xla);
+        assert_eq!(cfg.backend, Some(BackendKind::Xla));
+        // "cpu" keeps the variant-derived engine
+        cfg.apply_args(&["--backend=cpu".into()]).unwrap();
+        assert_eq!(cfg.backend, None);
     }
 
     #[test]
@@ -229,13 +241,32 @@ mod tests {
     }
 
     #[test]
-    fn slam_config_respects_variant() {
+    fn slam_config_respects_variant_and_backend_override() {
         let mut cfg = RunConfig { variant: Variant::Baseline, ..Default::default() };
-        assert_eq!(cfg.slam_config().tracking.pipeline, TrackPipeline::DenseTile);
+        let sc = cfg.slam_config();
+        assert_eq!(sc.tracking.backend, BackendKind::DenseCpu);
+        assert!(sc.tracking.full_frame);
         cfg.variant = Variant::Splatonic;
         cfg.track_tile = 8;
         let sc = cfg.slam_config();
-        assert_eq!(sc.tracking.pipeline, TrackPipeline::SparsePixel);
+        assert_eq!(sc.tracking.backend, BackendKind::SparseCpu);
         assert_eq!(sc.tracking.tile, 8);
+        // explicit override beats the variant default
+        cfg.backend = Some(BackendKind::Xla);
+        cfg.map_backend = Some(BackendKind::DenseCpu);
+        let sc = cfg.slam_config();
+        assert_eq!(sc.tracking.backend, BackendKind::Xla);
+        assert_eq!(sc.mapping.backend, BackendKind::DenseCpu);
+    }
+
+    #[test]
+    fn backend_selectable_from_toml() {
+        let cfg = RunConfig::from_toml(
+            "[run]\nbackend = \"dense-cpu\"\nmap_backend = \"sparse-cpu\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, Some(BackendKind::DenseCpu));
+        assert_eq!(cfg.map_backend, Some(BackendKind::SparseCpu));
+        assert!(RunConfig::from_toml("[run]\nbackend = \"warp9\"\n").is_err());
     }
 }

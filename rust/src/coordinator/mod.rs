@@ -1,25 +1,28 @@
 //! The L3 coordinator: launches a SLAM run from a [`RunConfig`] —
 //! dataset generation, the per-frame tracking loop, the concurrent
 //! mapping process (Fig. 2's schedule, tracking per frame / mapping every
-//! N frames with the T_t → M_t dependency), backend selection (pure-Rust
-//! or PJRT-executed AOT artifacts), and end-of-run reporting including
-//! the simulated hardware costs.
+//! N frames with the T_t → M_t dependency), and end-of-run reporting
+//! including the simulated hardware costs.
+//!
+//! Rendering-engine selection is uniform: the [`SlamConfig`] carries a
+//! [`crate::render::BackendKind`] per process (tracking / mapping), the
+//! registry constructs the sessions, and the loop below never names a
+//! concrete pipeline — pure-Rust sparse/dense and the PJRT-executed AOT
+//! artifacts all run through [`crate::render::RenderBackend`].
 
 use crate::camera::Camera;
-use crate::config::{Backend, RunConfig};
+use crate::config::RunConfig;
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
-use crate::math::{Pcg32, Quat, Se3, Vec3};
-use crate::render::pixel_pipeline::{render_sparse_projected_with, RenderScratch, SparseRender};
-use crate::render::projection::project_all;
+use crate::math::{Pcg32, Se3};
+use crate::render::backend::{create_backend, RenderBackend};
 use crate::render::{RenderConfig, StageCounters};
-use crate::runtime::{store_index_lists, XlaRuntime};
-use crate::sampling::sample_tracking;
 use crate::sim::{AccelModel, Cost, GpuModel};
+use crate::slam::algorithms::SlamConfig;
 use crate::slam::mapping::map_update;
 use crate::slam::metrics::{ate_rmse, psnr_over_sequence};
 use crate::slam::system::SlamSystem;
-use crate::slam::tracking::{track_frame, TrackingConfig, TrackingStats};
+use crate::slam::tracking::track_frame;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -75,17 +78,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let slam_cfg = cfg.slam_config();
     let start = std::time::Instant::now();
 
-    let (est_poses, store, track_counters, map_counters, track_iters) = match (cfg.backend, cfg.threaded_mapping)
-    {
-        (Backend::Xla, _) => {
-            let rt = XlaRuntime::load(crate::runtime::default_artifacts_dir())?;
-            run_xla(&rt, cfg, &data, &slam_cfg)?
-        }
-        (Backend::Cpu, true) => run_threaded(cfg, &data, &slam_cfg)?,
-        (Backend::Cpu, false) => {
-            let mut sys = SlamSystem::new(slam_cfg, data.intr);
+    let (est_poses, store, track_counters, map_counters, track_iters) =
+        if cfg.threaded_mapping {
+            run_threaded(&data, &slam_cfg)?
+        } else {
+            let mut sys = SlamSystem::try_new(slam_cfg, data.intr)?;
             for frame in &data.frames {
-                sys.process_frame(frame);
+                sys.process_frame(frame)?;
             }
             let iters = sys.track_stats.iter().map(|s| s.iterations as u64).sum();
             (
@@ -95,8 +94,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                 sys.map_counters,
                 iters,
             )
-        }
-    };
+        };
     let wall_seconds = start.elapsed().as_secs_f64();
 
     let gt: Vec<Se3> = data.frames.iter().map(|f| f.gt_w2c).collect();
@@ -119,7 +117,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 
     Ok(RunReport {
         name: format!(
-            "{}/{} {:?} {:?} {:?}",
+            "{}/{} {:?} {:?} track:{} map:{}",
             match cfg.flavor {
                 crate::dataset::Flavor::Replica => "replica",
                 crate::dataset::Flavor::Tum => "tum",
@@ -127,7 +125,8 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
             data.name,
             cfg.algorithm,
             cfg.variant,
-            cfg.backend
+            slam_cfg.tracking.backend.name(),
+            slam_cfg.mapping.backend.name(),
         ),
         ate_rmse_m: ate,
         psnr_db: psnr,
@@ -143,140 +142,26 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
 
 type RunState = (Vec<Se3>, GaussianStore, StageCounters, StageCounters, u64);
 
-/// SLAM with the tracking loop executing its forward/backward through the
-/// PJRT-compiled AOT artifacts; mapping and densification remain in Rust
-/// (map_step XLA execution is exercised by the runtime tests).
-fn run_xla(
-    rt: &XlaRuntime,
-    _cfg: &RunConfig,
-    data: &SyntheticDataset,
-    slam_cfg: &crate::slam::algorithms::SlamConfig,
-) -> Result<RunState> {
+/// Concurrent tracking/mapping (Fig. 2): mapping runs on a worker thread
+/// with its own backend session; tracking reads the most recent published
+/// map. M_t is enqueued strictly after T_t completes (the dependency the
+/// paper's timing diagram shows).
+fn run_threaded(data: &SyntheticDataset, slam_cfg: &SlamConfig) -> Result<RunState> {
+    slam_cfg.validate()?;
     let rcfg = RenderConfig::default();
-    let mut store = GaussianStore::new();
-    let mut adam_map = Adam::new(0, AdamConfig::default());
-    let mut rng = Pcg32::new(slam_cfg.seed);
-    let mut est_poses: Vec<Se3> = Vec::new();
-    let mut prev_rel = Se3::IDENTITY;
-    let mut track_counters = StageCounters::new();
-    let mut map_counters = StageCounters::new();
-    let mut track_iters = 0u64;
-
-    for (idx, frame) in data.frames.iter().enumerate() {
-        if idx == 0 {
-            est_poses.push(frame.gt_w2c);
-            let cam = Camera::new(data.intr, frame.gt_w2c);
-            let mut c = StageCounters::new();
-            let _ = map_update(
-                &mut store, &mut adam_map, &cam, frame, &slam_cfg.mapping, &rcfg, &mut rng,
-                &mut c,
-            );
-            map_counters.merge(&c);
-            continue;
-        }
-
-        let init = prev_rel.compose(*est_poses.last().unwrap());
-        let mut c = StageCounters::new();
-        let (pose, stats) = track_frame_xla(
-            rt, &store, data.intr, init, frame, &slam_cfg.tracking, &rcfg, &mut rng, &mut c,
-        )?;
-        track_iters += stats.iterations as u64;
-        track_counters.merge(&c);
-        let last = *est_poses.last().unwrap();
-        prev_rel = pose.compose(last.inverse());
-        est_poses.push(pose);
-
-        if idx as u32 % slam_cfg.mapping.every == 0 {
-            let cam = Camera::new(data.intr, pose);
-            let mut c = StageCounters::new();
-            // the AOT artifacts are compiled for a fixed G: cap map
-            // growth so the store always fits (with headroom for tests)
-            let mut map_cfg = slam_cfg.mapping;
-            let headroom = rt.manifest.g.saturating_sub(store.len() + 256);
-            map_cfg.max_new = map_cfg.max_new.min(headroom);
-            let _ = map_update(
-                &mut store, &mut adam_map, &cam, frame, &map_cfg, &rcfg, &mut rng, &mut c,
-            );
-            map_counters.merge(&c);
-        }
-    }
-    Ok((est_poses, store, track_counters, map_counters, track_iters))
-}
-
-/// One XLA-backed tracking optimization (mirrors `slam::tracking` with
-/// the loss+gradient computed by the `track_step` artifact).
-#[allow(clippy::too_many_arguments)]
-pub fn track_frame_xla(
-    rt: &XlaRuntime,
-    store: &GaussianStore,
-    intr: crate::camera::Intrinsics,
-    init: Se3,
-    frame: &Frame,
-    cfg: &TrackingConfig,
-    rcfg: &RenderConfig,
-    rng: &mut Pcg32,
-    counters: &mut StageCounters,
-) -> Result<(Se3, TrackingStats)> {
-    let mut pose = init;
-    let mut adam = Adam::new(7, AdamConfig::with_lr(1.0));
-    let mut first_loss = 0.0;
-    let mut final_loss = 0.0;
-    let mut pixels_per_iter = 0;
-    // arena + output buffers reused across the optimization iterations:
-    // steady-state iterations render without per-pixel heap allocation
-    let mut scratch = RenderScratch::new();
-    let mut render = SparseRender::default();
-    for it in 0..cfg.iters {
-        let cam = Camera::new(intr, pose);
-        // L3 prepares the work: projection + preemptive α-checked lists
-        let projected = project_all(store, &cam, rcfg, counters);
-        let pixels = sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, None, rng);
-        pixels_per_iter = pixels.len();
-        render_sparse_projected_with(&projected, rcfg, &pixels, counters, &mut scratch, &mut render);
-        let lists = store_index_lists(&render, &projected, rt.manifest.k);
-        // L1/L2 compute the differentiable step through PJRT
-        let out = rt.track_step(store, &cam, &pixels, &lists, frame)?;
-        if it == 0 {
-            first_loss = out.loss;
-        }
-        final_loss = out.loss;
-        let mut params = [
-            pose.q.w, pose.q.x, pose.q.y, pose.q.z, pose.t.x, pose.t.y, pose.t.z,
-        ];
-        let grads = out.pose_grad.flatten();
-        let (lr_q, lr_t) = (cfg.lr_q, cfg.lr_t);
-        adam.step_scaled(&mut params, &grads, &|i| if i < 4 { lr_q } else { lr_t });
-        pose = Se3::new(
-            Quat::new(params[0], params[1], params[2], params[3]),
-            Vec3::new(params[4], params[5], params[6]),
-        );
-    }
-    Ok((
-        pose,
-        TrackingStats {
-            iterations: cfg.iters,
-            final_loss,
-            first_loss,
-            pixels_per_iter,
-        },
-    ))
-}
-
-/// Concurrent tracking/mapping (Fig. 2): mapping runs on a worker thread;
-/// tracking reads the most recent published map. M_t is enqueued strictly
-/// after T_t completes (the dependency the paper's timing diagram shows).
-fn run_threaded(
-    _cfg: &RunConfig,
-    data: &SyntheticDataset,
-    slam_cfg: &crate::slam::algorithms::SlamConfig,
-) -> Result<RunState> {
-    let rcfg = RenderConfig::default();
+    let mut track_backend = create_backend(slam_cfg.tracking.backend)?;
+    // capacity-bounded tracking engines (fixed-G AOT artifacts) cap map
+    // growth — same headroom rule as SlamSystem (MappingConfig::capped_for)
+    let track_capacity = track_backend.store_capacity();
     let shared: Arc<Mutex<GaussianStore>> = Arc::new(Mutex::new(GaussianStore::new()));
     let (tx, rx) = mpsc::channel::<(Frame, Se3, u64)>();
     let map_cfg = slam_cfg.mapping;
+    let map_kind = slam_cfg.mapping.backend;
     let worker_store = Arc::clone(&shared);
     let intr = data.intr;
-    let worker = std::thread::spawn(move || -> (StageCounters, u64) {
+    let worker = std::thread::spawn(move || -> Result<(StageCounters, u64)> {
+        // sessions are not Send — build the mapping engine on its thread
+        let mut map_backend = create_backend(map_kind)?;
         let mut adam = Adam::new(0, AdamConfig::default());
         let mut counters = StageCounters::new();
         let mut invocations = 0;
@@ -289,16 +174,17 @@ fn run_threaded(
                     AdamConfig::default(),
                 );
             }
+            let map_cfg = map_cfg.capped_for(track_capacity, local.len());
             let cam = Camera::new(intr, pose);
             let mut rng = Pcg32::new_stream(seed, 101);
             let _ = map_update(
-                &mut local, &mut adam, &cam, &frame, &map_cfg, &RenderConfig::default(),
-                &mut rng, &mut counters,
-            );
+                map_backend.as_mut(), &mut local, &mut adam, &cam, &frame, &map_cfg,
+                &RenderConfig::default(), &mut rng, &mut counters,
+            )?;
             *worker_store.lock().unwrap() = local;
             invocations += 1;
         }
-        (counters, invocations)
+        Ok((counters, invocations))
     });
 
     let mut rng = Pcg32::new(slam_cfg.seed);
@@ -321,8 +207,9 @@ fn run_threaded(
         let snapshot = shared.lock().unwrap().clone();
         let mut c = StageCounters::new();
         let (pose, stats) = track_frame(
-            &snapshot, data.intr, init, frame, &slam_cfg.tracking, &rcfg, &mut rng, &mut c,
-        );
+            track_backend.as_mut(), &snapshot, data.intr, init, frame, &slam_cfg.tracking,
+            &rcfg, &mut rng, &mut c,
+        )?;
         track_iters += stats.iterations as u64;
         track_counters.merge(&c);
         let last = *est_poses.last().unwrap();
@@ -333,7 +220,7 @@ fn run_threaded(
         }
     }
     drop(tx);
-    let (map_counters, _) = worker.join().expect("mapping worker panicked");
+    let (map_counters, _) = worker.join().expect("mapping worker panicked")?;
     let store = shared.lock().unwrap().clone();
     Ok((est_poses, store, track_counters, map_counters, track_iters))
 }
@@ -371,5 +258,18 @@ mod tests {
         let report = run(&cfg).unwrap();
         assert_eq!(report.frames, 6);
         assert!(report.ate_rmse_m < 0.3, "ATE {}", report.ate_rmse_m);
+    }
+
+    #[test]
+    fn xla_backend_without_artifacts_reports_load_error() {
+        // selecting the XLA engine in a stub build fails up front with
+        // the vendoring instructions, not mid-run
+        #[cfg(not(splatonic_xla))]
+        {
+            use crate::config::BackendKind;
+            let cfg = RunConfig { backend: Some(BackendKind::Xla), ..quick_cfg() };
+            let err = run(&cfg).unwrap_err();
+            assert!(format!("{err}").contains("xla"), "{err}");
+        }
     }
 }

@@ -6,8 +6,10 @@
 //!   keys: dataset (replica|tum), seq, width, height, frames,
 //!         algo (splatam|monogs|gsslam|flashslam),
 //!         variant (baseline|org+s|splatonic),
-//!         backend (cpu|xla), track_tile, map_tile, budget, seed,
-//!         threaded_mapping
+//!         backend (cpu|sparse-cpu|dense-cpu|xla),
+//!         map_backend (cpu|sparse-cpu|dense-cpu — xla is rejected:
+//!         mapping's Γ pass needs the full frame),
+//!         track_tile, map_tile, budget, seed, threaded_mapping
 //! ```
 
 use anyhow::Result;

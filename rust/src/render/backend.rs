@@ -1,0 +1,718 @@
+//! The rendering-backend seam: one request/response API over every
+//! pipeline the paper compares, so the SLAM loop (tracking, mapping, the
+//! coordinator, benches, examples) is *backend-agnostic*.
+//!
+//! A [`RenderJob`] — camera, reference-frame view, the pixel set (sparse
+//! sample grid or the full frame), and the [`RenderConfig`] — goes into
+//! [`RenderBackend::render`]; a [`RenderOutput`] — colors, depths, final
+//! transmittance, and the [`StageCounters`] charged for the call — comes
+//! out. A matching [`RenderBackend::backward`] consumes per-sample loss
+//! gradients and returns [`PoseGrad`] / [`GaussianGrads`].
+//!
+//! Each backend is a **session**: it owns its scratch (arenas, hit lists,
+//! per-thread buffers, cached projection) so iterating callers get the
+//! zero-allocation steady state of the PR-2 hot path without threading
+//! `RenderScratch`/`SparseRender` through every call site. The forward
+//! state cached by `render()` (projection + per-pair transmittance Γ —
+//! the paper's Γ/C buffer) is what `backward()` re-walks, so the two
+//! calls must be paired on the same job.
+//!
+//! Backends:
+//! * [`SparseCpuBackend`] — Splatonic's pixel-based pipeline
+//!   (`pixel_pipeline`), multi-threaded over the flat CSR arena.
+//! * [`DenseCpuBackend`] — the conventional tile-based pipeline
+//!   (`tile_pipeline`): full-frame jobs run the dense rasterizer ("Org."),
+//!   sparse jobs run sparse-on-tile ("Org.+S").
+//! * `XlaBackend` (see [`crate::runtime`]) — the PJRT-executed AOT
+//!   artifacts behind the `splatonic_xla` cfg; the default build registers
+//!   its stub, which errors at construction.
+//!
+//! New execution engines (GPU-sim replay, sharded/batched serving) plug in
+//! by implementing [`RenderBackend`] and registering a constructor in
+//! [`REGISTRY`].
+
+use super::backward_geom::{GaussianGrads, PoseGrad};
+use super::pixel_pipeline::{
+    backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
+    SparseBackward, SparseRender,
+};
+use super::projection::{project_all, Projected};
+use super::tile_pipeline::{
+    backward_dense, backward_org_s_with, render_dense_projected, render_org_s, DenseRender,
+};
+use super::{RenderConfig, StageCounters};
+use crate::camera::Camera;
+use crate::dataset::Frame;
+use crate::gaussian::GaussianStore;
+use crate::math::Vec3;
+use anyhow::{anyhow, bail, Result};
+
+/// Which pixels a job renders.
+#[derive(Clone, Copy, Debug)]
+pub enum PixelSet<'a> {
+    /// Every pixel of the job's camera, row-major (the dense baseline and
+    /// mapping's Γ pass).
+    Full,
+    /// A sparse sample grid (tracking / mapping optimization iterations).
+    Sparse(&'a SampledPixels),
+}
+
+/// One rendering request: everything a backend needs to execute a
+/// forward (and the paired backward) pass.
+#[derive(Clone, Copy)]
+pub struct RenderJob<'a> {
+    pub cam: &'a Camera,
+    pub pixels: PixelSet<'a>,
+    pub rcfg: &'a RenderConfig,
+    /// Reference-frame view. CPU backends ignore it (the caller computes
+    /// the loss from [`RenderOutput`]); engines whose compiled artifacts
+    /// fuse loss+backward (the XLA runtime) read it in `backward()`.
+    pub frame: Option<&'a Frame>,
+}
+
+/// Forward-pass outputs, borrowed from the session's reused buffers.
+/// One entry per job pixel (row-major for [`PixelSet::Full`]). The
+/// per-pair transmittance cache (Γ) stays inside the session and is
+/// consumed by the paired `backward()` call.
+pub struct RenderOutput<'a> {
+    pub colors: &'a [Vec3],
+    pub depths: &'a [f32],
+    /// Final transmittance per pixel (drives the unseen test, Eqn. 2).
+    pub final_t: &'a [f32],
+    /// Work charged for this forward call.
+    pub counters: StageCounters,
+}
+
+/// Per-sample loss gradients fed to `backward()`.
+#[derive(Clone, Copy)]
+pub struct LossGrads<'a> {
+    pub dl_dcolor: &'a [Vec3],
+    pub dl_ddepth: &'a [f32],
+}
+
+/// Which gradients the backward pass must produce.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GradRequest {
+    pub pose: bool,
+    pub gauss: bool,
+}
+
+impl GradRequest {
+    /// Tracking: camera-pose gradient only.
+    pub fn pose() -> Self {
+        GradRequest { pose: true, gauss: false }
+    }
+
+    /// Mapping: Gaussian-parameter gradients only.
+    pub fn gauss() -> Self {
+        GradRequest { pose: false, gauss: true }
+    }
+
+    pub fn both() -> Self {
+        GradRequest { pose: true, gauss: true }
+    }
+}
+
+/// Backward-pass outputs.
+pub struct BackwardOutput {
+    pub pose: Option<PoseGrad>,
+    pub gauss: Option<GaussianGrads>,
+    /// Work charged for this backward call.
+    pub counters: StageCounters,
+}
+
+/// A rendering engine session. `render()` caches the forward state the
+/// paired `backward()` re-walks; call them in pairs on the same job and
+/// store. Sessions retain their scratch across calls, so holding one
+/// across optimization iterations (as tracking/mapping do) keeps the
+/// steady state allocation-free.
+///
+/// Deliberately **not** `Send`: engine handles (e.g. PJRT clients) may be
+/// thread-bound. Callers that run a process on a worker thread construct
+/// the session *inside* that thread (see the coordinator's concurrent
+/// mapping worker).
+pub trait RenderBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Max Gaussian count this engine can execute, if bounded (AOT
+    /// artifacts are compiled for a fixed G). The SLAM loop caps map
+    /// densification so the store always fits the tracking backend.
+    fn store_capacity(&self) -> Option<usize> {
+        None
+    }
+
+    /// Forward pass. The returned slices borrow the session's buffers
+    /// and are valid until the next `render`/`backward` call.
+    fn render(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+    ) -> Result<RenderOutput<'_>>;
+
+    /// Backward pass over the last `render()`'s cached forward state.
+    fn backward(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+        grads: LossGrads<'_>,
+        want: GradRequest,
+    ) -> Result<BackwardOutput>;
+}
+
+// ---------------------------------------------------------------------
+// BackendKind + constructor registry
+// ---------------------------------------------------------------------
+
+/// The registered rendering engines, selectable from `SlamConfig` /
+/// launcher TOML (`backend = "sparse-cpu" | "dense-cpu" | "xla"`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Splatonic's pixel-based sparse pipeline on the CPU.
+    SparseCpu,
+    /// The conventional tile-based pipeline on the CPU.
+    DenseCpu,
+    /// AOT artifacts executed through PJRT (stub without the
+    /// `splatonic_xla` cfg — construction errors at load).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::SparseCpu => "sparse-cpu",
+            BackendKind::DenseCpu => "dense-cpu",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    /// Parse a launcher/TOML spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sparse-cpu" | "sparse_cpu" | "sparse" | "pixel" => Ok(BackendKind::SparseCpu),
+            "dense-cpu" | "dense_cpu" | "dense" | "tile" => Ok(BackendKind::DenseCpu),
+            "xla" => Ok(BackendKind::Xla),
+            _ => Err(anyhow!(
+                "unknown backend {s} (expected sparse-cpu, dense-cpu, or xla)"
+            )),
+        }
+    }
+}
+
+type BackendCtor = fn() -> Result<Box<dyn RenderBackend>>;
+
+fn new_sparse_cpu() -> Result<Box<dyn RenderBackend>> {
+    Ok(Box::new(SparseCpuBackend::new()))
+}
+
+fn new_dense_cpu() -> Result<Box<dyn RenderBackend>> {
+    Ok(Box::new(DenseCpuBackend::new()))
+}
+
+fn new_xla() -> Result<Box<dyn RenderBackend>> {
+    Ok(Box::new(crate::runtime::XlaBackend::create()?))
+}
+
+/// The backend constructor registry. Every engine the launcher can name
+/// appears here; the XLA entry constructs the PJRT runtime when built
+/// with `--cfg splatonic_xla` and its load-erroring stub otherwise.
+pub const REGISTRY: &[(BackendKind, BackendCtor)] = &[
+    (BackendKind::SparseCpu, new_sparse_cpu),
+    (BackendKind::DenseCpu, new_dense_cpu),
+    (BackendKind::Xla, new_xla),
+];
+
+/// Construct a fresh backend session of the given kind.
+pub fn create_backend(kind: BackendKind) -> Result<Box<dyn RenderBackend>> {
+    for (k, ctor) in REGISTRY {
+        if *k == kind {
+            return ctor();
+        }
+    }
+    Err(anyhow!("backend {} is not registered", kind.name()))
+}
+
+// ---------------------------------------------------------------------
+// SparseCpuBackend
+// ---------------------------------------------------------------------
+
+/// Splatonic's pixel-based sparse pipeline as a session: wraps the PR-2
+/// flat-arena hot path (`RenderScratch` + `HitLists` inside
+/// [`SparseRender`]) plus the cached projection, so steady-state
+/// iterations render and backward without per-pixel heap allocation.
+/// Full-frame jobs run the same pipeline over a cached one-pixel-per-1×1
+/// -cell grid (numerics match the tile pipeline to ~1e-4 — see
+/// `tests/backend_parity.rs`).
+#[derive(Debug)]
+pub struct SparseCpuBackend {
+    scratch: RenderScratch,
+    out: SparseRender,
+    projected: Vec<Projected>,
+    /// Cached all-pixels grid for [`PixelSet::Full`] jobs, keyed by dims.
+    full_px: Option<SampledPixels>,
+    full_dims: (u32, u32),
+    /// Model the Γ/C on-chip buffer in backward (`true`, the Splatonic
+    /// hardware) or recompute Γ with cross-lane reductions (`false`, the
+    /// SW pixel pipeline on a GPU).
+    pub cache_gamma: bool,
+    /// Shape of the last `render()` (pairs the backward call; `None`
+    /// until the first render).
+    last_job: Option<SparseJobShape>,
+}
+
+impl Default for SparseCpuBackend {
+    /// Same as [`Self::new`]: the Γ/C cache on (the Splatonic hardware
+    /// configuration) — a derived all-false default would silently model
+    /// different hardware.
+    fn default() -> Self {
+        SparseCpuBackend {
+            scratch: RenderScratch::new(),
+            out: SparseRender::default(),
+            projected: Vec::new(),
+            full_px: None,
+            full_dims: (0, 0),
+            cache_gamma: true,
+            last_job: None,
+        }
+    }
+}
+
+/// What the last `SparseCpuBackend::render` consumed, so `backward` can
+/// reject a mismatched job (the sample count pins the arena shape; the
+/// caller is trusted to pass the *same* grid, as the trait requires).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SparseJobShape {
+    Full,
+    Sparse(usize),
+}
+
+impl SparseCpuBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Session pinned to an explicit worker-thread count (1 forces the
+    /// sequential path; 0 = auto). Benches and determinism tests use it.
+    pub fn with_threads(threads: usize) -> Self {
+        SparseCpuBackend {
+            scratch: RenderScratch::with_threads(threads),
+            ..Self::default()
+        }
+    }
+
+    fn full_pixels(&mut self, cam: &Camera) -> &SampledPixels {
+        let dims = (cam.intr.width, cam.intr.height);
+        if self.full_px.is_none() || self.full_dims != dims {
+            self.full_px = Some(SampledPixels::full_grid(dims.0, dims.1, 1));
+            self.full_dims = dims;
+        }
+        self.full_px.as_ref().unwrap()
+    }
+
+    /// Forward from a caller-held projection (benches time the render
+    /// stages in isolation; the trait's `render()` is this plus
+    /// `project_all`). Returns the session's reused output buffers.
+    pub fn forward_projected(
+        &mut self,
+        projected: &[Projected],
+        rcfg: &RenderConfig,
+        pixels: &SampledPixels,
+        counters: &mut StageCounters,
+    ) -> &SparseRender {
+        render_sparse_projected_with(
+            projected, rcfg, pixels, counters, &mut self.scratch, &mut self.out,
+        );
+        &self.out
+    }
+
+    /// Backward over the forward state left by [`Self::forward_projected`]
+    /// (or the trait's `render()`), with an explicit projection.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_projected(
+        &mut self,
+        store: &GaussianStore,
+        cam: &Camera,
+        rcfg: &RenderConfig,
+        projected: &[Projected],
+        pixels: &SampledPixels,
+        dl_dcolor: &[Vec3],
+        dl_ddepth: &[f32],
+        want: GradRequest,
+        counters: &mut StageCounters,
+    ) -> SparseBackward {
+        backward_sparse_with(
+            store,
+            cam,
+            rcfg,
+            projected,
+            &self.out,
+            pixels,
+            dl_dcolor,
+            dl_ddepth,
+            self.cache_gamma,
+            want.pose,
+            want.gauss,
+            counters,
+            &mut self.scratch,
+        )
+    }
+}
+
+impl RenderBackend for SparseCpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::SparseCpu
+    }
+
+    fn render(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+    ) -> Result<RenderOutput<'_>> {
+        if matches!(job.pixels, PixelSet::Full) {
+            // materialize the cache before the disjoint field borrows below
+            self.full_pixels(job.cam);
+        }
+        let mut counters = StageCounters::new();
+        self.projected = project_all(store, job.cam, job.rcfg, &mut counters);
+        let (pixels, shape) = match job.pixels {
+            PixelSet::Sparse(px) => (px, SparseJobShape::Sparse(px.len())),
+            PixelSet::Full => (self.full_px.as_ref().unwrap(), SparseJobShape::Full),
+        };
+        render_sparse_projected_with(
+            &self.projected,
+            job.rcfg,
+            pixels,
+            &mut counters,
+            &mut self.scratch,
+            &mut self.out,
+        );
+        self.last_job = Some(shape);
+        Ok(RenderOutput {
+            colors: &self.out.colors,
+            depths: &self.out.depths,
+            final_t: &self.out.final_t,
+            counters,
+        })
+    }
+
+    fn backward(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+        grads: LossGrads<'_>,
+        want: GradRequest,
+    ) -> Result<BackwardOutput> {
+        let Some(last) = self.last_job else {
+            bail!("SparseCpuBackend::backward called before render");
+        };
+        let pixels = match (job.pixels, last) {
+            (PixelSet::Sparse(px), SparseJobShape::Sparse(n)) if px.len() == n => px,
+            (PixelSet::Full, SparseJobShape::Full) => self
+                .full_px
+                .as_ref()
+                .ok_or_else(|| anyhow!("full-frame backward without a full-frame render"))?,
+            _ => bail!("SparseCpuBackend::backward pixel set does not match the last render"),
+        };
+        let mut counters = StageCounters::new();
+        let bwd = backward_sparse_with(
+            store,
+            job.cam,
+            job.rcfg,
+            &self.projected,
+            &self.out,
+            pixels,
+            grads.dl_dcolor,
+            grads.dl_ddepth,
+            self.cache_gamma,
+            want.pose,
+            want.gauss,
+            &mut counters,
+            &mut self.scratch,
+        );
+        Ok(BackwardOutput { pose: bwd.pose, gauss: bwd.gauss, counters })
+    }
+}
+
+// ---------------------------------------------------------------------
+// DenseCpuBackend
+// ---------------------------------------------------------------------
+
+/// What the last `DenseCpuBackend::render` produced (routes `backward`).
+#[derive(Debug)]
+enum DenseState {
+    Empty,
+    /// Full-frame tile-based forward ("Org.").
+    Full(DenseRender),
+    /// Sparse samples on the unmodified tile pipeline ("Org.+S").
+    Sparse(SparseRender),
+}
+
+/// The conventional tile-based pipeline as a session. Full-frame jobs run
+/// the dense rasterizer; sparse jobs run the "Org.+S" variant (full tile
+/// binning + per-sample tile-list walks — the paper's under-utilization
+/// baseline). Numerics match [`SparseCpuBackend`]; the counted work
+/// stream is what differs.
+#[derive(Debug)]
+pub struct DenseCpuBackend {
+    scratch: RenderScratch,
+    projected: Vec<Projected>,
+    state: DenseState,
+}
+
+impl Default for DenseCpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DenseCpuBackend {
+    pub fn new() -> Self {
+        DenseCpuBackend {
+            scratch: RenderScratch::new(),
+            projected: Vec::new(),
+            state: DenseState::Empty,
+        }
+    }
+}
+
+impl RenderBackend for DenseCpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::DenseCpu
+    }
+
+    fn render(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+    ) -> Result<RenderOutput<'_>> {
+        let mut counters = StageCounters::new();
+        self.projected = project_all(store, job.cam, job.rcfg, &mut counters);
+        match job.pixels {
+            PixelSet::Full => {
+                let dr = render_dense_projected(&self.projected, job.cam, job.rcfg, &mut counters);
+                self.state = DenseState::Full(dr);
+                let DenseState::Full(dr) = &self.state else { unreachable!() };
+                Ok(RenderOutput {
+                    colors: &dr.image.data,
+                    depths: &dr.depth.data,
+                    final_t: &dr.final_t.data,
+                    counters,
+                })
+            }
+            PixelSet::Sparse(px) => {
+                let sr = render_org_s(&self.projected, job.cam, job.rcfg, px, &mut counters);
+                self.state = DenseState::Sparse(sr);
+                let DenseState::Sparse(sr) = &self.state else { unreachable!() };
+                Ok(RenderOutput {
+                    colors: &sr.colors,
+                    depths: &sr.depths,
+                    final_t: &sr.final_t,
+                    counters,
+                })
+            }
+        }
+    }
+
+    fn backward(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+        grads: LossGrads<'_>,
+        want: GradRequest,
+    ) -> Result<BackwardOutput> {
+        let mut counters = StageCounters::new();
+        match (&self.state, job.pixels) {
+            (DenseState::Full(dr), PixelSet::Full) => {
+                let bwd = backward_dense(
+                    store,
+                    job.cam,
+                    job.rcfg,
+                    &self.projected,
+                    dr,
+                    grads.dl_dcolor,
+                    grads.dl_ddepth,
+                    want.pose,
+                    want.gauss,
+                    &mut counters,
+                );
+                Ok(BackwardOutput { pose: bwd.pose, gauss: bwd.gauss, counters })
+            }
+            (DenseState::Sparse(sr), PixelSet::Sparse(px)) => {
+                let bwd = backward_org_s_with(
+                    store,
+                    job.cam,
+                    job.rcfg,
+                    &self.projected,
+                    sr,
+                    px,
+                    grads.dl_dcolor,
+                    grads.dl_ddepth,
+                    want.pose,
+                    want.gauss,
+                    &mut counters,
+                    &mut self.scratch,
+                );
+                Ok(BackwardOutput { pose: bwd.pose, gauss: bwd.gauss, counters })
+            }
+            (DenseState::Empty, _) => bail!("DenseCpuBackend::backward called before render"),
+            _ => bail!("DenseCpuBackend::backward pixel set does not match the last render"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::Intrinsics;
+    use crate::gaussian::Gaussian;
+    use crate::math::{Quat, Se3};
+
+    fn test_scene() -> (GaussianStore, Camera) {
+        let mut store = GaussianStore::new();
+        let red = Vec3::new(0.9, 0.2, 0.1);
+        let green = Vec3::new(0.1, 0.8, 0.3);
+        let blue = Vec3::new(0.2, 0.3, 0.9);
+        store.push(Gaussian::isotropic(Vec3::new(0.0, 0.0, 2.0), 0.35, red, 0.8));
+        store.push(Gaussian::isotropic(Vec3::new(0.25, 0.1, 3.0), 0.5, green, 0.7));
+        store.push(Gaussian::isotropic(Vec3::new(-0.3, -0.2, 4.0), 0.8, blue, 0.9));
+        let cam = Camera::new(
+            Intrinsics::replica_like(64, 64),
+            Se3::new(Quat::from_axis_angle(Vec3::Y, 0.05), Vec3::new(0.02, -0.03, 0.1)),
+        );
+        (store, cam)
+    }
+
+    #[test]
+    fn registry_constructs_cpu_backends() {
+        let s = create_backend(BackendKind::SparseCpu).unwrap();
+        assert_eq!(s.kind(), BackendKind::SparseCpu);
+        assert_eq!(s.store_capacity(), None);
+        let d = create_backend(BackendKind::DenseCpu).unwrap();
+        assert_eq!(d.kind(), BackendKind::DenseCpu);
+        // every construction path models the same hardware (Γ/C cache on)
+        assert!(SparseCpuBackend::new().cache_gamma);
+        assert!(SparseCpuBackend::default().cache_gamma);
+        assert!(SparseCpuBackend::with_threads(1).cache_gamma);
+    }
+
+    #[test]
+    fn xla_backend_is_registered_but_stub_errs_at_load() {
+        // default build (no splatonic_xla cfg): the stub errors at load
+        // with the vendoring instructions
+        #[cfg(not(splatonic_xla))]
+        {
+            let err = create_backend(BackendKind::Xla).unwrap_err();
+            assert!(format!("{err}").contains("xla"), "{err}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [BackendKind::SparseCpu, BackendKind::DenseCpu, BackendKind::Xla] {
+            assert_eq!(BackendKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::parse("tile").unwrap(), BackendKind::DenseCpu);
+        assert_eq!(BackendKind::parse("pixel").unwrap(), BackendKind::SparseCpu);
+        assert!(BackendKind::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn backward_before_render_is_an_error() {
+        let (store, cam) = test_scene();
+        let rcfg = RenderConfig::default();
+        let job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: None };
+        let grads = LossGrads { dl_dcolor: &[], dl_ddepth: &[] };
+        let mut s = SparseCpuBackend::new();
+        assert!(s.backward(&store, &job, grads, GradRequest::pose()).is_err());
+        let mut d = DenseCpuBackend::new();
+        assert!(d.backward(&store, &job, grads, GradRequest::pose()).is_err());
+    }
+
+    #[test]
+    fn sparse_session_full_job_matches_sparse_full_grid() {
+        let (store, cam) = test_scene();
+        let rcfg = RenderConfig::default();
+        let mut backend = SparseCpuBackend::new();
+        let job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: None };
+        let (colors, final_t) = {
+            let out = backend.render(&store, &job).unwrap();
+            assert_eq!(out.colors.len(), 64 * 64);
+            (out.colors.to_vec(), out.final_t.to_vec())
+        };
+        // one-shot reference through the pipeline's convenience entry
+        let px = SampledPixels::full_grid(64, 64, 1);
+        let mut c = StageCounters::new();
+        let (r, _) = crate::render::pixel_pipeline::render_sparse(&store, &cam, &rcfg, &px, &mut c);
+        for i in 0..colors.len() {
+            assert_eq!(colors[i], r.colors[i]);
+            assert_eq!(final_t[i], r.final_t[i]);
+        }
+    }
+
+    #[test]
+    fn session_render_backward_pose_matches_one_shot() {
+        let (store, cam) = test_scene();
+        let rcfg = RenderConfig::default();
+        let px = SampledPixels::full_grid(64, 64, 8);
+        let job = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
+
+        let mut backend = SparseCpuBackend::new();
+        let n = {
+            let out = backend.render(&store, &job).unwrap();
+            assert!(out.counters.raster_pairs_integrated > 0);
+            out.colors.len()
+        };
+        let dldc = vec![Vec3::splat(1.0); n];
+        let dldd = vec![0.1f32; n];
+        let grads = LossGrads { dl_dcolor: &dldc, dl_ddepth: &dldd };
+        let bwd = backend.backward(&store, &job, grads, GradRequest::pose()).unwrap();
+        let pose = bwd.pose.expect("pose grad requested").flatten();
+        assert!(bwd.gauss.is_none());
+
+        // reference: the one-shot pipeline entries
+        let mut c = StageCounters::new();
+        let (r, proj) =
+            crate::render::pixel_pipeline::render_sparse(&store, &cam, &rcfg, &px, &mut c);
+        let reference = crate::render::pixel_pipeline::backward_sparse(
+            &store, &cam, &rcfg, &proj, &r, &px, &dldc, &dldd, true, true, false, &mut c,
+        );
+        let rp = reference.pose.unwrap().flatten();
+        for k in 0..7 {
+            assert_eq!(pose[k], rp[k], "pose grad {k} differs");
+        }
+
+        // a backward whose pixel set does not match the last render is
+        // rejected (same contract as the dense session)
+        let full_job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: None };
+        assert!(backend.backward(&store, &full_job, grads, GradRequest::pose()).is_err());
+    }
+
+    #[test]
+    fn dense_session_routes_full_and_sparse_jobs() {
+        let (store, cam) = test_scene();
+        let rcfg = RenderConfig::default();
+        let mut backend = DenseCpuBackend::new();
+
+        let job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: None };
+        let n_full = {
+            let out = backend.render(&store, &job).unwrap();
+            assert!(out.counters.raster_pairs_iterated >= out.counters.raster_pairs_integrated);
+            out.colors.len()
+        };
+        assert_eq!(n_full, 64 * 64);
+        let dldc = vec![Vec3::splat(0.3); n_full];
+        let dldd = vec![0.05f32; n_full];
+        let grads = LossGrads { dl_dcolor: &dldc, dl_ddepth: &dldd };
+        let bwd = backend.backward(&store, &job, grads, GradRequest::both()).unwrap();
+        assert!(bwd.pose.is_some() && bwd.gauss.is_some());
+
+        let px = SampledPixels::full_grid(64, 64, 16);
+        let sjob = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
+        let n_sparse = backend.render(&store, &sjob).unwrap().colors.len();
+        assert_eq!(n_sparse, px.len());
+        // mismatched pixel set on backward is rejected
+        let g2 = vec![Vec3::ZERO; n_full];
+        let d2 = vec![0.0f32; n_full];
+        let grads2 = LossGrads { dl_dcolor: &g2, dl_ddepth: &d2 };
+        assert!(backend.backward(&store, &job, grads2, GradRequest::pose()).is_err());
+    }
+}

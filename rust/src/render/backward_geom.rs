@@ -119,11 +119,34 @@ impl PoseGrad {
     }
 }
 
+/// The store-id range of Gaussian-gradient output one worker owns:
+/// mutable windows into the [`GaussianGrads`] SoA, offset by `base`.
+/// Projection emits strictly increasing ids, so chunking `projected`
+/// partitions the store range disjointly — every Gaussian's gradient is
+/// written by exactly one worker, in the same per-entry float order as
+/// the sequential pass (bit-identical at any thread count).
+struct GaussSlices<'a> {
+    base: usize,
+    mean: &'a mut [Vec3],
+    rot: &'a mut [Quat],
+    log_scale: &'a mut [Vec3],
+    opacity_logit: &'a mut [f32],
+    color: &'a mut [Vec3],
+}
+
 /// Run the re-projection stage: scatter screen-space gradients back to
 /// world-space Gaussian parameters and/or the camera pose.
 ///
 /// `want_pose` — tracking optimizes the pose; `want_gauss` — mapping
 /// optimizes the map. Both can be requested at once (used in tests).
+///
+/// `threads` (0 = auto, the `SPLATONIC_THREADS` pool) fans the stage out
+/// over Gaussian chunks on `std::thread::scope` once the projected count
+/// crosses the stage-1 threshold: Gaussian gradients land in disjoint
+/// per-chunk slices (bit-identical to sequential), pose partials are
+/// per-thread accumulators merged in chunk order (deterministic for a
+/// fixed thread count, tolerance-equal across counts).
+#[allow(clippy::too_many_arguments)]
 pub fn geometry_backward(
     store: &GaussianStore,
     cam: &Camera,
@@ -132,13 +155,118 @@ pub fn geometry_backward(
     cfg: &RenderConfig,
     want_pose: bool,
     want_gauss: bool,
+    threads: usize,
 ) -> (Option<PoseGrad>, Option<GaussianGrads>) {
     assert_eq!(projected.len(), g2d.len());
     let _ = cfg;
     let w = cam.rotation();
-    let intr = &cam.intr;
-
     let mut gauss = want_gauss.then(|| GaussianGrads::zeros(store.len()));
+
+    let n = projected.len();
+    let pool = if threads > 0 { threads } else { crate::render::auto_threads() };
+    let parallel = pool > 1
+        && n >= crate::render::pixel_pipeline::PARALLEL_GAUSSIANS
+        // chunked store-range splitting relies on strictly increasing ids
+        // (always true for project_all output; guard for hand-built input)
+        && projected.windows(2).all(|p| p[0].id < p[1].id);
+
+    let (dl_dw, dl_dtpose) = if !parallel {
+        let slices = gauss.as_mut().map(|gg| GaussSlices {
+            base: 0,
+            mean: &mut gg.mean,
+            rot: &mut gg.rot,
+            log_scale: &mut gg.log_scale,
+            opacity_logit: &mut gg.opacity_logit,
+            color: &mut gg.color,
+        });
+        geometry_backward_range(store, cam, &w, projected, g2d, want_pose, slices)
+    } else {
+        let chunk = n.div_ceil(pool);
+        let starts: Vec<usize> = (0..n).step_by(chunk).collect();
+        // store-id cut points: worker j owns store ids [cuts[j], cuts[j+1])
+        let mut cuts = Vec::with_capacity(starts.len() + 1);
+        cuts.push(0usize);
+        for &s in &starts[1..] {
+            cuts.push(projected[s].id as usize);
+        }
+        cuts.push(store.len());
+
+        let mut rem = gauss.as_mut().map(|gg| {
+            (
+                gg.mean.as_mut_slice(),
+                gg.rot.as_mut_slice(),
+                gg.log_scale.as_mut_slice(),
+                gg.opacity_logit.as_mut_slice(),
+                gg.color.as_mut_slice(),
+            )
+        });
+        let w_ref = &w;
+        let mut partials: Vec<(Mat3, Vec3)> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(starts.len());
+            for (j, &s) in starts.iter().enumerate() {
+                let e = (s + chunk).min(n);
+                let slices = match rem.take() {
+                    None => None,
+                    Some((mean, rot, log_scale, opacity_logit, color)) => {
+                        let len = cuts[j + 1] - cuts[j];
+                        let (m0, m1) = mean.split_at_mut(len);
+                        let (r0, r1) = rot.split_at_mut(len);
+                        let (l0, l1) = log_scale.split_at_mut(len);
+                        let (o0, o1) = opacity_logit.split_at_mut(len);
+                        let (c0, c1) = color.split_at_mut(len);
+                        rem = Some((m1, r1, l1, o1, c1));
+                        Some(GaussSlices {
+                            base: cuts[j],
+                            mean: m0,
+                            rot: r0,
+                            log_scale: l0,
+                            opacity_logit: o0,
+                            color: c0,
+                        })
+                    }
+                };
+                let proj = &projected[s..e];
+                let g = &g2d[s..e];
+                handles.push(scope.spawn(move || {
+                    geometry_backward_range(store, cam, w_ref, proj, g, want_pose, slices)
+                }));
+            }
+            partials = handles
+                .into_iter()
+                .map(|h| h.join().expect("geometry backward worker panicked"))
+                .collect();
+        });
+        // merge pose partials in chunk order
+        let mut dw = Mat3::ZERO;
+        let mut dt = Vec3::ZERO;
+        for (pw, pt) in partials {
+            dw = dw + pw;
+            dt += pt;
+        }
+        (dw, dt)
+    };
+
+    let pose = want_pose.then(|| PoseGrad {
+        q: cam.w2c.q.backward_rotation(&dl_dw),
+        t: dl_dtpose,
+    });
+    (pose, gauss)
+}
+
+/// Worker: re-project gradients for `projected`/`g2d` (a chunk of the
+/// full arrays), writing Gaussian gradients into the chunk's disjoint
+/// store-range `gauss` slices and returning the pose partials.
+fn geometry_backward_range(
+    store: &GaussianStore,
+    cam: &Camera,
+    w: &Mat3,
+    projected: &[Projected],
+    g2d: &[Grad2d],
+    want_pose: bool,
+    mut gauss: Option<GaussSlices<'_>>,
+) -> (Mat3, Vec3) {
+    let intr = &cam.intr;
     let mut dl_dw = Mat3::ZERO; // pose rotation gradient accumulator
     let mut dl_dtpose = Vec3::ZERO;
 
@@ -243,11 +371,13 @@ pub fn geometry_backward(
         }
 
         if let Some(gg) = gauss.as_mut() {
+            // index into this worker's disjoint store-range slices
+            let li = i - gg.base;
             // mean: dL/dp = Wᵀ dL/dt
-            gg.mean[i] += w.transpose().mul_vec(dl_dt);
+            gg.mean[li] += w.transpose().mul_vec(dl_dt);
             // color / opacity
-            gg.color[i] += g.color;
-            gg.opacity_logit[i] += g.opacity * dsigmoid_from_y(p.opacity);
+            gg.color[li] += g.color;
+            gg.opacity_logit[li] += g.opacity * dsigmoid_from_y(p.opacity);
 
             // Σ3D = M Mᵀ with M = R S → dL/dM = (dΣ + dΣᵀ) M = 2·sym(dΣ)·M
             let sym = (dl_dsigma + dl_dsigma.transpose()) * 0.5;
@@ -265,7 +395,7 @@ pub fn geometry_backward(
                 }
                 dls[k] = acc * scale[k];
             }
-            gg.log_scale[i] += dls;
+            gg.log_scale[li] += dls;
 
             // dL/dR = dL/dM · diag(s)
             let mut dl_drot = Mat3::ZERO;
@@ -275,16 +405,12 @@ pub fn geometry_backward(
                 }
             }
             let dq = store.rots[i].backward_rotation(&dl_drot);
-            let cur = gg.rot[i];
-            gg.rot[i] = Quat::new(cur.w + dq.w, cur.x + dq.x, cur.y + dq.y, cur.z + dq.z);
+            let cur = gg.rot[li];
+            gg.rot[li] = Quat::new(cur.w + dq.w, cur.x + dq.x, cur.y + dq.y, cur.z + dq.z);
         }
     }
 
-    let pose = want_pose.then(|| PoseGrad {
-        q: cam.w2c.q.backward_rotation(&dl_dw),
-        t: dl_dtpose,
-    });
-    (pose, gauss)
+    (dl_dw, dl_dtpose)
 }
 
 #[cfg(test)]
@@ -314,6 +440,63 @@ mod tests {
         assert_eq!(g.len(), 3);
         assert_eq!(g.flatten().len(), 3 * GaussianGrads::PARAMS);
         assert!(g.flatten().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn parallel_geometry_backward_matches_sequential() {
+        use crate::camera::{Camera, Intrinsics};
+        use crate::math::{Pcg32, Se3};
+        use crate::render::projection::project_all;
+        use crate::render::StageCounters;
+
+        let mut rng = Pcg32::new(9);
+        let mut store = GaussianStore::new();
+        for _ in 0..9000 {
+            store.push(Gaussian::isotropic(
+                Vec3::new(
+                    rng.uniform(-1.0, 1.0),
+                    rng.uniform(-0.8, 0.8),
+                    rng.uniform(0.8, 6.0),
+                ),
+                rng.uniform(0.02, 0.1),
+                Vec3::new(rng.next_f32(), rng.next_f32(), rng.next_f32()),
+                rng.uniform(0.3, 0.9),
+            ));
+        }
+        let cam = Camera::new(Intrinsics::replica_like(128, 96), Se3::IDENTITY);
+        let cfg = RenderConfig::default();
+        let mut c = StageCounters::new();
+        let projected = project_all(&store, &cam, &cfg, &mut c);
+        assert!(
+            projected.len() >= crate::render::pixel_pipeline::PARALLEL_GAUSSIANS,
+            "scene must cross the parallel threshold: {}",
+            projected.len()
+        );
+        // synthetic screen-space gradients with per-entry variation
+        let g2d: Vec<Grad2d> = (0..projected.len())
+            .map(|k| Grad2d {
+                mean2d: Vec2::new(0.01 * (k % 7) as f32, -0.02 * (k % 5) as f32),
+                conic: [1e-4 * (k % 3) as f32, -1e-4, 2e-4],
+                opacity: 0.01 * (k % 4) as f32,
+                color: Vec3::new(0.1, -0.05, 0.02),
+                depth: 0.003 * (k % 6) as f32,
+            })
+            .collect();
+
+        let (p1, g1) = geometry_backward(&store, &cam, &projected, &g2d, &cfg, true, true, 1);
+        let (p4, g4) = geometry_backward(&store, &cam, &projected, &g2d, &cfg, true, true, 4);
+        // disjoint store-range slices: Gaussian grads are bit-identical
+        let (f1, f4) = (g1.unwrap().flatten(), g4.unwrap().flatten());
+        assert_eq!(f1.len(), f4.len());
+        for k in 0..f1.len() {
+            assert_eq!(f1[k].to_bits(), f4[k].to_bits(), "gauss grad {k} differs");
+        }
+        // pose partials merge in chunk order: tolerance-equal across counts
+        let (a, b) = (p1.unwrap().flatten(), p4.unwrap().flatten());
+        for k in 0..7 {
+            let tol = 1e-3 * (1.0 + a[k].abs());
+            assert!((a[k] - b[k]).abs() <= tol, "pose {k}: {} vs {}", a[k], b[k]);
+        }
     }
 
     #[test]

@@ -15,7 +15,19 @@
 //!
 //! Both pipelines produce *bit-identical work streams* to what the timing
 //! simulators consume: every stage increments [`counters::StageCounters`].
+//!
+//! Callers do not drive the pipelines directly: [`backend`] packages each
+//! one as a [`backend::RenderBackend`] **session** with an explicit
+//! request/response surface — a [`backend::RenderJob`] in, a
+//! [`backend::RenderOutput`] out, plus a paired
+//! [`backend::RenderBackend::backward`] producing [`PoseGrad`] /
+//! [`GaussianGrads`]. Sessions own the hot-path scratch
+//! ([`RenderScratch`], hit-list arenas, cached projection), so the SLAM
+//! loop stays backend-agnostic while steady-state iterations stay
+//! allocation-free; `tests/backend_parity.rs` pins the numeric agreement
+//! between [`backend::SparseCpuBackend`] and [`backend::DenseCpuBackend`].
 
+pub mod backend;
 pub mod backward_geom;
 pub mod counters;
 pub mod image;
@@ -23,6 +35,10 @@ pub mod pixel_pipeline;
 pub mod projection;
 pub mod tile_pipeline;
 
+pub use backend::{
+    create_backend, BackendKind, BackwardOutput, DenseCpuBackend, GradRequest, LossGrads,
+    PixelSet, RenderBackend, RenderJob, RenderOutput, SparseCpuBackend,
+};
 pub use backward_geom::{geometry_backward, Grad2d, GaussianGrads, PoseGrad};
 pub use counters::StageCounters;
 pub use image::Image;

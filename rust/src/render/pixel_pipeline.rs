@@ -31,10 +31,17 @@
 //!
 //! Hit lists are sorted by `(depth, proj)` — a strict total order — so
 //! the rendered output is **bit-identical regardless of thread count**
-//! (asserted by `tests/parallel_determinism.rs`). Callers that iterate
-//! (tracking, mapping, the XLA coordinator) hold a [`RenderScratch`] and
-//! a [`SparseRender`] across iterations, making steady-state iterations
-//! free of per-pixel heap allocation.
+//! (asserted by `tests/parallel_determinism.rs`).
+//!
+//! [`render_sparse_projected_with`] / [`backward_sparse_with`] are the
+//! single arena entries into the pipeline;
+//! [`crate::render::backend::SparseCpuBackend`] wraps them as a
+//! [`crate::render::backend::RenderBackend`] session holding the
+//! [`RenderScratch`] + [`SparseRender`] across iterations, which is how
+//! every iterating caller (tracking, mapping, the coordinator) renders —
+//! steady-state iterations are free of per-pixel heap allocation. The
+//! [`render_sparse`] / [`backward_sparse`] one-shot conveniences allocate
+//! a fresh arena per call and exist for tests and tools.
 
 use super::backward_geom::{geometry_backward, GaussianGrads, Grad2d, PoseGrad};
 use super::projection::{project_all, Projected};
@@ -330,7 +337,11 @@ impl RenderScratch {
     }
 }
 
-/// Forward pass of the pixel-based pipeline.
+/// One-shot forward pass of the pixel-based pipeline: projection plus a
+/// fresh-arena [`render_sparse_projected_with`] call. A thin test/tool
+/// convenience — iterating callers hold a
+/// [`crate::render::backend::SparseCpuBackend`] session instead, which
+/// reuses its arena across calls.
 ///
 /// Returns the rendered samples plus the projected set (the backward pass
 /// and the simulators need both).
@@ -342,38 +353,10 @@ pub fn render_sparse(
     counters: &mut StageCounters,
 ) -> (SparseRender, Vec<Projected>) {
     let projected = project_all(store, cam, cfg, counters);
-    let render = render_sparse_projected(&projected, cfg, pixels, counters);
-    (render, projected)
-}
-
-/// Forward pass given an existing projection (lets tracking iterate the
-/// projection stage exactly once per optimization step).
-pub fn render_sparse_projected(
-    projected: &[Projected],
-    cfg: &RenderConfig,
-    pixels: &SampledPixels,
-    counters: &mut StageCounters,
-) -> SparseRender {
     let mut scratch = RenderScratch::new();
     let mut out = SparseRender::default();
-    render_sparse_projected_with(projected, cfg, pixels, counters, &mut scratch, &mut out);
-    out
-}
-
-/// Projection + forward pass reusing a caller-held arena and output
-/// buffer (the zero-allocation iteration entry point).
-pub fn render_sparse_with(
-    store: &GaussianStore,
-    cam: &Camera,
-    cfg: &RenderConfig,
-    pixels: &SampledPixels,
-    counters: &mut StageCounters,
-    scratch: &mut RenderScratch,
-    out: &mut SparseRender,
-) -> Vec<Projected> {
-    let projected = project_all(store, cam, cfg, counters);
-    render_sparse_projected_with(&projected, cfg, pixels, counters, scratch, out);
-    projected
+    render_sparse_projected_with(&projected, cfg, pixels, counters, &mut scratch, &mut out);
+    (out, projected)
 }
 
 /// Forward pass into caller-held buffers: stage 1 (parallel pixel-level
@@ -706,7 +689,10 @@ pub struct SparseBackward {
     pub grad2d: Vec<Grad2d>,
 }
 
-/// Reverse rasterization + re-projection for the sparse pixel set.
+/// One-shot reverse rasterization + re-projection for the sparse pixel
+/// set: a fresh-arena [`backward_sparse_with`] call (thin test/tool
+/// convenience — iterating callers go through a
+/// [`crate::render::backend::SparseCpuBackend`] session).
 ///
 /// `dl_dcolor` / `dl_ddepth` are per-sampled-pixel loss gradients.
 /// `cache_gamma = true` models the Splatonic Γ/C buffer (no cross-lane
@@ -825,8 +811,9 @@ pub fn backward_sparse_with(
         }
     }
 
-    let (pose, gauss) =
-        geometry_backward(store, cam, projected, &grad2d, cfg, want_pose, want_gauss);
+    let (pose, gauss) = geometry_backward(
+        store, cam, projected, &grad2d, cfg, want_pose, want_gauss, scratch.threads,
+    );
     SparseBackward { pose, gauss, grad2d }
 }
 
@@ -964,7 +951,12 @@ mod tests {
     }
 
     /// scalar test loss: Σ_p w_p·C(p) + v_p·D(p) with fixed weights.
-    fn test_loss(store: &GaussianStore, cam: &Camera, cfg: &RenderConfig, px: &SampledPixels) -> f64 {
+    fn test_loss(
+        store: &GaussianStore,
+        cam: &Camera,
+        cfg: &RenderConfig,
+        px: &SampledPixels,
+    ) -> f64 {
         let mut c = StageCounters::new();
         let (r, _) = render_sparse(store, cam, cfg, px, &mut c);
         let mut loss = 0.0f64;
@@ -1083,7 +1075,14 @@ mod tests {
         let px = full_grid(64, 64, 4);
         let mut c = StageCounters::new();
         let proj = project_all(&store, &cam, &cfg, &mut c);
-        let fresh = render_sparse_projected(&proj, &cfg, &px, &mut c);
+        let fresh = {
+            let mut fresh_scratch = RenderScratch::new();
+            let mut fresh_out = SparseRender::default();
+            render_sparse_projected_with(
+                &proj, &cfg, &px, &mut c, &mut fresh_scratch, &mut fresh_out,
+            );
+            fresh_out
+        };
 
         let mut scratch = RenderScratch::new();
         let mut out = SparseRender::default();

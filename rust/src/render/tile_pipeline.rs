@@ -461,7 +461,7 @@ pub fn backward_dense(
     }
 
     let (pose, gauss) =
-        geometry_backward(store, cam, projected, &grad2d, cfg, want_pose, want_gauss);
+        geometry_backward(store, cam, projected, &grad2d, cfg, want_pose, want_gauss, 0);
     DenseBackward { pose, gauss, grad2d }
 }
 

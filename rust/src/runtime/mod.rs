@@ -11,8 +11,8 @@
 //! the bindings). Enable by vendoring the bindings, declaring them under
 //! `[dependencies]`, and building with `RUSTFLAGS="--cfg splatonic_xla"`.
 //! The default build ships a stub [`XlaRuntime`] with the same surface
-//! that errors at [`XlaRuntime::load`] time, keeping the coordinator's
-//! `Backend::Xla` path compiling everywhere.
+//! that errors at [`XlaRuntime::load`] time, keeping the registry's
+//! `BackendKind::Xla` entry ([`XlaBackend`]) compiling everywhere.
 
 pub mod manifest;
 
@@ -27,10 +27,17 @@ pub use pjrt::XlaRuntime;
 #[cfg(not(splatonic_xla))]
 pub use stub::XlaRuntime;
 
+use crate::gaussian::GaussianStore;
 use crate::math::{Quat, Se3, Vec3};
-use crate::render::backward_geom::PoseGrad;
-use crate::render::pixel_pipeline::SparseRender;
-use crate::render::projection::Projected;
+use crate::render::backend::{
+    BackendKind, BackwardOutput, GradRequest, LossGrads, PixelSet, RenderBackend, RenderJob,
+    RenderOutput,
+};
+use crate::render::backward_geom::{GaussianGrads, PoseGrad};
+use crate::render::pixel_pipeline::{render_sparse_projected_with, RenderScratch, SparseRender};
+use crate::render::projection::{project_all, Projected};
+use crate::render::StageCounters;
+use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 
 /// Outputs of one XLA tracking step.
@@ -79,6 +86,126 @@ pub fn default_artifacts_dir() -> PathBuf {
 /// Convenience: pose from flat [q4|t3] params (mirrors tracking's Adam).
 pub fn pose_from_flat(p: &[f32; 7]) -> Se3 {
     Se3::new(Quat::new(p[0], p[1], p[2], p[3]), Vec3::new(p[4], p[5], p[6]))
+}
+
+/// The PJRT runtime as a [`RenderBackend`] session — the registry's
+/// `BackendKind::Xla` entry. The forward pass runs the Rust sparse
+/// pipeline to *prepare the work* (projection + preemptive α-checked
+/// per-pixel lists, truncated to the artifacts' K) exactly as the L3
+/// coordinator did; `backward()` executes the AOT `track_step` /
+/// `map_step` artifacts, whose compiled graphs fuse the loss with the
+/// gradient (so the caller-computed [`LossGrads`] are not consumed —
+/// `job.frame` is). Without the `splatonic_xla` cfg this wraps the stub
+/// runtime and [`XlaBackend::create`] errors at load.
+pub struct XlaBackend {
+    rt: XlaRuntime,
+    scratch: RenderScratch,
+    out: SparseRender,
+    projected: Vec<Projected>,
+    lists: Vec<Vec<u32>>,
+    rendered: bool,
+}
+
+impl XlaBackend {
+    /// Load the AOT artifacts from [`default_artifacts_dir`].
+    pub fn create() -> Result<Self> {
+        Ok(XlaBackend {
+            rt: XlaRuntime::load(default_artifacts_dir())?,
+            scratch: RenderScratch::new(),
+            out: SparseRender::default(),
+            projected: Vec::new(),
+            lists: Vec::new(),
+            rendered: false,
+        })
+    }
+}
+
+impl RenderBackend for XlaBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Xla
+    }
+
+    fn store_capacity(&self) -> Option<usize> {
+        // the artifacts are compiled for a fixed G
+        Some(self.rt.manifest.g)
+    }
+
+    fn render(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+    ) -> Result<RenderOutput<'_>> {
+        let PixelSet::Sparse(pixels) = job.pixels else {
+            bail!(
+                "the XLA backend executes sparse sample grids only \
+                 (the artifacts are compiled for K-truncated per-pixel lists)"
+            );
+        };
+        let mut counters = StageCounters::new();
+        self.projected = project_all(store, job.cam, job.rcfg, &mut counters);
+        render_sparse_projected_with(
+            &self.projected,
+            job.rcfg,
+            pixels,
+            &mut counters,
+            &mut self.scratch,
+            &mut self.out,
+        );
+        self.lists = store_index_lists(&self.out, &self.projected, self.rt.manifest.k);
+        self.rendered = true;
+        Ok(RenderOutput {
+            colors: &self.out.colors,
+            depths: &self.out.depths,
+            final_t: &self.out.final_t,
+            counters,
+        })
+    }
+
+    fn backward(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+        _grads: LossGrads<'_>,
+        want: GradRequest,
+    ) -> Result<BackwardOutput> {
+        if !self.rendered {
+            bail!("XlaBackend::backward called before render");
+        }
+        let PixelSet::Sparse(pixels) = job.pixels else {
+            bail!("XlaBackend::backward pixel set does not match the last render");
+        };
+        let frame = job.frame.ok_or_else(|| {
+            anyhow!("the XLA artifacts compute the loss in-engine: the job needs a frame")
+        })?;
+        let counters = StageCounters::new();
+        let mut pose = None;
+        let mut gauss = None;
+        if want.pose {
+            let out = self.rt.track_step(store, job.cam, pixels, &self.lists, frame)?;
+            pose = Some(out.pose_grad);
+        }
+        if want.gauss {
+            let (_loss, flat) = self.rt.map_step(store, job.cam, pixels, &self.lists, frame)?;
+            gauss = Some(gauss_grads_from_flat(&flat, store.len()));
+        }
+        Ok(BackwardOutput { pose, gauss, counters })
+    }
+}
+
+/// Unflatten a `map_step` gradient vector (the [`GaussianGrads`] layout:
+/// mean 3 | rot 4 | log-scale 3 | opacity 1 | color 3 per Gaussian).
+fn gauss_grads_from_flat(flat: &[f32], n: usize) -> GaussianGrads {
+    assert_eq!(flat.len(), n * GaussianGrads::PARAMS);
+    let mut g = GaussianGrads::zeros(n);
+    for i in 0..n {
+        let o = i * GaussianGrads::PARAMS;
+        g.mean[i] = Vec3::new(flat[o], flat[o + 1], flat[o + 2]);
+        g.rot[i] = Quat::new(flat[o + 3], flat[o + 4], flat[o + 5], flat[o + 6]);
+        g.log_scale[i] = Vec3::new(flat[o + 7], flat[o + 8], flat[o + 9]);
+        g.opacity_logit[i] = flat[o + 10];
+        g.color[i] = Vec3::new(flat[o + 11], flat[o + 12], flat[o + 13]);
+    }
+    g
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Stub `XlaRuntime` compiled when the `splatonic_xla` cfg is off: the
 //! same surface as the PJRT-backed runtime, erroring at load time. Keeps
-//! `Backend::Xla` call sites compiling in environments without the
-//! `xla_extension` bindings.
+//! the `BackendKind::Xla` registry entry compiling in environments
+//! without the `xla_extension` bindings.
 
 use super::{Manifest, XlaRenderOut, XlaTrackOut};
 use crate::camera::Camera;

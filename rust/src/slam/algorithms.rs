@@ -11,7 +11,8 @@
 
 use super::loss::LossCfg;
 use super::mapping::MappingConfig;
-use super::tracking::{TrackPipeline, TrackingConfig};
+use super::tracking::TrackingConfig;
+use crate::render::backend::BackendKind;
 use crate::sampling::{MappingSamplerConfig, TrackingStrategy};
 
 /// The evaluated 3DGS-SLAM algorithms.
@@ -72,7 +73,8 @@ impl SlamConfig {
                 lr_t: 2e-3 * lr_scale,
                 tile: 16,
                 strategy: TrackingStrategy::Random,
-                pipeline: TrackPipeline::SparsePixel,
+                backend: BackendKind::SparseCpu,
+                full_frame: false,
                 loss: track_loss,
             },
             mapping: MappingConfig {
@@ -86,11 +88,13 @@ impl SlamConfig {
         }
     }
 
-    /// The unmodified dense baseline ("Org."): every pixel, tile pipeline,
-    /// and full-frame mapping (one sample per 1×1 tile = every pixel).
+    /// The unmodified dense baseline ("Org."): every pixel, tile-pipeline
+    /// backend, and full-frame mapping (one sample per 1×1 tile = every
+    /// pixel).
     pub fn baseline(algo: Algorithm) -> Self {
         let mut cfg = Self::splatonic(algo);
-        cfg.tracking.pipeline = TrackPipeline::DenseTile;
+        cfg.tracking.backend = BackendKind::DenseCpu;
+        cfg.tracking.full_frame = true;
         cfg.tracking.tile = 1;
         cfg.mapping.sampler = MappingSamplerConfig {
             tile: 1,
@@ -99,15 +103,15 @@ impl SlamConfig {
             texture_weighted: false,
             ..MappingSamplerConfig::default()
         };
-        cfg.mapping.tile_pipeline = true;
+        cfg.mapping.backend = BackendKind::DenseCpu;
         cfg
     }
 
     /// Sparse sampling on the unmodified tile pipeline ("Org.+S").
     pub fn org_s(algo: Algorithm) -> Self {
         let mut cfg = Self::splatonic(algo);
-        cfg.tracking.pipeline = TrackPipeline::SparseTile;
-        cfg.mapping.tile_pipeline = true;
+        cfg.tracking.backend = BackendKind::DenseCpu;
+        cfg.mapping.backend = BackendKind::DenseCpu;
         cfg
     }
 
@@ -116,6 +120,29 @@ impl SlamConfig {
         self.tracking.iters = ((self.tracking.iters as f32 * budget) as u32).max(2);
         self.mapping.iters = ((self.mapping.iters as f32 * budget) as u32).max(2);
         self
+    }
+
+    /// Reject engine assignments that cannot execute their process, at
+    /// construction instead of erroring mid-run. The K-truncated XLA
+    /// artifacts execute sparse sample grids only, so they can serve
+    /// neither mapping (every invocation opens with a full-frame Γ pass)
+    /// nor the full-frame "Org." tracking baseline.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.mapping.backend == BackendKind::Xla {
+            anyhow::bail!(
+                "mapping cannot run on the XLA backend: its Γ pass renders the full \
+                 frame, which the fixed-K artifacts do not support — use \
+                 map_backend=sparse-cpu or dense-cpu"
+            );
+        }
+        if self.tracking.backend == BackendKind::Xla && self.tracking.full_frame {
+            anyhow::bail!(
+                "full-frame tracking (the dense baseline) cannot run on the XLA \
+                 backend: the fixed-K artifacts execute sparse sample grids only — \
+                 use variant=splatonic/org+s with backend=xla, or a CPU backend"
+            );
+        }
+        Ok(())
     }
 }
 
@@ -140,12 +167,36 @@ mod tests {
     }
 
     #[test]
-    fn variant_pipelines() {
+    fn variant_backends() {
         let a = Algorithm::SplaTam;
-        assert_eq!(SlamConfig::splatonic(a).tracking.pipeline, TrackPipeline::SparsePixel);
-        assert_eq!(SlamConfig::org_s(a).tracking.pipeline, TrackPipeline::SparseTile);
-        assert_eq!(SlamConfig::baseline(a).tracking.pipeline, TrackPipeline::DenseTile);
-        assert_eq!(SlamConfig::baseline(a).tracking.tile, 1);
+        let splatonic = SlamConfig::splatonic(a);
+        assert_eq!(splatonic.tracking.backend, BackendKind::SparseCpu);
+        assert!(!splatonic.tracking.full_frame);
+        let org_s = SlamConfig::org_s(a);
+        assert_eq!(org_s.tracking.backend, BackendKind::DenseCpu);
+        assert!(!org_s.tracking.full_frame);
+        assert_eq!(org_s.mapping.backend, BackendKind::DenseCpu);
+        let baseline = SlamConfig::baseline(a);
+        assert_eq!(baseline.tracking.backend, BackendKind::DenseCpu);
+        assert!(baseline.tracking.full_frame);
+        assert_eq!(baseline.tracking.tile, 1);
+    }
+
+    #[test]
+    fn xla_backend_rejected_for_full_frame_processes() {
+        let mut cfg = SlamConfig::splatonic(Algorithm::SplaTam);
+        assert!(cfg.validate().is_ok());
+        cfg.mapping.backend = BackendKind::Xla;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = SlamConfig::baseline(Algorithm::SplaTam);
+        assert!(cfg.validate().is_ok());
+        cfg.tracking.backend = BackendKind::Xla;
+        assert!(cfg.validate().is_err(), "full-frame tracking on XLA must be rejected");
+        // sparse tracking on XLA is a valid configuration
+        cfg.tracking.full_frame = false;
+        cfg.mapping.backend = BackendKind::SparseCpu;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -78,8 +78,24 @@ pub struct SparseLoss {
 
 /// L1 color + masked L1 depth over the sampled pixels, normalized by the
 /// sample count so loss magnitudes are comparable across sampling rates.
+/// Thin delegate of [`sample_loss`] for callers holding a
+/// [`SparseRender`].
 pub fn sparse_loss(
     render: &SparseRender,
+    pixels: &SampledPixels,
+    frame: &Frame,
+    cfg: &LossCfg,
+) -> SparseLoss {
+    sample_loss(&render.colors, &render.depths, &render.final_t, pixels, frame, cfg)
+}
+
+/// [`sparse_loss`] over raw per-sample slices — the form the
+/// backend-agnostic SLAM loop computes from a
+/// [`crate::render::backend::RenderOutput`].
+pub fn sample_loss(
+    colors: &[Vec3],
+    depths: &[f32],
+    final_t: &[f32],
     pixels: &SampledPixels,
     frame: &Frame,
     cfg: &LossCfg,
@@ -95,13 +111,13 @@ pub fn sparse_loss(
         cfg,
         pixels.pixels.iter().enumerate().filter_map(|(i, &(x, y))| {
             let rd = frame.depth.get(x, y);
-            (rd > 0.0 && render.final_t[i] <= cfg.sil_mask_t)
-                .then(|| (render.depths[i] - rd).abs())
+            (rd > 0.0 && final_t[i] <= cfg.sil_mask_t)
+                .then(|| (depths[i] - rd).abs())
         }),
     );
 
     for (i, &(x, y)) in pixels.pixels.iter().enumerate() {
-        if render.final_t[i] > cfg.sil_mask_t {
+        if final_t[i] > cfg.sil_mask_t {
             // silhouette-masked: ray not sufficiently explained
             dl_dcolor.push(Vec3::ZERO);
             dl_ddepth.push(0.0);
@@ -110,8 +126,8 @@ pub fn sparse_loss(
         }
         let ref_c = frame.rgb.get(x, y);
         let ref_d = frame.depth.get(x, y);
-        let c = render.colors[i];
-        let d = render.depths[i];
+        let c = colors[i];
+        let d = depths[i];
 
         let dc = c - ref_c;
         let (lx, gx) = huber(dc.x, cfg.huber_c);
@@ -157,41 +173,57 @@ fn depth_outlier_cut(cfg: &LossCfg, residuals: impl Iterator<Item = f32>) -> f32
 }
 
 /// Dense (full-frame) variant of [`sparse_loss`] for the tile-based
-/// baseline: L1 color + masked L1 depth over every pixel.
+/// baseline: L1 color + masked L1 depth over every pixel. Thin delegate
+/// of [`full_frame_loss`].
 pub fn dense_loss(
     render: &crate::render::tile_pipeline::DenseRender,
     frame: &Frame,
     cfg: &LossCfg,
 ) -> (f32, Vec<Vec3>, Vec<f32>) {
-    let n = render.image.n_pixels().max(1) as f32;
+    full_frame_loss(&render.image.data, &render.depth.data, &render.final_t.data, frame, cfg)
+}
+
+/// [`dense_loss`] over raw row-major full-frame slices — the form the
+/// backend-agnostic SLAM loop computes from a full-frame
+/// [`crate::render::backend::RenderOutput`].
+pub fn full_frame_loss(
+    colors: &[Vec3],
+    depths: &[f32],
+    final_t: &[f32],
+    frame: &Frame,
+    cfg: &LossCfg,
+) -> (f32, Vec<Vec3>, Vec<f32>) {
+    let n_px = colors.len();
+    assert_eq!(n_px, frame.rgb.data.len(), "full-frame loss needs every pixel");
+    let n = n_px.max(1) as f32;
     let inv_n = 1.0 / n;
     let mut value = 0.0f32;
-    let mut dl_dcolor = Vec::with_capacity(render.image.n_pixels());
-    let mut dl_ddepth = Vec::with_capacity(render.image.n_pixels());
+    let mut dl_dcolor = Vec::with_capacity(n_px);
+    let mut dl_ddepth = Vec::with_capacity(n_px);
 
     let depth_cut = depth_outlier_cut(
         cfg,
-        (0..render.image.n_pixels()).filter_map(|i| {
+        (0..n_px).filter_map(|i| {
             let rd = frame.depth.data[i];
-            (rd > 0.0 && render.final_t.data[i] <= cfg.sil_mask_t)
-                .then(|| (render.depth.data[i] - rd).abs())
+            (rd > 0.0 && final_t[i] <= cfg.sil_mask_t)
+                .then(|| (depths[i] - rd).abs())
         }),
     );
-    for i in 0..render.image.n_pixels() {
-        if render.final_t.data[i] > cfg.sil_mask_t {
+    for i in 0..n_px {
+        if final_t[i] > cfg.sil_mask_t {
             dl_dcolor.push(Vec3::ZERO);
             dl_ddepth.push(0.0);
             continue;
         }
-        let dc = render.image.data[i] - frame.rgb.data[i];
+        let dc = colors[i] - frame.rgb.data[i];
         let (lx, gx) = huber(dc.x, cfg.huber_c);
         let (ly, gy) = huber(dc.y, cfg.huber_c);
         let (lz, gz) = huber(dc.z, cfg.huber_c);
         let l_c = (lx + ly + lz) / 3.0;
         dl_dcolor.push(Vec3::new(gx, gy, gz) * (cfg.color_w * inv_n / 3.0));
         let ref_d = frame.depth.data[i];
-        let (l_d, gd) = if ref_d > 0.0 && (render.depth.data[i] - ref_d).abs() <= depth_cut {
-            let (ld, gdv) = huber(render.depth.data[i] - ref_d, cfg.huber_d);
+        let (l_d, gd) = if ref_d > 0.0 && (depths[i] - ref_d).abs() <= depth_cut {
+            let (ld, gdv) = huber(depths[i] - ref_d, cfg.huber_d);
             (ld, gdv * cfg.depth_w * inv_n)
         } else {
             (0.0, 0.0)

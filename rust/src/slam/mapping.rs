@@ -1,24 +1,27 @@
 //! Mapping: map reconstruction (paper Sec. II-A).
 //!
-//! Every N frames: run one dense forward pass to obtain the final
-//! transmittance Γ (the unseen test of Eqn. 2), densify the map with new
-//! Gaussians back-projected from unseen/under-covered pixels, then run
-//! `S_m` optimization iterations over the mapping pixel set (unseen +
-//! texture-weighted, Sec. IV-A) updating Gaussian parameters with Adam,
-//! and finally prune degenerate Gaussians.
+//! Every N frames: run one full-frame forward pass through the mapping
+//! [`RenderBackend`] to obtain the final transmittance Γ (the unseen test
+//! of Eqn. 2), densify the map with new Gaussians back-projected from
+//! unseen/under-covered pixels, then run `S_m` optimization iterations
+//! over the mapping pixel set (unseen + texture-weighted, Sec. IV-A)
+//! updating Gaussian parameters with Adam, and finally prune degenerate
+//! Gaussians.
 
-use super::loss::{sparse_loss, LossCfg};
+use super::loss::{sample_loss, LossCfg};
 use crate::camera::Camera;
 use crate::dataset::Frame;
 use crate::gaussian::{Adam, Gaussian, GaussianStore};
 use crate::math::{Pcg32, Vec2};
-use crate::render::backward_geom::{flatten_params, unflatten_params, GaussianGrads};
-use crate::render::pixel_pipeline::{
-    backward_sparse_with, render_sparse_with, RenderScratch, SampledPixels, SparseRender,
+use crate::render::backend::{
+    BackendKind, GradRequest, LossGrads, PixelSet, RenderBackend, RenderJob,
 };
-use crate::render::tile_pipeline::render_dense;
+use crate::render::backward_geom::{flatten_params, unflatten_params, GaussianGrads};
+use crate::render::image::Plane;
+use crate::render::pixel_pipeline::SampledPixels;
 use crate::render::{RenderConfig, StageCounters};
 use crate::sampling::{sample_mapping, MappingSamplerConfig};
+use anyhow::{Context, Result};
 
 /// Mapping configuration.
 #[derive(Clone, Copy, Debug)]
@@ -37,10 +40,26 @@ pub struct MappingConfig {
     pub densify_stride: u32,
     pub prune_opacity: f32,
     pub prune_scale: f32,
-    /// Execute the optimization iterations on the unmodified tile-based
-    /// pipeline (the dense/Org.+S baselines) instead of the pixel-based
-    /// one. Numerics are identical; the work stream differs.
-    pub tile_pipeline: bool,
+    /// Which rendering engine executes the mapping passes. `DenseCpu`
+    /// models the dense/Org.+S baselines on the unmodified tile pipeline;
+    /// `SparseCpu` is Splatonic's pixel-based pipeline. Numerics agree to
+    /// render tolerance; the counted work stream differs.
+    pub backend: BackendKind,
+}
+
+impl MappingConfig {
+    /// This config with densification capped so the store keeps fitting a
+    /// capacity-bounded tracking engine (AOT artifacts are compiled for a
+    /// fixed G; the 256-slot headroom mirrors the runtime tests). Pass
+    /// the tracking backend's `store_capacity()` — `None` leaves the
+    /// budget unchanged.
+    pub fn capped_for(&self, capacity: Option<usize>, store_len: usize) -> MappingConfig {
+        let mut cfg = *self;
+        if let Some(g) = capacity {
+            cfg.max_new = cfg.max_new.min(g.saturating_sub(store_len + 256));
+        }
+        cfg
+    }
 }
 
 impl Default for MappingConfig {
@@ -55,7 +74,7 @@ impl Default for MappingConfig {
             densify_stride: 1,
             prune_opacity: 0.005,
             prune_scale: 3.0,
-            tile_pipeline: false,
+            backend: BackendKind::SparseCpu,
         }
     }
 }
@@ -85,12 +104,15 @@ fn lr_scale(i: usize) -> f32 {
     }
 }
 
-/// One mapping invocation at the (fixed) pose of `frame`.
+/// One mapping invocation at the (fixed) pose of `frame`, rendering
+/// through `backend` (whose session scratch is reused across the `S_m`
+/// iterations and across invocations when the caller holds the session).
 ///
 /// `adam` must have `store.len() * 14` entries; it is grown/compacted in
 /// step with densification and pruning so optimizer state survives.
 #[allow(clippy::too_many_arguments)]
 pub fn map_update(
+    backend: &mut dyn RenderBackend,
     store: &mut GaussianStore,
     adam: &mut Adam,
     cam: &Camera,
@@ -99,11 +121,20 @@ pub fn map_update(
     rcfg: &RenderConfig,
     rng: &mut Pcg32,
     counters: &mut StageCounters,
-) -> MappingStats {
+) -> Result<MappingStats> {
     let mut stats = MappingStats::default();
+    let (w, h) = (cam.intr.width, cam.intr.height);
 
-    // ---- first forward pass (dense, once per mapping — Sec. IV-A) ----
-    let (dense, _) = render_dense(store, cam, rcfg, counters);
+    // ---- first forward pass (full frame, once per mapping — Sec. IV-A):
+    // Γ from the pre-densify geometry drives both densification and the
+    // sampler's unseen set for this invocation (the paper computes Γ once
+    // per mapping)
+    let gamma: Plane = {
+        let job = RenderJob { cam, pixels: PixelSet::Full, rcfg, frame: Some(frame) };
+        let out = backend.render(store, &job).context("mapping Γ pass failed")?;
+        counters.merge(&out.counters);
+        Plane { width: w, height: h, data: out.final_t.to_vec() }
+    };
 
     // ---- densification from unseen / depth-uncovered pixels ----------
     let mut added = 0usize;
@@ -113,7 +144,7 @@ pub fn map_update(
             if added >= cfg.max_new {
                 break 'outer;
             }
-            let unseen = dense.final_t.get(x, y) > cfg.sampler.unseen_t;
+            let unseen = gamma.get(x, y) > cfg.sampler.unseen_t;
             let d_ref = frame.depth.get(x, y);
             if !unseen || d_ref <= 0.0 {
                 continue;
@@ -138,15 +169,8 @@ pub fn map_update(
     stats.added = added;
 
     // ---- sampled optimization iterations ------------------------------
-    // hot-path arena + render buffers reused across the S_m iterations
-    let mut scratch = RenderScratch::new();
-    let mut render_buf = SparseRender::default();
     for it in 0..cfg.iters {
-        // Γ from the latest geometry: reuse the pre-densify dense pass
-        // for iteration 0 (the paper computes Γ once per mapping) —
-        // afterwards the unseen set is whatever densification left.
-        let pixels: SampledPixels =
-            sample_mapping(&cfg.sampler, &frame.rgb, &dense.final_t, rng);
+        let pixels: SampledPixels = sample_mapping(&cfg.sampler, &frame.rgb, &gamma, rng);
         if pixels.is_empty() {
             break;
         }
@@ -155,38 +179,30 @@ pub fn map_update(
             stats.unseen_pixels = pixels
                 .pixels
                 .iter()
-                .filter(|&&(x, y)| dense.final_t.get(x, y) > cfg.sampler.unseen_t)
+                .filter(|&&(x, y)| gamma.get(x, y) > cfg.sampler.unseen_t)
                 .count();
         }
 
-        let bwd = if cfg.tile_pipeline {
-            let projected =
-                crate::render::projection::project_all(store, cam, rcfg, counters);
-            let render = crate::render::tile_pipeline::render_org_s(
-                &projected, cam, rcfg, &pixels, counters,
-            );
-            let loss = sparse_loss(&render, &pixels, frame, &cfg.loss);
-            if it == 0 {
-                stats.first_loss = loss.value;
-            }
-            stats.final_loss = loss.value;
-            crate::render::tile_pipeline::backward_org_s_with(
-                store, cam, rcfg, &projected, &render, &pixels, &loss.dl_dcolor,
-                &loss.dl_ddepth, false, true, counters, &mut scratch,
-            )
-        } else {
-            let projected =
-                render_sparse_with(store, cam, rcfg, &pixels, counters, &mut scratch, &mut render_buf);
-            let loss = sparse_loss(&render_buf, &pixels, frame, &cfg.loss);
-            if it == 0 {
-                stats.first_loss = loss.value;
-            }
-            stats.final_loss = loss.value;
-            backward_sparse_with(
-                store, cam, rcfg, &projected, &render_buf, &pixels, &loss.dl_dcolor,
-                &loss.dl_ddepth, true, false, true, counters, &mut scratch,
-            )
+        let job = RenderJob { cam, pixels: PixelSet::Sparse(&pixels), rcfg, frame: Some(frame) };
+        let loss = {
+            let out = backend.render(store, &job).context("mapping render failed")?;
+            counters.merge(&out.counters);
+            sample_loss(out.colors, out.depths, out.final_t, &pixels, frame, &cfg.loss)
         };
+        if it == 0 {
+            stats.first_loss = loss.value;
+        }
+        stats.final_loss = loss.value;
+        let bwd = backend
+            .backward(
+                store,
+                &job,
+                LossGrads { dl_dcolor: &loss.dl_dcolor, dl_ddepth: &loss.dl_ddepth },
+                GradRequest::gauss(),
+            )
+            .context("mapping backward failed")?;
+        counters.merge(&bwd.counters);
+
         let grads = bwd.gauss.expect("gauss grads requested").flatten();
         let mut params = flatten_params(store);
         let base_lr = cfg.lr;
@@ -209,7 +225,7 @@ pub fn map_update(
         adam.compact(&keep, GaussianGrads::PARAMS);
     }
     stats.pruned = pruned;
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -217,6 +233,8 @@ mod tests {
     use super::*;
     use crate::dataset::{Flavor, SyntheticDataset};
     use crate::gaussian::AdamConfig;
+    use crate::render::backend::create_backend;
+    use crate::render::tile_pipeline::render_dense;
 
     /// Mapping from an empty store must reconstruct enough to drop Γ.
     #[test]
@@ -227,11 +245,14 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 5, max_new: 3000, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(1);
         let mut c = StageCounters::new();
         let stats = map_update(
-            &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
-        );
+            backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg,
+            &RenderConfig::default(), &mut rng, &mut c,
+        )
+        .unwrap();
         assert!(stats.added > 200, "added {}", stats.added);
         assert_eq!(adam.len(), store.len() * GaussianGrads::PARAMS);
 
@@ -253,11 +274,14 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 12, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(2);
         let mut c = StageCounters::new();
         let stats = map_update(
-            &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
-        );
+            backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg,
+            &RenderConfig::default(), &mut rng, &mut c,
+        )
+        .unwrap();
         assert!(
             stats.final_loss < stats.first_loss,
             "{} -> {}",
@@ -275,11 +299,14 @@ mod tests {
         let n0 = store.len();
         let mut adam = Adam::new(n0 * GaussianGrads::PARAMS, AdamConfig::default());
         let cfg = MappingConfig { iters: 2, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(3);
         let mut c = StageCounters::new();
         let stats = map_update(
-            &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
-        );
+            backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg,
+            &RenderConfig::default(), &mut rng, &mut c,
+        )
+        .unwrap();
         // GT map already explains the frame: few unseen pixels
         assert!(
             stats.added < n0 / 10,
@@ -290,6 +317,30 @@ mod tests {
     }
 
     #[test]
+    fn tile_backend_mapping_also_converges() {
+        // the Org./Org.+S baselines run mapping on the tile pipeline —
+        // same math, different work stream
+        let data = SyntheticDataset::generate(Flavor::Replica, 1, 48, 32, 1);
+        let frame = &data.frames[0];
+        let cam = Camera::new(data.intr, frame.gt_w2c);
+        let mut store = GaussianStore::new();
+        let mut adam = Adam::new(0, AdamConfig::default());
+        let cfg = MappingConfig { iters: 4, backend: BackendKind::DenseCpu, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut rng = Pcg32::new(5);
+        let mut c = StageCounters::new();
+        let stats = map_update(
+            backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg,
+            &RenderConfig::default(), &mut rng, &mut c,
+        )
+        .unwrap();
+        assert!(stats.added > 0);
+        assert!(stats.final_loss <= stats.first_loss * 1.05);
+        // tile-pipeline work stream: α-checks happen inside rasterization
+        assert!(c.raster_exp_evals > 0);
+    }
+
+    #[test]
     fn adam_state_tracks_store_len_through_prune() {
         let data = SyntheticDataset::generate(Flavor::Replica, 3, 48, 32, 1);
         let frame = &data.frames[0];
@@ -297,13 +348,15 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 3, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(4);
         let mut c = StageCounters::new();
         for _ in 0..2 {
             let _ = map_update(
-                &mut store, &mut adam, &cam, frame, &cfg, &RenderConfig::default(), &mut rng,
-                &mut c,
-            );
+                backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg,
+                &RenderConfig::default(), &mut rng, &mut c,
+            )
+            .unwrap();
             assert_eq!(adam.len(), store.len() * GaussianGrads::PARAMS);
         }
     }

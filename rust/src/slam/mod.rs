@@ -10,8 +10,8 @@ pub mod system;
 pub mod tracking;
 
 pub use algorithms::{Algorithm, SlamConfig};
-pub use loss::{sparse_loss, LossCfg, SparseLoss};
+pub use loss::{full_frame_loss, sample_loss, sparse_loss, LossCfg, SparseLoss};
 pub use mapping::{MappingConfig, MappingStats};
 pub use metrics::{ate_rmse, psnr_over_sequence};
-pub use system::{PipelineMode, SlamStats, SlamSystem};
+pub use system::{SlamStats, SlamSystem};
 pub use tracking::{TrackingConfig, TrackingStats};

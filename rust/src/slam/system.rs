@@ -1,6 +1,13 @@
 //! The complete SLAM system: per-frame tracking, periodic mapping with
 //! the T_t → M_t dependency (paper Fig. 2), constant-velocity pose
 //! prediction, and per-process work accounting for the simulators.
+//!
+//! The system is **backend-agnostic**: it holds one
+//! [`RenderBackend`] session for tracking and one for mapping
+//! (constructed from the [`crate::render::BackendKind`]s in
+//! [`SlamConfig`] via the registry), so the same loop runs the dense
+//! baseline, Splatonic's sparse pipeline, or the PJRT-executed AOT
+//! artifacts.
 
 use super::algorithms::SlamConfig;
 use super::mapping::{map_update, MappingStats};
@@ -10,16 +17,10 @@ use crate::camera::{Camera, Intrinsics};
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::math::{Pcg32, Se3};
+use crate::render::backend::{create_backend, RenderBackend};
 use crate::render::backward_geom::GaussianGrads;
 use crate::render::{RenderConfig, StageCounters};
-
-/// Which compute path executes tracking/mapping math (CPU = pure Rust;
-/// the XLA path is wired in the coordinator where the PJRT runtime
-/// executes the AOT artifacts).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PipelineMode {
-    Cpu,
-}
+use anyhow::Result;
 
 /// End-of-run summary.
 #[derive(Clone, Debug)]
@@ -42,6 +43,10 @@ pub struct SlamSystem {
     pub intr: Intrinsics,
     pub store: GaussianStore,
     adam: Adam,
+    /// Tracking render session (reused across frames).
+    track_backend: Box<dyn RenderBackend>,
+    /// Mapping render session (reused across invocations).
+    map_backend: Box<dyn RenderBackend>,
     pub est_poses: Vec<Se3>,
     prev_rel: Se3,
     rng: Pcg32,
@@ -57,13 +62,22 @@ pub struct SlamSystem {
 }
 
 impl SlamSystem {
-    pub fn new(cfg: SlamConfig, intr: Intrinsics) -> Self {
-        SlamSystem {
+    /// Construct the system, building both backend sessions from the
+    /// config's [`crate::render::BackendKind`]s through the registry.
+    /// Errs when the config assigns a backend that cannot execute its
+    /// process (see [`SlamConfig::validate`]) or a backend cannot be
+    /// constructed (the XLA stub without artifacts/bindings); the CPU
+    /// backends are infallible.
+    pub fn try_new(cfg: SlamConfig, intr: Intrinsics) -> Result<Self> {
+        cfg.validate()?;
+        Ok(SlamSystem {
             cfg,
             rcfg: RenderConfig::default(),
             intr,
             store: GaussianStore::new(),
             adam: Adam::new(0, AdamConfig::default()),
+            track_backend: create_backend(cfg.tracking.backend)?,
+            map_backend: create_backend(cfg.mapping.backend)?,
             est_poses: Vec::new(),
             prev_rel: Se3::IDENTITY,
             rng: Pcg32::new(cfg.seed),
@@ -74,7 +88,13 @@ impl SlamSystem {
             track_stats: Vec::new(),
             map_stats: Vec::new(),
             frame_idx: 0,
-        }
+        })
+    }
+
+    /// [`Self::try_new`] for CPU-backend configs (panics if a backend
+    /// cannot be constructed — only possible for `BackendKind::Xla`).
+    pub fn new(cfg: SlamConfig, intr: Intrinsics) -> Self {
+        Self::try_new(cfg, intr).expect("backend construction failed")
     }
 
     /// Constant-velocity prediction: apply the previous relative motion.
@@ -85,10 +105,18 @@ impl SlamSystem {
         }
     }
 
+    /// Mapping config for this invocation: growth capped so the store
+    /// always fits a capacity-bounded tracking engine.
+    fn capped_mapping(&self) -> super::mapping::MappingConfig {
+        self.cfg
+            .mapping
+            .capped_for(self.track_backend.store_capacity(), self.store.len())
+    }
+
     /// Process one frame: track (except frame 0, which is the anchor and
     /// is bootstrapped by mapping), then map every `cfg.mapping.every`
     /// frames — mapping at t strictly after tracking at t (Fig. 2).
-    pub fn process_frame(&mut self, frame: &Frame) {
+    pub fn process_frame(&mut self, frame: &Frame) -> Result<()> {
         let idx = self.frame_idx;
         self.frame_idx += 1;
 
@@ -96,27 +124,30 @@ impl SlamSystem {
             // anchor: ground-truth first pose (standard SLAM convention)
             self.est_poses.push(frame.gt_w2c);
             let cam = Camera::new(self.intr, frame.gt_w2c);
+            let map_cfg = self.capped_mapping();
             let mut c = StageCounters::new();
             let stats = map_update(
+                self.map_backend.as_mut(),
                 &mut self.store,
                 &mut self.adam,
                 &cam,
                 frame,
-                &self.cfg.mapping,
+                &map_cfg,
                 &self.rcfg,
                 &mut self.rng,
                 &mut c,
-            );
+            )?;
             self.map_counters.merge(&c);
             self.per_map.push(c);
             self.map_stats.push(stats);
-            return;
+            return Ok(());
         }
 
         // ---- tracking (every frame) ----
         let init = self.predict_pose();
         let mut c = StageCounters::new();
         let (pose, tstats) = track_frame(
+            self.track_backend.as_mut(),
             &self.store,
             self.intr,
             init,
@@ -125,7 +156,7 @@ impl SlamSystem {
             &self.rcfg,
             &mut self.rng,
             &mut c,
-        );
+        )?;
         self.track_counters.merge(&c);
         self.per_frame_track.push(c);
         self.track_stats.push(tstats);
@@ -137,32 +168,35 @@ impl SlamSystem {
         // ---- mapping (every N frames, after tracking — Fig. 2) ----
         if idx % self.cfg.mapping.every == 0 {
             let cam = Camera::new(self.intr, pose);
+            let map_cfg = self.capped_mapping();
             let mut c = StageCounters::new();
             let stats = map_update(
+                self.map_backend.as_mut(),
                 &mut self.store,
                 &mut self.adam,
                 &cam,
                 frame,
-                &self.cfg.mapping,
+                &map_cfg,
                 &self.rcfg,
                 &mut self.rng,
                 &mut c,
-            );
+            )?;
             self.map_counters.merge(&c);
             self.per_map.push(c);
             self.map_stats.push(stats);
         }
 
         debug_assert_eq!(self.adam.len(), self.store.len() * GaussianGrads::PARAMS);
+        Ok(())
     }
 
     /// Run over a whole dataset and evaluate.
-    pub fn run(cfg: SlamConfig, data: &SyntheticDataset) -> SlamStats {
-        let mut sys = SlamSystem::new(cfg, data.intr);
+    pub fn run(cfg: SlamConfig, data: &SyntheticDataset) -> Result<SlamStats> {
+        let mut sys = SlamSystem::try_new(cfg, data.intr)?;
         for frame in &data.frames {
-            sys.process_frame(frame);
+            sys.process_frame(frame)?;
         }
-        sys.evaluate(data)
+        Ok(sys.evaluate(data))
     }
 
     /// Evaluate against ground truth.
@@ -205,7 +239,7 @@ mod tests {
     fn quick_run(budget: f32) -> (SlamStats, SyntheticDataset) {
         let data = SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, 9);
         let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(budget);
-        let stats = SlamSystem::run(cfg, &data);
+        let stats = SlamSystem::run(cfg, &data).unwrap();
         (stats, data)
     }
 
@@ -231,8 +265,9 @@ mod tests {
             + stats.track_counters.bwd_pairs_iterated;
         let map_pairs =
             stats.map_counters.raster_pairs_iterated + stats.map_counters.bwd_pairs_iterated;
-        // mapping includes a dense first pass, so compare *optimization*
-        // totals: tracking runs every frame with many iterations
+        // mapping includes a full-frame first pass, so compare
+        // *optimization* totals: tracking runs every frame with many
+        // iterations
         assert!(track_pairs > 0 && map_pairs > 0);
     }
 
@@ -240,8 +275,8 @@ mod tests {
     fn deterministic_runs() {
         let data = SyntheticDataset::generate(Flavor::Replica, 1, 48, 32, 5);
         let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.5);
-        let a = SlamSystem::run(cfg, &data);
-        let b = SlamSystem::run(cfg, &data);
+        let a = SlamSystem::run(cfg, &data).unwrap();
+        let b = SlamSystem::run(cfg, &data).unwrap();
         assert_eq!(a.ate_rmse_m, b.ate_rmse_m);
         assert_eq!(a.n_gaussians, b.n_gaussians);
     }
@@ -252,12 +287,26 @@ mod tests {
         let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
         let mut sys = SlamSystem::new(cfg, data.intr);
         for f in &data.frames {
-            sys.process_frame(f);
+            sys.process_frame(f).unwrap();
         }
         assert_eq!(sys.per_frame_track.len(), 4); // frames 1..4
         assert_eq!(sys.per_map.len(), 2); // frames 0 and 4
         for c in &sys.per_frame_track {
             assert!(c.raster_pairs_iterated > 0);
         }
+    }
+
+    #[test]
+    fn baseline_variant_runs_on_tile_backend() {
+        // the dense "Org." profile executes end to end through the
+        // DenseCpu sessions
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 32, 24, 3);
+        let mut cfg = SlamConfig::baseline(Algorithm::FlashSlam).scaled(0.3);
+        cfg.mapping.every = 2;
+        let stats = SlamSystem::run(cfg, &data).unwrap();
+        assert_eq!(stats.frames, 3);
+        assert!(stats.n_gaussians > 0);
+        // tile pipeline work stream: α-checks inside rasterization
+        assert!(stats.track_counters.raster_exp_evals > 0);
     }
 }

@@ -1,37 +1,27 @@
 //! Tracking: per-frame camera pose optimization (paper Sec. II-A).
 //!
-//! Fixes the map `{G_i}`, renders at the current pose estimate, and
-//! back-propagates the photometric+depth loss into the w2c pose
-//! (unnormalized quaternion + translation), Adam-stepped for `S_t`
-//! iterations. Supports the three pipeline variants the paper compares:
-//! dense tile-based ("Org."), sparse-on-tile ("Org.+S"), and the
-//! pixel-based sparse pipeline (Splatonic).
+//! Fixes the map `{G_i}`, renders at the current pose estimate through a
+//! [`RenderBackend`] session, and back-propagates the photometric+depth
+//! loss into the w2c pose (unnormalized quaternion + translation),
+//! Adam-stepped for `S_t` iterations. The three pipeline variants the
+//! paper compares are backend × pixel-set choices: dense tile-based
+//! ("Org." — [`crate::render::BackendKind::DenseCpu`] + full frame),
+//! sparse-on-tile ("Org.+S" — `DenseCpu` + sample grid), and the
+//! pixel-based sparse pipeline (Splatonic —
+//! [`crate::render::BackendKind::SparseCpu`] + sample grid).
 
-use super::loss::{sparse_loss, LossCfg};
+use super::loss::{full_frame_loss, sample_loss, LossCfg};
 use crate::camera::Camera;
 use crate::dataset::Frame;
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::math::{Pcg32, Quat, Se3, Vec3};
-use crate::render::pixel_pipeline::{
-    backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
-    SparseRender,
+use crate::render::backend::{
+    BackendKind, GradRequest, LossGrads, PixelSet, RenderBackend, RenderJob,
 };
-use crate::render::projection::project_all;
-use crate::render::tile_pipeline::{backward_org_s_with, render_org_s};
+use crate::render::pixel_pipeline::SampledPixels;
 use crate::render::{RenderConfig, StageCounters};
 use crate::sampling::{sample_tracking, TrackingStrategy};
-
-/// Which rendering pipeline executes the iteration (determines the work
-/// stream fed to the simulators; numerics are identical by construction).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum TrackPipeline {
-    /// Dense tile-based rendering of every pixel ("Org.").
-    DenseTile,
-    /// Sparse sampling on the tile pipeline ("Org.+S").
-    SparseTile,
-    /// Sparse sampling on the pixel-based pipeline (Splatonic).
-    SparsePixel,
-}
+use anyhow::{Context, Result};
 
 /// Tracking configuration.
 #[derive(Clone, Copy, Debug)]
@@ -42,7 +32,13 @@ pub struct TrackingConfig {
     /// w_t: tracking sample tile (16 ⇒ 256× pixel reduction).
     pub tile: u32,
     pub strategy: TrackingStrategy,
-    pub pipeline: TrackPipeline,
+    /// Which rendering engine executes the iterations (determines the
+    /// work stream fed to the simulators; numerics are identical across
+    /// the CPU backends by construction).
+    pub backend: BackendKind,
+    /// Render every pixel each iteration (the dense "Org." baseline)
+    /// instead of a sparse sample grid.
+    pub full_frame: bool,
     pub loss: LossCfg,
 }
 
@@ -54,7 +50,8 @@ impl Default for TrackingConfig {
             lr_t: 2e-3,
             tile: 16,
             strategy: TrackingStrategy::Random,
-            pipeline: TrackPipeline::SparsePixel,
+            backend: BackendKind::SparseCpu,
+            full_frame: false,
             loss: LossCfg::tracking(),
         }
     }
@@ -70,8 +67,13 @@ pub struct TrackingStats {
 }
 
 /// Optimize the pose of `frame` starting from `init` (constant-velocity
-/// prediction supplied by the system). Returns the refined pose.
+/// prediction supplied by the system), rendering through `backend`.
+/// The session's scratch is reused across all `S_t` iterations — and
+/// across frames when the caller (the SLAM system) holds the session.
+/// Returns the refined pose.
+#[allow(clippy::too_many_arguments)]
 pub fn track_frame(
+    backend: &mut dyn RenderBackend,
     store: &GaussianStore,
     intr: crate::camera::Intrinsics,
     init: Se3,
@@ -80,65 +82,63 @@ pub fn track_frame(
     rcfg: &RenderConfig,
     rng: &mut Pcg32,
     counters: &mut StageCounters,
-) -> (Se3, TrackingStats) {
+) -> Result<(Se3, TrackingStats)> {
     let mut pose = init;
     let mut adam = Adam::new(7, AdamConfig::with_lr(1.0));
     let mut first_loss = 0.0f32;
     let mut final_loss = 0.0f32;
     let mut pixels_per_iter = 0usize;
     let mut prev_loss_map: Option<crate::render::image::Plane> = None;
-    // hot-path arena + render buffers, reused across all S_t iterations:
-    // steady-state iterations make zero per-pixel heap allocations
-    let mut scratch = RenderScratch::new();
-    let mut render = SparseRender::default();
 
     for it in 0..cfg.iters {
         let cam = Camera::new(intr, pose);
-        let projected = project_all(store, &cam, rcfg, counters);
 
-        // forward + loss + backward on the configured pipeline
-        let (pg, loss_value, n_px) = match cfg.pipeline {
-            TrackPipeline::DenseTile => {
-                // "Org.": full-frame tile-based rendering, every iteration
-                let dr = crate::render::tile_pipeline::render_dense_projected(
-                    &projected, &cam, rcfg, counters,
-                );
-                let (value, dldc, dldd) = super::loss::dense_loss(&dr, frame, &cfg.loss);
-                let db = crate::render::tile_pipeline::backward_dense(
-                    store, &cam, rcfg, &projected, &dr, &dldc, &dldd, true, false, counters,
-                );
-                (db.pose.expect("pose grad"), value, intr.n_pixels())
+        // forward + loss + backward through the configured backend
+        let (pg, loss_value, n_px) = if cfg.full_frame {
+            // "Org.": every pixel, every iteration
+            let job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg, frame: Some(frame) };
+            let (value, dldc, dldd) = {
+                let out = backend.render(store, &job).context("tracking render failed")?;
+                counters.merge(&out.counters);
+                full_frame_loss(out.colors, out.depths, out.final_t, frame, &cfg.loss)
+            };
+            let bwd = backend
+                .backward(
+                    store,
+                    &job,
+                    LossGrads { dl_dcolor: &dldc, dl_ddepth: &dldd },
+                    GradRequest::pose(),
+                )
+                .context("tracking backward failed")?;
+            counters.merge(&bwd.counters);
+            (bwd.pose.expect("pose grad"), value, intr.n_pixels())
+        } else {
+            let pixels =
+                sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, prev_loss_map.as_ref(), rng);
+            let job = RenderJob {
+                cam: &cam,
+                pixels: PixelSet::Sparse(&pixels),
+                rcfg,
+                frame: Some(frame),
+            };
+            let l = {
+                let out = backend.render(store, &job).context("tracking render failed")?;
+                counters.merge(&out.counters);
+                sample_loss(out.colors, out.depths, out.final_t, &pixels, frame, &cfg.loss)
+            };
+            if cfg.strategy == TrackingStrategy::LossTile {
+                prev_loss_map = Some(loss_map(intr, &pixels, &l));
             }
-            TrackPipeline::SparseTile => {
-                let pixels =
-                    sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, prev_loss_map.as_ref(), rng);
-                let r = render_org_s(&projected, &cam, rcfg, &pixels, counters);
-                let l = sparse_loss(&r, &pixels, frame, &cfg.loss);
-                if cfg.strategy == TrackingStrategy::LossTile {
-                    prev_loss_map = Some(loss_map(intr, &pixels, &l));
-                }
-                let b = backward_org_s_with(
-                    store, &cam, rcfg, &projected, &r, &pixels, &l.dl_dcolor, &l.dl_ddepth,
-                    true, false, counters, &mut scratch,
-                );
-                (b.pose.expect("pose grad"), l.value, pixels.len())
-            }
-            TrackPipeline::SparsePixel => {
-                let pixels =
-                    sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, prev_loss_map.as_ref(), rng);
-                render_sparse_projected_with(
-                    &projected, rcfg, &pixels, counters, &mut scratch, &mut render,
-                );
-                let l = sparse_loss(&render, &pixels, frame, &cfg.loss);
-                if cfg.strategy == TrackingStrategy::LossTile {
-                    prev_loss_map = Some(loss_map(intr, &pixels, &l));
-                }
-                let b = backward_sparse_with(
-                    store, &cam, rcfg, &projected, &render, &pixels, &l.dl_dcolor,
-                    &l.dl_ddepth, true, true, false, counters, &mut scratch,
-                );
-                (b.pose.expect("pose grad"), l.value, pixels.len())
-            }
+            let bwd = backend
+                .backward(
+                    store,
+                    &job,
+                    LossGrads { dl_dcolor: &l.dl_dcolor, dl_ddepth: &l.dl_ddepth },
+                    GradRequest::pose(),
+                )
+                .context("tracking backward failed")?;
+            counters.merge(&bwd.counters);
+            (bwd.pose.expect("pose grad"), l.value, pixels.len())
         };
         pixels_per_iter = n_px;
         if it == 0 {
@@ -159,7 +159,7 @@ pub fn track_frame(
         );
     }
 
-    (
+    Ok((
         pose,
         TrackingStats {
             iterations: cfg.iters,
@@ -167,13 +167,12 @@ pub fn track_frame(
             first_loss,
             pixels_per_iter,
         },
-    )
+    ))
 }
 
 /// Every pixel as a sample set (dense baseline helper for tests/benches).
 pub fn all_pixels(w: u32, h: u32) -> SampledPixels {
-    let coords: Vec<(u32, u32)> = (0..h).flat_map(|y| (0..w).map(move |x| (x, y))).collect();
-    SampledPixels::new(w, h, 1, &coords, &[])
+    SampledPixels::full_grid(w, h, 1)
 }
 
 /// Scatter sparse per-pixel losses into a full-frame plane (the GauSPU
@@ -195,6 +194,7 @@ mod tests {
     use super::*;
     use crate::camera::Intrinsics;
     use crate::dataset::{Flavor, SyntheticDataset};
+    use crate::render::backend::create_backend;
 
     /// Tracking must recover a perturbed pose on a GT map.
     #[test]
@@ -208,9 +208,11 @@ mod tests {
             gt.t + Vec3::new(0.02, -0.01, 0.015),
         );
         let cfg = TrackingConfig { iters: 30, tile: 8, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(3);
         let mut c = StageCounters::new();
         let (refined, stats) = track_frame(
+            backend.as_mut(),
             &data.gt_store,
             data.intr,
             init,
@@ -219,7 +221,8 @@ mod tests {
             &RenderConfig::default(),
             &mut rng,
             &mut c,
-        );
+        )
+        .unwrap();
         let err_before = (init.t - gt.t).norm();
         let err_after = (refined.t - gt.t).norm();
         assert!(
@@ -236,9 +239,11 @@ mod tests {
         let data = SyntheticDataset::generate(Flavor::Replica, 1, 64, 48, 1);
         let frame = &data.frames[0];
         let cfg = TrackingConfig { iters: 8, tile: 8, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(4);
         let mut c = StageCounters::new();
         let (refined, _) = track_frame(
+            backend.as_mut(),
             &data.gt_store,
             data.intr,
             frame.gt_w2c,
@@ -247,29 +252,32 @@ mod tests {
             &RenderConfig::default(),
             &mut rng,
             &mut c,
-        );
+        )
+        .unwrap();
         assert!((refined.t - frame.gt_w2c.t).norm() < 6e-3);
         assert!(refined.q.angle_to(frame.gt_w2c.q) < 6e-3);
     }
 
     #[test]
-    fn sparse_tile_and_pixel_pipelines_converge_similarly() {
+    fn dense_and_sparse_backends_converge_identically() {
         let data = SyntheticDataset::generate(Flavor::Replica, 2, 64, 48, 2);
         let frame = &data.frames[1];
         let gt = frame.gt_w2c;
         let init = Se3::new(gt.q, gt.t + Vec3::new(0.015, 0.0, -0.01));
-        let run = |pipeline| {
-            let cfg = TrackingConfig { iters: 20, tile: 8, pipeline, ..Default::default() };
+        let run = |kind| {
+            let cfg = TrackingConfig { iters: 20, tile: 8, backend: kind, ..Default::default() };
+            let mut backend = create_backend(kind).unwrap();
             let mut rng = Pcg32::new(5);
             let mut c = StageCounters::new();
             let (p, _) = track_frame(
-                &data.gt_store, data.intr, init, frame, &cfg,
+                backend.as_mut(), &data.gt_store, data.intr, init, frame, &cfg,
                 &RenderConfig::default(), &mut rng, &mut c,
-            );
+            )
+            .unwrap();
             (p.t - gt.t).norm()
         };
-        let e_tile = run(TrackPipeline::SparseTile);
-        let e_pixel = run(TrackPipeline::SparsePixel);
+        let e_tile = run(BackendKind::DenseCpu);
+        let e_pixel = run(BackendKind::SparseCpu);
         // identical numerics and identical rng stream → identical result
         assert!((e_tile - e_pixel).abs() < 1e-5, "{e_tile} vs {e_pixel}");
     }
@@ -285,12 +293,14 @@ mod tests {
         let data = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 1);
         let frame = &data.frames[0];
         let cfg = TrackingConfig { iters: 3, tile: 8, ..Default::default() };
+        let mut backend = create_backend(cfg.backend).unwrap();
         let mut rng = Pcg32::new(6);
         let mut c = StageCounters::new();
         let _ = track_frame(
-            &data.gt_store, data.intr, frame.gt_w2c, frame, &cfg,
+            backend.as_mut(), &data.gt_store, data.intr, frame.gt_w2c, frame, &cfg,
             &RenderConfig::default(), &mut rng, &mut c,
-        );
+        )
+        .unwrap();
         assert_eq!(c.proj_gaussians_in, 3 * data.gt_store.len() as u64);
         assert!(c.bwd_pairs_integrated > 0);
         assert!(Intrinsics::replica_like(48, 32).n_pixels() > 0);

@@ -7,7 +7,7 @@ use splatonic::gaussian::{Adam, AdamConfig, GaussianStore};
 use splatonic::math::{Pcg32, Se3, Vec3};
 use splatonic::render::pixel_pipeline::{render_sparse, SampledPixels};
 use splatonic::render::tile_pipeline::render_dense;
-use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::render::{create_backend, RenderConfig, StageCounters};
 use splatonic::slam::loss::{dense_loss, sparse_loss, LossCfg};
 use splatonic::slam::mapping::{map_update, MappingConfig};
 use splatonic::slam::tracking::{track_frame, TrackingConfig};
@@ -70,13 +70,21 @@ fn tracking_converges_to_millimeters() {
     let gt = frame.gt_w2c;
     let init = Se3::new(gt.q, gt.t + Vec3::new(0.02, -0.01, 0.015));
     let cfg = TrackingConfig { iters: 30, tile: 8, ..Default::default() };
+    let mut backend = create_backend(cfg.backend).unwrap();
     let mut rng = Pcg32::new(3);
     let mut c = StageCounters::new();
     let (p, stats) = track_frame(
-        &data.gt_store, data.intr, init, frame, &cfg, &RenderConfig::default(), &mut rng, &mut c,
-    );
+        backend.as_mut(), &data.gt_store, data.intr, init, frame, &cfg,
+        &RenderConfig::default(), &mut rng, &mut c,
+    )
+    .unwrap();
     let err = (p.t - gt.t).norm();
-    assert!(err < 0.01, "tracking error {err} m (loss {} -> {})", stats.first_loss, stats.final_loss);
+    assert!(
+        err < 0.01,
+        "tracking error {err} m (loss {} -> {})",
+        stats.first_loss,
+        stats.final_loss
+    );
 }
 
 /// Repeated mapping on an already-converged map must not destroy it
@@ -93,13 +101,21 @@ fn mapping_is_stable_at_convergence() {
     let mut c = StageCounters::new();
     // bootstrap
     let cfg = MappingConfig { iters: 5, ..Default::default() };
-    let _ = map_update(&mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c);
+    let mut backend = create_backend(cfg.backend).unwrap();
+    let _ = map_update(
+        backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c,
+    )
+    .unwrap();
     let (d0, _) = render_dense(&store, &cam, &rcfg, &mut c);
     let (l0, _, _) = dense_loss(&d0, frame, &LossCfg::default());
     // hammer it with more mapping rounds
     for _ in 0..4 {
         let cfg2 = MappingConfig { iters: 5, max_new: 50, ..Default::default() };
-        let _ = map_update(&mut store, &mut adam, &cam, frame, &cfg2, &rcfg, &mut rng, &mut c);
+        let _ = map_update(
+            backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg2, &rcfg, &mut rng,
+            &mut c,
+        )
+        .unwrap();
     }
     let (d1, _) = render_dense(&store, &cam, &rcfg, &mut c);
     let (l1, _, _) = dense_loss(&d1, frame, &LossCfg::default());
@@ -121,7 +137,11 @@ fn mapping_bootstrap_psnr() {
     let mut rng = Pcg32::new(2);
     let mut c = StageCounters::new();
     let cfg = MappingConfig { iters: 15, ..Default::default() };
-    let _ = map_update(&mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c);
+    let mut backend = create_backend(cfg.backend).unwrap();
+    let _ = map_update(
+        backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c,
+    )
+    .unwrap();
     let (d, _) = render_dense(&store, &cam, &rcfg, &mut c);
     let psnr = d.image.psnr(&frame.rgb);
     assert!(psnr > 25.0, "bootstrap PSNR {psnr}");

@@ -11,7 +11,7 @@
 #![cfg(splatonic_xla)]
 
 use splatonic::camera::Camera;
-use splatonic::config::{Backend, RunConfig};
+use splatonic::config::{BackendKind, RunConfig};
 use splatonic::coordinator;
 use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::math::{Pcg32, Se3, Vec3};
@@ -177,7 +177,6 @@ fn xla_map_step_gradients_align_with_rust() {
 
 #[test]
 fn xla_backed_tracking_converges() {
-    let rt = runtime();
     let s = setup();
     let frame = &s.data.frames[1];
     let gt = frame.gt_w2c;
@@ -185,12 +184,16 @@ fn xla_backed_tracking_converges() {
     let cfg = splatonic::slam::tracking::TrackingConfig {
         iters: 25,
         tile: 8,
+        backend: BackendKind::Xla,
         ..Default::default()
     };
+    let mut backend = splatonic::render::create_backend(BackendKind::Xla)
+        .expect("artifacts missing — run `make artifacts` first");
     let mut rng = Pcg32::new(19);
     let mut c = StageCounters::new();
-    let (pose, stats) = coordinator::track_frame_xla(
-        &rt, &s.data.gt_store, s.data.intr, init, frame, &cfg, &s.rcfg, &mut rng, &mut c,
+    let (pose, stats) = splatonic::slam::tracking::track_frame(
+        backend.as_mut(), &s.data.gt_store, s.data.intr, init, frame, &cfg, &s.rcfg,
+        &mut rng, &mut c,
     )
     .unwrap();
     let e0 = (init.t - gt.t).norm();
@@ -210,7 +213,7 @@ fn xla_end_to_end_slam_run() {
         height: 48,
         frames: 5,
         budget: 0.3,
-        backend: Backend::Xla,
+        backend: Some(BackendKind::Xla),
         track_tile: 8,
         ..Default::default()
     };
