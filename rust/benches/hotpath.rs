@@ -14,8 +14,14 @@
 //! deterministic per thread count but only tolerance-equal across counts
 //! (partition-dependent float accumulation order).
 //!
-//! Besides the table, the sweep is written to `BENCH_hotpath.json`
-//! (pairs/sec per Gaussian-count × thread-count cell) so the perf
+//! A second sweep drives the dense tile pipeline ("Org.") through
+//! [`DenseCpuBackend`] sessions over the same Gaussian counts × thread
+//! counts (the 4-thread cell is always present — it anchors the dense
+//! speedup acceptance gate), plus the sparse/dense forward ratio per
+//! Gaussian count (the paper's fig. 11 comparison).
+//!
+//! Besides the tables, both sweeps are written to `BENCH_hotpath.json`
+//! (`cells`, `dense_cells`, `sparse_dense_fwd_ratio`) so the perf
 //! trajectory is tracked across PRs.
 
 use splatonic::bench::time_it;
@@ -26,8 +32,8 @@ use splatonic::math::{Pcg32, Se3, Vec3};
 use splatonic::render::pixel_pipeline::SampledPixels;
 use splatonic::render::projection::project_all;
 use splatonic::render::{
-    auto_threads, GradRequest, PixelSet, RenderBackend, RenderConfig, RenderJob,
-    SparseCpuBackend, StageCounters,
+    auto_threads, DenseCpuBackend, GradRequest, PixelSet, RenderBackend, RenderConfig,
+    RenderJob, SparseCpuBackend, StageCounters,
 };
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::slam::loss::{sample_loss, LossCfg};
@@ -156,6 +162,118 @@ fn main() {
         }
     }
 
+    // -- dense tile-pipeline sweep (the "Org." baseline; the paper's
+    //    fig. 11 denominator) — full-frame forward + backward through a
+    //    DenseCpuBackend session per thread count. The 4-thread cell is
+    //    always present so the dense speedup trajectory is comparable
+    //    across machines. --------------------------------------------
+    let mut dense_thread_counts = vec![1usize, 2, 4];
+    if hw > 4 {
+        dense_thread_counts.push(hw);
+    }
+    println!("\ndense tile-pipeline sweep: 320x240 full frame ({hw} hw threads)");
+    println!(
+        "{:>9} {:>8} | {:>12} {:>14} {:>8} | {:>12} {:>14}",
+        "gaussians", "threads", "fwd ms", "fwd pairs/s", "speedup", "bwd ms", "bwd pairs/s"
+    );
+    let full_n = (320 * 240) as usize;
+    let dldc_full: Vec<Vec3> =
+        (0..full_n).map(|i| Vec3::splat(0.1 + (i % 7) as f32 * 0.01)).collect();
+    let dldd_full: Vec<f32> = (0..full_n).map(|i| 0.02 * ((i % 3) as f32)).collect();
+    let mut dense_cells: Vec<Cell> = Vec::new();
+    for &n in &[10_000usize, 50_000, 200_000] {
+        let mut rng = Pcg32::new(42);
+        let store = synth_store(n, &mut rng);
+        let mut c = StageCounters::new();
+        let projected = project_all(&store, &cam, &rcfg, &mut c);
+
+        let reps = 3;
+        let mut fwd_t1 = 0.0f64;
+        let mut fwd_pairs = 1u64;
+        let mut bwd_pairs = 1u64;
+        for &threads in &dense_thread_counts {
+            let mut backend = DenseCpuBackend::with_threads(threads);
+            // warm the session arenas (both directions) so the timed runs
+            // are steady-state; the warm-up counters double as the
+            // per-call work for pairs/sec — counter totals are
+            // thread-count invariant (tests/parallel_determinism.rs)
+            let mut cw = StageCounters::new();
+            backend.forward_projected(&projected, &cam, &rcfg, &mut cw);
+            fwd_pairs = cw.raster_pairs_iterated.max(1);
+            let mut cb = StageCounters::new();
+            let _ = backend.backward_projected(
+                &store, &cam, &rcfg, &projected, &dldc_full, &dldd_full, GradRequest::pose(),
+                &mut cb,
+            );
+            bwd_pairs = cb.bwd_pairs_iterated.max(1);
+
+            let d_fwd = time_it(reps, || {
+                let mut c = StageCounters::new();
+                let out = backend.forward_projected(&projected, &cam, &rcfg, &mut c);
+                std::hint::black_box(out);
+            });
+            let d_bwd = time_it(reps, || {
+                let mut c = StageCounters::new();
+                let b = backend.backward_projected(
+                    &store, &cam, &rcfg, &projected, &dldc_full, &dldd_full,
+                    GradRequest::pose(), &mut c,
+                );
+                std::hint::black_box(&b);
+            });
+            let fwd_s = d_fwd.as_secs_f64();
+            let bwd_s = d_bwd.as_secs_f64();
+            if threads == 1 {
+                fwd_t1 = fwd_s;
+            }
+            println!(
+                "{:>9} {:>8} | {:>12.3} {:>14.3e} {:>7.2}x | {:>12.3} {:>14.3e}",
+                n,
+                threads,
+                fwd_s * 1e3,
+                fwd_pairs as f64 / fwd_s,
+                fwd_t1 / fwd_s,
+                bwd_s * 1e3,
+                bwd_pairs as f64 / bwd_s,
+            );
+            dense_cells.push(Cell {
+                gaussians: n,
+                threads,
+                fwd_ms: fwd_s * 1e3,
+                fwd_pairs_per_s: fwd_pairs as f64 / fwd_s,
+                fwd_speedup: fwd_t1 / fwd_s,
+                bwd_ms: bwd_s * 1e3,
+                bwd_pairs_per_s: bwd_pairs as f64 / bwd_s,
+            });
+        }
+    }
+
+    // sparse/dense full-pipeline forward ratio per Gaussian count (the
+    // fig. 11 comparison), at the highest thread count common to both
+    // sweeps
+    let shared_t = dense_thread_counts
+        .iter()
+        .copied()
+        .filter(|t| thread_counts.contains(t))
+        .max()
+        .unwrap_or(1);
+    let mut ratios: Vec<(usize, f64)> = Vec::new();
+    for &n in &[10_000usize, 50_000, 200_000] {
+        let sparse_ms = cells
+            .iter()
+            .find(|c| c.gaussians == n && c.threads == shared_t)
+            .map(|c| c.fwd_ms);
+        let dense_ms = dense_cells
+            .iter()
+            .find(|c| c.gaussians == n && c.threads == shared_t)
+            .map(|c| c.fwd_ms);
+        if let (Some(s), Some(d)) = (sparse_ms, dense_ms) {
+            ratios.push((n, d / s));
+        }
+    }
+    for (n, r) in &ratios {
+        println!("sparse-vs-dense fwd ratio @ {n} Gaussians, {shared_t} threads: {r:.1}x");
+    }
+
     // -- end-to-end tracking iteration on the dataset workload ----------
     // (the latency that bounds tracking Hz; the RenderBackend session is
     // reused as tracking does across its optimization iterations)
@@ -210,6 +328,31 @@ fn main() {
             cell.bwd_ms,
             cell.bwd_pairs_per_s,
             if i + 1 < cells.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"dense_cells\": [\n");
+    for (i, cell) in dense_cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"gaussians\": {}, \"threads\": {}, \"fwd_ms\": {:.4}, \
+             \"fwd_pairs_per_s\": {:.1}, \"fwd_speedup\": {:.3}, \"bwd_ms\": {:.4}, \
+             \"bwd_pairs_per_s\": {:.1}}}{}\n",
+            cell.gaussians,
+            cell.threads,
+            cell.fwd_ms,
+            cell.fwd_pairs_per_s,
+            cell.fwd_speedup,
+            cell.bwd_ms,
+            cell.bwd_pairs_per_s,
+            if i + 1 < dense_cells.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"sparse_dense_fwd_ratio\": [\n");
+    for (i, (n, r)) in ratios.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"gaussians\": {n}, \"threads\": {shared_t}, \"ratio\": {r:.3}}}{}\n",
+            if i + 1 < ratios.len() { "," } else { "" },
         ));
     }
     json.push_str("  ],\n");

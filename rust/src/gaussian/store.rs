@@ -81,6 +81,17 @@ impl GaussianStore {
                 self.opacity(i) >= min_opacity && self.get(i).max_scale() <= max_scale
             })
             .collect();
+        self.prune_mask(&keep)
+    }
+
+    /// Compact the store to the Gaussians with `keep[i] == true` — the
+    /// mask form of [`Self::prune`], letting callers compute the mask in
+    /// parallel (see `slam::mapping::prune_keep_mask`) and reuse it to
+    /// compact optimizer state in lock-step. The in-order compaction
+    /// depends only on the mask, so the resulting layout is independent
+    /// of how the mask was produced. Returns the number removed.
+    pub fn prune_mask(&mut self, keep: &[bool]) -> usize {
+        assert_eq!(keep.len(), self.len());
         let removed = keep.iter().filter(|&&k| !k).count();
         if removed == 0 {
             return 0;

@@ -38,7 +38,8 @@ use super::pixel_pipeline::{
 };
 use super::projection::{project_all, Projected};
 use super::tile_pipeline::{
-    backward_dense, backward_org_s_with, render_dense_projected, render_org_s, DenseRender,
+    backward_dense_with, backward_org_s_with, render_dense_projected_with, render_org_s_with,
+    DenseBackward, DenseRender, DenseScratch,
 };
 use super::{RenderConfig, StageCounters};
 use crate::camera::Camera;
@@ -437,13 +438,14 @@ impl RenderBackend for SparseCpuBackend {
 // ---------------------------------------------------------------------
 
 /// What the last `DenseCpuBackend::render` produced (routes `backward`).
-#[derive(Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum DenseState {
     Empty,
-    /// Full-frame tile-based forward ("Org.").
-    Full(DenseRender),
-    /// Sparse samples on the unmodified tile pipeline ("Org.+S").
-    Sparse(SparseRender),
+    /// Full-frame tile-based forward ("Org.") in `full_out`.
+    Full,
+    /// Sparse samples on the unmodified tile pipeline ("Org.+S") in
+    /// `sparse_out`.
+    Sparse,
 }
 
 /// The conventional tile-based pipeline as a session. Full-frame jobs run
@@ -451,10 +453,21 @@ enum DenseState {
 /// binning + per-sample tile-list walks — the paper's under-utilization
 /// baseline). Numerics match [`SparseCpuBackend`]; the counted work
 /// stream is what differs.
+///
+/// The session owns the tile-CSR arena ([`DenseScratch`]: binning pair
+/// buffers, entry-gradient scatter slots, the entry→Gaussian transpose)
+/// plus the reused [`DenseRender`]/[`SparseRender`] outputs, so
+/// steady-state full-frame iterations are free of per-pixel and per-tile
+/// heap allocation — mirroring the sparse session's `HitLists` arena.
 #[derive(Debug)]
 pub struct DenseCpuBackend {
+    /// Org.+S backward arena (the delegated sparse numeric core).
     scratch: RenderScratch,
+    /// Tile-CSR binning/raster/backward arena.
+    tiles: DenseScratch,
     projected: Vec<Projected>,
+    full_out: DenseRender,
+    sparse_out: SparseRender,
     state: DenseState,
 }
 
@@ -468,9 +481,79 @@ impl DenseCpuBackend {
     pub fn new() -> Self {
         DenseCpuBackend {
             scratch: RenderScratch::new(),
+            tiles: DenseScratch::new(),
             projected: Vec::new(),
+            full_out: DenseRender::default(),
+            sparse_out: SparseRender::default(),
             state: DenseState::Empty,
         }
+    }
+
+    /// Session pinned to an explicit worker-thread count (1 forces the
+    /// sequential path; 0 = auto). Benches and determinism tests use it.
+    pub fn with_threads(threads: usize) -> Self {
+        DenseCpuBackend {
+            scratch: RenderScratch::with_threads(threads),
+            tiles: DenseScratch::with_threads(threads),
+            ..Self::new()
+        }
+    }
+
+    /// Full-frame dense forward from a caller-held projection (benches
+    /// time the tile stages in isolation; the trait's `render()` is this
+    /// plus `project_all`). Returns the session's reused output buffers.
+    /// The projection is copied into the session so a subsequent
+    /// trait-level `backward()` pairs it with this forward state rather
+    /// than a stale `render()` projection.
+    pub fn forward_projected(
+        &mut self,
+        projected: &[Projected],
+        cam: &Camera,
+        rcfg: &RenderConfig,
+        counters: &mut StageCounters,
+    ) -> &DenseRender {
+        render_dense_projected_with(
+            projected, cam, rcfg, counters, &mut self.tiles, &mut self.full_out,
+        );
+        self.projected.clear();
+        self.projected.extend_from_slice(projected);
+        self.state = DenseState::Full;
+        &self.full_out
+    }
+
+    /// Backward over the full-frame forward state left by
+    /// [`Self::forward_projected`] (or a `PixelSet::Full` `render()`),
+    /// with an explicit projection — which must be the one that produced
+    /// that forward state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_projected(
+        &mut self,
+        store: &GaussianStore,
+        cam: &Camera,
+        rcfg: &RenderConfig,
+        projected: &[Projected],
+        dl_dcolor: &[Vec3],
+        dl_ddepth: &[f32],
+        want: GradRequest,
+        counters: &mut StageCounters,
+    ) -> DenseBackward {
+        assert!(
+            self.state == DenseState::Full,
+            "DenseCpuBackend::backward_projected requires a full-frame forward in this session"
+        );
+        backward_dense_with(
+            store,
+            cam,
+            rcfg,
+            projected,
+            &self.full_out,
+            dl_dcolor,
+            dl_ddepth,
+            want.pose,
+            want.gauss,
+            counters,
+            &mut self.tiles,
+        )
     }
 }
 
@@ -488,24 +571,37 @@ impl RenderBackend for DenseCpuBackend {
         self.projected = project_all(store, job.cam, job.rcfg, &mut counters);
         match job.pixels {
             PixelSet::Full => {
-                let dr = render_dense_projected(&self.projected, job.cam, job.rcfg, &mut counters);
-                self.state = DenseState::Full(dr);
-                let DenseState::Full(dr) = &self.state else { unreachable!() };
+                render_dense_projected_with(
+                    &self.projected,
+                    job.cam,
+                    job.rcfg,
+                    &mut counters,
+                    &mut self.tiles,
+                    &mut self.full_out,
+                );
+                self.state = DenseState::Full;
                 Ok(RenderOutput {
-                    colors: &dr.image.data,
-                    depths: &dr.depth.data,
-                    final_t: &dr.final_t.data,
+                    colors: &self.full_out.image.data,
+                    depths: &self.full_out.depth.data,
+                    final_t: &self.full_out.final_t.data,
                     counters,
                 })
             }
             PixelSet::Sparse(px) => {
-                let sr = render_org_s(&self.projected, job.cam, job.rcfg, px, &mut counters);
-                self.state = DenseState::Sparse(sr);
-                let DenseState::Sparse(sr) = &self.state else { unreachable!() };
+                render_org_s_with(
+                    &self.projected,
+                    job.cam,
+                    job.rcfg,
+                    px,
+                    &mut counters,
+                    &mut self.tiles,
+                    &mut self.sparse_out,
+                );
+                self.state = DenseState::Sparse;
                 Ok(RenderOutput {
-                    colors: &sr.colors,
-                    depths: &sr.depths,
-                    final_t: &sr.final_t,
+                    colors: &self.sparse_out.colors,
+                    depths: &self.sparse_out.depths,
+                    final_t: &self.sparse_out.final_t,
                     counters,
                 })
             }
@@ -520,29 +616,30 @@ impl RenderBackend for DenseCpuBackend {
         want: GradRequest,
     ) -> Result<BackwardOutput> {
         let mut counters = StageCounters::new();
-        match (&self.state, job.pixels) {
-            (DenseState::Full(dr), PixelSet::Full) => {
-                let bwd = backward_dense(
+        match (self.state, job.pixels) {
+            (DenseState::Full, PixelSet::Full) => {
+                let bwd = backward_dense_with(
                     store,
                     job.cam,
                     job.rcfg,
                     &self.projected,
-                    dr,
+                    &self.full_out,
                     grads.dl_dcolor,
                     grads.dl_ddepth,
                     want.pose,
                     want.gauss,
                     &mut counters,
+                    &mut self.tiles,
                 );
                 Ok(BackwardOutput { pose: bwd.pose, gauss: bwd.gauss, counters })
             }
-            (DenseState::Sparse(sr), PixelSet::Sparse(px)) => {
+            (DenseState::Sparse, PixelSet::Sparse(px)) => {
                 let bwd = backward_org_s_with(
                     store,
                     job.cam,
                     job.rcfg,
                     &self.projected,
-                    sr,
+                    &self.sparse_out,
                     px,
                     grads.dl_dcolor,
                     grads.dl_ddepth,

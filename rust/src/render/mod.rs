@@ -16,6 +16,21 @@
 //! Both pipelines produce *bit-identical work streams* to what the timing
 //! simulators consume: every stage increments [`counters::StageCounters`].
 //!
+//! **Every hot stage of both pipelines is multi-threaded** under one
+//! determinism contract — output is bit-identical at any thread count
+//! (pinned by `tests/parallel_determinism.rs`). The sparse path fans out
+//! stage-1 α-checking over Gaussian chunks and sort+composite/backward
+//! over hit-balanced pixel ranges; the dense path fans out tile binning
+//! over Gaussian chunks (count → prefix-sum → fill into the
+//! [`tile_pipeline::TileLists`] CSR), rasterization over tile-row bands
+//! writing disjoint output windows, and reverse rasterization as an
+//! entry-slot gradient scatter plus a tile-ordered per-Gaussian reduce
+//! over disjoint `grad2d` ranges. `geometry_backward` and the mapping
+//! densify/prune passes use the same Gaussian-chunk fan-out with
+//! chunk-order merges. One knob pins the whole hot path: [`auto_threads`]
+//! (the `SPLATONIC_THREADS` env var), or the per-session
+//! `with_threads(n)` constructors.
+//!
 //! Callers do not drive the pipelines directly: [`backend`] packages each
 //! one as a [`backend::RenderBackend`] **session** with an explicit
 //! request/response surface — a [`backend::RenderJob`] in, a
@@ -46,7 +61,7 @@ pub use pixel_pipeline::{
     HitLists, PixelHit, RenderScratch, SampleGrid, SampledPixels, SparseBackward, SparseRender,
 };
 pub use projection::Projected;
-pub use tile_pipeline::{DenseBackward, DenseRender};
+pub use tile_pipeline::{DenseBackward, DenseRender, DenseScratch, TileLists};
 
 /// Worker-thread count for the parallel render stages: the
 /// `SPLATONIC_THREADS` env var when set (≥ 1), else the machine's
@@ -66,6 +81,20 @@ pub fn auto_threads() -> usize {
         }
         std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
     })
+}
+
+/// Worker count for one parallel stage: the scratch's pinned count
+/// (`0` = [`auto_threads`]), collapsed to 1 when `work` items are under
+/// `threshold` (thread spawns are not worth their cost on tiny inputs).
+/// Shared by both pipelines' scratch types so the go-parallel policy
+/// cannot diverge between them.
+pub(crate) fn stage_threads(pinned: usize, work: usize, threshold: usize) -> usize {
+    let t = if pinned > 0 { pinned } else { auto_threads() };
+    if t <= 1 || work < threshold {
+        1
+    } else {
+        t
+    }
 }
 
 /// Renderer configuration shared by both pipelines.

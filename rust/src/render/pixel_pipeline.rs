@@ -318,22 +318,9 @@ impl RenderScratch {
         RenderScratch { threads, ..Self::default() }
     }
 
-    fn pool_threads(&self) -> usize {
-        if self.threads > 0 {
-            self.threads
-        } else {
-            super::auto_threads()
-        }
-    }
-
     /// Threads actually used for `work` items under `threshold`.
     fn threads_for(&self, work: usize, threshold: usize) -> usize {
-        let t = self.pool_threads();
-        if t <= 1 || work < threshold {
-            1
-        } else {
-            t
-        }
+        super::stage_threads(self.threads, work, threshold)
     }
 }
 
@@ -656,7 +643,10 @@ fn composite_range(
 
 /// Split `n_items` into `n_blocks` contiguous ranges of roughly equal
 /// total `size_of` weight. Returns `n_blocks + 1` monotone bounds.
-fn balanced_bounds(
+/// Shared with the tile pipeline's band partitioning — the bounds depend
+/// only on the weights, never on scheduling, so partitions are
+/// reproducible for a fixed block count.
+pub(crate) fn balanced_bounds(
     n_items: usize,
     n_blocks: usize,
     size_of: impl Fn(usize) -> usize,

@@ -10,15 +10,125 @@
 //!   warp divergence of Fig. 6/7, which we model by counting live lanes;
 //! * reverse rasterization recomputes α (exp) per pair and aggregates
 //!   gradients with atomic adds (Fig. 8).
+//!
+//! # Hot-path architecture
+//!
+//! Like the pixel pipeline, the dense path is built around reusable flat
+//! CSR arenas and the chunk-merge determinism contract (**bit-identical
+//! output at any thread count**, pinned by `tests/parallel_determinism.rs`):
+//!
+//! * **binning** fans out over Gaussian chunks on `std::thread::scope`
+//!   (each worker appending `(tile, proj)` pairs to a retained buffer),
+//!   then a count → prefix-sum → fill pass scatters the pairs into one
+//!   flat [`TileLists`] CSR; chunk order ⇒ per-tile entries arrive
+//!   proj-ascending exactly as the sequential walk emits them, and the
+//!   per-tile `(depth, proj)` sort — parallel over tile bands on disjoint
+//!   entry slices — is a strict total order, so the composition order
+//!   cannot depend on the thread count;
+//! * **rasterization** fans out over tile-*row* bands: a tile row maps to
+//!   a contiguous row-major slice of the output planes, so workers write
+//!   disjoint `split_at_mut` windows; per-thread [`StageCounters`] are
+//!   merged in band order;
+//! * **reverse rasterization** scatters per-pair gradients into the
+//!   tile-list *entry* slots (disjoint per tile, so the same tile-row
+//!   fan-out applies), then a transpose CSR (entry ids per Gaussian, in
+//!   tile order) is reduced parallel over Gaussian chunks writing
+//!   disjoint `grad2d` ranges — the float accumulation order per
+//!   Gaussian is the tile order regardless of thread count, and the
+//!   re-projection reuses `geometry_backward`'s disjoint store-range
+//!   scheme.
+//!
+//! [`DenseScratch`] owns every intermediate buffer (mirroring the pixel
+//! pipeline's `RenderScratch`/`HitLists`), so sessions holding one across
+//! iterations render and backward without steady-state heap allocation.
 
 use super::backward_geom::{geometry_backward, GaussianGrads, Grad2d, PoseGrad};
 use super::image::{Image, Plane};
-use super::pixel_pipeline::WARP;
+use super::pixel_pipeline::{balanced_bounds, PARALLEL_GAUSSIANS, PARALLEL_HITS, WARP};
 use super::projection::{project_all, Projected};
 use super::{RenderConfig, StageCounters};
 use crate::camera::Camera;
 use crate::gaussian::GaussianStore;
 use crate::math::{Vec2, Vec3};
+
+/// Per-tile depth-sorted projected-Gaussian index lists in CSR form: one
+/// flat entry array plus per-tile region bounds. Buffers are reused
+/// allocation-free across renders when the caller retains the value.
+#[derive(Clone, Debug, Default)]
+pub struct TileLists {
+    pub(crate) entries: Vec<u32>,
+    /// Region bounds per tile, `n_tiles + 1` entries (monotone).
+    pub(crate) starts: Vec<u32>,
+    pub tiles_x: u32,
+    pub tiles_y: u32,
+}
+
+impl TileLists {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of tiles.
+    pub fn n_tiles(&self) -> usize {
+        self.starts.len().saturating_sub(1)
+    }
+
+    /// Total (tile, Gaussian) replication pairs across all tiles.
+    pub fn total_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The depth-sorted projected-index list of tile `t`.
+    pub fn get(&self, t: usize) -> &[u32] {
+        let s = self.starts[t] as usize;
+        let e = self.starts[t + 1] as usize;
+        &self.entries[s..e]
+    }
+
+    /// Flat entry offset of tile `t`'s region.
+    pub fn start(&self, t: usize) -> usize {
+        self.starts[t] as usize
+    }
+}
+
+/// Reusable arena for the dense tile pipeline's parallel stages:
+/// per-thread binning pair buffers, the count/cursor array of the CSR
+/// fill, the per-entry gradient scatter slots and the entry→Gaussian
+/// transpose CSR of the backward pass, plus the Org.+S tile lists.
+/// Holding one across optimization iterations (as
+/// [`crate::render::backend::DenseCpuBackend`] does) makes steady-state
+/// dense renders allocation-free.
+#[derive(Debug, Default)]
+pub struct DenseScratch {
+    /// Worker threads for the parallel stages; `0` = auto (the
+    /// `SPLATONIC_THREADS` env var, else `available_parallelism`).
+    pub threads: usize,
+    pair_bufs: Vec<Vec<(u32, u32)>>,
+    counts: Vec<u32>,
+    entry_grads: Vec<Grad2d>,
+    gauss_starts: Vec<u32>,
+    gauss_cursors: Vec<u32>,
+    gauss_entries: Vec<u32>,
+    org_tiles: TileLists,
+}
+
+impl DenseScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch pinned to an explicit thread count (1 forces the
+    /// sequential path — used by the determinism tests and benches).
+    pub fn with_threads(threads: usize) -> Self {
+        DenseScratch { threads, ..Self::default() }
+    }
+
+    /// Threads actually used for `work` items under `threshold`
+    /// (shared go-parallel policy: [`crate::render::stage_threads`]).
+    fn threads_for(&self, work: usize, threshold: usize) -> usize {
+        super::stage_threads(self.threads, work, threshold)
+    }
+}
 
 /// Output of the dense tile-based forward pass.
 #[derive(Clone, Debug)]
@@ -29,43 +139,59 @@ pub struct DenseRender {
     /// Per pixel: index+1 of the last tile-list entry that contributed
     /// (0 = none) — the official implementation's `last_contributor`.
     pub n_contrib: Vec<u32>,
-    /// Per-tile depth-sorted projected-Gaussian indices.
-    pub tile_lists: Vec<Vec<u32>>,
-    pub tiles_x: u32,
-    pub tiles_y: u32,
+    /// Per-tile depth-sorted projected-Gaussian indices (CSR).
+    pub tile_lists: TileLists,
 }
 
-/// Bin projected Gaussians into tiles and depth-sort each tile list.
-pub fn bin_and_sort(
-    projected: &[Projected],
-    width: u32,
-    height: u32,
-    cfg: &RenderConfig,
-    counters: &mut StageCounters,
-) -> (Vec<Vec<u32>>, u32, u32) {
-    let ts = cfg.tile_size;
-    let tiles_x = width.div_ceil(ts);
-    let tiles_y = height.div_ceil(ts);
-    let mut lists: Vec<Vec<u32>> = vec![Vec::new(); (tiles_x * tiles_y) as usize];
-    for (pi, p) in projected.iter().enumerate() {
-        let x0 = (((p.mean2d.x - p.radius) / ts as f32).floor().max(0.0)) as u32;
-        let y0 = (((p.mean2d.y - p.radius) / ts as f32).floor().max(0.0)) as u32;
-        let x1 = (((p.mean2d.x + p.radius) / ts as f32).floor() as i64).min(tiles_x as i64 - 1);
-        let y1 = (((p.mean2d.y + p.radius) / ts as f32).floor() as i64).min(tiles_y as i64 - 1);
-        if x1 < x0 as i64 || y1 < y0 as i64 {
-            continue;
-        }
-        for ty in y0..=(y1 as u32) {
-            for tx in x0..=(x1 as u32) {
-                lists[(ty * tiles_x + tx) as usize].push(pi as u32);
-            }
+impl Default for DenseRender {
+    fn default() -> Self {
+        DenseRender {
+            image: Image { width: 0, height: 0, data: Vec::new() },
+            depth: Plane { width: 0, height: 0, data: Vec::new() },
+            final_t: Plane { width: 0, height: 0, data: Vec::new() },
+            n_contrib: Vec::new(),
+            tile_lists: TileLists::default(),
         }
     }
-    for l in lists.iter_mut() {
-        counters.charge_sort(l.len());
-        counters.bytes_list_rw += l.len() as u64 * 12; // key+value pairs
-        // total_cmp: NaN depths must not panic the renderer; the index
-        // tie-break reproduces the previous stable sort's order exactly
+}
+
+/// Emit the (tile, proj) replication pairs of one projected Gaussian.
+#[inline]
+fn bin_one(p: &Projected, pi: u32, ts: u32, tiles_x: u32, tiles_y: u32, buf: &mut Vec<(u32, u32)>) {
+    let x0 = (((p.mean2d.x - p.radius) / ts as f32).floor().max(0.0)) as u32;
+    let y0 = (((p.mean2d.y - p.radius) / ts as f32).floor().max(0.0)) as u32;
+    let x1 = (((p.mean2d.x + p.radius) / ts as f32).floor() as i64).min(tiles_x as i64 - 1);
+    let y1 = (((p.mean2d.y + p.radius) / ts as f32).floor() as i64).min(tiles_y as i64 - 1);
+    if x1 < x0 as i64 || y1 < y0 as i64 {
+        return;
+    }
+    for ty in y0..=(y1 as u32) {
+        for tx in x0..=(x1 as u32) {
+            buf.push((ty * tiles_x + tx, pi));
+        }
+    }
+}
+
+/// Sort-stage worker: depth-sort the tile lists `[t0, t1)` whose entries
+/// occupy the (band-local) `entries` slice.
+fn sort_tile_range(
+    projected: &[Projected],
+    starts: &[u32],
+    t0: usize,
+    t1: usize,
+    entries: &mut [u32],
+) -> StageCounters {
+    let mut c = StageCounters::new();
+    let base = if t1 > t0 { starts[t0] as usize } else { 0 };
+    for t in t0..t1 {
+        let s = starts[t] as usize - base;
+        let e = starts[t + 1] as usize - base;
+        let l = &mut entries[s..e];
+        c.charge_sort(l.len());
+        c.bytes_list_rw += l.len() as u64 * 12; // key+value pairs
+        // total_cmp: NaN depths must not panic the renderer; the proj
+        // tie-break is a strict total order, so the composition order is
+        // independent of the (thread-count-invariant) input permutation
         l.sort_unstable_by(|&a, &b| {
             projected[a as usize]
                 .depth
@@ -73,10 +199,145 @@ pub fn bin_and_sort(
                 .then(a.cmp(&b))
         });
     }
-    (lists, tiles_x, tiles_y)
+    c
 }
 
-/// Dense tile-based forward render of the full frame.
+/// Bin projected Gaussians into per-tile CSR lists and depth-sort each
+/// list, reusing the caller's arena: binning fans out over Gaussian
+/// chunks (count → prefix-sum → fill, per-tile entries proj-ascending),
+/// sorting fans out over tile bands on disjoint entry slices.
+pub fn bin_and_sort_with(
+    projected: &[Projected],
+    width: u32,
+    height: u32,
+    cfg: &RenderConfig,
+    counters: &mut StageCounters,
+    scratch: &mut DenseScratch,
+    lists: &mut TileLists,
+) {
+    let ts = cfg.tile_size;
+    let tiles_x = width.div_ceil(ts);
+    let tiles_y = height.div_ceil(ts);
+    let n_tiles = (tiles_x * tiles_y) as usize;
+    lists.tiles_x = tiles_x;
+    lists.tiles_y = tiles_y;
+
+    // -- bin: (tile, proj) pairs over Gaussian chunks -------------------
+    let n_threads = scratch.threads_for(projected.len(), PARALLEL_GAUSSIANS);
+    if scratch.pair_bufs.len() < n_threads {
+        scratch.pair_bufs.resize_with(n_threads, Vec::new);
+    }
+    if n_threads > 1 {
+        let chunk = projected.len().div_ceil(n_threads);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = scratch.pair_bufs[..n_threads]
+                .iter_mut()
+                .enumerate()
+                .map(|(ti, buf)| {
+                    let start = ti * chunk;
+                    let end = ((ti + 1) * chunk).min(projected.len());
+                    s.spawn(move || {
+                        buf.clear();
+                        for pi in start..end {
+                            bin_one(&projected[pi], pi as u32, ts, tiles_x, tiles_y, buf);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("tile binning worker panicked");
+            }
+        });
+    } else {
+        let buf = &mut scratch.pair_bufs[0];
+        buf.clear();
+        for (pi, p) in projected.iter().enumerate() {
+            bin_one(p, pi as u32, ts, tiles_x, tiles_y, buf);
+        }
+    }
+
+    // -- CSR build: count -> prefix-sum -> fill (buffers in chunk order
+    //    ⇒ per-tile entries are proj-ascending, identical to the
+    //    sequential walk) ----------------------------------------------
+    scratch.counts.clear();
+    scratch.counts.resize(n_tiles, 0);
+    for buf in &scratch.pair_bufs[..n_threads] {
+        for &(tile, _) in buf.iter() {
+            scratch.counts[tile as usize] += 1;
+        }
+    }
+    lists.starts.clear();
+    lists.starts.reserve(n_tiles + 1);
+    lists.starts.push(0);
+    let mut acc = 0u32;
+    for &c in &scratch.counts {
+        acc += c;
+        lists.starts.push(acc);
+    }
+    let total = acc as usize;
+    // grow-only: every slot in [0, total) is overwritten by the scatter
+    // below (the cursor ranges tile the arena exactly)
+    if lists.entries.len() < total {
+        lists.entries.resize(total, 0);
+    } else {
+        lists.entries.truncate(total);
+    }
+    scratch.counts.copy_from_slice(&lists.starts[..n_tiles]);
+    for buf in &scratch.pair_bufs[..n_threads] {
+        for &(tile, pi) in buf.iter() {
+            let cur = &mut scratch.counts[tile as usize];
+            lists.entries[*cur as usize] = pi;
+            *cur += 1;
+        }
+    }
+
+    // -- per-tile (depth, proj) sort over tile bands --------------------
+    let n_sort = scratch.threads_for(total, PARALLEL_HITS).min(n_tiles.max(1));
+    let TileLists { entries, starts, .. } = lists;
+    let starts: &[u32] = starts;
+    if n_sort <= 1 {
+        let c = sort_tile_range(projected, starts, 0, n_tiles, entries);
+        counters.merge(&c);
+    } else {
+        let bounds =
+            balanced_bounds(n_tiles, n_sort, |t| (starts[t + 1] - starts[t]) as usize);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_sort);
+            let mut entries_rem: &mut [u32] = entries;
+            for b in 0..n_sort {
+                let (t0, t1) = (bounds[b], bounds[b + 1]);
+                if t0 == t1 {
+                    continue;
+                }
+                let n_ent = (starts[t1] - starts[t0]) as usize;
+                let (blk, rest) = entries_rem.split_at_mut(n_ent);
+                entries_rem = rest;
+                handles.push(s.spawn(move || sort_tile_range(projected, starts, t0, t1, blk)));
+            }
+            for h in handles {
+                counters.merge(&h.join().expect("tile sort worker panicked"));
+            }
+        });
+    }
+}
+
+/// One-shot [`bin_and_sort_with`] into fresh buffers (tests/tools).
+pub fn bin_and_sort(
+    projected: &[Projected],
+    width: u32,
+    height: u32,
+    cfg: &RenderConfig,
+    counters: &mut StageCounters,
+) -> TileLists {
+    let mut scratch = DenseScratch::new();
+    let mut lists = TileLists::new();
+    bin_and_sort_with(projected, width, height, cfg, counters, &mut scratch, &mut lists);
+    lists
+}
+
+/// Dense tile-based forward render of the full frame (one-shot: fresh
+/// arena + projection; iterating callers hold a
+/// [`crate::render::backend::DenseCpuBackend`] session instead).
 pub fn render_dense(
     store: &GaussianStore,
     cam: &Camera,
@@ -88,42 +349,71 @@ pub fn render_dense(
     (out, projected)
 }
 
-/// Dense forward given an existing projection.
+/// Dense forward given an existing projection (one-shot wrapper over
+/// [`render_dense_projected_with`]).
 pub fn render_dense_projected(
     projected: &[Projected],
     cam: &Camera,
     cfg: &RenderConfig,
     counters: &mut StageCounters,
 ) -> DenseRender {
-    let (w, h) = (cam.intr.width, cam.intr.height);
-    let (tile_lists, tiles_x, tiles_y) = bin_and_sort(projected, w, h, cfg, counters);
+    let mut scratch = DenseScratch::new();
+    let mut out = DenseRender::default();
+    render_dense_projected_with(projected, cam, cfg, counters, &mut scratch, &mut out);
+    out
+}
+
+/// Raster-stage worker: rasterize tile rows `[r0, r1)` into the band's
+/// disjoint row-major output slices (offset by `r0 * ts` pixel rows).
+#[allow(clippy::too_many_arguments)]
+fn raster_tile_rows(
+    projected: &[Projected],
+    cfg: &RenderConfig,
+    entries: &[u32],
+    starts: &[u32],
+    tiles_x: u32,
+    w: u32,
+    h: u32,
+    r0: usize,
+    r1: usize,
+    image: &mut [Vec3],
+    depth: &mut [f32],
+    final_t: &mut [f32],
+    n_contrib: &mut [u32],
+) -> StageCounters {
+    let mut counters = StageCounters::new();
     let ts = cfg.tile_size;
+    let y_base = r0 as u32 * ts;
+    // per-tile working set, reused across the band's tiles
+    let mut px_coords: Vec<(u32, u32)> = Vec::with_capacity((ts * ts) as usize);
+    let mut t_acc: Vec<f32> = Vec::with_capacity((ts * ts) as usize);
+    let mut c_acc: Vec<Vec3> = Vec::with_capacity((ts * ts) as usize);
+    let mut d_acc: Vec<f32> = Vec::with_capacity((ts * ts) as usize);
+    let mut last: Vec<u32> = Vec::with_capacity((ts * ts) as usize);
 
-    let mut image = Image::new(w, h);
-    let mut depth = Plane::new(w, h);
-    let mut final_t = Plane::filled(w, h, 1.0);
-    let mut n_contrib = vec![0u32; (w * h) as usize];
-
-    // per-tile rasterization with warp-granularity lane accounting
-    for ty in 0..tiles_y {
+    for ty in r0 as u32..r1 as u32 {
         for tx in 0..tiles_x {
-            let list = &tile_lists[(ty * tiles_x + tx) as usize];
+            let tile = (ty * tiles_x + tx) as usize;
+            let list = &entries[starts[tile] as usize..starts[tile + 1] as usize];
             if list.is_empty() {
                 continue;
             }
             // gather tile pixels (row-major within the tile)
-            let px_coords: Vec<(u32, u32)> = (0..ts * ts)
-                .filter_map(|i| {
-                    let x = tx * ts + (i % ts);
-                    let y = ty * ts + (i / ts);
-                    (x < w && y < h).then_some((x, y))
-                })
-                .collect();
+            px_coords.clear();
+            px_coords.extend((0..ts * ts).filter_map(|i| {
+                let x = tx * ts + (i % ts);
+                let y = ty * ts + (i / ts);
+                (x < w && y < h).then_some((x, y))
+            }));
             let n_px = px_coords.len();
-            let mut t_acc = vec![1.0f32; n_px];
-            let mut c_acc = vec![Vec3::ZERO; n_px];
-            let mut d_acc = vec![0.0f32; n_px];
-            let mut last = vec![0u32; n_px];
+            t_acc.clear();
+            t_acc.resize(n_px, 1.0);
+            c_acc.clear();
+            c_acc.resize(n_px, Vec3::ZERO);
+            d_acc.clear();
+            d_acc.resize(n_px, 0.0);
+            last.clear();
+            last.resize(n_px, 0);
 
             // process warp groups of 32 pixels
             for wstart in (0..n_px).step_by(WARP as usize) {
@@ -164,26 +454,124 @@ pub fn render_dense_projected(
             }
 
             for (k, &(x, y)) in px_coords.iter().enumerate() {
-                image.set(x, y, c_acc[k]);
-                depth.set(x, y, d_acc[k]);
-                final_t.set(x, y, t_acc[k]);
-                n_contrib[(y * w + x) as usize] = last[k];
+                let idx = ((y - y_base) * w + x) as usize;
+                image[idx] = c_acc[k];
+                depth[idx] = d_acc[k];
+                final_t[idx] = t_acc[k];
+                n_contrib[idx] = last[k];
                 counters.bytes_image_w += 4 * 5;
             }
         }
     }
+    counters
+}
 
-    DenseRender { image, depth, final_t, n_contrib, tile_lists, tiles_x, tiles_y }
+/// Dense forward into caller-held buffers: parallel binning + per-tile
+/// sort, then rasterization parallel over tile-row bands writing disjoint
+/// row-major output windows. Bit-identical at any thread count.
+pub fn render_dense_projected_with(
+    projected: &[Projected],
+    cam: &Camera,
+    cfg: &RenderConfig,
+    counters: &mut StageCounters,
+    scratch: &mut DenseScratch,
+    out: &mut DenseRender,
+) {
+    let (w, h) = (cam.intr.width, cam.intr.height);
+    bin_and_sort_with(projected, w, h, cfg, counters, scratch, &mut out.tile_lists);
+    let ts = cfg.tile_size;
+    let (tiles_x, tiles_y) = (out.tile_lists.tiles_x, out.tile_lists.tiles_y);
+
+    // (re)shape the output planes: tiles with empty lists keep the
+    // cleared background (black, depth 0, T = 1, no contributors)
+    let n_px = (w * h) as usize;
+    out.image.width = w;
+    out.image.height = h;
+    out.image.data.clear();
+    out.image.data.resize(n_px, Vec3::ZERO);
+    out.depth.width = w;
+    out.depth.height = h;
+    out.depth.data.clear();
+    out.depth.data.resize(n_px, 0.0);
+    out.final_t.width = w;
+    out.final_t.height = h;
+    out.final_t.data.clear();
+    out.final_t.data.resize(n_px, 1.0);
+    out.n_contrib.clear();
+    out.n_contrib.resize(n_px, 0);
+
+    let total = out.tile_lists.total_entries();
+    let n_rows = tiles_y as usize;
+    let n_bands = scratch.threads_for(total, PARALLEL_HITS).min(n_rows.max(1));
+    let TileLists { entries, starts, .. } = &out.tile_lists;
+    let entries: &[u32] = entries;
+    let starts: &[u32] = starts;
+    if n_bands <= 1 {
+        let c = raster_tile_rows(
+            projected,
+            cfg,
+            entries,
+            starts,
+            tiles_x,
+            w,
+            h,
+            0,
+            n_rows,
+            &mut out.image.data,
+            &mut out.depth.data,
+            &mut out.final_t.data,
+            &mut out.n_contrib,
+        );
+        counters.merge(&c);
+    } else {
+        let bounds = balanced_bounds(n_rows, n_bands, |r| {
+            row_entries_range(&out.tile_lists, tiles_x, r, r + 1)
+        });
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_bands);
+            let mut img_rem: &mut [Vec3] = &mut out.image.data;
+            let mut dep_rem: &mut [f32] = &mut out.depth.data;
+            let mut ft_rem: &mut [f32] = &mut out.final_t.data;
+            let mut nc_rem: &mut [u32] = &mut out.n_contrib;
+            for b in 0..n_bands {
+                let (r0, r1) = (bounds[b], bounds[b + 1]);
+                if r0 == r1 {
+                    continue;
+                }
+                let y0 = r0 as u32 * ts;
+                let y1 = ((r1 as u32) * ts).min(h);
+                let band_px = ((y1 - y0) * w) as usize;
+                let (img, rest) = img_rem.split_at_mut(band_px);
+                img_rem = rest;
+                let (dep, rest) = dep_rem.split_at_mut(band_px);
+                dep_rem = rest;
+                let (ft, rest) = ft_rem.split_at_mut(band_px);
+                ft_rem = rest;
+                let (nc, rest) = nc_rem.split_at_mut(band_px);
+                nc_rem = rest;
+                handles.push(s.spawn(move || {
+                    raster_tile_rows(
+                        projected, cfg, entries, starts, tiles_x, w, h, r0, r1, img, dep, ft,
+                        nc,
+                    )
+                }));
+            }
+            for jh in handles {
+                counters.merge(&jh.join().expect("dense raster worker panicked"));
+            }
+        });
+    }
 }
 
 /// "Org.+S" (Fig. 11): sparse pixel sampling executed on the *unmodified
 /// tile-based* pipeline. Projection, binning and sorting are identical to
-/// the dense pipeline (full tile lists are built); rasterization walks
-/// each sampled pixel's whole tile list with α-checking inside the loop.
-/// One sampled pixel per 16×16 tile means one active lane in a 32-wide
-/// warp — the PE under-utilization the paper measures (4.2× instead of
-/// 256×). Numerics are identical to the pixel pipeline; only the work
-/// stream differs.
+/// the dense pipeline (full tile lists are built — in parallel); the
+/// per-sample rasterization walks each sampled pixel's whole tile list
+/// with α-checking inside the loop. One sampled pixel per 16×16 tile
+/// means one active lane in a 32-wide warp — the PE under-utilization the
+/// paper measures (4.2× instead of 256×). Numerics are identical to the
+/// pixel pipeline; only the work stream differs. One-shot wrapper over
+/// [`render_org_s_with`].
 pub fn render_org_s(
     projected: &[Projected],
     cam: &Camera,
@@ -191,30 +579,53 @@ pub fn render_org_s(
     pixels: &crate::render::pixel_pipeline::SampledPixels,
     counters: &mut StageCounters,
 ) -> crate::render::pixel_pipeline::SparseRender {
-    use crate::render::pixel_pipeline::{HitLists, PixelHit, SparseRender};
+    let mut scratch = DenseScratch::new();
+    let mut out = crate::render::pixel_pipeline::SparseRender::default();
+    render_org_s_with(projected, cam, cfg, pixels, counters, &mut scratch, &mut out);
+    out
+}
+
+/// [`render_org_s`] into caller-held buffers (the tile lists live in the
+/// scratch — the Org.+S backward does not re-walk them, only the hit
+/// lists).
+pub fn render_org_s_with(
+    projected: &[Projected],
+    cam: &Camera,
+    cfg: &RenderConfig,
+    pixels: &crate::render::pixel_pipeline::SampledPixels,
+    counters: &mut StageCounters,
+    scratch: &mut DenseScratch,
+    out: &mut crate::render::pixel_pipeline::SparseRender,
+) {
+    use crate::render::pixel_pipeline::PixelHit;
     let (w, h) = (cam.intr.width, cam.intr.height);
     // full tile binning + sort — the tile pipeline cannot skip this
-    let (tile_lists, tiles_x, _ty) = bin_and_sort(projected, w, h, cfg, counters);
+    let mut tiles = std::mem::take(&mut scratch.org_tiles);
+    bin_and_sort_with(projected, w, h, cfg, counters, scratch, &mut tiles);
     let ts = cfg.tile_size;
+    let tiles_x = tiles.tiles_x;
     let tile_samples = samples_per_tile(pixels, w, h, ts, tiles_x);
 
     let n_px = pixels.len();
-    let mut out = SparseRender {
-        colors: vec![Vec3::ZERO; n_px],
-        depths: vec![0.0; n_px],
-        final_t: vec![1.0; n_px],
-        lists: HitLists::new(),
-        walk_len: vec![0; n_px],
-    };
+    out.colors.clear();
+    out.colors.resize(n_px, Vec3::ZERO);
+    out.depths.clear();
+    out.depths.resize(n_px, 0.0);
+    out.final_t.clear();
+    out.final_t.resize(n_px, 1.0);
+    out.walk_len.clear();
+    out.walk_len.resize(n_px, 0);
+    out.lists.clear();
+    let mut hits: Vec<PixelHit> = Vec::new();
     for (i, &(x, y)) in pixels.pixels.iter().enumerate() {
         let tile_id = ((y / ts) * tiles_x + x / ts) as usize;
-        let list = &tile_lists[tile_id];
+        let list = tiles.get(tile_id);
         let slots = org_s_slots_per_pair(tile_samples[tile_id]);
         let pxc = Vec2::new(x as f32 + 0.5, y as f32 + 0.5);
         let mut t = 1.0f32;
         let mut color = Vec3::ZERO;
         let mut depth = 0.0f32;
-        let mut hits = Vec::new();
+        hits.clear();
         let mut walk = 0u32;
         for &pidx in list.iter() {
             if t < cfg.t_min {
@@ -250,7 +661,7 @@ pub fn render_org_s(
         out.walk_len[i] = walk;
         out.lists.push_list(&hits);
     }
-    out
+    scratch.org_tiles = tiles;
 }
 
 /// Backward of the "Org.+S" variant: reverse rasterization walks the
@@ -365,33 +776,35 @@ pub struct DenseBackward {
     pub grad2d: Vec<Grad2d>,
 }
 
-/// Reverse rasterization + re-projection of the dense tile pipeline.
-///
-/// `dl_dcolor`/`dl_ddepth` are full-frame loss gradients (row-major).
+/// Reverse-raster worker: walk tile rows `[r0, r1)` pixel-side,
+/// scattering per-pair gradients into the band's (tile-disjoint)
+/// `entry_grads` slice — one slot per tile-list entry.
 #[allow(clippy::too_many_arguments)]
-pub fn backward_dense(
-    store: &GaussianStore,
-    cam: &Camera,
-    cfg: &RenderConfig,
+fn backward_tile_rows(
     projected: &[Projected],
+    cfg: &RenderConfig,
     render: &DenseRender,
     dl_dcolor: &[Vec3],
     dl_ddepth: &[f32],
-    want_pose: bool,
-    want_gauss: bool,
-    counters: &mut StageCounters,
-) -> DenseBackward {
-    let (w, h) = (cam.intr.width, cam.intr.height);
-    assert_eq!(dl_dcolor.len(), (w * h) as usize);
+    w: u32,
+    h: u32,
+    r0: usize,
+    r1: usize,
+    entry_grads: &mut [Grad2d],
+) -> StageCounters {
+    let mut counters = StageCounters::new();
     let ts = cfg.tile_size;
-    let mut grad2d = vec![Grad2d::default(); projected.len()];
-
-    for ty in 0..render.tiles_y {
-        for tx in 0..render.tiles_x {
-            let list = &render.tile_lists[(ty * render.tiles_x + tx) as usize];
+    let lists = &render.tile_lists;
+    let tiles_x = lists.tiles_x;
+    let band_base = lists.starts[r0 * tiles_x as usize] as usize;
+    for ty in r0 as u32..r1 as u32 {
+        for tx in 0..tiles_x {
+            let tile = (ty * tiles_x + tx) as usize;
+            let list = lists.get(tile);
             if list.is_empty() {
                 continue;
             }
+            let tile_ent = lists.starts[tile] as usize - band_base;
             for py in 0..ts {
                 for pxi in 0..ts {
                     let x = tx * ts + pxi;
@@ -431,7 +844,7 @@ pub fn backward_dense(
                         let om = 1.0 - alpha;
                         t_run /= om; // Γᵢ (transmittance before i)
                         let t_i = t_run;
-                        let g = &mut grad2d[pidx];
+                        let g = &mut entry_grads[tile_ent + gi];
                         let wgt = t_i * alpha;
                         g.color += dldc * wgt;
                         g.depth += dldd * wgt;
@@ -459,10 +872,193 @@ pub fn backward_dense(
             }
         }
     }
+    counters
+}
 
-    let (pose, gauss) =
-        geometry_backward(store, cam, projected, &grad2d, cfg, want_pose, want_gauss, 0);
+/// Reduce-stage worker: sum each owned Gaussian's per-entry gradients in
+/// tile order into its (disjoint) `grad2d` slot. `base` is the first
+/// projected id of the chunk.
+fn reduce_entry_grads(
+    entry_grads: &[Grad2d],
+    gauss_starts: &[u32],
+    gauss_entries: &[u32],
+    base: usize,
+    grad2d: &mut [Grad2d],
+) {
+    for (li, g) in grad2d.iter_mut().enumerate() {
+        let gi = base + li;
+        let s = gauss_starts[gi] as usize;
+        let e = gauss_starts[gi + 1] as usize;
+        for &ent in &gauss_entries[s..e] {
+            let b = &entry_grads[ent as usize];
+            g.mean2d += b.mean2d;
+            g.conic[0] += b.conic[0];
+            g.conic[1] += b.conic[1];
+            g.conic[2] += b.conic[2];
+            g.opacity += b.opacity;
+            g.color += b.color;
+            g.depth += b.depth;
+        }
+    }
+}
+
+/// Reverse rasterization + re-projection of the dense tile pipeline
+/// (one-shot wrapper over [`backward_dense_with`]).
+///
+/// `dl_dcolor`/`dl_ddepth` are full-frame loss gradients (row-major).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_dense(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    projected: &[Projected],
+    render: &DenseRender,
+    dl_dcolor: &[Vec3],
+    dl_ddepth: &[f32],
+    want_pose: bool,
+    want_gauss: bool,
+    counters: &mut StageCounters,
+) -> DenseBackward {
+    let mut scratch = DenseScratch::new();
+    backward_dense_with(
+        store, cam, cfg, projected, render, dl_dcolor, dl_ddepth, want_pose, want_gauss,
+        counters, &mut scratch,
+    )
+}
+
+/// [`backward_dense`] reusing a caller-held arena. Two passes, both
+/// bit-identical at any thread count: (1) pixel-side reverse walks
+/// parallel over tile-row bands, scattering per-pair gradients into the
+/// tile-list *entry* slots (disjoint per tile); (2) a transpose CSR
+/// (entry ids per Gaussian, tile-ordered) reduced parallel over Gaussian
+/// chunks into disjoint `grad2d` ranges, then `geometry_backward`'s
+/// disjoint store-range re-projection.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_dense_with(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    projected: &[Projected],
+    render: &DenseRender,
+    dl_dcolor: &[Vec3],
+    dl_ddepth: &[f32],
+    want_pose: bool,
+    want_gauss: bool,
+    counters: &mut StageCounters,
+    scratch: &mut DenseScratch,
+) -> DenseBackward {
+    let (w, h) = (cam.intr.width, cam.intr.height);
+    assert_eq!(dl_dcolor.len(), (w * h) as usize);
+    let lists = &render.tile_lists;
+    let (tiles_x, tiles_y) = (lists.tiles_x, lists.tiles_y);
+    let total = lists.total_entries();
+    let n_rows = tiles_y as usize;
+
+    // -- pass 1: pixel-side reverse walks over tile-row bands -----------
+    let n_bands = scratch.threads_for(total, PARALLEL_HITS).min(n_rows.max(1));
+    scratch.entry_grads.clear();
+    scratch.entry_grads.resize(total, Grad2d::default());
+    if n_bands <= 1 {
+        let c = backward_tile_rows(
+            projected, cfg, render, dl_dcolor, dl_ddepth, w, h, 0, n_rows,
+            &mut scratch.entry_grads,
+        );
+        counters.merge(&c);
+    } else {
+        let bounds =
+            balanced_bounds(n_rows, n_bands, |r| row_entries_range(lists, tiles_x, r, r + 1));
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_bands);
+            let mut eg_rem: &mut [Grad2d] = &mut scratch.entry_grads;
+            for b in 0..n_bands {
+                let (r0, r1) = (bounds[b], bounds[b + 1]);
+                if r0 == r1 {
+                    continue;
+                }
+                let n_ent = row_entries_range(lists, tiles_x, r0, r1);
+                let (eg, rest) = eg_rem.split_at_mut(n_ent);
+                eg_rem = rest;
+                handles.push(s.spawn(move || {
+                    backward_tile_rows(
+                        projected, cfg, render, dl_dcolor, dl_ddepth, w, h, r0, r1, eg,
+                    )
+                }));
+            }
+            for jh in handles {
+                counters.merge(&jh.join().expect("dense backward worker panicked"));
+            }
+        });
+    }
+
+    // -- pass 2: transpose (entry → Gaussian, tile order) + reduce ------
+    let mut grad2d = vec![Grad2d::default(); projected.len()];
+    scratch.gauss_starts.clear();
+    scratch.gauss_starts.resize(projected.len() + 1, 0);
+    for &pi in &lists.entries {
+        scratch.gauss_starts[pi as usize + 1] += 1;
+    }
+    for i in 0..projected.len() {
+        scratch.gauss_starts[i + 1] += scratch.gauss_starts[i];
+    }
+    if scratch.gauss_entries.len() < total {
+        scratch.gauss_entries.resize(total, 0);
+    } else {
+        scratch.gauss_entries.truncate(total);
+    }
+    scratch.gauss_cursors.clear();
+    scratch
+        .gauss_cursors
+        .extend_from_slice(&scratch.gauss_starts[..projected.len()]);
+    for (e, &pi) in lists.entries.iter().enumerate() {
+        let cur = &mut scratch.gauss_cursors[pi as usize];
+        scratch.gauss_entries[*cur as usize] = e as u32;
+        *cur += 1;
+    }
+    let n_red = scratch.threads_for(projected.len(), PARALLEL_GAUSSIANS);
+    if n_red <= 1 {
+        reduce_entry_grads(
+            &scratch.entry_grads,
+            &scratch.gauss_starts,
+            &scratch.gauss_entries,
+            0,
+            &mut grad2d,
+        );
+    } else {
+        let chunk = projected.len().div_ceil(n_red);
+        let entry_grads: &[Grad2d] = &scratch.entry_grads;
+        let gauss_starts: &[u32] = &scratch.gauss_starts;
+        let gauss_entries: &[u32] = &scratch.gauss_entries;
+        std::thread::scope(|s| {
+            let mut rem: &mut [Grad2d] = &mut grad2d;
+            let mut base = 0usize;
+            let mut handles = Vec::with_capacity(n_red);
+            while base < projected.len() {
+                let end = (base + chunk).min(projected.len());
+                let (blk, rest) = rem.split_at_mut(end - base);
+                rem = rest;
+                let b0 = base;
+                handles.push(s.spawn(move || {
+                    reduce_entry_grads(entry_grads, gauss_starts, gauss_entries, b0, blk)
+                }));
+                base = end;
+            }
+            for jh in handles {
+                jh.join().expect("gradient reduce worker panicked");
+            }
+        });
+    }
+
+    let (pose, gauss) = geometry_backward(
+        store, cam, projected, &grad2d, cfg, want_pose, want_gauss, scratch.threads,
+    );
     DenseBackward { pose, gauss, grad2d }
+}
+
+/// Entry count of tile rows `[r0, r1)` (the pass-1 band split).
+fn row_entries_range(lists: &TileLists, tiles_x: u32, r0: usize, r1: usize) -> usize {
+    let t0 = r0 * tiles_x as usize;
+    let t1 = r1 * tiles_x as usize;
+    (lists.starts[t1] - lists.starts[t0]) as usize
 }
 
 #[cfg(test)]
@@ -589,15 +1185,16 @@ mod tests {
         let cfg = RenderConfig::default();
         let mut c = StageCounters::new();
         let proj = crate::render::projection::project_all(&store, &cam, &cfg, &mut c);
-        let (lists, tx, ty) = bin_and_sort(&proj, 64, 64, &cfg, &mut c);
-        assert_eq!((tx, ty), (4, 4));
-        let total_pairs: usize = lists.iter().map(|l| l.len()).sum();
+        let lists = bin_and_sort(&proj, 64, 64, &cfg, &mut c);
+        assert_eq!((lists.tiles_x, lists.tiles_y), (4, 4));
+        assert_eq!(lists.n_tiles(), 16);
+        let total_pairs = lists.total_entries();
         // replication: pairs ≥ projected count (the big splats span tiles)
         assert!(total_pairs >= proj.len());
         assert_eq!(c.sort_pairs, total_pairs as u64);
         // each tile list sorted by depth
-        for l in &lists {
-            for w in l.windows(2) {
+        for t in 0..lists.n_tiles() {
+            for w in lists.get(t).windows(2) {
                 assert!(proj[w[0] as usize].depth <= proj[w[1] as usize].depth);
             }
         }
@@ -631,5 +1228,44 @@ mod tests {
         let (r, _) = render_dense(&store, &cam, &RenderConfig::default(), &mut c);
         assert!(r.image.data.iter().all(|&v| v == Vec3::ZERO));
         assert!(r.final_t.data.iter().all(|&t| t == 1.0));
+    }
+
+    #[test]
+    fn dense_scratch_reuse_is_identical() {
+        // rendering + backward twice through the same scratch/output
+        // buffers must reproduce the fresh-buffer result exactly
+        let (store, cam) = test_scene();
+        let cfg = RenderConfig::default();
+        let mut c = StageCounters::new();
+        let proj = crate::render::projection::project_all(&store, &cam, &cfg, &mut c);
+        let fresh = render_dense_projected(&proj, &cam, &cfg, &mut c);
+        let n = (64 * 64) as usize;
+        let dldc = vec![Vec3::new(0.2, 0.3, 0.1); n];
+        let dldd = vec![0.05; n];
+        let fresh_bwd = backward_dense(
+            &store, &cam, &cfg, &proj, &fresh, &dldc, &dldd, true, true, &mut c,
+        );
+
+        let mut scratch = DenseScratch::new();
+        let mut out = DenseRender::default();
+        for _ in 0..3 {
+            let mut c2 = StageCounters::new();
+            render_dense_projected_with(&proj, &cam, &cfg, &mut c2, &mut scratch, &mut out);
+            assert_eq!(out.image.data.len(), fresh.image.data.len());
+            for i in 0..fresh.image.data.len() {
+                assert_eq!(out.image.data[i], fresh.image.data[i]);
+                assert_eq!(out.final_t.data[i], fresh.final_t.data[i]);
+                assert_eq!(out.n_contrib[i], fresh.n_contrib[i]);
+            }
+            let bwd = backward_dense_with(
+                &store, &cam, &cfg, &proj, &out, &dldc, &dldd, true, true, &mut c2,
+                &mut scratch,
+            );
+            for (a, b) in bwd.grad2d.iter().zip(fresh_bwd.grad2d.iter()) {
+                assert_eq!(a.mean2d, b.mean2d);
+                assert_eq!(a.opacity, b.opacity);
+                assert_eq!(a.color, b.color);
+            }
+        }
     }
 }

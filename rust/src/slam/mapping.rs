@@ -7,6 +7,16 @@
 //! over the mapping pixel set (unseen + texture-weighted, Sec. IV-A)
 //! updating Gaussian parameters with Adam, and finally prune degenerate
 //! Gaussians.
+//!
+//! The densify and prune passes are multi-threaded with the renderer's
+//! chunk-merge contract: [`densify_unseen`] fans out over pixel-row
+//! chunks and merges candidate Gaussians in chunk order (the post-densify
+//! store layout is identical at any thread count), and
+//! [`prune_keep_mask`] fans out the keep test over Gaussian chunks
+//! writing disjoint mask slices, with the compaction
+//! ([`GaussianStore::prune_mask`]) a pure function of the mask. Thread
+//! count follows the `SPLATONIC_THREADS` plumbing
+//! (`crate::render::auto_threads`).
 
 use super::loss::{sample_loss, LossCfg};
 use crate::camera::Camera;
@@ -137,34 +147,7 @@ pub fn map_update(
     };
 
     // ---- densification from unseen / depth-uncovered pixels ----------
-    let mut added = 0usize;
-    let stride = cfg.densify_stride.max(1);
-    'outer: for y in (0..frame.depth.height).step_by(stride as usize) {
-        for x in (0..frame.depth.width).step_by(stride as usize) {
-            if added >= cfg.max_new {
-                break 'outer;
-            }
-            let unseen = gamma.get(x, y) > cfg.sampler.unseen_t;
-            let d_ref = frame.depth.get(x, y);
-            if !unseen || d_ref <= 0.0 {
-                continue;
-            }
-            // back-project pixel to a world point; splat sized to the
-            // pixel footprint at that depth (SplaTAM-style init)
-            let p_cam = cam
-                .intr
-                .backproject(Vec2::new(x as f32 + 0.5, y as f32 + 0.5), d_ref);
-            let p_world = cam.c2w().transform(p_cam);
-            let radius = d_ref / cam.intr.fx * 0.7;
-            store.push(Gaussian::isotropic(
-                p_world,
-                radius.max(1e-3),
-                frame.rgb.get(x, y),
-                0.6,
-            ));
-            added += 1;
-        }
-    }
+    let added = densify_unseen(store, cam, frame, &gamma, cfg, 0);
     adam.grow(added * GaussianGrads::PARAMS);
     stats.added = added;
 
@@ -214,18 +197,156 @@ pub fn map_update(
     }
 
     // ---- prune ---------------------------------------------------------
-    let keep: Vec<bool> = (0..store.len())
-        .map(|i| {
-            store.opacity(i) >= cfg.prune_opacity
-                && store.get(i).max_scale() <= cfg.prune_scale
-        })
-        .collect();
-    let pruned = store.prune(cfg.prune_opacity, cfg.prune_scale);
+    let keep = prune_keep_mask(store, cfg.prune_opacity, cfg.prune_scale, 0);
+    let pruned = store.prune_mask(&keep);
     if pruned > 0 {
         adam.compact(&keep, GaussianGrads::PARAMS);
     }
     stats.pruned = pruned;
     Ok(stats)
+}
+
+/// Pixel count below which densification stays sequential (thread spawns
+/// are not worth it for tiny frames — same rationale as the renderer's
+/// `PARALLEL_HITS`).
+const PARALLEL_DENSIFY_PIXELS: usize = 4096;
+
+/// Densify the map from the Γ plane: back-project a new Gaussian for
+/// every `densify_stride`-strided pixel that is unseen (Γ > threshold)
+/// and has valid reference depth, capped at `cfg.max_new`, splat sized to
+/// the pixel footprint at that depth (SplaTAM-style init).
+///
+/// Parallel over contiguous pixel-row chunks: each worker collects its
+/// candidates in row-major order into a private buffer and the buffers
+/// are merged in chunk order before the cap, so the Gaussians appended to
+/// `store` — order, count, and bits — are identical at any thread count
+/// (`threads`: 0 = auto via `SPLATONIC_THREADS`). Returns the number
+/// added.
+pub fn densify_unseen(
+    store: &mut GaussianStore,
+    cam: &Camera,
+    frame: &Frame,
+    gamma: &Plane,
+    cfg: &MappingConfig,
+    threads: usize,
+) -> usize {
+    let stride = cfg.densify_stride.max(1) as usize;
+    let rows: Vec<u32> = (0..frame.depth.height).step_by(stride).collect();
+    let n_px = frame.depth.width as usize * frame.depth.height as usize;
+    let n_threads = crate::render::stage_threads(threads, n_px, PARALLEL_DENSIFY_PIXELS)
+        .min(rows.len().max(1));
+
+    let mut added = 0usize;
+    if n_threads <= 1 {
+        let mut cands = Vec::new();
+        densify_rows(&rows, cam, frame, gamma, cfg, stride, &mut cands);
+        for g in cands.into_iter().take(cfg.max_new) {
+            store.push(g);
+            added += 1;
+        }
+    } else {
+        let chunk = rows.len().div_ceil(n_threads);
+        let mut parts: Vec<Vec<Gaussian>> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = rows
+                .chunks(chunk)
+                .map(|row_chunk| {
+                    s.spawn(move || {
+                        let mut cands = Vec::new();
+                        densify_rows(row_chunk, cam, frame, gamma, cfg, stride, &mut cands);
+                        cands
+                    })
+                })
+                .collect();
+            parts = handles
+                .into_iter()
+                .map(|h| h.join().expect("densify worker panicked"))
+                .collect();
+        });
+        // merge in chunk order (= row-major order), then apply the cap —
+        // identical to the sequential early-exit walk
+        for g in parts.into_iter().flatten().take(cfg.max_new) {
+            store.push(g);
+            added += 1;
+        }
+    }
+    added
+}
+
+/// Densify worker: emit candidate Gaussians for the given pixel rows in
+/// row-major order, stopping once `cfg.max_new` are collected (any single
+/// worker hitting the cap already saturates the merged, capped result).
+fn densify_rows(
+    rows: &[u32],
+    cam: &Camera,
+    frame: &Frame,
+    gamma: &Plane,
+    cfg: &MappingConfig,
+    stride: usize,
+    out: &mut Vec<Gaussian>,
+) {
+    let c2w = cam.c2w();
+    for &y in rows {
+        for x in (0..frame.depth.width).step_by(stride) {
+            if out.len() >= cfg.max_new {
+                return;
+            }
+            let unseen = gamma.get(x, y) > cfg.sampler.unseen_t;
+            let d_ref = frame.depth.get(x, y);
+            if !unseen || d_ref <= 0.0 {
+                continue;
+            }
+            let p_cam = cam
+                .intr
+                .backproject(Vec2::new(x as f32 + 0.5, y as f32 + 0.5), d_ref);
+            let p_world = c2w.transform(p_cam);
+            let radius = d_ref / cam.intr.fx * 0.7;
+            out.push(Gaussian::isotropic(
+                p_world,
+                radius.max(1e-3),
+                frame.rgb.get(x, y),
+                0.6,
+            ));
+        }
+    }
+}
+
+/// The mapping prune pass's keep mask (opacity above the floor, max scale
+/// below the ceiling), parallel over Gaussian chunks — each worker writes
+/// a disjoint mask slice, so the mask (and the [`GaussianStore::prune_mask`]
+/// compaction it drives) is identical at any thread count (`threads`:
+/// 0 = auto via `SPLATONIC_THREADS`).
+pub fn prune_keep_mask(
+    store: &GaussianStore,
+    min_opacity: f32,
+    max_scale: f32,
+    threads: usize,
+) -> Vec<bool> {
+    let n = store.len();
+    let mut keep = vec![true; n];
+    let pool =
+        crate::render::stage_threads(threads, n, crate::render::pixel_pipeline::PARALLEL_GAUSSIANS);
+    let eval = |i: usize| {
+        store.opacity(i) >= min_opacity && store.get(i).max_scale() <= max_scale
+    };
+    if pool <= 1 {
+        for (i, k) in keep.iter_mut().enumerate() {
+            *k = eval(i);
+        }
+    } else {
+        let chunk = n.div_ceil(pool);
+        std::thread::scope(|s| {
+            for (ci, blk) in keep.chunks_mut(chunk).enumerate() {
+                let base = ci * chunk;
+                s.spawn(move || {
+                    for (j, k) in blk.iter_mut().enumerate() {
+                        *k = eval(base + j);
+                    }
+                });
+            }
+        });
+    }
+    keep
 }
 
 #[cfg(test)]

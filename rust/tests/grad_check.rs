@@ -1,11 +1,26 @@
-// Integration gradient check: single-Gaussian pose gradient against
-// central finite differences, with a tiny alpha-threshold so the splat
-// cutoff discontinuity does not pollute the FD signal.
+//! Integration gradient checks against central finite differences, for
+//! both CPU backends:
+//!
+//! * the original single-Gaussian sparse pose check;
+//! * `DenseCpuBackend::backward` pose *and* per-Gaussian
+//!   (position/opacity/scale) gradients on a multi-Gaussian overlapping
+//!   scene — the tile pipeline's reverse rasterization + re-projection
+//!   chain end-to-end;
+//! * the same scene through `SparseCpuBackend`, asserting the two
+//!   analytic gradients agree (shared math, different work streams).
+//!
+//! All FD checks use a tiny α* so the splat-cutoff discontinuity (present
+//! in every 3DGS implementation) does not pollute the FD signal.
+
 use splatonic::camera::{Camera, Intrinsics};
 use splatonic::gaussian::{Gaussian, GaussianStore};
 use splatonic::math::{Quat, Se3, Vec3};
+use splatonic::render::backward_geom::{flatten_params, unflatten_params};
 use splatonic::render::pixel_pipeline::{backward_sparse, render_sparse, SampledPixels};
-use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::render::{
+    DenseCpuBackend, GaussianGrads, GradRequest, LossGrads, PixelSet, PoseGrad, RenderBackend,
+    RenderConfig, RenderJob, SparseCpuBackend, StageCounters,
+};
 
 fn loss(store: &GaussianStore, cam: &Camera, cfg: &RenderConfig, px: &SampledPixels) -> f64 {
     let mut c = StageCounters::new();
@@ -29,7 +44,9 @@ fn single_gaussian_pose_gradient_fd() {
     let (r, proj) = render_sparse(&store, &cam, &cfg, &px, &mut c);
     let dldc = vec![Vec3::ONE; r.colors.len()];
     let dldd = vec![0.0; r.colors.len()];
-    let b = backward_sparse(&store, &cam, &cfg, &proj, &r, &px, &dldc, &dldd, true, true, false, &mut c);
+    let b = backward_sparse(
+        &store, &cam, &cfg, &proj, &r, &px, &dldc, &dldd, true, true, false, &mut c,
+    );
     let an = b.pose.unwrap().flatten();
     let h = 1e-3f32;
     for k in 0..7 {
@@ -45,5 +62,168 @@ fn single_gaussian_pose_gradient_fd() {
         let fd = ((perturb(h) - perturb(-h)) / (2.0 * h as f64)) as f32;
         let tol = 0.03 * fd.abs().max(an[k].abs()).max(0.05);
         assert!((fd - an[k]).abs() < tol, "param {k}: fd={fd} analytic={}", an[k]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense-backend FD battery (multi-Gaussian overlapping scene)
+// ---------------------------------------------------------------------
+
+const W: u32 = 48;
+const H: u32 = 48;
+
+/// Three overlapping splats (one anisotropic + rotated) so the reverse
+/// walk exercises occlusion, the suffix accumulators, and the full
+/// scale/rotation chain.
+fn overlap_scene() -> (GaussianStore, Camera) {
+    let mut store = GaussianStore::new();
+    store.push(Gaussian::isotropic(Vec3::new(0.0, 0.0, 2.0), 0.35, Vec3::new(0.9, 0.2, 0.1), 0.8));
+    let green = Vec3::new(0.1, 0.8, 0.3);
+    let blue = Vec3::new(0.2, 0.3, 0.9);
+    store.push(Gaussian::isotropic(Vec3::new(0.22, 0.12, 3.0), 0.5, green, 0.7));
+    store.push(Gaussian::isotropic(Vec3::new(-0.25, -0.18, 4.0), 0.7, blue, 0.9));
+    store.log_scales[1] = Vec3::new(-1.2, -0.7, -1.0);
+    store.rots[1] = Quat::new(0.9, 0.1, -0.2, 0.15);
+    let cam = Camera::new(
+        Intrinsics::replica_like(W, H),
+        Se3::new(Quat::from_axis_angle(Vec3::Y, 0.05), Vec3::new(0.02, -0.03, 0.1)),
+    );
+    (store, cam)
+}
+
+fn fd_cfg() -> RenderConfig {
+    RenderConfig { alpha_thresh: 1e-6, ..Default::default() }
+}
+
+/// Per-pixel loss weights of the scalar test loss
+/// Σ_p w_p·C(p) + v_p·D(p) (deterministic, spatially varying).
+fn loss_weights(n: usize) -> (Vec<Vec3>, Vec<f32>) {
+    let dldc = (0..n)
+        .map(|i| {
+            Vec3::new(
+                ((i % 3) as f32 + 1.0) * 0.2,
+                ((i % 5) as f32 + 1.0) * 0.1,
+                ((i % 7) as f32 + 1.0) * 0.05,
+            )
+        })
+        .collect();
+    let dldd = (0..n).map(|i| 0.03 * ((i % 4) as f32 + 1.0)).collect();
+    (dldc, dldd)
+}
+
+/// The scalar test loss evaluated through a full-frame dense render.
+fn dense_loss_eval(store: &GaussianStore, cam: &Camera, cfg: &RenderConfig) -> f64 {
+    let mut backend = DenseCpuBackend::new();
+    let job = RenderJob { cam, pixels: PixelSet::Full, rcfg: cfg, frame: None };
+    let out = backend.render(store, &job).expect("dense render");
+    let (dldc, dldd) = loss_weights(out.colors.len());
+    let mut l = 0.0f64;
+    for i in 0..out.colors.len() {
+        l += out.colors[i].dot(dldc[i]) as f64;
+        l += (out.depths[i] * dldd[i]) as f64;
+    }
+    l
+}
+
+/// Analytic gradients of the scalar test loss through a backend session.
+fn backend_grads(
+    kind_sparse: bool,
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+) -> (PoseGrad, GaussianGrads) {
+    let mut backend: Box<dyn RenderBackend> = if kind_sparse {
+        Box::new(SparseCpuBackend::new())
+    } else {
+        Box::new(DenseCpuBackend::new())
+    };
+    let job = RenderJob { cam, pixels: PixelSet::Full, rcfg: cfg, frame: None };
+    let n = backend.render(store, &job).expect("render").colors.len();
+    let (dldc, dldd) = loss_weights(n);
+    let bwd = backend
+        .backward(
+            store,
+            &job,
+            LossGrads { dl_dcolor: &dldc, dl_ddepth: &dldd },
+            GradRequest::both(),
+        )
+        .expect("backward");
+    (bwd.pose.expect("pose grad"), bwd.gauss.expect("gauss grads"))
+}
+
+#[test]
+fn dense_backend_pose_gradient_fd() {
+    let (store, cam) = overlap_scene();
+    let cfg = fd_cfg();
+    let (pose, _) = backend_grads(false, &store, &cam, &cfg);
+    let an = pose.flatten();
+    let h = 2e-3f32;
+    for k in 0..7 {
+        let perturb = |s: f32| -> f64 {
+            let mut cam2 = cam;
+            match k {
+                0 => cam2.w2c.q.w += s,
+                1 => cam2.w2c.q.x += s,
+                2 => cam2.w2c.q.y += s,
+                3 => cam2.w2c.q.z += s,
+                4 => cam2.w2c.t.x += s,
+                5 => cam2.w2c.t.y += s,
+                _ => cam2.w2c.t.z += s,
+            }
+            dense_loss_eval(&store, &cam2, &cfg)
+        };
+        let fd = ((perturb(h) - perturb(-h)) / (2.0 * h as f64)) as f32;
+        let tol = 0.05 * fd.abs().max(an[k].abs()).max(0.05);
+        assert!((fd - an[k]).abs() < tol, "pose param {k}: fd={fd} analytic={}", an[k]);
+    }
+}
+
+#[test]
+fn dense_backend_gaussian_gradients_fd() {
+    let (store, cam) = overlap_scene();
+    let cfg = fd_cfg();
+    let (_, gauss) = backend_grads(false, &store, &cam, &cfg);
+    let an = gauss.flatten();
+    let flat0 = flatten_params(&store);
+    let h = 2e-3f32;
+    // position (0..2), log-scale (7..9), opacity logit (10) per Gaussian
+    let groups: [usize; 7] = [0, 1, 2, 7, 8, 9, 10];
+    for g in 0..store.len() {
+        for &off in &groups {
+            let k = g * GaussianGrads::PARAMS + off;
+            let perturb = |s: f32| -> f64 {
+                let mut flat = flat0.clone();
+                flat[k] += s;
+                let mut st = store.clone();
+                unflatten_params(&mut st, &flat);
+                dense_loss_eval(&st, &cam, &cfg)
+            };
+            let fd = ((perturb(h) - perturb(-h)) / (2.0 * h as f64)) as f32;
+            let a = an[k];
+            let tol = 0.10 * fd.abs().max(a.abs()).max(0.05);
+            assert!(
+                (fd - a).abs() < tol,
+                "gaussian {g} param offset {off}: fd={fd} analytic={a}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_and_sparse_backend_gradients_agree_on_overlap_scene() {
+    let (store, cam) = overlap_scene();
+    let cfg = fd_cfg();
+    let (pd, gd) = backend_grads(false, &store, &cam, &cfg);
+    let (ps, gs) = backend_grads(true, &store, &cam, &cfg);
+    let (pd, ps) = (pd.flatten(), ps.flatten());
+    for k in 0..7 {
+        let tol = 2e-3 * (1.0 + pd[k].abs());
+        assert!((pd[k] - ps[k]).abs() < tol, "pose {k}: dense {} vs sparse {}", pd[k], ps[k]);
+    }
+    let (gd, gs) = (gd.flatten(), gs.flatten());
+    assert_eq!(gd.len(), gs.len());
+    for k in 0..gd.len() {
+        let tol = 5e-3 * (1.0 + gd[k].abs());
+        assert!((gd[k] - gs[k]).abs() < tol, "gauss {k}: dense {} vs sparse {}", gd[k], gs[k]);
     }
 }

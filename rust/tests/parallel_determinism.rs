@@ -1,20 +1,37 @@
-//! The threaded sparse hot path must be *bit-identical* to the forced
-//! single-thread run: hit lists are ordered by the strict total order
-//! (depth, proj), so colors/depths/final_t/lists cannot depend on the
-//! thread count, and per-thread `StageCounters` merge to the exact
-//! sequential totals. The scene is sized to cross both parallel
-//! thresholds (stage-1 Gaussian fan-out and stage-2/backward hit
-//! fan-out), so the threaded code paths really execute.
+//! The threaded hot paths must be *bit-identical* to the forced
+//! single-thread run:
+//!
+//! * **sparse pipeline** — hit lists are ordered by the strict total
+//!   order (depth, proj), so colors/depths/final_t/lists cannot depend on
+//!   the thread count, and per-thread `StageCounters` merge to the exact
+//!   sequential totals;
+//! * **dense tile pipeline** — binning's chunk-order CSR fill plus the
+//!   per-tile (depth, proj) sort make the tile lists thread-count
+//!   invariant, tile-row raster bands write disjoint pixels, and the
+//!   backward's entry-scatter + tile-ordered per-Gaussian reduce keeps
+//!   every gradient's float accumulation order fixed;
+//! * **mapping densify/prune** — chunk-order candidate merge and the
+//!   disjoint-slice keep mask make the post-densify/post-prune store
+//!   contents identical at any thread count.
+//!
+//! Scenes are sized to cross the parallel thresholds, so the threaded
+//! code paths really execute.
 
 use splatonic::camera::{Camera, Intrinsics};
+use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::gaussian::{Gaussian, GaussianStore};
 use splatonic::math::{Pcg32, Quat, Se3, Vec3};
+use splatonic::render::image::Plane;
 use splatonic::render::pixel_pipeline::{
     backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
     SparseRender, PARALLEL_GAUSSIANS, PARALLEL_HITS,
 };
 use splatonic::render::projection::project_all;
+use splatonic::render::tile_pipeline::{
+    backward_dense_with, render_dense_projected_with, DenseRender, DenseScratch,
+};
 use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::slam::mapping::{densify_unseen, prune_keep_mask, MappingConfig};
 
 fn big_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
     let mut store = GaussianStore::new();
@@ -156,5 +173,176 @@ fn threaded_backward_matches_sequential_counters_and_grads() {
     for k in 0..7 {
         let tol = 1e-3 * (1.0 + p1[k].abs());
         assert!((p1[k] - p4[k]).abs() <= tol, "pose grad {k}: {} vs {}", p1[k], p4[k]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense tile pipeline
+// ---------------------------------------------------------------------
+
+fn dense_render_with_threads(s: &Setup, threads: usize) -> (DenseRender, StageCounters) {
+    let mut scratch = DenseScratch::with_threads(threads);
+    let mut out = DenseRender::default();
+    let mut c = StageCounters::new();
+    render_dense_projected_with(&s.projected, &s.cam, &s.cfg, &mut c, &mut scratch, &mut out);
+    (out, c)
+}
+
+#[test]
+fn threaded_dense_forward_is_bit_identical_to_sequential() {
+    let s = setup();
+    let (seq, c_seq) = dense_render_with_threads(&s, 1);
+    assert!(
+        seq.tile_lists.total_entries() >= PARALLEL_HITS,
+        "scene must cross the raster parallel threshold: {} < {PARALLEL_HITS}",
+        seq.tile_lists.total_entries()
+    );
+    for threads in [2usize, 4, 7] {
+        let (par, c_par) = dense_render_with_threads(&s, threads);
+        // merged per-band counters equal the sequential totals exactly
+        assert_eq!(c_seq, c_par, "counters diverge at {threads} threads");
+        // the tile CSR is thread-count invariant
+        assert_eq!(seq.tile_lists.n_tiles(), par.tile_lists.n_tiles());
+        assert_eq!(seq.tile_lists.total_entries(), par.tile_lists.total_entries());
+        for t in 0..seq.tile_lists.n_tiles() {
+            assert_eq!(seq.tile_lists.get(t), par.tile_lists.get(t), "tile {t} list differs");
+        }
+        // every output plane is bit-identical
+        assert_eq!(seq.image.data.len(), par.image.data.len());
+        for i in 0..seq.image.data.len() {
+            assert_eq!(
+                seq.image.data[i].x.to_bits(),
+                par.image.data[i].x.to_bits(),
+                "color.x bits differ at pixel {i} with {threads} threads"
+            );
+            assert_eq!(seq.image.data[i].y.to_bits(), par.image.data[i].y.to_bits());
+            assert_eq!(seq.image.data[i].z.to_bits(), par.image.data[i].z.to_bits());
+            assert_eq!(seq.depth.data[i].to_bits(), par.depth.data[i].to_bits());
+            assert_eq!(seq.final_t.data[i].to_bits(), par.final_t.data[i].to_bits());
+            assert_eq!(seq.n_contrib[i], par.n_contrib[i]);
+        }
+    }
+}
+
+#[test]
+fn threaded_dense_backward_is_bit_identical_to_sequential() {
+    let s = setup();
+    let (render, _) = dense_render_with_threads(&s, 1);
+    let n_px = render.image.data.len();
+    let dldc: Vec<Vec3> = (0..n_px)
+        .map(|i| Vec3::new(0.1 + (i % 3) as f32 * 0.05, 0.2, 0.15))
+        .collect();
+    let dldd: Vec<f32> = (0..n_px).map(|i| 0.02 * ((i % 5) as f32)).collect();
+
+    let run = |threads: usize| {
+        let mut scratch = DenseScratch::with_threads(threads);
+        let mut c = StageCounters::new();
+        let bwd = backward_dense_with(
+            &s.store, &s.cam, &s.cfg, &s.projected, &render, &dldc, &dldd, true, true,
+            &mut c, &mut scratch,
+        );
+        (bwd, c)
+    };
+    let (b1, c1) = run(1);
+    let (b4, c4) = run(4);
+    assert_eq!(c1, c4);
+    // entry-slot scatter + tile-ordered reduce: screen-space gradients
+    // are bit-identical
+    for (i, (g1, g4)) in b1.grad2d.iter().zip(b4.grad2d.iter()).enumerate() {
+        assert_eq!(g1.mean2d.x.to_bits(), g4.mean2d.x.to_bits(), "grad2d {i} mean2d.x");
+        assert_eq!(g1.mean2d.y.to_bits(), g4.mean2d.y.to_bits());
+        for j in 0..3 {
+            assert_eq!(g1.conic[j].to_bits(), g4.conic[j].to_bits());
+        }
+        assert_eq!(g1.opacity.to_bits(), g4.opacity.to_bits());
+        assert_eq!(g1.color.x.to_bits(), g4.color.x.to_bits());
+        assert_eq!(g1.color.y.to_bits(), g4.color.y.to_bits());
+        assert_eq!(g1.color.z.to_bits(), g4.color.z.to_bits());
+        assert_eq!(g1.depth.to_bits(), g4.depth.to_bits());
+    }
+    // re-projection uses disjoint store-range slices: Gaussian gradients
+    // are bit-identical too
+    let (f1, f4) = (b1.gauss.unwrap().flatten(), b4.gauss.unwrap().flatten());
+    assert_eq!(f1.len(), f4.len());
+    for k in 0..f1.len() {
+        assert_eq!(f1[k].to_bits(), f4[k].to_bits(), "gauss grad {k} differs");
+    }
+    // pose partials merge in chunk order: tolerance-equal across counts
+    let p1 = b1.pose.unwrap().flatten();
+    let p4 = b4.pose.unwrap().flatten();
+    for k in 0..7 {
+        let tol = 1e-3 * (1.0 + p1[k].abs());
+        assert!((p1[k] - p4[k]).abs() <= tol, "pose grad {k}: {} vs {}", p1[k], p4[k]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mapping densify / prune
+// ---------------------------------------------------------------------
+
+#[test]
+fn threaded_densify_and_prune_are_bit_identical() {
+    // frame big enough to cross the densify parallel threshold
+    let (w, h) = (160u32, 120u32);
+    let data = SyntheticDataset::generate(Flavor::Replica, 7, w, h, 1);
+    let frame = &data.frames[0];
+    let cam = Camera::new(data.intr, frame.gt_w2c);
+    let cfg = MappingConfig::default();
+    // structured Γ plane: roughly half the pixels count as unseen, so the
+    // max_new cap and the skip branches are both exercised
+    let mut gamma = Plane::new(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            gamma.set(x, y, ((x * 7 + y * 13) % 97) as f32 / 96.0);
+        }
+    }
+
+    let run_densify = |threads: usize| {
+        let mut store = GaussianStore::new();
+        let added = densify_unseen(&mut store, &cam, frame, &gamma, &cfg, threads);
+        (store, added)
+    };
+    let (s1, a1) = run_densify(1);
+    for threads in [2usize, 4] {
+        let (sn, an) = run_densify(threads);
+        assert!(a1 > 0, "densify must add Gaussians");
+        assert_eq!(a1, an, "added count differs at {threads} threads");
+        assert_eq!(s1.len(), sn.len());
+        for i in 0..s1.len() {
+            assert_eq!(s1.means[i].x.to_bits(), sn.means[i].x.to_bits(), "mean {i}");
+            assert_eq!(s1.means[i].y.to_bits(), sn.means[i].y.to_bits());
+            assert_eq!(s1.means[i].z.to_bits(), sn.means[i].z.to_bits());
+            assert_eq!(s1.log_scales[i].x.to_bits(), sn.log_scales[i].x.to_bits());
+            assert_eq!(s1.opacity_logits[i].to_bits(), sn.opacity_logits[i].to_bits());
+            assert_eq!(s1.colors[i].x.to_bits(), sn.colors[i].x.to_bits());
+            assert_eq!(s1.colors[i].y.to_bits(), sn.colors[i].y.to_bits());
+            assert_eq!(s1.colors[i].z.to_bits(), sn.colors[i].z.to_bits());
+        }
+    }
+
+    // prune: keep mask and compacted store identical at any thread count
+    // (opacities in big_store straddle the 0.4 floor, so the mask is
+    // non-trivial)
+    let mut rng = Pcg32::new(0x9e11);
+    let store = big_store(10_000, &mut rng);
+    assert!(store.len() >= PARALLEL_GAUSSIANS);
+    let k1 = prune_keep_mask(&store, 0.4, 3.0, 1);
+    for threads in [2usize, 4] {
+        let kn = prune_keep_mask(&store, 0.4, 3.0, threads);
+        assert_eq!(k1, kn, "keep mask differs at {threads} threads");
+    }
+    let kept = k1.iter().filter(|&&k| k).count();
+    assert!(kept > 0 && kept < store.len(), "mask must be non-trivial: {kept}");
+    // compacting with the sequential mask vs a parallel-produced mask
+    // must yield bit-identical stores
+    let k4 = prune_keep_mask(&store, 0.4, 3.0, 4);
+    let mut sa = store.clone();
+    let mut sb = store.clone();
+    assert_eq!(sa.prune_mask(&k1), sb.prune_mask(&k4));
+    assert_eq!(sa.len(), kept);
+    assert_eq!(sa.len(), sb.len());
+    for i in 0..sa.len() {
+        assert_eq!(sa.means[i].x.to_bits(), sb.means[i].x.to_bits());
+        assert_eq!(sa.opacity_logits[i].to_bits(), sb.opacity_logits[i].to_bits());
     }
 }
