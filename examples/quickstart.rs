@@ -12,8 +12,8 @@ use splatonic::camera::Camera;
 use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::math::{Pcg32, Se3, Vec3};
 use splatonic::render::{
-    create_backend, BackendKind, Image, PixelSet, RenderBackend, RenderConfig, RenderJob,
-    StageCounters,
+    create_backend, BackendKind, Image, Parallelism, PixelSet, RenderBackend, RenderConfig,
+    RenderJob, StageCounters,
 };
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::slam::tracking::{track_frame, TrackingConfig};
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. dense tile-based rendering (the conventional 3DGS pipeline)
     //    through a DenseCpu backend session
-    let mut dense = create_backend(BackendKind::DenseCpu)?;
+    let mut dense = create_backend(BackendKind::DenseCpu, Parallelism::auto())?;
     let full_job = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: Some(frame) };
     let (dense_counters, dense_psnr) = {
         let out = dense.render(&data.gt_store, &full_job)?;
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     //    backend session
     let mut rng = Pcg32::new(1);
     let pixels = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
-    let mut sparse = create_backend(BackendKind::SparseCpu)?;
+    let mut sparse = create_backend(BackendKind::SparseCpu, Parallelism::auto())?;
     let sparse_job =
         RenderJob { cam: &cam, pixels: PixelSet::Sparse(&pixels), rcfg: &rcfg, frame: Some(frame) };
     let sparse_counters = sparse.render(&data.gt_store, &sparse_job)?.counters;

@@ -1,0 +1,104 @@
+//! Multi-session serving demo: one [`SlamServer`] driving a
+//! heterogeneous fleet — three concurrent SLAM streams, one scenario
+//! preset each (room orbit, corridor traversal, fast rotation), with
+//! different algorithms and dataset flavors — over a shared,
+//! partitioned thread budget.
+//!
+//! Each session is bit-deterministic regardless of how the streams
+//! interleave or how many workers drive them (see `serve/mod.rs` for the
+//! contract); the report aggregates per-session ATE/PSNR/map size plus
+//! fleet throughput in frames/sec.
+//!
+//! ```text
+//! cargo run --release --example serve_many -- \
+//!     [--workers=3] [--frames=8] [--width=96] [--height=72] [--budget=0.5]
+//! ```
+//!
+//! `--workers=1` serializes the same fleet on one thread — per-session
+//! results are identical, only the wall clock changes.
+
+use splatonic::config::RunConfig;
+use splatonic::dataset::{Flavor, Scenario};
+use splatonic::render::Parallelism;
+use splatonic::serve::{serve, FleetJob, ServerConfig};
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+
+    // --workers is server-level; everything else applies to every job
+    let mut workers = 0usize; // 0 = one worker per session
+    if let Some(pos) = args.iter().position(|a| a == "--workers" || a.starts_with("--workers=")) {
+        let value = if let Some(eq) = args[pos].strip_prefix("--workers=") {
+            let v = eq.to_string();
+            args.remove(pos);
+            v
+        } else {
+            let v = args
+                .get(pos + 1)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("--workers needs a count"))?;
+            args.drain(pos..=pos + 1);
+            v
+        };
+        workers = value.parse()?;
+    }
+
+    // the heterogeneous fleet: one scenario preset per session
+    let presets: [(&str, Flavor, Scenario, Algorithm); 3] = [
+        ("orbit", Flavor::Replica, Scenario::Orbit, Algorithm::SplaTam),
+        ("corridor", Flavor::Replica, Scenario::Corridor, Algorithm::MonoGs),
+        ("fast-rotation", Flavor::Tum, Scenario::FastRotation, Algorithm::FlashSlam),
+    ];
+    let mut jobs = Vec::with_capacity(presets.len());
+    for (i, (name, flavor, scenario, algorithm)) in presets.into_iter().enumerate() {
+        let mut run = RunConfig {
+            flavor,
+            scenario,
+            algorithm,
+            sequence: i,
+            width: 96,
+            height: 72,
+            frames: 8,
+            budget: 0.5,
+            ..Default::default()
+        };
+        run.apply_args(&args)?;
+        jobs.push(FleetJob { name: name.to_string(), run });
+    }
+
+    println!("=== Splatonic multi-session serving ===");
+    for job in &jobs {
+        println!(
+            "  job `{}`: {:?}/{} {:?} | {}x{} x {} frames",
+            job.name,
+            job.run.flavor,
+            job.run.scenario.name(),
+            job.run.algorithm,
+            job.run.width,
+            job.run.height,
+            job.run.frames,
+        );
+    }
+
+    let scfg = ServerConfig { workers, budget: Parallelism::auto() };
+    let report = serve(&jobs, &scfg)?;
+    report.print();
+
+    // paper-shaped summary line (one per session) for EXPERIMENTS.md
+    for s in &report.sessions {
+        println!(
+            "SUMMARY session={} ate_cm={:.2} psnr_db={:.2} gaussians={} frames={}",
+            s.name,
+            s.ate_rmse_m * 100.0,
+            s.psnr_db,
+            s.n_gaussians,
+            s.frames,
+        );
+    }
+    println!(
+        "SUMMARY fleet_frames_per_sec={:.2} workers={} threads_per_session={}",
+        report.fleet_frames_per_sec, report.workers, report.threads_per_session
+    );
+    Ok(())
+}

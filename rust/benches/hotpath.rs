@@ -23,19 +23,27 @@
 //! Besides the tables, both sweeps are written to `BENCH_hotpath.json`
 //! (`cells`, `dense_cells`, `sparse_dense_fwd_ratio`) so the perf
 //! trajectory is tracked across PRs.
+//!
+//! A final end-to-end section drives the serving layer: one coordinator
+//! run (ATE/PSNR/simulated tracking costs) plus a `SlamServer`
+//! throughput sweep over 1/2/4 concurrent sessions × worker budgets,
+//! written to `BENCH_e2e.json` so accuracy and fleet frames/sec join
+//! the cross-PR perf trajectory alongside the kernel numbers.
 
 use splatonic::bench::time_it;
 use splatonic::camera::{Camera, Intrinsics};
-use splatonic::dataset::{Flavor, SyntheticDataset};
+use splatonic::config::RunConfig;
+use splatonic::dataset::{Flavor, Scenario, SyntheticDataset};
 use splatonic::gaussian::{Gaussian, GaussianStore};
 use splatonic::math::{Pcg32, Se3, Vec3};
 use splatonic::render::pixel_pipeline::SampledPixels;
 use splatonic::render::projection::project_all;
 use splatonic::render::{
-    auto_threads, DenseCpuBackend, GradRequest, PixelSet, RenderBackend, RenderConfig,
-    RenderJob, SparseCpuBackend, StageCounters,
+    auto_threads, DenseCpuBackend, GradRequest, Parallelism, PixelSet, RenderBackend,
+    RenderConfig, RenderJob, SparseCpuBackend, StageCounters,
 };
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
+use splatonic::serve::{serve, FleetJob, ServerConfig};
 use splatonic::slam::loss::{sample_loss, LossCfg};
 
 fn synth_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
@@ -361,5 +369,86 @@ fn main() {
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("wrote BENCH_hotpath.json ({} cells)", cells.len()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
+
+    // -- end-to-end: coordinator run + server-throughput sweep ----------
+    // (ATE/PSNR/fleet frames-per-sec join the perf trajectory in
+    // BENCH_e2e.json; kept at the small e2e scale so the bench suite
+    // stays fast)
+    let single = splatonic::coordinator::run(&RunConfig {
+        width: 96,
+        height: 72,
+        frames: 8,
+        budget: 0.5,
+        ..Default::default()
+    })
+    .expect("coordinator run failed");
+    println!(
+        "\ne2e single run: ATE {:.2} cm, PSNR {:.2} dB, {:.2} s wall",
+        single.ate_rmse_m * 100.0,
+        single.psnr_db,
+        single.wall_seconds
+    );
+
+    // heterogeneous scenarios, one per session, cycling the preset list
+    let scenarios = [Scenario::Orbit, Scenario::Corridor, Scenario::FastRotation];
+    let fleet_job = |i: usize| FleetJob {
+        name: format!("s{i}-{}", scenarios[i % scenarios.len()].name()),
+        run: RunConfig {
+            scenario: scenarios[i % scenarios.len()],
+            sequence: i,
+            width: 64,
+            height: 48,
+            frames: 6,
+            budget: 0.3,
+            ..Default::default()
+        },
+    };
+    println!("\nserver-throughput sweep (sessions x workers, heterogeneous scenarios)");
+    println!(
+        "{:>9} {:>8} | {:>10} {:>12} {:>14}",
+        "sessions", "workers", "frames", "wall s", "fleet fps"
+    );
+    let mut sweep: Vec<(usize, usize, String)> = Vec::new();
+    for &n_sessions in &[1usize, 2, 4] {
+        let mut worker_counts = vec![1usize];
+        if n_sessions > 1 {
+            worker_counts.push(n_sessions);
+        }
+        for &workers in &worker_counts {
+            let jobs: Vec<FleetJob> = (0..n_sessions).map(fleet_job).collect();
+            let scfg = ServerConfig { workers, budget: Parallelism::auto() };
+            let report = serve(&jobs, &scfg).expect("server sweep run failed");
+            println!(
+                "{:>9} {:>8} | {:>10} {:>12.3} {:>14.2}",
+                n_sessions,
+                report.workers,
+                report.total_frames,
+                report.wall_seconds,
+                report.fleet_frames_per_sec,
+            );
+            sweep.push((n_sessions, report.workers, report.to_json()));
+        }
+    }
+
+    let mut e2e = String::new();
+    e2e.push_str("{\n");
+    e2e.push_str("  \"bench\": \"e2e\",\n");
+    e2e.push_str("  \"single_run\": ");
+    e2e.push_str(single.to_json().trim_end());
+    e2e.push_str(",\n");
+    e2e.push_str("  \"server_sweep\": [\n");
+    for (i, (sessions, workers, report_json)) in sweep.iter().enumerate() {
+        e2e.push_str(&format!(
+            "    {{\"sessions\": {sessions}, \"workers\": {workers}, \"report\": {}}}{}\n",
+            report_json.trim_end(),
+            if i + 1 < sweep.len() { "," } else { "" },
+        ));
+    }
+    e2e.push_str("  ]\n");
+    e2e.push_str("}\n");
+    match std::fs::write("BENCH_e2e.json", &e2e) {
+        Ok(()) => println!("wrote BENCH_e2e.json ({} sweep cells)", sweep.len()),
+        Err(e) => eprintln!("could not write BENCH_e2e.json: {e}"),
     }
 }

@@ -10,7 +10,7 @@ pub mod toml;
 
 pub use toml::{TomlDoc, TomlValue};
 
-use crate::dataset::Flavor;
+use crate::dataset::{Flavor, Scenario};
 pub use crate::render::backend::BackendKind;
 use crate::slam::algorithms::{Algorithm, SlamConfig};
 
@@ -31,6 +31,10 @@ pub enum Variant {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub flavor: Flavor,
+    /// Scene/trajectory preset (`scenario = "orbit" | "corridor" |
+    /// "fast-rotation"`); heterogeneous serving fleets run one preset
+    /// per session.
+    pub scenario: Scenario,
     pub sequence: usize,
     pub width: u32,
     pub height: u32,
@@ -59,6 +63,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             flavor: Flavor::Replica,
+            scenario: Scenario::Orbit,
             sequence: 0,
             width: 160,
             height: 120,
@@ -142,6 +147,7 @@ impl RunConfig {
                     _ => return Err(anyhow!("unknown dataset flavor {v}")),
                 }
             }
+            "scenario" => self.scenario = Scenario::parse(v)?,
             "sequence" | "seq" => self.sequence = v.parse()?,
             "width" => self.width = v.parse()?,
             "height" => self.height = v.parse()?,
@@ -257,6 +263,17 @@ mod tests {
         let sc = cfg.slam_config();
         assert_eq!(sc.tracking.backend, BackendKind::Xla);
         assert_eq!(sc.mapping.backend, BackendKind::DenseCpu);
+    }
+
+    #[test]
+    fn scenario_selectable_from_toml_and_cli() {
+        let cfg = RunConfig::from_toml("[run]\nscenario = \"corridor\"\n").unwrap();
+        assert_eq!(cfg.scenario, Scenario::Corridor);
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.scenario, Scenario::Orbit);
+        cfg.apply_args(&["--scenario=fast-rotation".into()]).unwrap();
+        assert_eq!(cfg.scenario, Scenario::FastRotation);
+        assert!(RunConfig::from_toml("[run]\nscenario = \"free-fall\"\n").is_err());
     }
 
     #[test]

@@ -1,31 +1,31 @@
-//! The L3 coordinator: launches a SLAM run from a [`RunConfig`] —
-//! dataset generation, the per-frame tracking loop, the concurrent
-//! mapping process (Fig. 2's schedule, tracking per frame / mapping every
-//! N frames with the T_t → M_t dependency), and end-of-run reporting
-//! including the simulated hardware costs.
+//! The L3 coordinator: launch a single SLAM sequence from a
+//! [`RunConfig`] and report on it.
 //!
-//! Rendering-engine selection is uniform: the [`SlamConfig`] carries a
+//! Since the serving refactor this is a thin front end over the
+//! multi-session engine: [`run`] is exactly a **one-session
+//! [`crate::serve::SlamServer`] run** — the launcher config becomes one
+//! [`crate::serve::FleetJob`], the server drives a re-entrant
+//! [`crate::slam::SlamSession`] on a worker thread, and the session
+//! report comes back with the simulated hardware costs attached. The
+//! old in-module tracking loop and its `Mutex<GaussianStore>` +
+//! spin-wait mapping handoff are gone: `threaded_mapping` now selects
+//! [`crate::slam::SlamSession::with_threaded_mapping`], whose mapping
+//! worker is owned by the session and hands maps over through a channel
+//! plus condition variable (the frame-0 bootstrap blocks instead of
+//! burning a core).
+//!
+//! Rendering-engine selection is uniform: the `SlamConfig` carries a
 //! [`crate::render::BackendKind`] per process (tracking / mapping), the
-//! registry constructs the sessions, and the loop below never names a
+//! registry constructs the sessions against the edge-resolved
+//! [`crate::render::Parallelism`] budget, and nothing here names a
 //! concrete pipeline — pure-Rust sparse/dense and the PJRT-executed AOT
 //! artifacts all run through [`crate::render::RenderBackend`].
 
-use crate::camera::Camera;
 use crate::config::RunConfig;
-use crate::dataset::{Frame, SyntheticDataset};
-use crate::gaussian::{Adam, AdamConfig, GaussianStore};
-use crate::math::{Pcg32, Se3};
-use crate::render::backend::{create_backend, RenderBackend};
-use crate::render::{RenderConfig, StageCounters};
+use crate::render::{Parallelism, StageCounters};
+use crate::serve::{json_string, serve, FleetJob, ServerConfig};
 use crate::sim::{AccelModel, Cost, GpuModel};
-use crate::slam::algorithms::SlamConfig;
-use crate::slam::mapping::map_update;
-use crate::slam::metrics::{ate_rmse, psnr_over_sequence};
-use crate::slam::system::SlamSystem;
-use crate::slam::tracking::track_frame;
 use anyhow::Result;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 
 /// End-of-run report.
 #[derive(Clone, Debug)]
@@ -64,57 +64,54 @@ impl RunReport {
             self.gpu_tracking.seconds / self.accel_tracking.seconds.max(1e-18)
         );
     }
+
+    /// Machine-readable record (hand-rolled writer — no serde offline);
+    /// `BENCH_e2e.json` aggregates these across PRs.
+    pub fn to_json(&self) -> String {
+        let mut json = String::new();
+        json.push_str("{\n");
+        json.push_str(&format!("  \"name\": {},\n", json_string(&self.name)));
+        json.push_str(&format!("  \"frames\": {},\n", self.frames));
+        json.push_str(&format!("  \"ate_rmse_m\": {:.6},\n", self.ate_rmse_m));
+        json.push_str(&format!("  \"psnr_db\": {:.3},\n", self.psnr_db));
+        json.push_str(&format!("  \"n_gaussians\": {},\n", self.n_gaussians));
+        json.push_str(&format!("  \"wall_seconds\": {:.4},\n", self.wall_seconds));
+        json.push_str(&format!(
+            "  \"gpu_tracking_ms_per_frame\": {:.4},\n",
+            self.gpu_tracking.seconds * 1e3
+        ));
+        json.push_str(&format!(
+            "  \"gpu_tracking_mj_per_frame\": {:.4},\n",
+            self.gpu_tracking.joules * 1e3
+        ));
+        json.push_str(&format!(
+            "  \"accel_tracking_ms_per_frame\": {:.4},\n",
+            self.accel_tracking.seconds * 1e3
+        ));
+        json.push_str(&format!(
+            "  \"accel_tracking_mj_per_frame\": {:.4}\n",
+            self.accel_tracking.joules * 1e3
+        ));
+        json.push_str("}\n");
+        json
+    }
 }
 
-/// Run a full SLAM session per the launcher configuration.
+/// Run a full SLAM sequence per the launcher configuration: a
+/// one-session server run plus the simulated hardware costs.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
-    let data = SyntheticDataset::generate(
-        cfg.flavor,
-        cfg.sequence,
-        cfg.width,
-        cfg.height,
-        cfg.frames,
-    );
-    let slam_cfg = cfg.slam_config();
-    let start = std::time::Instant::now();
-
-    let (est_poses, store, track_counters, map_counters, track_iters) =
-        if cfg.threaded_mapping {
-            run_threaded(&data, &slam_cfg)?
-        } else {
-            let mut sys = SlamSystem::try_new(slam_cfg, data.intr)?;
-            for frame in &data.frames {
-                sys.process_frame(frame)?;
-            }
-            let iters = sys.track_stats.iter().map(|s| s.iterations as u64).sum();
-            (
-                sys.est_poses.clone(),
-                sys.store.clone(),
-                sys.track_counters,
-                sys.map_counters,
-                iters,
-            )
-        };
-    let wall_seconds = start.elapsed().as_secs_f64();
-
-    let gt: Vec<Se3> = data.frames.iter().map(|f| f.gt_w2c).collect();
-    let rcfg = RenderConfig::default();
-    let ate = ate_rmse(&est_poses, &gt);
-    let psnr = psnr_over_sequence(
-        &store,
-        data.intr,
-        &est_poses,
-        &data.frames,
-        (data.frames.len() / 4).max(1),
-        &rcfg,
-    );
+    let job = FleetJob { name: String::new(), run: cfg.clone() };
+    let scfg = ServerConfig { workers: 1, budget: Parallelism::auto() };
+    let report = serve(std::slice::from_ref(&job), &scfg)?;
+    let s = &report.sessions[0];
 
     // per-frame simulated tracking costs
-    let n_tracked = (est_poses.len().saturating_sub(1)).max(1) as f64;
-    let gpu = GpuModel::orin().cost(&track_counters, track_iters);
-    let accel = AccelModel::splatonic().cost(&track_counters, track_iters);
+    let n_tracked = (s.frames.saturating_sub(1)).max(1) as f64;
+    let gpu = GpuModel::orin().cost(&s.track_counters, s.track_iters);
+    let accel = AccelModel::splatonic().cost(&s.track_counters, s.track_iters);
     let per = |c: Cost| Cost { seconds: c.seconds / n_tracked, joules: c.joules / n_tracked };
 
+    let slam_cfg = cfg.slam_config();
     Ok(RunReport {
         name: format!(
             "{}/{} {:?} {:?} track:{} map:{}",
@@ -122,107 +119,22 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
                 crate::dataset::Flavor::Replica => "replica",
                 crate::dataset::Flavor::Tum => "tum",
             },
-            data.name,
+            s.dataset,
             cfg.algorithm,
             cfg.variant,
             slam_cfg.tracking.backend.name(),
             slam_cfg.mapping.backend.name(),
         ),
-        ate_rmse_m: ate,
-        psnr_db: psnr,
-        n_gaussians: store.len(),
-        frames: est_poses.len(),
-        wall_seconds,
+        ate_rmse_m: s.ate_rmse_m,
+        psnr_db: s.psnr_db,
+        n_gaussians: s.n_gaussians,
+        frames: s.frames,
+        wall_seconds: report.wall_seconds,
         gpu_tracking: per(gpu),
         accel_tracking: per(accel),
-        track_counters,
-        map_counters,
+        track_counters: s.track_counters,
+        map_counters: s.map_counters,
     })
-}
-
-type RunState = (Vec<Se3>, GaussianStore, StageCounters, StageCounters, u64);
-
-/// Concurrent tracking/mapping (Fig. 2): mapping runs on a worker thread
-/// with its own backend session; tracking reads the most recent published
-/// map. M_t is enqueued strictly after T_t completes (the dependency the
-/// paper's timing diagram shows).
-fn run_threaded(data: &SyntheticDataset, slam_cfg: &SlamConfig) -> Result<RunState> {
-    slam_cfg.validate()?;
-    let rcfg = RenderConfig::default();
-    let mut track_backend = create_backend(slam_cfg.tracking.backend)?;
-    // capacity-bounded tracking engines (fixed-G AOT artifacts) cap map
-    // growth — same headroom rule as SlamSystem (MappingConfig::capped_for)
-    let track_capacity = track_backend.store_capacity();
-    let shared: Arc<Mutex<GaussianStore>> = Arc::new(Mutex::new(GaussianStore::new()));
-    let (tx, rx) = mpsc::channel::<(Frame, Se3, u64)>();
-    let map_cfg = slam_cfg.mapping;
-    let map_kind = slam_cfg.mapping.backend;
-    let worker_store = Arc::clone(&shared);
-    let intr = data.intr;
-    let worker = std::thread::spawn(move || -> Result<(StageCounters, u64)> {
-        // sessions are not Send — build the mapping engine on its thread
-        let mut map_backend = create_backend(map_kind)?;
-        let mut adam = Adam::new(0, AdamConfig::default());
-        let mut counters = StageCounters::new();
-        let mut invocations = 0;
-        while let Ok((frame, pose, seed)) = rx.recv() {
-            let mut local = worker_store.lock().unwrap().clone();
-            // keep Adam in sync if another invocation changed the store
-            if adam.len() != local.len() * crate::render::backward_geom::GaussianGrads::PARAMS {
-                adam = Adam::new(
-                    local.len() * crate::render::backward_geom::GaussianGrads::PARAMS,
-                    AdamConfig::default(),
-                );
-            }
-            let map_cfg = map_cfg.capped_for(track_capacity, local.len());
-            let cam = Camera::new(intr, pose);
-            let mut rng = Pcg32::new_stream(seed, 101);
-            let _ = map_update(
-                map_backend.as_mut(), &mut local, &mut adam, &cam, &frame, &map_cfg,
-                &RenderConfig::default(), &mut rng, &mut counters,
-            )?;
-            *worker_store.lock().unwrap() = local;
-            invocations += 1;
-        }
-        Ok((counters, invocations))
-    });
-
-    let mut rng = Pcg32::new(slam_cfg.seed);
-    let mut est_poses: Vec<Se3> = Vec::new();
-    let mut prev_rel = Se3::IDENTITY;
-    let mut track_counters = StageCounters::new();
-    let mut track_iters = 0u64;
-
-    for (idx, frame) in data.frames.iter().enumerate() {
-        if idx == 0 {
-            est_poses.push(frame.gt_w2c);
-            tx.send((frame.clone(), frame.gt_w2c, slam_cfg.seed)).ok();
-            // wait for the bootstrap map before tracking frame 1
-            while shared.lock().unwrap().is_empty() {
-                std::thread::yield_now();
-            }
-            continue;
-        }
-        let init = prev_rel.compose(*est_poses.last().unwrap());
-        let snapshot = shared.lock().unwrap().clone();
-        let mut c = StageCounters::new();
-        let (pose, stats) = track_frame(
-            track_backend.as_mut(), &snapshot, data.intr, init, frame, &slam_cfg.tracking,
-            &rcfg, &mut rng, &mut c,
-        )?;
-        track_iters += stats.iterations as u64;
-        track_counters.merge(&c);
-        let last = *est_poses.last().unwrap();
-        prev_rel = pose.compose(last.inverse());
-        est_poses.push(pose);
-        if idx as u32 % slam_cfg.mapping.every == 0 {
-            tx.send((frame.clone(), pose, slam_cfg.seed + idx as u64)).ok();
-        }
-    }
-    drop(tx);
-    let (map_counters, _) = worker.join().expect("mapping worker panicked")?;
-    let store = shared.lock().unwrap().clone();
-    Ok((est_poses, store, track_counters, map_counters, track_iters))
 }
 
 #[cfg(test)]
@@ -258,6 +170,17 @@ mod tests {
         let report = run(&cfg).unwrap();
         assert_eq!(report.frames, 6);
         assert!(report.ate_rmse_m < 0.3, "ATE {}", report.ate_rmse_m);
+    }
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let report = run(&quick_cfg()).unwrap();
+        let json = report.to_json();
+        assert!(json.starts_with("{\n"));
+        assert!(json.trim_end().ends_with('}'));
+        assert!(json.contains("\"ate_rmse_m\""));
+        assert!(json.contains("\"accel_tracking_ms_per_frame\""));
+        assert!(json.contains(&format!("\"frames\": {}", report.frames)));
     }
 
     #[test]

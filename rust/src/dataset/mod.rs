@@ -3,7 +3,9 @@
 //! Substitutes the paper's Replica [70] and TUM RGB-D [71] datasets
 //! (DESIGN.md §1): procedurally generated indoor scenes made of
 //! *ground-truth Gaussians*, rendered to RGB-D frames along smooth
-//! (Replica-like) or fast/noisy (TUM-like) trajectories. Because the GT
+//! (Replica-like) or fast/noisy (TUM-like) trajectories, with selectable
+//! scene/trajectory presets ([`Scenario`]: orbit, corridor,
+//! fast-rotation) for workload diversity. Because the GT
 //! scene is itself a Gaussian map, frames are photometrically consistent
 //! with what a perfectly converged 3DGS-SLAM could reconstruct, ATE has
 //! an exact reference trajectory, and PSNR an exact reference image —
@@ -40,6 +42,48 @@ pub enum Flavor {
     Tum,
 }
 
+/// Scene/trajectory preset — the *kind* of sequence, orthogonal to
+/// [`Flavor`] (which controls dynamics scale and sensor noise). Presets
+/// diversify the serving workloads: a heterogeneous
+/// [`crate::serve::SlamServer`] fleet runs one preset per session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// The classic room orbit (the original generator — the default, and
+    /// bit-identical to pre-preset datasets).
+    #[default]
+    Orbit,
+    /// An elongated room traversed end-to-end and back, camera looking
+    /// down the corridor (loop-closure-style revisits).
+    Corridor,
+    /// A near-stationary camera panning quickly — rotation-dominated
+    /// motion, the hard case for constant-velocity prediction.
+    FastRotation,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 3] = [Scenario::Orbit, Scenario::Corridor, Scenario::FastRotation];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Orbit => "orbit",
+            Scenario::Corridor => "corridor",
+            Scenario::FastRotation => "fast-rotation",
+        }
+    }
+
+    /// Parse a launcher/TOML spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "orbit" => Ok(Scenario::Orbit),
+            "corridor" => Ok(Scenario::Corridor),
+            "fast-rotation" | "fast_rotation" | "rotation" => Ok(Scenario::FastRotation),
+            _ => Err(anyhow::anyhow!(
+                "unknown scenario {s} (expected orbit, corridor, or fast-rotation)"
+            )),
+        }
+    }
+}
+
 /// A generated sequence.
 pub struct SyntheticDataset {
     pub name: String,
@@ -59,9 +103,10 @@ pub const REPLICA_SEQUENCES: [&str; 8] = [
 pub const TUM_SEQUENCES: [&str; 3] = ["fr1_desk", "fr2_xyz", "fr3_office"];
 
 impl SyntheticDataset {
-    /// Generate a named sequence. `seq` indexes REPLICA_SEQUENCES /
-    /// TUM_SEQUENCES; the name seeds the scene so every sequence has
-    /// distinct geometry, deterministically.
+    /// Generate a named sequence with the default [`Scenario::Orbit`]
+    /// preset (bit-identical to the pre-preset generator). `seq` indexes
+    /// REPLICA_SEQUENCES / TUM_SEQUENCES; the name seeds the scene so
+    /// every sequence has distinct geometry, deterministically.
     pub fn generate(
         flavor: Flavor,
         seq: usize,
@@ -69,7 +114,23 @@ impl SyntheticDataset {
         height: u32,
         n_frames: usize,
     ) -> Self {
-        let (name, seed) = match flavor {
+        Self::generate_scenario(flavor, Scenario::Orbit, seq, width, height, n_frames)
+    }
+
+    /// [`Self::generate`] with an explicit scene/trajectory preset. The
+    /// scenario reshapes the room ([`SceneSpec::for_scenario`]) and the
+    /// camera path ([`TrajectorySpec::with_path`]); flavor still controls
+    /// dynamics scale and sensor noise, so every (flavor, scenario) cell
+    /// is a distinct workload.
+    pub fn generate_scenario(
+        flavor: Flavor,
+        scenario: Scenario,
+        seq: usize,
+        width: u32,
+        height: u32,
+        n_frames: usize,
+    ) -> Self {
+        let (base_name, seed) = match flavor {
             Flavor::Replica => {
                 let n = REPLICA_SEQUENCES[seq % REPLICA_SEQUENCES.len()];
                 (n.to_string(), 1000 + seq as u64)
@@ -79,16 +140,21 @@ impl SyntheticDataset {
                 (n.to_string(), 2000 + seq as u64)
             }
         };
+        let name = match scenario {
+            Scenario::Orbit => base_name,
+            other => format!("{base_name}+{}", other.name()),
+        };
         let intr = match flavor {
             Flavor::Replica => Intrinsics::replica_like(width, height),
             Flavor::Tum => Intrinsics::tum_like(width, height),
         };
-        let scene_spec = SceneSpec::for_seed(seed);
+        let scene_spec = SceneSpec::for_scenario(seed, scenario);
         let gt_store = scene_spec.build();
         let traj_spec = match flavor {
             Flavor::Replica => TrajectorySpec::smooth(seed),
             Flavor::Tum => TrajectorySpec::fast(seed),
-        };
+        }
+        .with_path(scenario);
         let poses = traj_spec.generate(n_frames, &scene_spec);
 
         let cfg = RenderConfig::default();
@@ -195,5 +261,56 @@ mod tests {
             let dt = (w[0].gt_w2c.t - w[1].gt_w2c.t).norm();
             assert!(dt < 0.35, "jump too large: {dt}");
         }
+    }
+
+    #[test]
+    fn orbit_scenario_is_the_legacy_generator() {
+        // generate() must stay bit-identical to the explicit Orbit preset
+        let a = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 3);
+        let b = SyntheticDataset::generate_scenario(
+            Flavor::Replica, Scenario::Orbit, 0, 48, 32, 3,
+        );
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.gt_store.means, b.gt_store.means);
+        for (fa, fb) in a.frames.iter().zip(&b.frames) {
+            assert_eq!(fa.rgb.data, fb.rgb.data);
+            assert_eq!(fa.gt_w2c, fb.gt_w2c);
+        }
+    }
+
+    #[test]
+    fn scenarios_are_distinct_named_workloads() {
+        let mk = |s| SyntheticDataset::generate_scenario(Flavor::Replica, s, 0, 48, 32, 4);
+        let orbit = mk(Scenario::Orbit);
+        let corridor = mk(Scenario::Corridor);
+        let fast = mk(Scenario::FastRotation);
+        assert_eq!(orbit.name, "room0");
+        assert_eq!(corridor.name, "room0+corridor");
+        assert_eq!(fast.name, "room0+fast-rotation");
+        // trajectories genuinely differ
+        assert_ne!(orbit.frames[1].gt_w2c, corridor.frames[1].gt_w2c);
+        assert_ne!(orbit.frames[1].gt_w2c, fast.frames[1].gt_w2c);
+        // corridor reshapes the room → different GT scene
+        assert_ne!(orbit.gt_store.len(), corridor.gt_store.len());
+        // every preset still renders observable content
+        for d in [&corridor, &fast] {
+            for f in &d.frames {
+                let covered = f.depth.data.iter().filter(|&&z| z > 0.0).count();
+                assert!(
+                    covered as f32 / f.depth.data.len() as f32 > 0.4,
+                    "{}: little depth coverage",
+                    d.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_parse_round_trip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(Scenario::parse("fast_rotation").unwrap(), Scenario::FastRotation);
+        assert!(Scenario::parse("free-fall").is_err());
     }
 }

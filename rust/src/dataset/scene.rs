@@ -6,6 +6,7 @@
 //! find), plus furniture blobs (ellipsoidal Gaussian clusters) that
 //! create occlusions → the unseen-region dynamics mapping cares about.
 
+use super::Scenario;
 use crate::gaussian::{Gaussian, GaussianStore};
 use crate::math::{Pcg32, Quat, Vec3};
 
@@ -39,6 +40,27 @@ impl SceneSpec {
             n_furniture: 6 + (seed % 5) as usize,
             blob_size: 40,
         }
+    }
+
+    /// [`Self::for_seed`] reshaped for a scene/trajectory preset:
+    /// `Orbit` is the unmodified room (bit-identical to `for_seed`),
+    /// `Corridor` stretches it into an elongated hall, and
+    /// `FastRotation` densifies the furniture so a panning camera keeps
+    /// seeing occluders. The reshape happens *after* the seeded draws,
+    /// so a preset never perturbs another preset's randomness.
+    pub fn for_scenario(seed: u64, scenario: Scenario) -> Self {
+        let mut spec = Self::for_seed(seed);
+        match scenario {
+            Scenario::Orbit => {}
+            Scenario::Corridor => {
+                spec.half.z *= 1.7;
+                spec.half.x *= 0.7;
+            }
+            Scenario::FastRotation => {
+                spec.n_furniture += 3;
+            }
+        }
+        spec
     }
 
     /// Scene center (rooms are centered at the origin).
@@ -191,6 +213,23 @@ mod tests {
         for p in &s.means {
             assert!(p.x.abs() <= m.x && p.y.abs() <= m.y && p.z.abs() <= m.z, "{p:?}");
         }
+    }
+
+    #[test]
+    fn scenario_reshapes_are_deterministic_and_orbit_is_identity() {
+        let base = SceneSpec::for_seed(5);
+        let orbit = SceneSpec::for_scenario(5, Scenario::Orbit);
+        assert_eq!(base.half, orbit.half);
+        assert_eq!(base.n_furniture, orbit.n_furniture);
+        assert_eq!(base.build().means, orbit.build().means);
+
+        let corridor = SceneSpec::for_scenario(5, Scenario::Corridor);
+        assert!(corridor.half.z > base.half.z);
+        assert!(corridor.half.x < base.half.x);
+        let fast = SceneSpec::for_scenario(5, Scenario::FastRotation);
+        assert_eq!(fast.n_furniture, base.n_furniture + 3);
+        // rebuild is stable
+        assert_eq!(corridor.build().means, SceneSpec::for_scenario(5, Scenario::Corridor).build().means);
     }
 
     #[test]

@@ -1,55 +1,55 @@
 //! Camera trajectory generator: smooth (Replica-like) and fast/jerky
-//! (TUM-like) paths through the room, always looking at textured scene
-//! content.
+//! (TUM-like) dynamics over the scene/trajectory presets
+//! ([`Scenario`]): the classic room orbit, a corridor traversal, and a
+//! rotation-dominated pan — always looking at textured scene content.
 
 use super::scene::SceneSpec;
+use super::Scenario;
 use crate::math::{Mat3, Pcg32, Quat, Se3, Vec3};
 
 /// Trajectory dynamics parameters.
 #[derive(Clone, Debug)]
 pub struct TrajectorySpec {
     pub seed: u64,
-    /// Angular progress per frame along the orbit (radians).
+    /// Angular progress per frame along the path (radians).
     pub step: f32,
     /// Per-frame pose jitter (TUM-like fast motion).
     pub jitter_t: f32,
     pub jitter_r: f32,
+    /// Which path shape to trace (jitter and step apply to all).
+    pub path: Scenario,
 }
 
 impl TrajectorySpec {
     /// Replica-like: slow, smooth.
     pub fn smooth(seed: u64) -> Self {
-        TrajectorySpec { seed, step: 0.015, jitter_t: 0.0, jitter_r: 0.0 }
+        TrajectorySpec { seed, step: 0.015, jitter_t: 0.0, jitter_r: 0.0, path: Scenario::Orbit }
     }
 
     /// TUM-like: ~4× faster with translational/rotational jitter.
     pub fn fast(seed: u64) -> Self {
-        TrajectorySpec { seed, step: 0.06, jitter_t: 0.02, jitter_r: 0.015 }
+        TrajectorySpec { seed, step: 0.06, jitter_t: 0.02, jitter_r: 0.015, path: Scenario::Orbit }
     }
 
-    /// Generate `n` world→camera poses orbiting inside the room.
+    /// This spec tracing a different path shape.
+    pub fn with_path(mut self, path: Scenario) -> Self {
+        self.path = path;
+        self
+    }
+
+    /// Generate `n` world→camera poses along the path inside the room.
     pub fn generate(&self, n: usize, scene: &SceneSpec) -> Vec<Se3> {
         let mut rng = Pcg32::new_stream(self.seed, 29);
         let h = scene.half;
-        let rx = h.x * 0.45;
-        let rz = h.z * 0.45;
         let phase = rng.uniform(0.0, std::f32::consts::TAU);
         let mut poses = Vec::with_capacity(n);
         for i in 0..n {
-            let t = phase + self.step * i as f32;
-            // orbit position with mild vertical bob
-            let pos = Vec3::new(
-                rx * t.cos(),
-                0.15 * (t * 0.7).sin(),
-                rz * t.sin(),
-            );
-            // look outward toward the walls, slightly ahead of the motion
-            let ahead = t + 0.9;
-            let target = Vec3::new(
-                h.x * ahead.cos() * 1.2,
-                0.1 * (ahead * 0.5).sin(),
-                h.z * ahead.sin() * 1.2,
-            );
+            let s = self.step * i as f32;
+            let (pos, target) = match self.path {
+                Scenario::Orbit => orbit_at(h, phase, s),
+                Scenario::Corridor => corridor_at(h, phase, s),
+                Scenario::FastRotation => pan_at(h, phase, s),
+            };
             let mut c2w = look_at(pos, target);
             if self.jitter_t > 0.0 {
                 c2w.t += Vec3::new(
@@ -65,6 +65,61 @@ impl TrajectorySpec {
         }
         poses
     }
+}
+
+/// The classic orbit: circle inside the room with mild vertical bob,
+/// looking outward toward the walls slightly ahead of the motion.
+/// (This is the original generator, byte-for-byte — [`Scenario::Orbit`]
+/// datasets must stay bit-identical to pre-preset ones.)
+fn orbit_at(h: Vec3, phase: f32, s: f32) -> (Vec3, Vec3) {
+    let t = phase + s;
+    let pos = Vec3::new(
+        h.x * 0.45 * t.cos(),
+        0.15 * (t * 0.7).sin(),
+        h.z * 0.45 * t.sin(),
+    );
+    let ahead = t + 0.9;
+    let target = Vec3::new(
+        h.x * ahead.cos() * 1.2,
+        0.1 * (ahead * 0.5).sin(),
+        h.z * ahead.sin() * 1.2,
+    );
+    (pos, target)
+}
+
+/// Corridor traversal: sweep back and forth along the room's long (z)
+/// axis with a gentle lateral sway, looking down the corridor toward the
+/// end wall being approached. The look target flips smoothly (tanh of
+/// the travel direction) at each turnaround, and sits beyond the wall so
+/// it never degenerates onto the camera position.
+fn corridor_at(h: Vec3, phase: f32, s: f32) -> (Vec3, Vec3) {
+    let pos = Vec3::new(
+        h.x * 0.30 * (0.6 * s + phase).sin(),
+        0.12 * (0.5 * s).sin(),
+        h.z * 0.55 * (0.9 * s).sin(),
+    );
+    let travel = (0.9 * s).cos(); // sign = direction of motion along z
+    let target = Vec3::new(
+        h.x * 0.40 * (0.3 * s + phase).sin(),
+        0.08 * (0.4 * s).cos(),
+        h.z * 1.5 * (3.0 * travel).tanh(),
+    );
+    (pos, target)
+}
+
+/// Rotation-dominated pan: the camera drifts slowly on a small central
+/// circle while the look direction sweeps fast (4 rad of yaw per rad of
+/// path progress) — translation stays tiny, so the constant-velocity
+/// prior carries almost no information about the rotation.
+fn pan_at(h: Vec3, phase: f32, s: f32) -> (Vec3, Vec3) {
+    let pos = Vec3::new(
+        h.x * 0.15 * (0.2 * s + phase).cos(),
+        0.10 * (0.3 * s).sin(),
+        h.z * 0.15 * (0.2 * s + phase).sin(),
+    );
+    let yaw = phase + 4.0 * s;
+    let target = pos + Vec3::new(yaw.cos(), 0.15 * (0.7 * s).sin(), yaw.sin());
+    (pos, target)
 }
 
 /// Build a camera→world pose at `eye` looking toward `target`
@@ -150,5 +205,64 @@ mod tests {
             let p = pose.inverse().t;
             assert!(p.x.abs() < scene.half.x && p.z.abs() < scene.half.z, "{p:?}");
         }
+    }
+
+    #[test]
+    fn preset_paths_stay_inside_their_rooms_and_move_smoothly() {
+        for scenario in Scenario::ALL {
+            let scene = SceneSpec::for_scenario(2, scenario);
+            let poses = TrajectorySpec::smooth(2).with_path(scenario).generate(40, &scene);
+            for pose in &poses {
+                let p = pose.inverse().t;
+                assert!(
+                    p.x.abs() < scene.half.x && p.z.abs() < scene.half.z,
+                    "{scenario:?}: camera left the room at {p:?}"
+                );
+            }
+            for w in poses.windows(2) {
+                let d = (w[0].inverse().t - w[1].inverse().t).norm();
+                assert!(d < 0.1, "{scenario:?}: step too large: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_rotation_is_rotation_dominated() {
+        let scene = SceneSpec::for_scenario(1, Scenario::FastRotation);
+        let poses = TrajectorySpec::smooth(1)
+            .with_path(Scenario::FastRotation)
+            .generate(30, &scene);
+        let (mut trans, mut rot) = (0.0f32, 0.0f32);
+        for w in poses.windows(2) {
+            trans += (w[0].inverse().t - w[1].inverse().t).norm();
+            rot += w[0].q.angle_to(w[1].q);
+        }
+        // pan: far more angular motion per unit translation than the orbit
+        let orbit = TrajectorySpec::smooth(1).generate(30, &SceneSpec::for_seed(1));
+        let (mut o_trans, mut o_rot) = (0.0f32, 0.0f32);
+        for w in orbit.windows(2) {
+            o_trans += (w[0].inverse().t - w[1].inverse().t).norm();
+            o_rot += w[0].q.angle_to(w[1].q);
+        }
+        assert!(
+            rot / trans.max(1e-6) > 3.0 * o_rot / o_trans.max(1e-6),
+            "pan rot/trans {} vs orbit {}",
+            rot / trans.max(1e-6),
+            o_rot / o_trans.max(1e-6)
+        );
+    }
+
+    #[test]
+    fn corridor_actually_traverses_the_long_axis() {
+        let scene = SceneSpec::for_scenario(4, Scenario::Corridor);
+        let poses = TrajectorySpec::smooth(4)
+            .with_path(Scenario::Corridor)
+            .generate(220, &scene);
+        let zs: Vec<f32> = poses.iter().map(|p| p.inverse().t.z).collect();
+        let span = zs.iter().cloned().fold(f32::MIN, f32::max)
+            - zs.iter().cloned().fold(f32::MAX, f32::min);
+        // 220 frames cover ~3 rad of path: the sweep amplitude is
+        // 0.55·half.z, so the visited span approaches that
+        assert!(span > scene.half.z * 0.5, "z span {span} of half {}", scene.half.z);
     }
 }

@@ -27,6 +27,7 @@ pub mod gaussian;
 pub mod math;
 pub mod render;
 pub mod sampling;
+pub mod serve;
 pub mod sim;
 pub mod slam;
 

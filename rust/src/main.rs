@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! splatonic [--config run.toml] [--key=value ...]
-//!   keys: dataset (replica|tum), seq, width, height, frames,
+//!   keys: dataset (replica|tum), scenario (orbit|corridor|fast-rotation),
+//!         seq, width, height, frames,
 //!         algo (splatam|monogs|gsslam|flashslam),
 //!         variant (baseline|org+s|splatonic),
 //!         backend (cpu|sparse-cpu|dense-cpu|xla),

@@ -36,12 +36,12 @@ use super::pixel_pipeline::{
     backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
     SparseBackward, SparseRender,
 };
-use super::projection::{project_all, Projected};
+use super::projection::{project_all_with, Projected};
 use super::tile_pipeline::{
     backward_dense_with, backward_org_s_with, render_dense_projected_with, render_org_s_with,
     DenseBackward, DenseRender, DenseScratch,
 };
-use super::{RenderConfig, StageCounters};
+use super::{Parallelism, RenderConfig, StageCounters};
 use crate::camera::Camera;
 use crate::dataset::Frame;
 use crate::gaussian::GaussianStore;
@@ -142,6 +142,15 @@ pub trait RenderBackend {
         None
     }
 
+    /// The CPU worker budget this session is pinned to (`0` = the
+    /// machine-wide auto pool). The SLAM loop hands this to the
+    /// CPU-parallel passes it runs *outside* the backend (mapping
+    /// densify/prune), so a partitioned session never fans those out
+    /// wider than its render stages.
+    fn threads(&self) -> usize {
+        0
+    }
+
     /// Forward pass. The returned slices borrow the session's buffers
     /// and are valid until the next `render`/`backward` call.
     fn render(
@@ -199,17 +208,19 @@ impl BackendKind {
     }
 }
 
-type BackendCtor = fn() -> Result<Box<dyn RenderBackend>>;
+type BackendCtor = fn(Parallelism) -> Result<Box<dyn RenderBackend>>;
 
-fn new_sparse_cpu() -> Result<Box<dyn RenderBackend>> {
-    Ok(Box::new(SparseCpuBackend::new()))
+fn new_sparse_cpu(par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+    Ok(Box::new(SparseCpuBackend::with_threads(par.threads())))
 }
 
-fn new_dense_cpu() -> Result<Box<dyn RenderBackend>> {
-    Ok(Box::new(DenseCpuBackend::new()))
+fn new_dense_cpu(par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+    Ok(Box::new(DenseCpuBackend::with_threads(par.threads())))
 }
 
-fn new_xla() -> Result<Box<dyn RenderBackend>> {
+fn new_xla(_par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+    // PJRT executes through its own runtime; the CPU worker budget does
+    // not apply to the device-side engine.
     Ok(Box::new(crate::runtime::XlaBackend::create()?))
 }
 
@@ -222,11 +233,15 @@ pub const REGISTRY: &[(BackendKind, BackendCtor)] = &[
     (BackendKind::Xla, new_xla),
 ];
 
-/// Construct a fresh backend session of the given kind.
-pub fn create_backend(kind: BackendKind) -> Result<Box<dyn RenderBackend>> {
+/// Construct a fresh backend session of the given kind, pinned to the
+/// caller's [`Parallelism`] budget. The budget is resolved **at the
+/// edge** ([`Parallelism::auto`] reads `SPLATONIC_THREADS` once) and
+/// handed down, so a multi-session caller (the serving layer) can give
+/// each session a [`Parallelism::share`] of one machine-wide budget.
+pub fn create_backend(kind: BackendKind, par: Parallelism) -> Result<Box<dyn RenderBackend>> {
     for (k, ctor) in REGISTRY {
         if *k == kind {
-            return ctor();
+            return ctor(par);
         }
     }
     Err(anyhow!("backend {} is not registered", kind.name()))
@@ -363,6 +378,10 @@ impl RenderBackend for SparseCpuBackend {
         BackendKind::SparseCpu
     }
 
+    fn threads(&self) -> usize {
+        self.scratch.threads
+    }
+
     fn render(
         &mut self,
         store: &GaussianStore,
@@ -373,7 +392,8 @@ impl RenderBackend for SparseCpuBackend {
             self.full_pixels(job.cam);
         }
         let mut counters = StageCounters::new();
-        self.projected = project_all(store, job.cam, job.rcfg, &mut counters);
+        self.projected =
+            project_all_with(store, job.cam, job.rcfg, &mut counters, self.scratch.threads);
         let (pixels, shape) = match job.pixels {
             PixelSet::Sparse(px) => (px, SparseJobShape::Sparse(px.len())),
             PixelSet::Full => (self.full_px.as_ref().unwrap(), SparseJobShape::Full),
@@ -562,13 +582,18 @@ impl RenderBackend for DenseCpuBackend {
         BackendKind::DenseCpu
     }
 
+    fn threads(&self) -> usize {
+        self.tiles.threads
+    }
+
     fn render(
         &mut self,
         store: &GaussianStore,
         job: &RenderJob<'_>,
     ) -> Result<RenderOutput<'_>> {
         let mut counters = StageCounters::new();
-        self.projected = project_all(store, job.cam, job.rcfg, &mut counters);
+        self.projected =
+            project_all_with(store, job.cam, job.rcfg, &mut counters, self.tiles.threads);
         match job.pixels {
             PixelSet::Full => {
                 render_dense_projected_with(
@@ -680,10 +705,10 @@ mod tests {
 
     #[test]
     fn registry_constructs_cpu_backends() {
-        let s = create_backend(BackendKind::SparseCpu).unwrap();
+        let s = create_backend(BackendKind::SparseCpu, Parallelism::auto()).unwrap();
         assert_eq!(s.kind(), BackendKind::SparseCpu);
         assert_eq!(s.store_capacity(), None);
-        let d = create_backend(BackendKind::DenseCpu).unwrap();
+        let d = create_backend(BackendKind::DenseCpu, Parallelism::fixed(2)).unwrap();
         assert_eq!(d.kind(), BackendKind::DenseCpu);
         // every construction path models the same hardware (Γ/C cache on)
         assert!(SparseCpuBackend::new().cache_gamma);
@@ -697,7 +722,7 @@ mod tests {
         // with the vendoring instructions
         #[cfg(not(splatonic_xla))]
         {
-            let err = create_backend(BackendKind::Xla).unwrap_err();
+            let err = create_backend(BackendKind::Xla, Parallelism::auto()).unwrap_err();
             assert!(format!("{err}").contains("xla"), "{err}");
         }
     }

@@ -41,6 +41,14 @@
 //! loop stays backend-agnostic while steady-state iterations stay
 //! allocation-free; `tests/backend_parity.rs` pins the numeric agreement
 //! between [`backend::SparseCpuBackend`] and [`backend::DenseCpuBackend`].
+//!
+//! **Thread budgets are explicit.** A [`Parallelism`] handle is resolved
+//! once at the program edge (the `SPLATONIC_THREADS` env var stays the
+//! default source via [`Parallelism::auto`]) and threaded through
+//! [`backend::create_backend`] into every session, so a caller that runs
+//! many sessions concurrently — [`crate::serve::SlamServer`] — can
+//! partition one core budget across them ([`Parallelism::share`]) instead
+//! of every session independently claiming the whole machine.
 
 pub mod backend;
 pub mod backward_geom;
@@ -81,6 +89,59 @@ pub fn auto_threads() -> usize {
         }
         std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
     })
+}
+
+/// An explicit worker-thread budget, resolved **once at the edge** and
+/// passed down into backend sessions instead of each session reading the
+/// environment on its own.
+///
+/// * [`Parallelism::auto`] — the `SPLATONIC_THREADS` env var when set,
+///   else the machine's available parallelism (the same resolution as
+///   [`auto_threads`], performed eagerly at construction).
+/// * [`Parallelism::fixed`] — an explicit count (determinism tests,
+///   benches, partitioned serving).
+/// * [`Parallelism::share`] — split the budget across `n` concurrent
+///   consumers; every share keeps at least one thread. The multi-session
+///   server derives per-session budgets this way so a fleet does not
+///   oversubscribe the machine N-fold.
+///
+/// The renderer's chunk-merge contract makes outputs bit-identical at any
+/// thread count, so the *numerics* of a session never depend on which
+/// budget it received — only its wall-clock does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Resolve from the environment: `SPLATONIC_THREADS` when set (≥ 1),
+    /// else the machine's available parallelism.
+    pub fn auto() -> Self {
+        Parallelism { threads: auto_threads() }
+    }
+
+    /// An explicit budget (clamped to ≥ 1 thread).
+    pub fn fixed(threads: usize) -> Self {
+        Parallelism { threads: threads.max(1) }
+    }
+
+    /// The resolved worker-thread count (always ≥ 1).
+    pub fn threads(self) -> usize {
+        self.threads
+    }
+
+    /// This budget split evenly across `shares` concurrent consumers
+    /// (each share keeps at least one thread).
+    pub fn share(self, shares: usize) -> Parallelism {
+        Parallelism::fixed(self.threads / shares.max(1))
+    }
+}
+
+impl Default for Parallelism {
+    /// [`Self::auto`]: the environment is the default source.
+    fn default() -> Self {
+        Self::auto()
+    }
 }
 
 /// Worker count for one parallel stage: the scratch's pinned count
@@ -132,5 +193,28 @@ impl Default for RenderConfig {
             radius_min: 1.0,
             use_exp_lut: false,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Parallelism;
+
+    #[test]
+    fn parallelism_fixed_and_share() {
+        assert_eq!(Parallelism::fixed(8).threads(), 8);
+        // clamped to at least one thread
+        assert_eq!(Parallelism::fixed(0).threads(), 1);
+        // even split, floor division, never below one
+        assert_eq!(Parallelism::fixed(8).share(2).threads(), 4);
+        assert_eq!(Parallelism::fixed(8).share(3).threads(), 2);
+        assert_eq!(Parallelism::fixed(2).share(5).threads(), 1);
+        assert_eq!(Parallelism::fixed(4).share(0).threads(), 4);
+    }
+
+    #[test]
+    fn parallelism_default_is_auto() {
+        assert_eq!(Parallelism::default(), Parallelism::auto());
+        assert!(Parallelism::auto().threads() >= 1);
     }
 }

@@ -66,11 +66,28 @@ impl Projected {
 /// for the projection stage. This is the *shared geometry math*; the
 /// tile pipeline bins the result into tiles, the pixel pipeline runs
 /// preemptive α-checking against the sampled pixel set.
+///
+/// Uses the machine-wide auto thread pool; sessions pinned to a
+/// [`crate::render::Parallelism`] share call [`project_all_with`] so a
+/// multi-session server does not oversubscribe this stage.
 pub fn project_all(
     store: &GaussianStore,
     cam: &Camera,
     cfg: &RenderConfig,
     counters: &mut StageCounters,
+) -> Vec<Projected> {
+    project_all_with(store, cam, cfg, counters, 0)
+}
+
+/// [`project_all`] with an explicit worker budget (`0` = auto — the
+/// shared [`crate::render::stage_threads`] policy, identical to what the
+/// unpinned entry always did).
+pub fn project_all_with(
+    store: &GaussianStore,
+    cam: &Camera,
+    cfg: &RenderConfig,
+    counters: &mut StageCounters,
+    threads: usize,
 ) -> Vec<Projected> {
     let w = cam.rotation();
     counters.proj_gaussians_in += store.len() as u64;
@@ -80,8 +97,9 @@ pub fn project_all(
     // worth their spawn cost above a few thousand Gaussians); chunk
     // results are concatenated in order, so the output is deterministic
     let n = store.len();
-    let threads = super::auto_threads();
-    let out = if n >= super::pixel_pipeline::PARALLEL_GAUSSIANS && threads > 1 {
+    let threads =
+        super::stage_threads(threads, n, super::pixel_pipeline::PARALLEL_GAUSSIANS);
+    let out = if threads > 1 {
         let chunk = n.div_ceil(threads);
         let mut parts: Vec<Vec<Projected>> = Vec::new();
         std::thread::scope(|scope| {

@@ -147,7 +147,10 @@ pub fn map_update(
     };
 
     // ---- densification from unseen / depth-uncovered pixels ----------
-    let added = densify_unseen(store, cam, frame, &gamma, cfg, 0);
+    // (fans out on the backend's pinned worker budget, so a partitioned
+    // serving session never spawns wider than its render stages)
+    let threads = backend.threads();
+    let added = densify_unseen(store, cam, frame, &gamma, cfg, threads);
     adam.grow(added * GaussianGrads::PARAMS);
     stats.added = added;
 
@@ -197,7 +200,7 @@ pub fn map_update(
     }
 
     // ---- prune ---------------------------------------------------------
-    let keep = prune_keep_mask(store, cfg.prune_opacity, cfg.prune_scale, 0);
+    let keep = prune_keep_mask(store, cfg.prune_opacity, cfg.prune_scale, threads);
     let pruned = store.prune_mask(&keep);
     if pruned > 0 {
         adam.compact(&keep, GaussianGrads::PARAMS);
@@ -355,6 +358,7 @@ mod tests {
     use crate::dataset::{Flavor, SyntheticDataset};
     use crate::gaussian::AdamConfig;
     use crate::render::backend::create_backend;
+    use crate::render::Parallelism;
     use crate::render::tile_pipeline::render_dense;
 
     /// Mapping from an empty store must reconstruct enough to drop Γ.
@@ -366,7 +370,7 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 5, max_new: 3000, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(1);
         let mut c = StageCounters::new();
         let stats = map_update(
@@ -395,7 +399,7 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 12, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(2);
         let mut c = StageCounters::new();
         let stats = map_update(
@@ -420,7 +424,7 @@ mod tests {
         let n0 = store.len();
         let mut adam = Adam::new(n0 * GaussianGrads::PARAMS, AdamConfig::default());
         let cfg = MappingConfig { iters: 2, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(3);
         let mut c = StageCounters::new();
         let stats = map_update(
@@ -447,7 +451,7 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 4, backend: BackendKind::DenseCpu, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(5);
         let mut c = StageCounters::new();
         let stats = map_update(
@@ -469,7 +473,7 @@ mod tests {
         let mut store = GaussianStore::new();
         let mut adam = Adam::new(0, AdamConfig::default());
         let cfg = MappingConfig { iters: 3, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(4);
         let mut c = StageCounters::new();
         for _ in 0..2 {

@@ -1,11 +1,15 @@
 //! The 3DGS-SLAM layer: tracking (per-frame pose optimization), mapping
 //! (map reconstruction with densification/pruning), the four algorithm
-//! profiles the paper evaluates, and the accuracy metrics (ATE, PSNR).
+//! profiles the paper evaluates, the accuracy metrics (ATE, PSNR), and
+//! the re-entrant [`SlamSession`] step API ([`session`]) that the
+//! batch [`SlamSystem`] loop and the multi-session
+//! [`crate::serve::SlamServer`] both drive.
 
 pub mod algorithms;
 pub mod loss;
 pub mod mapping;
 pub mod metrics;
+pub mod session;
 pub mod system;
 pub mod tracking;
 
@@ -13,5 +17,6 @@ pub use algorithms::{Algorithm, SlamConfig};
 pub use loss::{full_frame_loss, sample_loss, sparse_loss, LossCfg, SparseLoss};
 pub use mapping::{MappingConfig, MappingStats};
 pub use metrics::{ate_rmse, psnr_over_sequence};
-pub use system::{SlamStats, SlamSystem};
+pub use session::{FrameEvent, SlamSession, SlamStats};
+pub use system::SlamSystem;
 pub use tracking::{TrackingConfig, TrackingStats};

@@ -1,0 +1,728 @@
+//! The re-entrant SLAM session: one tracked RGB-D stream as a
+//! long-lived, **step-driven** object.
+//!
+//! [`SlamSession`] holds every piece of per-stream state — the tracking
+//! and mapping [`RenderBackend`] sessions (with their hot-path arenas),
+//! the Adam optimizer state, the pose history, the constant-velocity
+//! prior, the PRNG, and the accumulated [`StageCounters`] — behind one
+//! explicit step API: [`SlamSession::on_frame`] consumes a [`Frame`] and
+//! returns a [`FrameEvent`] carrying the refined pose, the tracking
+//! stats, and the per-frame work counters. Nothing about the session
+//! knows where frames come from: a dataset loop
+//! ([`crate::slam::SlamSystem::run`]), a live stream, or a
+//! [`crate::serve::SlamServer`] frame queue all drive the same object.
+//!
+//! Mapping executes in one of two modes:
+//!
+//! * **Inline** ([`SlamSession::create`]) — mapping runs on the caller's
+//!   thread, strictly after tracking of the same frame (the paper's
+//!   T_t → M_t dependency, Fig. 2). This mode is fully deterministic:
+//!   same config + same frame sequence → bit-identical poses, counters,
+//!   and map, regardless of the session's thread budget.
+//! * **Worker** ([`SlamSession::with_threaded_mapping`]) — mapping runs
+//!   on a dedicated thread *owned by the session* (Fig. 2's concurrent
+//!   schedule). Tracking reads the most recently *published* map; the
+//!   handoff is a channel plus a condition variable (the bootstrap wait
+//!   for the frame-0 map blocks on the condvar instead of spinning).
+//!   Which map version tracking observes depends on timing, so this mode
+//!   trades the bit-equality contract for pipeline overlap.
+//!
+//! Sessions are **not** `Send` (their render backends may be
+//! thread-bound), so a caller that wants a session on another thread
+//! constructs it *inside* that thread — exactly what
+//! [`crate::serve::SlamServer`]'s workers do.
+
+use super::algorithms::SlamConfig;
+use super::mapping::{map_update, MappingConfig, MappingStats};
+use super::metrics::{ate_rmse, psnr_over_sequence};
+use super::tracking::{track_frame, TrackingStats};
+use crate::camera::{Camera, Intrinsics};
+use crate::dataset::{Frame, SyntheticDataset};
+use crate::gaussian::{Adam, AdamConfig, GaussianStore};
+use crate::math::{Pcg32, Se3};
+use crate::render::backend::{create_backend, BackendKind, RenderBackend};
+use crate::render::backward_geom::GaussianGrads;
+use crate::render::{Parallelism, RenderConfig, StageCounters};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// End-of-run summary (metrics plus accumulated work streams).
+#[derive(Clone, Debug)]
+pub struct SlamStats {
+    pub ate_rmse_m: f32,
+    pub psnr_db: f64,
+    pub n_gaussians: usize,
+    pub frames: usize,
+    pub mapping_invocations: u32,
+    /// Accumulated tracking / mapping work streams.
+    pub track_counters: StageCounters,
+    pub map_counters: StageCounters,
+    pub mean_track_final_loss: f32,
+}
+
+/// What one [`SlamSession::on_frame`] step did.
+#[derive(Clone, Debug)]
+pub struct FrameEvent {
+    /// Index of the frame within the session's stream (0 = anchor).
+    pub frame_index: u32,
+    /// The pose estimate for this frame (ground truth on the anchor
+    /// frame, refined by tracking afterwards).
+    pub pose: Se3,
+    /// Tracking outcome; `None` on the anchor frame (which is
+    /// bootstrapped by mapping, not tracked).
+    pub tracking: Option<TrackingStats>,
+    /// Work charged to tracking for this frame.
+    pub track_counters: StageCounters,
+    /// Stats of the mapping invocation this frame triggered, when it ran
+    /// inline. With a mapping worker the invocation is asynchronous:
+    /// this stays `None` (and `map_scheduled` reports the enqueue); the
+    /// per-invocation stats arrive at [`SlamSession::finish`].
+    pub mapping: Option<MappingStats>,
+    /// Work charged to an inline mapping invocation for this frame.
+    pub map_counters: StageCounters,
+    /// A mapping invocation ran (inline) or was enqueued (worker) for
+    /// this frame.
+    pub map_scheduled: bool,
+}
+
+/// Where mapping executes for a session.
+enum MappingExec {
+    /// On the caller's thread, inside `on_frame` (deterministic).
+    Inline { backend: Box<dyn RenderBackend>, adam: Adam },
+    /// On a session-owned worker thread (Fig. 2's concurrent schedule).
+    Worker(MappingWorker),
+}
+
+/// A long-lived, stream-driven SLAM session (see the module docs).
+pub struct SlamSession {
+    pub cfg: SlamConfig,
+    pub rcfg: RenderConfig,
+    pub intr: Intrinsics,
+    /// The current map: the live store (inline mapping) or the latest
+    /// snapshot published by the mapping worker (refreshed every frame
+    /// and finalized by [`Self::finish`]).
+    pub store: GaussianStore,
+    pub est_poses: Vec<Se3>,
+    pub track_counters: StageCounters,
+    /// Accumulated mapping work. With a mapping worker this fills in at
+    /// [`Self::finish`] (invocations are asynchronous until then).
+    pub map_counters: StageCounters,
+    /// Per-frame tracking counters (the simulators consume these).
+    pub per_frame_track: Vec<StageCounters>,
+    /// Per-invocation mapping counters.
+    pub per_map: Vec<StageCounters>,
+    pub track_stats: Vec<TrackingStats>,
+    pub map_stats: Vec<MappingStats>,
+    track_backend: Box<dyn RenderBackend>,
+    mapping: MappingExec,
+    prev_rel: Se3,
+    rng: Pcg32,
+    frame_idx: u32,
+    /// Last worker-published map version folded into `store` (worker
+    /// mode only — gates the per-frame snapshot clone).
+    map_version: u64,
+    finished: bool,
+}
+
+impl SlamSession {
+    /// A session with **inline** mapping, its backends pinned to the
+    /// caller's [`Parallelism`] budget. Errs when the config assigns a
+    /// backend that cannot execute its process (see
+    /// [`SlamConfig::validate`]) or a backend cannot be constructed (the
+    /// XLA stub without artifacts/bindings); the CPU backends are
+    /// infallible.
+    pub fn create(cfg: SlamConfig, intr: Intrinsics, par: Parallelism) -> Result<Self> {
+        cfg.validate()?;
+        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let mapping = MappingExec::Inline {
+            backend: create_backend(cfg.mapping.backend, par)?,
+            adam: Adam::new(0, AdamConfig::default()),
+        };
+        Ok(Self::assemble(cfg, intr, track_backend, mapping))
+    }
+
+    /// A session whose mapping runs on a dedicated worker thread owned
+    /// by the session (Fig. 2's concurrent tracking/mapping schedule).
+    /// Tracking reads the most recently published map snapshot each
+    /// frame; the frame-0 bootstrap blocks on a condition variable until
+    /// the worker publishes the first map. Which snapshot later frames
+    /// observe depends on timing, so this mode is excluded from the
+    /// bit-equality determinism contract.
+    pub fn with_threaded_mapping(
+        cfg: SlamConfig,
+        intr: Intrinsics,
+        par: Parallelism,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        // capacity-bounded tracking engines (fixed-G AOT artifacts) cap
+        // map growth — same headroom rule as inline mapping
+        let worker = MappingWorker::spawn(
+            cfg.mapping,
+            track_backend.store_capacity(),
+            intr,
+            par,
+        )?;
+        Ok(Self::assemble(cfg, intr, track_backend, MappingExec::Worker(worker)))
+    }
+
+    fn assemble(
+        cfg: SlamConfig,
+        intr: Intrinsics,
+        track_backend: Box<dyn RenderBackend>,
+        mapping: MappingExec,
+    ) -> Self {
+        SlamSession {
+            cfg,
+            rcfg: RenderConfig::default(),
+            intr,
+            store: GaussianStore::new(),
+            est_poses: Vec::new(),
+            track_counters: StageCounters::new(),
+            map_counters: StageCounters::new(),
+            per_frame_track: Vec::new(),
+            per_map: Vec::new(),
+            track_stats: Vec::new(),
+            map_stats: Vec::new(),
+            track_backend,
+            mapping,
+            prev_rel: Se3::IDENTITY,
+            rng: Pcg32::new(cfg.seed),
+            frame_idx: 0,
+            map_version: 0,
+            finished: false,
+        }
+    }
+
+    /// Constant-velocity prediction: apply the previous relative motion.
+    fn predict_pose(&self) -> Se3 {
+        match self.est_poses.last() {
+            Some(last) => self.prev_rel.compose(*last),
+            None => Se3::IDENTITY,
+        }
+    }
+
+    /// Process one frame: track (except frame 0, which is the anchor and
+    /// is bootstrapped by mapping), then map every `cfg.mapping.every`
+    /// frames — mapping at t strictly after tracking at t (Fig. 2).
+    pub fn on_frame(&mut self, frame: &Frame) -> Result<FrameEvent> {
+        if self.finished {
+            bail!("SlamSession::on_frame called after finish()");
+        }
+        let idx = self.frame_idx;
+        self.frame_idx += 1;
+
+        if idx == 0 {
+            // anchor: ground-truth first pose (standard SLAM convention)
+            self.est_poses.push(frame.gt_w2c);
+            let (mapping, map_counters) = self.run_mapping(frame, frame.gt_w2c, idx)?;
+            return Ok(FrameEvent {
+                frame_index: idx,
+                pose: frame.gt_w2c,
+                tracking: None,
+                track_counters: StageCounters::new(),
+                mapping,
+                map_counters,
+                map_scheduled: true,
+            });
+        }
+
+        // ---- tracking (every frame) ----
+        // a mapping worker publishes asynchronously: fold in its latest
+        // map, but only clone when a new version was actually published
+        if let MappingExec::Worker(w) = &self.mapping {
+            if let Some((store, version)) = w.latest_newer_than(self.map_version)? {
+                self.store = store;
+                self.map_version = version;
+            }
+        }
+        let init = self.predict_pose();
+        let mut c = StageCounters::new();
+        let (pose, tstats) = track_frame(
+            self.track_backend.as_mut(),
+            &self.store,
+            self.intr,
+            init,
+            frame,
+            &self.cfg.tracking,
+            &self.rcfg,
+            &mut self.rng,
+            &mut c,
+        )?;
+        self.track_counters.merge(&c);
+        self.per_frame_track.push(c);
+        self.track_stats.push(tstats.clone());
+
+        let last = *self.est_poses.last().unwrap();
+        self.prev_rel = pose.compose(last.inverse());
+        self.est_poses.push(pose);
+
+        // ---- mapping (every N frames, after tracking — Fig. 2) ----
+        let map_due = idx % self.cfg.mapping.every == 0;
+        let (mapping, map_counters) = if map_due {
+            self.run_mapping(frame, pose, idx)?
+        } else {
+            (None, StageCounters::new())
+        };
+
+        Ok(FrameEvent {
+            frame_index: idx,
+            pose,
+            tracking: Some(tstats),
+            track_counters: *self.per_frame_track.last().unwrap(),
+            mapping,
+            map_counters,
+            map_scheduled: map_due,
+        })
+    }
+
+    /// One mapping invocation at `pose`: inline it runs to completion
+    /// here; with a worker it is enqueued (and, on the anchor frame,
+    /// awaited — tracking cannot start without a bootstrap map).
+    fn run_mapping(
+        &mut self,
+        frame: &Frame,
+        pose: Se3,
+        idx: u32,
+    ) -> Result<(Option<MappingStats>, StageCounters)> {
+        let capacity = self.track_backend.store_capacity();
+        match &mut self.mapping {
+            MappingExec::Inline { backend, adam } => {
+                let cam = Camera::new(self.intr, pose);
+                let map_cfg = self.cfg.mapping.capped_for(capacity, self.store.len());
+                let mut c = StageCounters::new();
+                let stats = map_update(
+                    backend.as_mut(),
+                    &mut self.store,
+                    adam,
+                    &cam,
+                    frame,
+                    &map_cfg,
+                    &self.rcfg,
+                    &mut self.rng,
+                    &mut c,
+                )?;
+                debug_assert_eq!(adam.len(), self.store.len() * GaussianGrads::PARAMS);
+                self.map_counters.merge(&c);
+                self.per_map.push(c);
+                self.map_stats.push(stats.clone());
+                Ok((Some(stats), c))
+            }
+            MappingExec::Worker(worker) => {
+                worker.enqueue(MapJob {
+                    frame: frame.clone(),
+                    pose,
+                    seed: self.cfg.seed + idx as u64,
+                })?;
+                if idx == 0 {
+                    // bootstrap: tracking frame 1 needs a map — condvar
+                    // wait for the first published version (no spinning)
+                    let (store, version) = worker.wait_version(1)?;
+                    self.store = store;
+                    self.map_version = version;
+                }
+                Ok((None, StageCounters::new()))
+            }
+        }
+    }
+
+    /// Drain the session: with a mapping worker, close its queue, join
+    /// it, and fold its store, counters, and per-invocation stats into
+    /// the session. Inline sessions are already complete (no-op).
+    /// Idempotent; must be called before [`Self::evaluate`] on a
+    /// worker-mapped session.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        if let MappingExec::Worker(worker) = &mut self.mapping {
+            let out = worker.join()?;
+            self.store = out.store;
+            self.map_counters.merge(&out.counters);
+            self.per_map = out.per_map;
+            self.map_stats = out.stats;
+        }
+        Ok(())
+    }
+
+    /// Frames consumed so far.
+    pub fn frames_seen(&self) -> u32 {
+        self.frame_idx
+    }
+
+    /// Legacy step entry ([`FrameEvent`] discarded) — kept so
+    /// dataset-driven callers read naturally.
+    pub fn process_frame(&mut self, frame: &Frame) -> Result<()> {
+        self.on_frame(frame).map(|_| ())
+    }
+
+    /// Evaluate against ground truth. Worker-mapped sessions must be
+    /// [`Self::finish`]ed first so the final map and mapping counters
+    /// are folded in — evaluating earlier would silently report zero
+    /// mapping work, so it panics instead.
+    pub fn evaluate(&self, data: &SyntheticDataset) -> SlamStats {
+        assert!(
+            self.finished || matches!(self.mapping, MappingExec::Inline { .. }),
+            "finish() a threaded-mapping session before evaluate() — its map and \
+             mapping counters are only folded in at finish"
+        );
+        evaluate_stream(
+            &self.est_poses,
+            &self.store,
+            self.intr,
+            &self.track_stats,
+            self.per_map.len(),
+            self.track_counters,
+            self.map_counters,
+            data,
+            &self.rcfg,
+        )
+    }
+}
+
+/// End-of-run evaluation of one stream's results — the single
+/// definition of the ATE/PSNR/mean-loss metrics, shared by
+/// [`SlamSession::evaluate`] and the server's per-session reports
+/// ([`crate::serve::SessionOutcome::evaluate`]), so the two surfaces
+/// cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn evaluate_stream(
+    est_poses: &[Se3],
+    store: &GaussianStore,
+    intr: Intrinsics,
+    track_stats: &[TrackingStats],
+    mapping_invocations: usize,
+    track_counters: StageCounters,
+    map_counters: StageCounters,
+    data: &SyntheticDataset,
+    rcfg: &RenderConfig,
+) -> SlamStats {
+    let gt: Vec<Se3> = data.frames.iter().map(|f| f.gt_w2c).collect();
+    let ate = ate_rmse(est_poses, &gt);
+    let psnr = psnr_over_sequence(
+        store,
+        intr,
+        est_poses,
+        &data.frames,
+        (data.frames.len() / 4).max(1),
+        rcfg,
+    );
+    let mean_loss = if track_stats.is_empty() {
+        0.0
+    } else {
+        track_stats.iter().map(|s| s.final_loss).sum::<f32>() / track_stats.len() as f32
+    };
+    SlamStats {
+        ate_rmse_m: ate,
+        psnr_db: psnr,
+        n_gaussians: store.len(),
+        frames: est_poses.len(),
+        mapping_invocations: mapping_invocations as u32,
+        track_counters,
+        map_counters,
+        mean_track_final_loss: mean_loss,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Session-owned mapping worker (Fig. 2's concurrent schedule)
+// ---------------------------------------------------------------------
+
+/// One mapping request: the keyframe, its (already tracked) pose, and
+/// the per-invocation RNG seed.
+struct MapJob {
+    frame: Frame,
+    pose: Se3,
+    seed: u64,
+}
+
+/// Keyframes buffered in the mapping worker's queue before `enqueue`
+/// blocks. Each job holds a cloned RGB-D frame, so an open-ended stream
+/// whose mapping lags tracking must back-pressure instead of buffering
+/// every keyframe (same rationale as the server's bounded submit
+/// queues).
+const MAP_QUEUE_DEPTH: usize = 4;
+
+/// Map versions published by the worker. `version` counts completed
+/// invocations; `failed` poisons waiters when the worker errs (so the
+/// bootstrap wait cannot hang on a dead worker).
+struct MapState {
+    store: GaussianStore,
+    version: u64,
+    failed: bool,
+}
+
+struct MapShared {
+    state: Mutex<MapState>,
+    ready: Condvar,
+}
+
+impl MapShared {
+    fn fail(&self) {
+        self.state.lock().unwrap().failed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// Everything the worker accumulated, returned at join.
+struct MapWorkerOutcome {
+    store: GaussianStore,
+    counters: StageCounters,
+    per_map: Vec<StageCounters>,
+    stats: Vec<MappingStats>,
+}
+
+/// The mapping worker: owns its backend session (constructed on its own
+/// thread — sessions are not `Send`), its store, and its Adam state.
+/// Jobs arrive on a channel; finished maps are published under a mutex
+/// and announced on a condvar.
+struct MappingWorker {
+    tx: Option<mpsc::SyncSender<MapJob>>,
+    shared: Arc<MapShared>,
+    handle: Option<std::thread::JoinHandle<Result<MapWorkerOutcome>>>,
+}
+
+impl MappingWorker {
+    fn spawn(
+        map_cfg: MappingConfig,
+        track_capacity: Option<usize>,
+        intr: Intrinsics,
+        par: Parallelism,
+    ) -> Result<Self> {
+        let shared = Arc::new(MapShared {
+            state: Mutex::new(MapState {
+                store: GaussianStore::new(),
+                version: 0,
+                failed: false,
+            }),
+            ready: Condvar::new(),
+        });
+        let (tx, rx) = mpsc::sync_channel::<MapJob>(MAP_QUEUE_DEPTH);
+        // startup barrier: backend construction errors surface here, at
+        // session construction, not on the first frame
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let worker_shared = Arc::clone(&shared);
+        let map_kind: BackendKind = map_cfg.backend;
+        let handle = std::thread::spawn(move || -> Result<MapWorkerOutcome> {
+            let mut backend = match create_backend(map_kind, par) {
+                Ok(b) => {
+                    ready_tx.send(Ok(())).ok();
+                    b
+                }
+                Err(e) => {
+                    worker_shared.fail();
+                    ready_tx.send(Err(format!("{e}"))).ok();
+                    return Err(e);
+                }
+            };
+            let rcfg = RenderConfig::default();
+            let mut store = GaussianStore::new();
+            let mut adam = Adam::new(0, AdamConfig::default());
+            let mut counters = StageCounters::new();
+            let mut per_map = Vec::new();
+            let mut stats = Vec::new();
+            while let Ok(job) = rx.recv() {
+                let cfg = map_cfg.capped_for(track_capacity, store.len());
+                let cam = Camera::new(intr, job.pose);
+                let mut rng = Pcg32::new_stream(job.seed, 101);
+                let mut c = StageCounters::new();
+                let st = match map_update(
+                    backend.as_mut(),
+                    &mut store,
+                    &mut adam,
+                    &cam,
+                    &job.frame,
+                    &cfg,
+                    &rcfg,
+                    &mut rng,
+                    &mut c,
+                ) {
+                    Ok(st) => st,
+                    Err(e) => {
+                        worker_shared.fail();
+                        return Err(e);
+                    }
+                };
+                counters.merge(&c);
+                per_map.push(c);
+                stats.push(st);
+                {
+                    let mut state = worker_shared.state.lock().unwrap();
+                    state.store = store.clone();
+                    state.version += 1;
+                }
+                worker_shared.ready.notify_all();
+            }
+            Ok(MapWorkerOutcome { store, counters, per_map, stats })
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                let _ = handle.join();
+                bail!("mapping worker failed to start: {msg}");
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("mapping worker died before reporting readiness");
+            }
+        }
+        Ok(MappingWorker { tx: Some(tx), shared, handle: Some(handle) })
+    }
+
+    /// Enqueue a mapping job; blocks (back-pressure) when
+    /// [`MAP_QUEUE_DEPTH`] keyframes are already waiting.
+    fn enqueue(&self, job: MapJob) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("mapping worker already joined"))?
+            .send(job)
+            .map_err(|_| anyhow!("mapping worker exited early — finish() returns its error"))
+    }
+
+    /// The published map and its version, cloned only when newer than
+    /// `seen` — tracking refreshes its snapshot once per publish, not
+    /// once per frame.
+    fn latest_newer_than(&self, seen: u64) -> Result<Option<(GaussianStore, u64)>> {
+        let state = self.shared.state.lock().unwrap();
+        if state.failed {
+            bail!("mapping worker failed — finish() returns its error");
+        }
+        if state.version <= seen {
+            return Ok(None);
+        }
+        Ok(Some((state.store.clone(), state.version)))
+    }
+
+    /// Block (condvar, no spinning) until the worker has published at
+    /// least `version` completed invocations; returns the published map
+    /// and its (possibly later) version.
+    fn wait_version(&self, version: u64) -> Result<(GaussianStore, u64)> {
+        let mut state = self.shared.state.lock().unwrap();
+        while state.version < version && !state.failed {
+            state = self.shared.ready.wait(state).unwrap();
+        }
+        if state.failed {
+            bail!("mapping worker failed — finish() returns its error");
+        }
+        Ok((state.store.clone(), state.version))
+    }
+
+    /// Close the queue and join the worker thread.
+    fn join(&mut self) -> Result<MapWorkerOutcome> {
+        self.tx = None; // closes the channel; the worker drains and exits
+        let handle = self
+            .handle
+            .take()
+            .ok_or_else(|| anyhow!("mapping worker already joined"))?;
+        handle
+            .join()
+            .map_err(|_| anyhow!("mapping worker panicked"))?
+            .context("mapping worker failed")
+    }
+}
+
+impl Drop for MappingWorker {
+    fn drop(&mut self) {
+        // un-joined worker (session dropped mid-stream): close the queue
+        // and wait for it to wind down rather than detaching
+        self.tx = None;
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Flavor;
+    use crate::slam::algorithms::Algorithm;
+
+    fn quick_data(frames: usize) -> SyntheticDataset {
+        SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, frames)
+    }
+
+    #[test]
+    fn frame_events_carry_pose_stats_and_counters() {
+        let data = quick_data(5);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        let mut session = SlamSession::create(cfg, data.intr, Parallelism::auto()).unwrap();
+
+        let e0 = session.on_frame(&data.frames[0]).unwrap();
+        assert_eq!(e0.frame_index, 0);
+        assert!(e0.tracking.is_none(), "anchor frame is not tracked");
+        assert!(e0.map_scheduled);
+        let stats = e0.mapping.expect("inline mapping reports stats");
+        assert!(stats.added > 0);
+        assert!(e0.map_counters.proj_gaussians_in > 0);
+
+        let e1 = session.on_frame(&data.frames[1]).unwrap();
+        assert_eq!(e1.frame_index, 1);
+        assert_eq!(e1.pose, *session.est_poses.last().unwrap());
+        let t = e1.tracking.expect("tracked frame reports stats");
+        assert!(t.iterations > 0);
+        assert!(e1.track_counters.raster_pairs_iterated > 0);
+        assert!(!e1.map_scheduled, "frame 1 is off the mapping cadence");
+        assert_eq!(session.frames_seen(), 2);
+    }
+
+    #[test]
+    fn session_is_reentrant_across_interleaved_streams() {
+        // two sessions stepped in lockstep must match two stepped
+        // sequentially — per-stream state is fully session-owned
+        let data = quick_data(4);
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3);
+        let run_sequential = || {
+            let mut s = SlamSession::create(cfg, data.intr, Parallelism::auto()).unwrap();
+            for f in &data.frames {
+                s.on_frame(f).unwrap();
+            }
+            s.est_poses.clone()
+        };
+        let a = run_sequential();
+        let b = run_sequential();
+        let mut s1 = SlamSession::create(cfg, data.intr, Parallelism::auto()).unwrap();
+        let mut s2 = SlamSession::create(cfg, data.intr, Parallelism::auto()).unwrap();
+        for f in &data.frames {
+            s1.on_frame(f).unwrap();
+            s2.on_frame(f).unwrap();
+        }
+        assert_eq!(a, b);
+        assert_eq!(s1.est_poses, a);
+        assert_eq!(s2.est_poses, a);
+    }
+
+    #[test]
+    fn threaded_mapping_session_completes_and_tracks() {
+        let data = quick_data(6);
+        let mut cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        cfg.mapping.every = 2;
+        let mut session =
+            SlamSession::with_threaded_mapping(cfg, data.intr, Parallelism::auto()).unwrap();
+        for f in &data.frames {
+            let e = session.on_frame(f).unwrap();
+            // worker mode: invocations are asynchronous
+            assert!(e.mapping.is_none());
+        }
+        session.finish().unwrap();
+        let stats = session.evaluate(&data);
+        assert_eq!(stats.frames, 6);
+        assert!(stats.mapping_invocations >= 1);
+        assert!(stats.n_gaussians > 100, "map too small: {}", stats.n_gaussians);
+        assert!(stats.ate_rmse_m < 0.3, "ATE {}", stats.ate_rmse_m);
+        // finish is idempotent
+        session.finish().unwrap();
+    }
+
+    #[test]
+    fn on_frame_after_finish_is_rejected() {
+        let data = quick_data(2);
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3);
+        let mut session = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+        session.on_frame(&data.frames[0]).unwrap();
+        session.finish().unwrap();
+        assert!(session.on_frame(&data.frames[1]).is_err());
+    }
+}

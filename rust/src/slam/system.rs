@@ -1,94 +1,53 @@
-//! The complete SLAM system: per-frame tracking, periodic mapping with
-//! the T_t → M_t dependency (paper Fig. 2), constant-velocity pose
-//! prediction, and per-process work accounting for the simulators.
+//! The dataset-driven SLAM entry point: a thin loop over the re-entrant
+//! [`SlamSession`].
 //!
-//! The system is **backend-agnostic**: it holds one
-//! [`RenderBackend`] session for tracking and one for mapping
-//! (constructed from the [`crate::render::BackendKind`]s in
-//! [`SlamConfig`] via the registry), so the same loop runs the dense
-//! baseline, Splatonic's sparse pipeline, or the PJRT-executed AOT
-//! artifacts.
+//! All per-frame state (backend sessions, Adam, RNG, pose history,
+//! counters) lives in [`SlamSession`] — see `slam/session.rs`. This
+//! module keeps the historical batch surface: [`SlamSystem::run`]
+//! consumes a whole [`SyntheticDataset`] and evaluates, and the wrapper
+//! derefs to its session so counter/stat fields read as before.
+//! Stream-driven callers (the [`crate::serve::SlamServer`] workers) use
+//! [`SlamSession`] directly.
+
+pub use super::session::{FrameEvent, SlamSession, SlamStats};
 
 use super::algorithms::SlamConfig;
-use super::mapping::{map_update, MappingStats};
-use super::metrics::{ate_rmse, psnr_over_sequence};
-use super::tracking::{track_frame, TrackingStats};
-use crate::camera::{Camera, Intrinsics};
-use crate::dataset::{Frame, SyntheticDataset};
-use crate::gaussian::{Adam, AdamConfig, GaussianStore};
-use crate::math::{Pcg32, Se3};
-use crate::render::backend::{create_backend, RenderBackend};
-use crate::render::backward_geom::GaussianGrads;
-use crate::render::{RenderConfig, StageCounters};
+use crate::camera::Intrinsics;
+use crate::dataset::SyntheticDataset;
+use crate::render::Parallelism;
 use anyhow::Result;
+use std::ops::{Deref, DerefMut};
 
-/// End-of-run summary.
-#[derive(Clone, Debug)]
-pub struct SlamStats {
-    pub ate_rmse_m: f32,
-    pub psnr_db: f64,
-    pub n_gaussians: usize,
-    pub frames: usize,
-    pub mapping_invocations: u32,
-    /// Accumulated tracking / mapping work streams.
-    pub track_counters: StageCounters,
-    pub map_counters: StageCounters,
-    pub mean_track_final_loss: f32,
+/// A [`SlamSession`] driven by a dataset loop instead of a frame stream.
+/// Derefs to the session, so per-frame state reads identically
+/// (`sys.est_poses`, `sys.per_frame_track`, `sys.process_frame(..)`, …).
+pub struct SlamSystem {
+    pub session: SlamSession,
 }
 
-/// Online SLAM system state.
-pub struct SlamSystem {
-    pub cfg: SlamConfig,
-    pub rcfg: RenderConfig,
-    pub intr: Intrinsics,
-    pub store: GaussianStore,
-    adam: Adam,
-    /// Tracking render session (reused across frames).
-    track_backend: Box<dyn RenderBackend>,
-    /// Mapping render session (reused across invocations).
-    map_backend: Box<dyn RenderBackend>,
-    pub est_poses: Vec<Se3>,
-    prev_rel: Se3,
-    rng: Pcg32,
-    pub track_counters: StageCounters,
-    pub map_counters: StageCounters,
-    /// Per-frame tracking counters (the simulators consume these).
-    pub per_frame_track: Vec<StageCounters>,
-    /// Per-invocation mapping counters.
-    pub per_map: Vec<StageCounters>,
-    pub track_stats: Vec<TrackingStats>,
-    pub map_stats: Vec<MappingStats>,
-    frame_idx: u32,
+impl Deref for SlamSystem {
+    type Target = SlamSession;
+
+    fn deref(&self) -> &SlamSession {
+        &self.session
+    }
+}
+
+impl DerefMut for SlamSystem {
+    fn deref_mut(&mut self) -> &mut SlamSession {
+        &mut self.session
+    }
 }
 
 impl SlamSystem {
-    /// Construct the system, building both backend sessions from the
-    /// config's [`crate::render::BackendKind`]s through the registry.
+    /// Construct the system around an inline-mapping [`SlamSession`]
+    /// with the environment's thread budget ([`Parallelism::auto`] —
+    /// callers that partition a budget construct the session directly).
     /// Errs when the config assigns a backend that cannot execute its
-    /// process (see [`SlamConfig::validate`]) or a backend cannot be
-    /// constructed (the XLA stub without artifacts/bindings); the CPU
-    /// backends are infallible.
+    /// process or a backend cannot be constructed (the XLA stub without
+    /// artifacts/bindings); the CPU backends are infallible.
     pub fn try_new(cfg: SlamConfig, intr: Intrinsics) -> Result<Self> {
-        cfg.validate()?;
-        Ok(SlamSystem {
-            cfg,
-            rcfg: RenderConfig::default(),
-            intr,
-            store: GaussianStore::new(),
-            adam: Adam::new(0, AdamConfig::default()),
-            track_backend: create_backend(cfg.tracking.backend)?,
-            map_backend: create_backend(cfg.mapping.backend)?,
-            est_poses: Vec::new(),
-            prev_rel: Se3::IDENTITY,
-            rng: Pcg32::new(cfg.seed),
-            track_counters: StageCounters::new(),
-            map_counters: StageCounters::new(),
-            per_frame_track: Vec::new(),
-            per_map: Vec::new(),
-            track_stats: Vec::new(),
-            map_stats: Vec::new(),
-            frame_idx: 0,
-        })
+        Ok(SlamSystem { session: SlamSession::create(cfg, intr, Parallelism::auto())? })
     }
 
     /// [`Self::try_new`] for CPU-backend configs (panics if a backend
@@ -97,136 +56,14 @@ impl SlamSystem {
         Self::try_new(cfg, intr).expect("backend construction failed")
     }
 
-    /// Constant-velocity prediction: apply the previous relative motion.
-    fn predict_pose(&self) -> Se3 {
-        match self.est_poses.last() {
-            Some(last) => self.prev_rel.compose(*last),
-            None => Se3::IDENTITY,
-        }
-    }
-
-    /// Mapping config for this invocation: growth capped so the store
-    /// always fits a capacity-bounded tracking engine.
-    fn capped_mapping(&self) -> super::mapping::MappingConfig {
-        self.cfg
-            .mapping
-            .capped_for(self.track_backend.store_capacity(), self.store.len())
-    }
-
-    /// Process one frame: track (except frame 0, which is the anchor and
-    /// is bootstrapped by mapping), then map every `cfg.mapping.every`
-    /// frames — mapping at t strictly after tracking at t (Fig. 2).
-    pub fn process_frame(&mut self, frame: &Frame) -> Result<()> {
-        let idx = self.frame_idx;
-        self.frame_idx += 1;
-
-        if idx == 0 {
-            // anchor: ground-truth first pose (standard SLAM convention)
-            self.est_poses.push(frame.gt_w2c);
-            let cam = Camera::new(self.intr, frame.gt_w2c);
-            let map_cfg = self.capped_mapping();
-            let mut c = StageCounters::new();
-            let stats = map_update(
-                self.map_backend.as_mut(),
-                &mut self.store,
-                &mut self.adam,
-                &cam,
-                frame,
-                &map_cfg,
-                &self.rcfg,
-                &mut self.rng,
-                &mut c,
-            )?;
-            self.map_counters.merge(&c);
-            self.per_map.push(c);
-            self.map_stats.push(stats);
-            return Ok(());
-        }
-
-        // ---- tracking (every frame) ----
-        let init = self.predict_pose();
-        let mut c = StageCounters::new();
-        let (pose, tstats) = track_frame(
-            self.track_backend.as_mut(),
-            &self.store,
-            self.intr,
-            init,
-            frame,
-            &self.cfg.tracking,
-            &self.rcfg,
-            &mut self.rng,
-            &mut c,
-        )?;
-        self.track_counters.merge(&c);
-        self.per_frame_track.push(c);
-        self.track_stats.push(tstats);
-
-        let last = *self.est_poses.last().unwrap();
-        self.prev_rel = pose.compose(last.inverse());
-        self.est_poses.push(pose);
-
-        // ---- mapping (every N frames, after tracking — Fig. 2) ----
-        if idx % self.cfg.mapping.every == 0 {
-            let cam = Camera::new(self.intr, pose);
-            let map_cfg = self.capped_mapping();
-            let mut c = StageCounters::new();
-            let stats = map_update(
-                self.map_backend.as_mut(),
-                &mut self.store,
-                &mut self.adam,
-                &cam,
-                frame,
-                &map_cfg,
-                &self.rcfg,
-                &mut self.rng,
-                &mut c,
-            )?;
-            self.map_counters.merge(&c);
-            self.per_map.push(c);
-            self.map_stats.push(stats);
-        }
-
-        debug_assert_eq!(self.adam.len(), self.store.len() * GaussianGrads::PARAMS);
-        Ok(())
-    }
-
-    /// Run over a whole dataset and evaluate.
+    /// Run over a whole dataset and evaluate: the thin loop over
+    /// [`SlamSession::on_frame`].
     pub fn run(cfg: SlamConfig, data: &SyntheticDataset) -> Result<SlamStats> {
         let mut sys = SlamSystem::try_new(cfg, data.intr)?;
         for frame in &data.frames {
-            sys.process_frame(frame)?;
+            sys.session.on_frame(frame)?;
         }
-        Ok(sys.evaluate(data))
-    }
-
-    /// Evaluate against ground truth.
-    pub fn evaluate(&self, data: &SyntheticDataset) -> SlamStats {
-        let gt: Vec<Se3> = data.frames.iter().map(|f| f.gt_w2c).collect();
-        let ate = ate_rmse(&self.est_poses, &gt);
-        let psnr = psnr_over_sequence(
-            &self.store,
-            self.intr,
-            &self.est_poses,
-            &data.frames,
-            (data.frames.len() / 4).max(1),
-            &self.rcfg,
-        );
-        let mean_loss = if self.track_stats.is_empty() {
-            0.0
-        } else {
-            self.track_stats.iter().map(|s| s.final_loss).sum::<f32>()
-                / self.track_stats.len() as f32
-        };
-        SlamStats {
-            ate_rmse_m: ate,
-            psnr_db: psnr,
-            n_gaussians: self.store.len(),
-            frames: self.est_poses.len(),
-            mapping_invocations: self.per_map.len() as u32,
-            track_counters: self.track_counters,
-            map_counters: self.map_counters,
-            mean_track_final_loss: mean_loss,
-        }
+        Ok(sys.session.evaluate(data))
     }
 }
 

@@ -195,6 +195,7 @@ mod tests {
     use crate::camera::Intrinsics;
     use crate::dataset::{Flavor, SyntheticDataset};
     use crate::render::backend::create_backend;
+    use crate::render::Parallelism;
 
     /// Tracking must recover a perturbed pose on a GT map.
     #[test]
@@ -208,7 +209,7 @@ mod tests {
             gt.t + Vec3::new(0.02, -0.01, 0.015),
         );
         let cfg = TrackingConfig { iters: 30, tile: 8, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(3);
         let mut c = StageCounters::new();
         let (refined, stats) = track_frame(
@@ -239,7 +240,7 @@ mod tests {
         let data = SyntheticDataset::generate(Flavor::Replica, 1, 64, 48, 1);
         let frame = &data.frames[0];
         let cfg = TrackingConfig { iters: 8, tile: 8, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(4);
         let mut c = StageCounters::new();
         let (refined, _) = track_frame(
@@ -266,7 +267,7 @@ mod tests {
         let init = Se3::new(gt.q, gt.t + Vec3::new(0.015, 0.0, -0.01));
         let run = |kind| {
             let cfg = TrackingConfig { iters: 20, tile: 8, backend: kind, ..Default::default() };
-            let mut backend = create_backend(kind).unwrap();
+            let mut backend = create_backend(kind, Parallelism::auto()).unwrap();
             let mut rng = Pcg32::new(5);
             let mut c = StageCounters::new();
             let (p, _) = track_frame(
@@ -293,7 +294,7 @@ mod tests {
         let data = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 1);
         let frame = &data.frames[0];
         let cfg = TrackingConfig { iters: 3, tile: 8, ..Default::default() };
-        let mut backend = create_backend(cfg.backend).unwrap();
+        let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
         let mut rng = Pcg32::new(6);
         let mut c = StageCounters::new();
         let _ = track_frame(

@@ -11,7 +11,7 @@ use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::math::Vec3;
 use splatonic::render::pixel_pipeline::SampledPixels;
 use splatonic::render::{
-    create_backend, BackendKind, DenseCpuBackend, GradRequest, LossGrads, PixelSet,
+    create_backend, BackendKind, DenseCpuBackend, GradRequest, LossGrads, Parallelism, PixelSet,
     RenderBackend, RenderConfig, RenderJob, SparseCpuBackend, StageCounters,
 };
 
@@ -37,7 +37,7 @@ fn full_resolution_grid_matches_dense_backend() {
     // sparse backend over a full-resolution sample grid (one sample per
     // 1×1 cell = every pixel, row-major)
     let px = SampledPixels::full_grid(w, h, 1);
-    let mut sparse = create_backend(BackendKind::SparseCpu).unwrap();
+    let mut sparse = create_backend(BackendKind::SparseCpu, Parallelism::auto()).unwrap();
     let sjob = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
     let s = {
         let out = sparse.render(&data.gt_store, &sjob).unwrap();
@@ -50,7 +50,7 @@ fn full_resolution_grid_matches_dense_backend() {
     };
 
     // dense backend over the full frame
-    let mut dense = create_backend(BackendKind::DenseCpu).unwrap();
+    let mut dense = create_backend(BackendKind::DenseCpu, Parallelism::auto()).unwrap();
     let djob = RenderJob { cam: &cam, pixels: PixelSet::Full, rcfg: &rcfg, frame: None };
     let d = {
         let out = dense.render(&data.gt_store, &djob).unwrap();
@@ -165,8 +165,8 @@ fn org_s_backend_matches_sparse_backend_on_a_sample_grid() {
     let px = SampledPixels::full_grid(data.intr.width, data.intr.height, 16);
     let job = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
 
-    let mut sparse = create_backend(BackendKind::SparseCpu).unwrap();
-    let mut dense = create_backend(BackendKind::DenseCpu).unwrap();
+    let mut sparse = create_backend(BackendKind::SparseCpu, Parallelism::auto()).unwrap();
+    let mut dense = create_backend(BackendKind::DenseCpu, Parallelism::auto()).unwrap();
     let (sc, scnt) = {
         let out = sparse.render(&data.gt_store, &job).unwrap();
         (out.colors.to_vec(), out.counters)

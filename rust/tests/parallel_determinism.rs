@@ -12,13 +12,20 @@
 //!   every gradient's float accumulation order fixed;
 //! * **mapping densify/prune** — chunk-order candidate merge and the
 //!   disjoint-slice keep mask make the post-densify/post-prune store
-//!   contents identical at any thread count.
+//!   contents identical at any thread count;
+//! * **the serving layer** — a one-session `SlamServer` reproduces
+//!   `SlamSystem::run` bit-for-bit (per-session seeding keeps id 0 on
+//!   the base seed), and a heterogeneous multi-session fleet produces
+//!   per-session poses/counters/maps that are bit-identical across
+//!   worker counts and submission interleaves (sessions share no
+//!   mutable state; their thread shares are a pure function of the
+//!   session count).
 //!
 //! Scenes are sized to cross the parallel thresholds, so the threaded
 //! code paths really execute.
 
 use splatonic::camera::{Camera, Intrinsics};
-use splatonic::dataset::{Flavor, SyntheticDataset};
+use splatonic::dataset::{Flavor, Scenario, SyntheticDataset};
 use splatonic::gaussian::{Gaussian, GaussianStore};
 use splatonic::math::{Pcg32, Quat, Se3, Vec3};
 use splatonic::render::image::Plane;
@@ -30,8 +37,11 @@ use splatonic::render::projection::project_all;
 use splatonic::render::tile_pipeline::{
     backward_dense_with, render_dense_projected_with, DenseRender, DenseScratch,
 };
-use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::render::{Parallelism, RenderConfig, StageCounters};
+use splatonic::serve::{ServerConfig, SessionOutcome, SessionSpec, SlamServer};
+use splatonic::slam::algorithms::{Algorithm, SlamConfig};
 use splatonic::slam::mapping::{densify_unseen, prune_keep_mask, MappingConfig};
+use splatonic::slam::SlamSystem;
 
 fn big_store(n: usize, rng: &mut Pcg32) -> GaussianStore {
     let mut store = GaussianStore::new();
@@ -344,5 +354,169 @@ fn threaded_densify_and_prune_are_bit_identical() {
     for i in 0..sa.len() {
         assert_eq!(sa.means[i].x.to_bits(), sb.means[i].x.to_bits());
         assert_eq!(sa.opacity_logits[i].to_bits(), sb.opacity_logits[i].to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serving layer
+// ---------------------------------------------------------------------
+
+/// Bitwise pose comparison (PartialEq on f32 would equate -0.0 and 0.0).
+fn assert_poses_bit_identical(a: &[splatonic::math::Se3], b: &[splatonic::math::Se3], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: pose count differs");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.q.w.to_bits(), pb.q.w.to_bits(), "{tag}: pose {i} q.w");
+        assert_eq!(pa.q.x.to_bits(), pb.q.x.to_bits(), "{tag}: pose {i} q.x");
+        assert_eq!(pa.q.y.to_bits(), pb.q.y.to_bits(), "{tag}: pose {i} q.y");
+        assert_eq!(pa.q.z.to_bits(), pb.q.z.to_bits(), "{tag}: pose {i} q.z");
+        assert_eq!(pa.t.x.to_bits(), pb.t.x.to_bits(), "{tag}: pose {i} t.x");
+        assert_eq!(pa.t.y.to_bits(), pb.t.y.to_bits(), "{tag}: pose {i} t.y");
+        assert_eq!(pa.t.z.to_bits(), pb.t.z.to_bits(), "{tag}: pose {i} t.z");
+    }
+}
+
+fn assert_stores_bit_identical(a: &GaussianStore, b: &GaussianStore, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: store size differs");
+    for i in 0..a.len() {
+        assert_eq!(a.means[i].x.to_bits(), b.means[i].x.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.means[i].y.to_bits(), b.means[i].y.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.means[i].z.to_bits(), b.means[i].z.to_bits(), "{tag}: mean {i}");
+        assert_eq!(
+            a.opacity_logits[i].to_bits(),
+            b.opacity_logits[i].to_bits(),
+            "{tag}: opacity {i}"
+        );
+        assert_eq!(a.colors[i].x.to_bits(), b.colors[i].x.to_bits(), "{tag}: color {i}");
+    }
+}
+
+#[test]
+fn one_session_server_is_bit_identical_to_slam_system_run() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 1, 64, 48, 6);
+    let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.4);
+
+    // legacy batch path
+    let mut sys = SlamSystem::try_new(cfg, data.intr).unwrap();
+    for f in &data.frames {
+        sys.process_frame(f).unwrap();
+    }
+
+    // one-session server (session id 0 keeps the base seed; the budget
+    // share of one session equals the system's auto pool)
+    let spec = SessionSpec {
+        name: "solo".into(),
+        cfg,
+        intr: data.intr,
+        threaded_mapping: false,
+    };
+    let server = SlamServer::start(
+        vec![spec],
+        &ServerConfig { workers: 1, budget: Parallelism::auto() },
+    )
+    .unwrap();
+    for f in &data.frames {
+        server.submit(0, f.clone()).unwrap();
+    }
+    let out = server.finish().unwrap().remove(0);
+
+    assert_poses_bit_identical(&sys.est_poses, &out.est_poses, "server-vs-system");
+    assert_stores_bit_identical(&sys.store, &out.store, "server-vs-system");
+    assert_eq!(sys.track_counters, out.track_counters);
+    assert_eq!(sys.map_counters, out.map_counters);
+    assert_eq!(sys.per_frame_track, out.per_frame_track);
+    assert_eq!(sys.per_map, out.per_map);
+    assert_eq!(sys.track_stats.len(), out.track_stats.len());
+    for (a, b) in sys.track_stats.iter().zip(&out.track_stats) {
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+        assert_eq!(a.iterations, b.iterations);
+    }
+}
+
+/// A heterogeneous 3-session fleet: one scenario preset per session,
+/// different algorithms and flavors.
+fn fleet() -> (Vec<SessionSpec>, Vec<SyntheticDataset>) {
+    let cells = [
+        (Flavor::Replica, Scenario::Orbit, Algorithm::SplaTam),
+        (Flavor::Replica, Scenario::Corridor, Algorithm::MonoGs),
+        (Flavor::Tum, Scenario::FastRotation, Algorithm::FlashSlam),
+    ];
+    let mut specs = Vec::new();
+    let mut datasets = Vec::new();
+    for (i, (flavor, scenario, algo)) in cells.into_iter().enumerate() {
+        let data = SyntheticDataset::generate_scenario(flavor, scenario, i, 48, 32, 6);
+        specs.push(SessionSpec {
+            name: scenario.name().to_string(),
+            cfg: SlamConfig::splatonic(algo).scaled(0.3),
+            intr: data.intr,
+            threaded_mapping: false,
+        });
+        datasets.push(data);
+    }
+    (specs, datasets)
+}
+
+enum Interleave {
+    /// Frame 0 of every session, then frame 1 of every session, …
+    RoundRobin,
+    /// All frames of session 0, then all of session 1, …
+    Blocks,
+}
+
+fn run_fleet(workers: usize, order: Interleave) -> Vec<SessionOutcome> {
+    let (specs, datasets) = fleet();
+    let server = SlamServer::start(
+        specs,
+        &ServerConfig { workers, budget: Parallelism::auto() },
+    )
+    .unwrap();
+    match order {
+        Interleave::RoundRobin => {
+            let longest = datasets.iter().map(|d| d.len()).max().unwrap();
+            for f in 0..longest {
+                for (sid, data) in datasets.iter().enumerate() {
+                    if f < data.len() {
+                        server.submit(sid, data.frames[f].clone()).unwrap();
+                    }
+                }
+            }
+        }
+        Interleave::Blocks => {
+            for (sid, data) in datasets.iter().enumerate() {
+                for f in &data.frames {
+                    server.submit(sid, f.clone()).unwrap();
+                }
+            }
+        }
+    }
+    server.finish().unwrap()
+}
+
+#[test]
+fn multi_session_fleet_invariant_to_worker_count_and_interleave() {
+    // reference: 1 worker (fully serialized), round-robin submission
+    let reference = run_fleet(1, Interleave::RoundRobin);
+    assert_eq!(reference.len(), 3);
+    for out in &reference {
+        assert_eq!(out.est_poses.len(), 6, "session `{}`", out.name);
+        assert!(!out.store.is_empty(), "session `{}` built no map", out.name);
+    }
+    // heterogeneous sessions really diverge from each other
+    assert_ne!(reference[0].est_poses[1], reference[1].est_poses[1]);
+    assert_ne!(reference[0].est_poses[1], reference[2].est_poses[1]);
+
+    // 4 workers (clamps to 3 — full concurrency) and a block interleave
+    for (candidate, tag) in [
+        (run_fleet(4, Interleave::RoundRobin), "workers=4/round-robin"),
+        (run_fleet(2, Interleave::Blocks), "workers=2/blocks"),
+    ] {
+        for (a, b) in reference.iter().zip(&candidate) {
+            assert_eq!(a.name, b.name, "{tag}");
+            assert_poses_bit_identical(&a.est_poses, &b.est_poses, tag);
+            assert_stores_bit_identical(&a.store, &b.store, tag);
+            assert_eq!(a.track_counters, b.track_counters, "{tag}: session `{}`", a.name);
+            assert_eq!(a.map_counters, b.map_counters, "{tag}: session `{}`", a.name);
+            assert_eq!(a.per_frame_track, b.per_frame_track, "{tag}: session `{}`", a.name);
+            assert_eq!(a.per_map, b.per_map, "{tag}: session `{}`", a.name);
+        }
     }
 }

@@ -7,7 +7,7 @@ use splatonic::gaussian::{Adam, AdamConfig, GaussianStore};
 use splatonic::math::{Pcg32, Se3, Vec3};
 use splatonic::render::pixel_pipeline::{render_sparse, SampledPixels};
 use splatonic::render::tile_pipeline::render_dense;
-use splatonic::render::{create_backend, RenderConfig, StageCounters};
+use splatonic::render::{create_backend, Parallelism, RenderConfig, StageCounters};
 use splatonic::slam::loss::{dense_loss, sparse_loss, LossCfg};
 use splatonic::slam::mapping::{map_update, MappingConfig};
 use splatonic::slam::tracking::{track_frame, TrackingConfig};
@@ -70,7 +70,7 @@ fn tracking_converges_to_millimeters() {
     let gt = frame.gt_w2c;
     let init = Se3::new(gt.q, gt.t + Vec3::new(0.02, -0.01, 0.015));
     let cfg = TrackingConfig { iters: 30, tile: 8, ..Default::default() };
-    let mut backend = create_backend(cfg.backend).unwrap();
+    let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
     let mut rng = Pcg32::new(3);
     let mut c = StageCounters::new();
     let (p, stats) = track_frame(
@@ -101,7 +101,7 @@ fn mapping_is_stable_at_convergence() {
     let mut c = StageCounters::new();
     // bootstrap
     let cfg = MappingConfig { iters: 5, ..Default::default() };
-    let mut backend = create_backend(cfg.backend).unwrap();
+    let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
     let _ = map_update(
         backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c,
     )
@@ -137,7 +137,7 @@ fn mapping_bootstrap_psnr() {
     let mut rng = Pcg32::new(2);
     let mut c = StageCounters::new();
     let cfg = MappingConfig { iters: 15, ..Default::default() };
-    let mut backend = create_backend(cfg.backend).unwrap();
+    let mut backend = create_backend(cfg.backend, Parallelism::auto()).unwrap();
     let _ = map_update(
         backend.as_mut(), &mut store, &mut adam, &cam, frame, &cfg, &rcfg, &mut rng, &mut c,
     )

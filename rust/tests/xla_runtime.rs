@@ -17,7 +17,7 @@ use splatonic::dataset::{Flavor, SyntheticDataset};
 use splatonic::math::{Pcg32, Se3, Vec3};
 use splatonic::render::backward_geom::flatten_params;
 use splatonic::render::pixel_pipeline::{backward_sparse, render_sparse};
-use splatonic::render::{RenderConfig, StageCounters};
+use splatonic::render::{Parallelism, RenderConfig, StageCounters};
 use splatonic::runtime::{store_index_lists, XlaRuntime};
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::slam::loss::{sparse_loss, LossCfg};
@@ -187,7 +187,7 @@ fn xla_backed_tracking_converges() {
         backend: BackendKind::Xla,
         ..Default::default()
     };
-    let mut backend = splatonic::render::create_backend(BackendKind::Xla)
+    let mut backend = splatonic::render::create_backend(BackendKind::Xla, Parallelism::auto())
         .expect("artifacts missing — run `make artifacts` first");
     let mut rng = Pcg32::new(19);
     let mut c = StageCounters::new();
