@@ -28,7 +28,11 @@
 //! run (ATE/PSNR/simulated tracking costs) plus a `SlamServer`
 //! throughput sweep over 1/2/4 concurrent sessions × worker budgets,
 //! written to `BENCH_e2e.json` so accuracy and fleet frames/sec join
-//! the cross-PR perf trajectory alongside the kernel numbers.
+//! the cross-PR perf trajectory alongside the kernel numbers. A
+//! shared-map comparison runs the same co-scene fleet twice — once on
+//! one scene-keyed shard, once on private maps — and records the
+//! map-memory ratio, covisibility skip rate, and mapping iterations
+//! saved (`shared_map` in `BENCH_e2e.json`).
 
 use splatonic::bench::time_it;
 use splatonic::camera::{Camera, Intrinsics};
@@ -431,6 +435,57 @@ fn main() {
         }
     }
 
+    // -- shared-map: the same co-scene fleet on one shard vs private
+    //    maps (the map-memory and mapping-work deltas the shared-map
+    //    subsystem exists to deliver) ---------------------------------
+    let co_job = |i: usize, scene: &str| FleetJob {
+        name: format!("viewer-{i}"),
+        run: RunConfig {
+            width: 64,
+            height: 48,
+            frames: 6,
+            budget: 0.3,
+            scene: scene.to_string(),
+            ..Default::default()
+        },
+    };
+    let shared_jobs: Vec<FleetJob> = (0..3).map(|i| co_job(i, "lobby")).collect();
+    let private_jobs: Vec<FleetJob> = (0..3).map(|i| co_job(i, "")).collect();
+    let scfg = ServerConfig { workers: 2, budget: Parallelism::auto() };
+    let shared_report = serve(&shared_jobs, &scfg).expect("shared-map fleet failed");
+    let private_report = serve(&private_jobs, &scfg).expect("private-map fleet failed");
+    // shard bytes include the Adam moments; charge private maps the
+    // same way (params + 2 moment arrays, f32 each)
+    let shared_bytes: u64 = shared_report.scenes.iter().map(|s| s.map_bytes as u64).sum();
+    let private_bytes: u64 = private_report
+        .sessions
+        .iter()
+        .map(|s| (s.n_gaussians * 14 * 4 * 3) as u64)
+        .sum();
+    let shared_invocations: u64 =
+        shared_report.sessions.iter().map(|s| s.mapping_invocations as u64).sum();
+    let private_invocations: u64 =
+        private_report.sessions.iter().map(|s| s.mapping_invocations as u64).sum();
+    let covis_skips: u64 = shared_report.scenes.iter().map(|s| s.covis_skips).sum();
+    let iters_saved: u64 =
+        shared_report.scenes.iter().map(|s| s.mapping_iters_saved).sum();
+    let skip_rate = {
+        let slots = shared_invocations + covis_skips;
+        if slots == 0 { 0.0 } else { covis_skips as f64 / slots as f64 }
+    };
+    println!("\nshared-map co-scene fleet (3 sessions, scene `lobby`) vs private maps");
+    println!(
+        "  map memory: {:.2} MiB shared vs {:.2} MiB private ({:.2}x)",
+        shared_bytes as f64 / (1024.0 * 1024.0),
+        private_bytes as f64 / (1024.0 * 1024.0),
+        private_bytes as f64 / (shared_bytes as f64).max(1.0),
+    );
+    println!(
+        "  mapping: {shared_invocations} invocations shared vs {private_invocations} private \
+         | {covis_skips} covis skips ({:.0}%) | {iters_saved} iters saved",
+        skip_rate * 100.0,
+    );
+
     let mut e2e = String::new();
     e2e.push_str("{\n");
     e2e.push_str("  \"bench\": \"e2e\",\n");
@@ -445,7 +500,17 @@ fn main() {
             if i + 1 < sweep.len() { "," } else { "" },
         ));
     }
-    e2e.push_str("  ]\n");
+    e2e.push_str("  ],\n");
+    e2e.push_str(&format!(
+        "  \"shared_map\": {{\"sessions\": 3, \"workers\": {}, \
+         \"shared_map_bytes\": {shared_bytes}, \"private_map_bytes\": {private_bytes}, \
+         \"memory_ratio\": {:.3}, \"shared_mapping_invocations\": {shared_invocations}, \
+         \"private_mapping_invocations\": {private_invocations}, \
+         \"covis_skips\": {covis_skips}, \"skip_rate\": {skip_rate:.4}, \
+         \"mapping_iters_saved\": {iters_saved}}}\n",
+        shared_report.workers,
+        private_bytes as f64 / (shared_bytes as f64).max(1.0),
+    ));
     e2e.push_str("}\n");
     match std::fs::write("BENCH_e2e.json", &e2e) {
         Ok(()) => println!("wrote BENCH_e2e.json ({} sweep cells)", sweep.len()),

@@ -64,7 +64,7 @@ pub fn run_variant_sized(
         // CPU backends are infallible; benches never select XLA
         sys.process_frame(f).expect("bench SLAM run failed");
     }
-    let stats = sys.evaluate(&data);
+    let stats = sys.evaluate(&data).expect("inline session evaluates without finish");
     CounterRun {
         track: sys.track_counters,
         map: sys.map_counters,

@@ -57,6 +57,11 @@ pub struct RunConfig {
     pub seed: u64,
     /// Run mapping on a worker thread (Fig. 2's concurrent schedule).
     pub threaded_mapping: bool,
+    /// Shared-map scene key (`scene = "lobby"`): serving fleets route all
+    /// sessions with the same key onto one covisibility-gated map shard.
+    /// Empty (the default) keeps the session's map private. Incompatible
+    /// with `threaded_mapping` (shard merges are epoch-ordered).
+    pub scene: String,
 }
 
 impl Default for RunConfig {
@@ -77,6 +82,7 @@ impl Default for RunConfig {
             budget: 1.0,
             seed: 7,
             threaded_mapping: false,
+            scene: String::new(),
         }
     }
 }
@@ -176,6 +182,7 @@ impl RunConfig {
             "budget" => self.budget = v.parse()?,
             "seed" => self.seed = v.parse()?,
             "threaded_mapping" => self.threaded_mapping = v.parse()?,
+            "scene" => self.scene = v.to_string(),
             _ => return Err(anyhow!("unknown config key: {key}")),
         }
         Ok(())
@@ -274,6 +281,16 @@ mod tests {
         cfg.apply_args(&["--scenario=fast-rotation".into()]).unwrap();
         assert_eq!(cfg.scenario, Scenario::FastRotation);
         assert!(RunConfig::from_toml("[run]\nscenario = \"free-fall\"\n").is_err());
+    }
+
+    #[test]
+    fn scene_key_from_toml_and_cli() {
+        let cfg = RunConfig::from_toml("[run]\nscene = \"lobby\"\n").unwrap();
+        assert_eq!(cfg.scene, "lobby");
+        let mut cfg = RunConfig::default();
+        assert!(cfg.scene.is_empty());
+        cfg.apply_args(&["--scene=workshop".into()]).unwrap();
+        assert_eq!(cfg.scene, "workshop");
     }
 
     #[test]

@@ -51,6 +51,13 @@ impl Adam {
         self.t
     }
 
+    /// Optimizer-state memory footprint in bytes (first + second
+    /// moments) — reported per shared map shard alongside
+    /// `GaussianStore::param_bytes`.
+    pub fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
     /// Grow state for newly inserted parameters (densification).
     pub fn grow(&mut self, additional: usize) {
         self.m.extend(std::iter::repeat(0.0).take(additional));
@@ -129,6 +136,14 @@ mod tests {
         adam.step(&mut p, &[f32::NAN, 1.0]);
         assert_eq!(p[0], 1.0); // untouched
         assert!(p[1] < 1.0);
+    }
+
+    #[test]
+    fn state_bytes_tracks_both_moments() {
+        let mut adam = Adam::new(10, AdamConfig::default());
+        assert_eq!(adam.state_bytes(), 2 * 10 * 4);
+        adam.grow(4);
+        assert_eq!(adam.state_bytes(), 2 * 14 * 4);
     }
 
     #[test]

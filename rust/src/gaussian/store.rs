@@ -72,15 +72,22 @@ impl GaussianStore {
         (0..self.len()).map(move |i| self.get(i))
     }
 
-    /// Remove Gaussians whose opacity fell below `min_opacity` or whose
-    /// largest scale exceeds `max_scale` (mapping's prune step). Returns
-    /// the number removed.
+    /// The prune keep test for Gaussian `i`: opacity at or above the
+    /// floor and largest scale at or below the ceiling. The **single**
+    /// definition of the predicate — [`Self::prune`] and the parallel
+    /// `slam::mapping::prune_keep_mask` both evaluate it, so the
+    /// sequential and chunked paths (and every map shard built on them)
+    /// cannot drift apart.
+    #[inline]
+    pub fn prune_keep(&self, i: usize, min_opacity: f32, max_scale: f32) -> bool {
+        self.opacity(i) >= min_opacity && self.get(i).max_scale() <= max_scale
+    }
+
+    /// Remove Gaussians failing [`Self::prune_keep`] (mapping's prune
+    /// step). Returns the number removed.
     pub fn prune(&mut self, min_opacity: f32, max_scale: f32) -> usize {
-        let keep: Vec<bool> = (0..self.len())
-            .map(|i| {
-                self.opacity(i) >= min_opacity && self.get(i).max_scale() <= max_scale
-            })
-            .collect();
+        let keep: Vec<bool> =
+            (0..self.len()).map(|i| self.prune_keep(i, min_opacity, max_scale)).collect();
         self.prune_mask(&keep)
     }
 
@@ -183,6 +190,18 @@ mod tests {
         let removed = s.prune(0.0, 1.0);
         assert_eq!(removed, 1);
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn prune_and_mask_share_one_predicate() {
+        let mut a = sample_store(6);
+        a.opacity_logits[2] = -10.0;
+        a.log_scales[4] = Vec3::splat(10.0);
+        let mut b = a.clone();
+        let keep: Vec<bool> = (0..b.len()).map(|i| b.prune_keep(i, 0.05, 1.0)).collect();
+        assert_eq!(a.prune(0.05, 1.0), b.prune_mask(&keep));
+        assert_eq!(a.means, b.means);
+        assert_eq!(a.opacity_logits, b.opacity_logits);
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod gaussian;
+pub mod map_share;
 pub mod math;
 pub mod render;
 pub mod sampling;

@@ -1,0 +1,799 @@
+//! Scene-keyed shared maps: one [`MapShard`] per scene, mapped into by
+//! every session that tracks in that scene — map state and mapping work
+//! scale with *scenes*, not sessions (the fleet-level analogue of AGS's
+//! covisibility-gated keyframe skipping).
+//!
+//! # Architecture
+//!
+//! A [`SceneRegistry`] keys shards by scene name. Attaching a session
+//! ([`SceneRegistry::attach`]) assigns it a **rank** — its registration
+//! order within the shard — and hands back a [`ShardHandle`]. The shard
+//! owns what a private session's mapping half used to own: the
+//! [`GaussianStore`], the Adam moments, a version counter, and the
+//! keyframe set contributed so far. Tracking still reads an immutable
+//! per-session snapshot (the same version-gated clone-per-publish
+//! mechanism as the threaded-mapping worker), so attach is just a
+//! snapshot subscription.
+//!
+//! # Deterministic merge order
+//!
+//! Mapping contributions are serialized into globally ordered **slots**
+//! `(epoch, rank)` where `epoch` is the keyframe ordinal
+//! (`frame_index / mapping.every`). [`MapShard::wait_turn`] blocks a
+//! session until every lower-rank participant has finished the same
+//! epoch and every higher-rank participant has finished the previous
+//! one, so the shard's store mutations happen in one fixed order — a
+//! pure function of `(scene, ranks, streams)`, invariant to session
+//! join order, worker count, and thread interleave. Within a slot the
+//! contribution runs under the shard lock through the same
+//! chunk-order-deterministic `map_update` path sessions use privately,
+//! so shard contents are bit-identical across runs. Ranks are assigned
+//! on the registration thread (the server registers in session-id
+//! order before workers spawn), which is what makes join order
+//! irrelevant.
+//!
+//! The slot protocol assumes co-scene streams advance roughly in
+//! lockstep (the server's round-robin frame submission provides this);
+//! a session stalled more than [`TURN_TIMEOUT`] behind its peers turns
+//! a would-be deadlock into an error. A dropped or finished session
+//! **detaches** ([`ShardHandle::detach`]), removing its rank from the
+//! turn requirements so peers are not stranded.
+//!
+//! # Covisibility gating
+//!
+//! Before contributing a keyframe, a session scores it against the
+//! shard's *peer* keyframes ([`covisibility_score`]): strided frame
+//! pixels are back-projected through the tracked pose and tested for
+//! coverage by any peer keyframe (projected in-frustum, in-bounds, and
+//! depth-consistent within a relative tolerance — a sampled-pixel
+//! projected-footprint overlap, à la AGS). When the overlap reaches
+//! [`CovisConfig::min_overlap`] the session **skips** the invocation
+//! entirely and rides its peers' keyframes, saving `S_m` optimization
+//! iterations plus the densify/prune passes. Own-rank keyframes never
+//! count toward the score, so a single-session shard never skips and
+//! stays bit-identical to a private inline-mapping run.
+
+use crate::camera::{Camera, Intrinsics};
+use crate::dataset::Frame;
+use crate::gaussian::{Adam, AdamConfig, GaussianStore};
+use crate::math::{Se3, Vec2};
+use anyhow::{bail, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on how long a session waits for its `(epoch, rank)` turn
+/// slot. Co-scene sessions must be driven roughly frame-synchronously
+/// (the server's round-robin submission); a peer stalled longer than
+/// this — unequal stream lengths, a caller feeding one session far
+/// ahead of its co-scene peers — surfaces as an error instead of a
+/// deadlock.
+pub const TURN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Covisibility scoring parameters (see [`covisibility_score`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CovisConfig {
+    /// Test every `sample_stride`-th pixel in x and y. Keep it a
+    /// multiple of `footprint_stride` so an identical-pose revisit
+    /// scores exactly 1.0.
+    pub sample_stride: u32,
+    /// Downsample factor of the depth footprint stored per shard
+    /// keyframe (memory/precision trade-off).
+    pub footprint_stride: u32,
+    /// A back-projected point is covered by a keyframe when its depth
+    /// in that keyframe agrees with the stored footprint within this
+    /// relative tolerance (occlusion test).
+    pub depth_rel_tol: f32,
+    /// Skip mapping when at least this fraction of valid sampled
+    /// pixels is covered by peer keyframes.
+    pub min_overlap: f32,
+    /// Near-plane for the projection test.
+    pub near: f32,
+}
+
+impl Default for CovisConfig {
+    fn default() -> Self {
+        CovisConfig {
+            sample_stride: 8,
+            footprint_stride: 4,
+            depth_rel_tol: 0.1,
+            min_overlap: 0.8,
+            near: 0.05,
+        }
+    }
+}
+
+/// A keyframe contributed to a shard: the camera it was mapped from
+/// plus a downsampled depth footprint for the covisibility test.
+#[derive(Clone, Debug)]
+pub struct ShardKeyframe {
+    /// Rank of the contributing session.
+    pub rank: usize,
+    /// Keyframe ordinal within the contributing stream.
+    pub epoch: u64,
+    pub cam: Camera,
+    stride: u32,
+    grid_w: u32,
+    grid_h: u32,
+    /// Row-major `grid_h x grid_w` depths sampled at
+    /// `(gx * stride, gy * stride)`; `<= 0` marks invalid depth.
+    depth: Vec<f32>,
+}
+
+impl ShardKeyframe {
+    pub fn capture(
+        rank: usize,
+        epoch: u64,
+        frame: &Frame,
+        w2c: Se3,
+        intr: Intrinsics,
+        stride: u32,
+    ) -> Self {
+        let stride = stride.max(1);
+        let grid_w = intr.width.div_ceil(stride);
+        let grid_h = intr.height.div_ceil(stride);
+        let mut depth = Vec::with_capacity((grid_w * grid_h) as usize);
+        for gy in 0..grid_h {
+            let y = (gy * stride).min(intr.height - 1);
+            for gx in 0..grid_w {
+                let x = (gx * stride).min(intr.width - 1);
+                depth.push(frame.depth.get(x, y));
+            }
+        }
+        ShardKeyframe { rank, epoch, cam: Camera::new(intr, w2c), stride, grid_w, grid_h, depth }
+    }
+
+    /// The stored depth nearest to pixel `px`; `None` when the footprint
+    /// holds no valid depth there.
+    pub fn depth_at(&self, px: Vec2) -> Option<f32> {
+        let gx = (px.x / self.stride as f32).round().clamp(0.0, self.grid_w as f32 - 1.0) as u32;
+        let gy = (px.y / self.stride as f32).round().clamp(0.0, self.grid_h as f32 - 1.0) as u32;
+        let d = self.depth[(gy * self.grid_w + gx) as usize];
+        (d > 0.0).then_some(d)
+    }
+}
+
+/// Fraction of `frame`'s valid sampled pixels (back-projected through
+/// `w2c`) that land inside some keyframe of a rank other than
+/// `exclude_rank` with consistent depth. Pure and lock-free — the shard
+/// calls it under its state lock.
+pub fn covisibility_score(
+    frame: &Frame,
+    w2c: Se3,
+    intr: Intrinsics,
+    keyframes: &[ShardKeyframe],
+    exclude_rank: usize,
+    cfg: &CovisConfig,
+) -> f32 {
+    if !keyframes.iter().any(|k| k.rank != exclude_rank) {
+        return 0.0;
+    }
+    let c2w = w2c.inverse();
+    let stride = cfg.sample_stride.max(1);
+    let (mut valid, mut covered) = (0u32, 0u32);
+    let mut y = 0;
+    while y < intr.height {
+        let mut x = 0;
+        while x < intr.width {
+            let d = frame.depth.get(x, y);
+            if d > 0.0 {
+                valid += 1;
+                let p_cam = intr.backproject(Vec2::new(x as f32, y as f32), d);
+                let p_world = c2w.transform(p_cam);
+                'peers: for kf in keyframes {
+                    if kf.rank == exclude_rank {
+                        continue;
+                    }
+                    if let Some((px, z)) = kf.cam.project_world(p_world, cfg.near) {
+                        if kf.cam.intr.contains(px, 0.0) {
+                            if let Some(dk) = kf.depth_at(px) {
+                                if (z - dk).abs() <= cfg.depth_rel_tol * dk {
+                                    covered += 1;
+                                    break 'peers;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            x += stride;
+        }
+        y += stride;
+    }
+    if valid == 0 {
+        0.0
+    } else {
+        covered as f32 / valid as f32
+    }
+}
+
+/// One attached session as the turn protocol sees it.
+#[derive(Clone, Debug)]
+struct Participant {
+    name: String,
+    /// The next epoch this participant will contribute or skip.
+    next_epoch: u64,
+    detached: bool,
+}
+
+/// Everything behind the shard's publish lock.
+struct ShardState {
+    store: GaussianStore,
+    adam: Adam,
+    /// Completed contribution count — gates the per-session snapshot
+    /// clone exactly like the mapping worker's published version.
+    version: u64,
+    keyframes: Vec<ShardKeyframe>,
+    participants: Vec<Participant>,
+    contributions: u64,
+    skips: u64,
+    mapping_iters_saved: u64,
+    /// A failed contribution may leave the store half-mutated; the
+    /// first error poisons the shard so peers fail fast instead of
+    /// merging into corrupt state.
+    failed: Option<String>,
+}
+
+/// `true` when `(epoch, rank)` is the globally next un-applied slot:
+/// every lower rank has finished this epoch, every higher rank the
+/// previous one (detached ranks drop out of the requirement).
+fn is_turn(state: &ShardState, rank: usize, epoch: u64) -> bool {
+    state.participants.iter().enumerate().all(|(r, p)| {
+        r == rank
+            || p.detached
+            || if r < rank { p.next_epoch > epoch } else { p.next_epoch >= epoch }
+    })
+}
+
+/// The shared map of one scene (see the module docs). Thread-safe;
+/// sessions hold it through [`ShardHandle`]s.
+pub struct MapShard {
+    scene: String,
+    covis: CovisConfig,
+    state: Mutex<ShardState>,
+    /// Signalled on every slot advance (contribute / skip / detach).
+    turn: Condvar,
+}
+
+impl MapShard {
+    pub fn new(scene: &str, covis: CovisConfig) -> Self {
+        MapShard {
+            scene: scene.to_string(),
+            covis,
+            state: Mutex::new(ShardState {
+                store: GaussianStore::new(),
+                adam: Adam::new(0, AdamConfig::default()),
+                version: 0,
+                keyframes: Vec::new(),
+                participants: Vec::new(),
+                contributions: 0,
+                skips: 0,
+                mapping_iters_saved: 0,
+                failed: None,
+            }),
+            turn: Condvar::new(),
+        }
+    }
+
+    pub fn scene(&self) -> &str {
+        &self.scene
+    }
+
+    /// Register a participant; its rank is its registration order, so
+    /// registering all sessions from one thread in a fixed order (the
+    /// server uses session-id order) fixes the merge order regardless
+    /// of which worker threads the sessions later live on.
+    fn register(&self, name: &str) -> usize {
+        let mut state = self.state.lock().unwrap();
+        state.participants.push(Participant {
+            name: name.to_string(),
+            next_epoch: 0,
+            detached: false,
+        });
+        state.participants.len() - 1
+    }
+
+    fn check_live(&self, state: &ShardState, rank: usize, epoch: u64) -> Result<()> {
+        if let Some(msg) = &state.failed {
+            bail!("map shard `{}` failed: {msg}", self.scene);
+        }
+        let p = &state.participants[rank];
+        if p.detached {
+            bail!("session `{}` already detached from map shard `{}`", p.name, self.scene);
+        }
+        if p.next_epoch != epoch {
+            bail!(
+                "session `{}` out of sync with map shard `{}`: at epoch {epoch}, shard expects {}",
+                p.name,
+                self.scene,
+                p.next_epoch
+            );
+        }
+        Ok(())
+    }
+
+    /// Block until `(epoch, rank)` is the next slot (see [`is_turn`]).
+    /// Errs when the shard is poisoned, the epoch is out of sequence,
+    /// or the slot does not open within [`TURN_TIMEOUT`].
+    fn wait_turn(&self, rank: usize, epoch: u64) -> Result<()> {
+        let deadline = Instant::now() + TURN_TIMEOUT;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            self.check_live(&state, rank, epoch)?;
+            if is_turn(&state, rank, epoch) {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "session `{}` timed out waiting for its epoch-{epoch} turn on map shard \
+                     `{}` — co-scene sessions must be fed frames roughly in lockstep \
+                     (round-robin submission)",
+                    state.participants[rank].name,
+                    self.scene
+                );
+            }
+            let (guard, _) = self.turn.wait_timeout(state, deadline - now).unwrap();
+            state = guard;
+        }
+    }
+
+    /// The shard store and version, cloned only when a contribution
+    /// newer than `seen` was published (same contract as the mapping
+    /// worker's snapshot).
+    fn snapshot_newer_than(&self, seen: u64) -> Result<Option<(GaussianStore, u64)>> {
+        let state = self.state.lock().unwrap();
+        if let Some(msg) = &state.failed {
+            bail!("map shard `{}` failed: {msg}", self.scene);
+        }
+        if state.version <= seen {
+            return Ok(None);
+        }
+        Ok(Some((state.store.clone(), state.version)))
+    }
+
+    /// Covisibility of `frame` against the shard's *peer* keyframes
+    /// (own-rank keyframes never count — see the module docs). Call
+    /// with the slot held ([`Self::wait_turn`]) so the keyframe set is
+    /// the slot-ordered one.
+    fn covis_score(&self, rank: usize, frame: &Frame, w2c: Se3, intr: Intrinsics) -> Result<f32> {
+        let state = self.state.lock().unwrap();
+        if let Some(msg) = &state.failed {
+            bail!("map shard `{}` failed: {msg}", self.scene);
+        }
+        Ok(covisibility_score(frame, w2c, intr, &state.keyframes, rank, &self.covis))
+    }
+
+    /// Apply slot `(epoch, rank)`: run `f` on the shard's store + Adam
+    /// moments under the publish lock, record the keyframe, bump the
+    /// version, and return `f`'s output plus a post-slot snapshot. The
+    /// caller must hold the slot (a prior [`Self::wait_turn`] — no
+    /// peer can take a slot in between, so the order stays fixed). On
+    /// error the shard is poisoned (the store may be half-mutated).
+    fn contribute<T>(
+        &self,
+        rank: usize,
+        epoch: u64,
+        frame: &Frame,
+        w2c: Se3,
+        intr: Intrinsics,
+        f: impl FnOnce(&mut GaussianStore, &mut Adam) -> Result<T>,
+    ) -> Result<(T, GaussianStore, u64)> {
+        let mut state = self.state.lock().unwrap();
+        self.check_live(&state, rank, epoch)?;
+        debug_assert!(is_turn(&state, rank, epoch), "contribute without holding the slot");
+        let st = &mut *state;
+        match f(&mut st.store, &mut st.adam) {
+            Ok(out) => {
+                st.keyframes.push(ShardKeyframe::capture(
+                    rank,
+                    epoch,
+                    frame,
+                    w2c,
+                    intr,
+                    self.covis.footprint_stride,
+                ));
+                st.version += 1;
+                st.contributions += 1;
+                st.participants[rank].next_epoch = epoch + 1;
+                let snapshot = st.store.clone();
+                let version = st.version;
+                drop(state);
+                self.turn.notify_all();
+                Ok((out, snapshot, version))
+            }
+            Err(e) => {
+                st.failed = Some(format!("{e}"));
+                drop(state);
+                self.turn.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Consume slot `(epoch, rank)` without mapping — the covisibility
+    /// gate decided peers already cover this keyframe. `iters_saved`
+    /// credits the skipped `S_m` optimization iterations.
+    fn skip(&self, rank: usize, epoch: u64, iters_saved: u64) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        self.check_live(&state, rank, epoch)?;
+        debug_assert!(is_turn(&state, rank, epoch), "skip without holding the slot");
+        state.skips += 1;
+        state.mapping_iters_saved += iters_saved;
+        state.participants[rank].next_epoch = epoch + 1;
+        drop(state);
+        self.turn.notify_all();
+        Ok(())
+    }
+
+    /// Remove `rank` from the turn requirements (stream ended or the
+    /// session was dropped) so peers are not stranded. Idempotent.
+    fn detach(&self, rank: usize) {
+        let mut state = self.state.lock().unwrap();
+        if !state.participants[rank].detached {
+            state.participants[rank].detached = true;
+            drop(state);
+            self.turn.notify_all();
+        }
+    }
+
+    pub fn stats(&self) -> SceneStats {
+        let state = self.state.lock().unwrap();
+        SceneStats {
+            scene: self.scene.clone(),
+            sessions: state.participants.len(),
+            map_gaussians: state.store.len(),
+            map_bytes: state.store.param_bytes() + state.adam.state_bytes(),
+            keyframes: state.keyframes.len(),
+            contributions: state.contributions,
+            covis_skips: state.skips,
+            mapping_iters_saved: state.mapping_iters_saved,
+        }
+    }
+}
+
+/// One session's attachment to a [`MapShard`]. Dropping the handle
+/// detaches the rank so peers never wait on a dead session.
+pub struct ShardHandle {
+    shard: Arc<MapShard>,
+    rank: usize,
+    detached: bool,
+}
+
+impl ShardHandle {
+    pub fn scene(&self) -> &str {
+        self.shard.scene()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The skip threshold of the shard's covisibility gate.
+    pub fn min_overlap(&self) -> f32 {
+        self.shard.covis.min_overlap
+    }
+
+    pub fn wait_turn(&self, epoch: u64) -> Result<()> {
+        self.shard.wait_turn(self.rank, epoch)
+    }
+
+    pub fn snapshot_newer_than(&self, seen: u64) -> Result<Option<(GaussianStore, u64)>> {
+        self.shard.snapshot_newer_than(seen)
+    }
+
+    pub fn covis_score(&self, frame: &Frame, w2c: Se3, intr: Intrinsics) -> Result<f32> {
+        self.shard.covis_score(self.rank, frame, w2c, intr)
+    }
+
+    pub fn contribute<T>(
+        &self,
+        epoch: u64,
+        frame: &Frame,
+        w2c: Se3,
+        intr: Intrinsics,
+        f: impl FnOnce(&mut GaussianStore, &mut Adam) -> Result<T>,
+    ) -> Result<(T, GaussianStore, u64)> {
+        self.shard.contribute(self.rank, epoch, frame, w2c, intr, f)
+    }
+
+    pub fn skip(&self, epoch: u64, iters_saved: u64) -> Result<()> {
+        self.shard.skip(self.rank, epoch, iters_saved)
+    }
+
+    /// Detach this rank from the turn protocol. Idempotent; also runs
+    /// on drop.
+    pub fn detach(&mut self) {
+        if !self.detached {
+            self.detached = true;
+            self.shard.detach(self.rank);
+        }
+    }
+}
+
+impl Drop for ShardHandle {
+    fn drop(&mut self) {
+        self.detach();
+    }
+}
+
+/// Scene-name → [`MapShard`] registry. Clone-able (shards are shared
+/// behind `Arc`s) so the server can keep reporting access while worker
+/// threads own the handles.
+#[derive(Clone, Default)]
+pub struct SceneRegistry {
+    shards: Vec<Arc<MapShard>>,
+}
+
+impl SceneRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attach `session_name` to the shard of `scene` (creating the
+    /// shard on first attach), assigning the next rank. Call from one
+    /// thread in a fixed session order — the rank sequence is the
+    /// merge order.
+    pub fn attach(&mut self, scene: &str, session_name: &str) -> ShardHandle {
+        let shard = match self.shards.iter().find(|s| s.scene() == scene) {
+            Some(s) => Arc::clone(s),
+            None => {
+                let s = Arc::new(MapShard::new(scene, CovisConfig::default()));
+                self.shards.push(Arc::clone(&s));
+                s
+            }
+        };
+        let rank = shard.register(session_name);
+        ShardHandle { shard, rank, detached: false }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Per-scene stats, in scene creation order.
+    pub fn stats(&self) -> Vec<SceneStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+}
+
+/// Reporting snapshot of one shard (surfaces in
+/// [`crate::serve::ServerReport`] and `BENCH_e2e.json`).
+#[derive(Clone, Debug)]
+pub struct SceneStats {
+    pub scene: String,
+    /// Sessions ever attached (including detached ones).
+    pub sessions: usize,
+    pub map_gaussians: usize,
+    /// Store parameters + Adam moments.
+    pub map_bytes: usize,
+    pub keyframes: usize,
+    pub contributions: u64,
+    pub covis_skips: u64,
+    /// `S_m` optimization iterations the covisibility gate avoided.
+    pub mapping_iters_saved: u64,
+}
+
+impl SceneStats {
+    /// Skipped fraction of all keyframe slots.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.contributions + self.covis_skips;
+        if total == 0 {
+            0.0
+        } else {
+            self.covis_skips as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{Flavor, SyntheticDataset};
+    use crate::gaussian::Gaussian;
+    use crate::math::Vec3;
+
+    fn data() -> SyntheticDataset {
+        SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 2)
+    }
+
+    #[test]
+    fn covisibility_of_identical_pose_is_full() {
+        let data = data();
+        let f = &data.frames[0];
+        let cfg = CovisConfig::default();
+        let kf = ShardKeyframe::capture(0, 0, f, f.gt_w2c, data.intr, cfg.footprint_stride);
+        let score = covisibility_score(f, f.gt_w2c, data.intr, &[kf], 1, &cfg);
+        assert!(score > 0.99, "identical pose should be fully covered, got {score}");
+    }
+
+    #[test]
+    fn covisibility_ignores_own_rank_and_empty_set() {
+        let data = data();
+        let f = &data.frames[0];
+        let cfg = CovisConfig::default();
+        assert_eq!(covisibility_score(f, f.gt_w2c, data.intr, &[], 0, &cfg), 0.0);
+        let own = ShardKeyframe::capture(3, 0, f, f.gt_w2c, data.intr, cfg.footprint_stride);
+        assert_eq!(
+            covisibility_score(f, f.gt_w2c, data.intr, &[own], 3, &cfg),
+            0.0,
+            "a session must never skip against its own keyframes"
+        );
+    }
+
+    #[test]
+    fn covisibility_of_disjoint_view_is_low() {
+        let data = data();
+        let f = &data.frames[0];
+        let cfg = CovisConfig::default();
+        // a keyframe translated far away covers (almost) nothing
+        let far = Se3::new(f.gt_w2c.q, f.gt_w2c.t + Vec3::new(100.0, 0.0, 0.0));
+        let kf = ShardKeyframe::capture(0, 0, f, far, data.intr, cfg.footprint_stride);
+        let score = covisibility_score(f, f.gt_w2c, data.intr, &[kf], 1, &cfg);
+        assert!(score < 0.2, "disjoint views should not read as covisible, got {score}");
+    }
+
+    #[test]
+    fn merge_order_is_rank_order_regardless_of_arrival() {
+        // two participants contribute a recognizable Gaussian per epoch;
+        // whatever the thread arrival order, the store must hold them in
+        // (epoch, rank) slot order
+        let data = data();
+        let frame = data.frames[0].clone();
+        let run = |delay_first: bool| {
+            let mut reg = SceneRegistry::new();
+            let h0 = reg.attach("room", "a");
+            let h1 = reg.attach("room", "b");
+            let spawn = |h: ShardHandle, tag: f32, delay: bool| {
+                let frame = frame.clone();
+                let intr = data.intr;
+                std::thread::spawn(move || {
+                    for epoch in 0..3u64 {
+                        if delay {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        h.wait_turn(epoch).unwrap();
+                        h.contribute(epoch, &frame, frame.gt_w2c, intr, |store, adam| {
+                            store.push(Gaussian::isotropic(
+                                Vec3::new(tag, epoch as f32, 0.0),
+                                0.1,
+                                Vec3::splat(0.5),
+                                0.6,
+                            ));
+                            adam.grow(14);
+                            Ok(())
+                        })
+                        .unwrap();
+                    }
+                })
+            };
+            let t0 = spawn(h0, 0.0, delay_first);
+            let t1 = spawn(h1, 1.0, !delay_first);
+            t0.join().unwrap();
+            t1.join().unwrap();
+            let stats = reg.stats();
+            assert_eq!(stats[0].contributions, 6);
+            reg.shards[0].state.lock().unwrap().store.means.clone()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a, b, "slot order must not depend on thread arrival");
+        // slots: (e0,r0) (e0,r1) (e1,r0) (e1,r1) (e2,r0) (e2,r1)
+        let tags: Vec<(f32, f32)> = a.iter().map(|m| (m.y, m.x)).collect();
+        assert_eq!(
+            tags,
+            vec![(0.0, 0.0), (0.0, 1.0), (1.0, 0.0), (1.0, 1.0), (2.0, 0.0), (2.0, 1.0)]
+        );
+    }
+
+    #[test]
+    fn skip_accounts_and_advances_turn() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        h0.wait_turn(0).unwrap();
+        h0.contribute(0, frame, frame.gt_w2c, data.intr, |_, _| Ok(())).unwrap();
+        h1.wait_turn(0).unwrap();
+        h1.skip(0, 20).unwrap();
+        // the skip released (epoch 1, rank 0)
+        h0.wait_turn(1).unwrap();
+        let stats = reg.stats();
+        let s = &stats[0];
+        assert_eq!((s.contributions, s.covis_skips, s.mapping_iters_saved), (1, 1, 20));
+        assert!((s.skip_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(s.keyframes, 1, "skips contribute no keyframe");
+    }
+
+    #[test]
+    fn detach_unblocks_waiting_peer() {
+        let data = data();
+        let frame = data.frames[0].clone();
+        let mut reg = SceneRegistry::new();
+        let mut h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        h0.wait_turn(0).unwrap();
+        h0.contribute(0, &frame, frame.gt_w2c, data.intr, |_, _| Ok(())).unwrap();
+        let waiter = std::thread::spawn(move || {
+            // needs rank 0 to finish epoch 1 or detach
+            h1.wait_turn(0).unwrap();
+            h1.contribute(0, &frame, frame.gt_w2c, data.intr, |_, _| Ok(())).unwrap();
+            h1.wait_turn(1)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        h0.detach();
+        waiter.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn failed_contribution_poisons_shard() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        h0.wait_turn(0).unwrap();
+        let err = h0
+            .contribute(0, frame, frame.gt_w2c, data.intr, |store, _| {
+                store.push(Gaussian::isotropic(Vec3::ZERO, 0.1, Vec3::splat(0.5), 0.6));
+                anyhow::bail!("backend exploded")
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("backend exploded"));
+        let peer = h1.wait_turn(0).unwrap_err();
+        assert!(format!("{peer}").contains("failed"), "{peer}");
+        assert!(h1.snapshot_newer_than(0).is_err());
+    }
+
+    #[test]
+    fn out_of_sequence_epoch_is_rejected() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let h0 = reg.attach("solo", "a");
+        assert!(h0.wait_turn(2).is_err(), "epoch 2 before 0 must not pass");
+        h0.wait_turn(0).unwrap();
+        h0.contribute(0, frame, frame.gt_w2c, data.intr, |_, _| Ok(())).unwrap();
+        assert!(h0.skip(0, 1).is_err(), "epoch 0 already consumed");
+    }
+
+    #[test]
+    fn registry_keys_shards_by_scene() {
+        let mut reg = SceneRegistry::new();
+        let a = reg.attach("lobby", "a");
+        let b = reg.attach("lobby", "b");
+        let c = reg.attach("workshop", "c");
+        assert_eq!(reg.len(), 2);
+        assert_eq!((a.rank(), b.rank(), c.rank()), (0, 1, 0));
+        assert_eq!(a.scene(), "lobby");
+        assert_eq!(c.scene(), "workshop");
+        let stats = reg.stats();
+        assert_eq!(stats[0].sessions, 2);
+        assert_eq!(stats[1].sessions, 1);
+    }
+
+    #[test]
+    fn snapshot_is_version_gated() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let h = reg.attach("room", "a");
+        assert!(h.snapshot_newer_than(0).unwrap().is_none(), "no contribution yet");
+        h.wait_turn(0).unwrap();
+        let (_, snap, v) = h
+            .contribute(0, frame, frame.gt_w2c, data.intr, |store, _| {
+                store.push(Gaussian::isotropic(Vec3::ZERO, 0.1, Vec3::splat(0.5), 0.6));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(snap.len(), 1);
+        assert!(h.snapshot_newer_than(1).unwrap().is_none(), "already seen");
+        let (s2, v2) = h.snapshot_newer_than(0).unwrap().unwrap();
+        assert_eq!((s2.len(), v2), (1, 1));
+    }
+}

@@ -73,6 +73,13 @@ pub struct StageCounters {
     pub bytes_grad_rw: u64,
     /// Image-plane bytes written (color/depth/T).
     pub bytes_image_w: u64,
+
+    // ---- shared-map bookkeeping ----
+    /// Mapping invocations that executed (densify + S_m + prune).
+    pub map_contributions: u64,
+    /// Mapping invocations skipped by the shared-map covisibility gate
+    /// (peers' keyframes already covered the view).
+    pub map_covis_skips: u64,
 }
 
 impl StageCounters {
@@ -109,6 +116,8 @@ impl StageCounters {
             bytes_list_rw,
             bytes_grad_rw,
             bytes_image_w,
+            map_contributions,
+            map_covis_skips,
         );
     }
 

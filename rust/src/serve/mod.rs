@@ -14,6 +14,28 @@
 //! queues, joins the workers, and returns one [`SessionOutcome`] per
 //! session.
 //!
+//! ## Shared maps (scene routing)
+//!
+//! A [`SessionSpec`] may carry a `scene` key. Before any worker
+//! spawns, [`SlamServer::start`] attaches every scened session — in
+//! session-id order, on the calling thread — to the scene's
+//! [`crate::map_share::MapShard`] via a [`SceneRegistry`], so co-scene
+//! sessions (even on different workers) share one map: one
+//! `GaussianStore`, one set of Adam moments, one publish lock +
+//! version counter. The shard serializes mapping contributions into
+//! `(epoch, rank)` slots — rank being the id-order attach position —
+//! and gates each keyframe through a covisibility detector: a session
+//! whose view is already covered by peers' keyframes *skips* its
+//! mapping invocation and rides the shared map (AGS-style redundancy
+//! elimination, lifted to the fleet level). Per-scene map size, skip
+//! rate, and saved mapping iterations surface in
+//! [`ServerReport::scenes`].
+//!
+//! Because slots synchronize co-scene sessions at keyframes, their
+//! streams must advance roughly in lockstep — [`serve`]'s round-robin
+//! submission provides this. A stalled peer surfaces as a
+//! [`crate::map_share::TURN_TIMEOUT`] error, not a deadlock.
+//!
 //! ## Determinism contract
 //!
 //! Per-session results are **bit-identical regardless of worker count
@@ -28,15 +50,22 @@
 //!   ([`Parallelism::share`]), and the renderer's chunk-merge contract
 //!   makes session numerics thread-count invariant anyway.
 //! * **Frame order** — per-session queues preserve submission order, and
-//!   sessions share no mutable state.
+//!   sessions share no mutable state outside the shard slot protocol.
+//! * **Merge order** — shard ranks are assigned in session-id order
+//!   before workers exist, and shard mutations happen in `(epoch,
+//!   rank)` slot order, so shared-map contents are invariant to session
+//!   join order, worker count, and thread interleave; a shard with one
+//!   session is bit-identical to that session's private map.
 //!
 //! Sessions with `threaded_mapping` overlap tracking and mapping inside
 //! the session (timing-dependent by design) and are excluded from the
-//! bit-equality contract.
+//! bit-equality contract — combining `threaded_mapping` with a `scene`
+//! is rejected at [`SlamServer::start`].
 //!
-//! `tests/parallel_determinism.rs` pins both halves: single-session
-//! parity with `SlamSystem::run`, and multi-session invariance across
-//! worker counts and interleaves.
+//! `tests/parallel_determinism.rs` pins all of it: single-session
+//! parity with `SlamSystem::run`, multi-session invariance across
+//! worker counts and interleaves, and shared-shard invariance across
+//! join orders and worker counts.
 //!
 //! [`serve`] is the batch front end: it generates one synthetic dataset
 //! per [`FleetJob`], streams all sequences through a server
@@ -47,6 +76,7 @@
 use crate::config::RunConfig;
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::GaussianStore;
+use crate::map_share::{SceneRegistry, SceneStats, ShardHandle};
 use crate::math::Se3;
 use crate::render::{Parallelism, RenderConfig, StageCounters};
 use crate::slam::algorithms::SlamConfig;
@@ -83,8 +113,12 @@ pub struct SessionSpec {
     pub intr: crate::camera::Intrinsics,
     /// Run this session's mapping on a session-owned worker thread
     /// (Fig. 2's concurrent schedule). Timing-dependent, so excluded
-    /// from the bit-equality contract.
+    /// from the bit-equality contract. Incompatible with `scene`.
     pub threaded_mapping: bool,
+    /// Scene key: sessions sharing a key share one
+    /// [`crate::map_share::MapShard`] (map + Adam moments +
+    /// covisibility-gated mapping). `None` keeps a private map.
+    pub scene: Option<String>,
 }
 
 /// The per-session RNG seed: a pure function of the spec's base seed and
@@ -100,6 +134,8 @@ pub fn session_seed(base: u64, session_id: usize) -> u64 {
 #[derive(Clone, Debug)]
 pub struct SessionOutcome {
     pub name: String,
+    /// Scene key the session's map was shared under, if any.
+    pub scene: Option<String>,
     pub est_poses: Vec<Se3>,
     pub store: GaussianStore,
     pub track_counters: StageCounters,
@@ -108,13 +144,16 @@ pub struct SessionOutcome {
     pub per_map: Vec<StageCounters>,
     pub track_stats: Vec<TrackingStats>,
     pub map_stats: Vec<MappingStats>,
+    /// Keyframes the shared-map covisibility gate skipped.
+    pub covis_skips: u32,
 }
 
 impl SessionOutcome {
     /// Strip the `Send` results out of a finished session.
-    fn from_session(name: String, mut s: SlamSession) -> Self {
+    fn from_session(name: String, scene: Option<String>, mut s: SlamSession) -> Self {
         SessionOutcome {
             name,
+            scene,
             est_poses: std::mem::take(&mut s.est_poses),
             store: std::mem::take(&mut s.store),
             track_counters: s.track_counters,
@@ -123,6 +162,7 @@ impl SessionOutcome {
             per_map: std::mem::take(&mut s.per_map),
             track_stats: std::mem::take(&mut s.track_stats),
             map_stats: std::mem::take(&mut s.map_stats),
+            covis_skips: s.covis_skips,
         }
     }
 
@@ -142,6 +182,7 @@ impl SessionOutcome {
             self.per_map.len(),
             self.track_counters,
             self.map_counters,
+            self.covis_skips,
             data,
             rcfg,
         )
@@ -168,6 +209,10 @@ pub struct SlamServer {
     handles: Vec<std::thread::JoinHandle<WorkerResult>>,
     workers: usize,
     threads_per_session: usize,
+    /// Scene-keyed shared-map shards (empty when no spec names a scene).
+    /// Cloned handles onto the shards — stats stay readable while (and
+    /// after) the worker-owned sessions map into them.
+    registry: SceneRegistry,
 }
 
 impl SlamServer {
@@ -181,6 +226,14 @@ impl SlamServer {
         }
         for spec in &specs {
             spec.cfg.validate().with_context(|| format!("session `{}`", spec.name))?;
+            if spec.threaded_mapping && spec.scene.is_some() {
+                bail!(
+                    "session `{}`: threaded_mapping cannot combine with a shared scene — \
+                     the shard's (epoch, rank) slot protocol is the cross-session mapping \
+                     schedule, and a session-owned mapping thread would race it",
+                    spec.name
+                );
+            }
         }
         let n_sessions = specs.len();
         let workers = if scfg.workers == 0 {
@@ -192,10 +245,17 @@ impl SlamServer {
         // never of the worker count (see the determinism contract)
         let share = scfg.budget.share(n_sessions);
 
-        let mut per_worker: Vec<Vec<(usize, SessionSpec)>> = vec![Vec::new(); workers];
+        // scene shards attach here, in session-id order on this thread,
+        // *before* any worker exists — shard ranks (the merge order) are
+        // therefore a pure function of the spec list, never of worker
+        // scheduling or join order
+        let mut registry = SceneRegistry::new();
+        let mut per_worker: Vec<Vec<(usize, SessionSpec, Option<ShardHandle>)>> =
+            vec![Vec::new(); workers];
         let mut assignment = Vec::with_capacity(n_sessions);
         for (id, spec) in specs.into_iter().enumerate() {
-            per_worker[id % workers].push((id, spec));
+            let handle = spec.scene.as_deref().map(|scene| registry.attach(scene, &spec.name));
+            per_worker[id % workers].push((id, spec, handle));
             assignment.push(id % workers);
         }
 
@@ -241,6 +301,7 @@ impl SlamServer {
             handles,
             workers,
             threads_per_session: share.threads(),
+            registry,
         })
     }
 
@@ -255,6 +316,13 @@ impl SlamServer {
     /// Render threads each session was pinned to.
     pub fn threads_per_session(&self) -> usize {
         self.threads_per_session
+    }
+
+    /// The scene-keyed shared-map shards (empty when no session named a
+    /// scene). Clone it to keep per-scene stats readable after
+    /// [`Self::finish`] consumes the server.
+    pub fn scene_registry(&self) -> &SceneRegistry {
+        &self.registry
     }
 
     /// Enqueue a frame for `session`. Frames for one session are
@@ -315,22 +383,25 @@ impl SlamServer {
 /// are not `Send`), report readiness, then block on the queue and step
 /// sessions until the server closes it.
 fn worker_entry(
-    specs: Vec<(usize, SessionSpec)>,
+    specs: Vec<(usize, SessionSpec, Option<ShardHandle>)>,
     share: Parallelism,
     rx: mpsc::Receiver<(usize, Frame)>,
     ready: mpsc::Sender<std::result::Result<(), String>>,
 ) -> WorkerResult {
-    let mut sessions: Vec<(usize, String, SlamSession)> = Vec::with_capacity(specs.len());
-    for (id, spec) in specs {
+    let mut sessions: Vec<(usize, String, Option<String>, SlamSession)> =
+        Vec::with_capacity(specs.len());
+    for (id, spec, handle) in specs {
         let mut cfg = spec.cfg;
         cfg.seed = session_seed(cfg.seed, id);
-        let built = if spec.threaded_mapping {
+        let built = if let Some(handle) = handle {
+            SlamSession::attach_shared(cfg, spec.intr, share, handle)
+        } else if spec.threaded_mapping {
             SlamSession::with_threaded_mapping(cfg, spec.intr, share)
         } else {
             SlamSession::create(cfg, spec.intr, share)
         };
         match built {
-            Ok(s) => sessions.push((id, spec.name, s)),
+            Ok(s) => sessions.push((id, spec.name, spec.scene, s)),
             Err(e) => {
                 ready.send(Err(format!("{e}"))).ok();
                 return Err(e.context(format!("constructing session {id}")));
@@ -344,8 +415,8 @@ fn worker_entry(
     drop(ready);
 
     while let Ok((sid, frame)) = rx.recv() {
-        let Some((_, name, session)) =
-            sessions.iter_mut().find(|(id, _, _)| *id == sid)
+        let Some((_, name, _, session)) =
+            sessions.iter_mut().find(|(id, _, _, _)| *id == sid)
         else {
             bail!("frame for session {sid} routed to the wrong worker");
         };
@@ -355,11 +426,11 @@ fn worker_entry(
     }
 
     let mut out = Vec::with_capacity(sessions.len());
-    for (id, name, mut session) in sessions {
+    for (id, name, scene, mut session) in sessions {
         session
             .finish()
             .with_context(|| format!("session {id} (`{name}`) mapping worker failed"))?;
-        out.push((id, SessionOutcome::from_session(name, session)));
+        out.push((id, SessionOutcome::from_session(name, scene, session)));
     }
     Ok(out)
 }
@@ -384,12 +455,16 @@ pub struct SessionReport {
     pub name: String,
     /// Generated dataset/sequence name (includes the scenario suffix).
     pub dataset: String,
+    /// Scene key the session's map was shared under, if any.
+    pub scene: Option<String>,
     pub frames: usize,
     pub ate_rmse_m: f32,
     pub psnr_db: f64,
     pub n_gaussians: usize,
     pub track_iters: u64,
     pub mapping_invocations: u32,
+    /// Keyframes the shared-map covisibility gate skipped.
+    pub covis_skips: u32,
     pub mean_track_final_loss: f32,
     pub track_counters: StageCounters,
     pub map_counters: StageCounters,
@@ -400,6 +475,8 @@ pub struct SessionReport {
 #[derive(Clone, Debug)]
 pub struct ServerReport {
     pub sessions: Vec<SessionReport>,
+    /// Per-scene shared-map stats (empty when every map was private).
+    pub scenes: Vec<SceneStats>,
     pub workers: usize,
     pub threads_per_session: usize,
     pub total_frames: usize,
@@ -417,7 +494,7 @@ impl ServerReport {
         );
         for s in &self.sessions {
             println!(
-                "  `{}` ({}): {} frames | ATE {:.2} cm | PSNR {:.2} dB | {} Gaussians | {} mapping calls",
+                "  `{}` ({}): {} frames | ATE {:.2} cm | PSNR {:.2} dB | {} Gaussians | {} mapping calls{}{}",
                 s.name,
                 s.dataset,
                 s.frames,
@@ -425,6 +502,30 @@ impl ServerReport {
                 s.psnr_db,
                 s.n_gaussians,
                 s.mapping_invocations,
+                if s.covis_skips > 0 {
+                    format!(" | {} covis skips", s.covis_skips)
+                } else {
+                    String::new()
+                },
+                match &s.scene {
+                    Some(scene) => format!(" | scene `{scene}`"),
+                    None => String::new(),
+                },
+            );
+        }
+        for sc in &self.scenes {
+            println!(
+                "  scene `{}`: {} session(s) | {} Gaussians ({:.2} MiB incl. Adam) | {} keyframes \
+                 | {} contributed / {} skipped ({:.0}% skip) | {} mapping iters saved",
+                sc.scene,
+                sc.sessions,
+                sc.map_gaussians,
+                sc.map_bytes as f64 / (1024.0 * 1024.0),
+                sc.keyframes,
+                sc.contributions,
+                sc.covis_skips,
+                sc.skip_rate() * 100.0,
+                sc.mapping_iters_saved,
             );
         }
         println!(
@@ -451,19 +552,45 @@ impl ServerReport {
         json.push_str("  \"sessions\": [\n");
         for (i, s) in self.sessions.iter().enumerate() {
             json.push_str(&format!(
-                "    {{\"name\": {}, \"dataset\": {}, \"frames\": {}, \"ate_rmse_m\": {:.6}, \
+                "    {{\"name\": {}, \"dataset\": {}, \"scene\": {}, \"frames\": {}, \
+                 \"ate_rmse_m\": {:.6}, \
                  \"psnr_db\": {:.3}, \"n_gaussians\": {}, \"track_iters\": {}, \
-                 \"mapping_invocations\": {}, \"mean_track_final_loss\": {:.6}}}{}\n",
+                 \"mapping_invocations\": {}, \"covis_skips\": {}, \
+                 \"mean_track_final_loss\": {:.6}}}{}\n",
                 json_string(&s.name),
                 json_string(&s.dataset),
+                match &s.scene {
+                    Some(scene) => json_string(scene),
+                    None => "null".to_string(),
+                },
                 s.frames,
                 s.ate_rmse_m,
                 s.psnr_db,
                 s.n_gaussians,
                 s.track_iters,
                 s.mapping_invocations,
+                s.covis_skips,
                 s.mean_track_final_loss,
                 if i + 1 < self.sessions.len() { "," } else { "" },
+            ));
+        }
+        json.push_str("  ],\n");
+        json.push_str("  \"scenes\": [\n");
+        for (i, sc) in self.scenes.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"scene\": {}, \"sessions\": {}, \"map_gaussians\": {}, \
+                 \"map_bytes\": {}, \"keyframes\": {}, \"contributions\": {}, \
+                 \"covis_skips\": {}, \"skip_rate\": {:.4}, \"mapping_iters_saved\": {}}}{}\n",
+                json_string(&sc.scene),
+                sc.sessions,
+                sc.map_gaussians,
+                sc.map_bytes,
+                sc.keyframes,
+                sc.contributions,
+                sc.covis_skips,
+                sc.skip_rate(),
+                sc.mapping_iters_saved,
+                if i + 1 < self.scenes.len() { "," } else { "" },
             ));
         }
         json.push_str("  ]\n");
@@ -519,6 +646,7 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
             cfg: r.slam_config(),
             intr: data.intr,
             threaded_mapping: r.threaded_mapping,
+            scene: (!r.scene.is_empty()).then(|| r.scene.clone()),
         });
         datasets.push(data);
     }
@@ -537,6 +665,9 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
             }
         }
     }
+    // the registry outlives finish(): shards are Arc-shared, so scene
+    // stats read the final post-fleet state
+    let registry = server.scene_registry().clone();
     let outcomes = server.finish()?;
     let wall_seconds = start.elapsed().as_secs_f64();
 
@@ -549,12 +680,14 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
         sessions.push(SessionReport {
             name: outcome.name.clone(),
             dataset: data.name.clone(),
+            scene: outcome.scene.clone(),
             frames: stats.frames,
             ate_rmse_m: stats.ate_rmse_m,
             psnr_db: stats.psnr_db,
             n_gaussians: stats.n_gaussians,
             track_iters: outcome.track_stats.iter().map(|s| s.iterations as u64).sum(),
             mapping_invocations: stats.mapping_invocations,
+            covis_skips: stats.covis_skips,
             mean_track_final_loss: stats.mean_track_final_loss,
             track_counters: stats.track_counters,
             map_counters: stats.map_counters,
@@ -563,6 +696,7 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
 
     Ok(ServerReport {
         sessions,
+        scenes: registry.stats(),
         workers,
         threads_per_session,
         total_frames,
@@ -656,6 +790,7 @@ mod tests {
             cfg,
             intr: data.intr,
             threaded_mapping: false,
+            scene: None,
         };
         let server = SlamServer::start(vec![spec], &ServerConfig::default()).unwrap();
         assert_eq!(server.n_sessions(), 1);
@@ -676,6 +811,60 @@ mod tests {
         let report = serve(&jobs, &scfg).unwrap();
         assert_eq!(report.workers, 2, "workers clamp to the session count");
         assert_eq!(report.threads_per_session, 4, "budget splits per session");
+    }
+
+    #[test]
+    fn co_scene_fleet_shares_one_shard_and_skips() {
+        // two sessions on the same scene + sequence, one on its own
+        // scene: the shared shard holds one map, the second co-scene
+        // session skips every keyframe (identical views)
+        let mut a = quick_run(5);
+        a.scene = "lobby".into();
+        let mut b = quick_run(5);
+        b.scene = "lobby".into();
+        let mut c = quick_run(5);
+        c.scene = "workshop".into();
+        c.sequence = 1;
+        let jobs = [
+            FleetJob { name: "alice".into(), run: a },
+            FleetJob { name: "bob".into(), run: b },
+            FleetJob { name: "carol".into(), run: c },
+        ];
+        let scfg = ServerConfig { workers: 2, budget: Parallelism::fixed(2) };
+        let report = serve(&jobs, &scfg).unwrap();
+        assert_eq!(report.scenes.len(), 2);
+        let lobby = report.scenes.iter().find(|s| s.scene == "lobby").unwrap();
+        assert_eq!(lobby.sessions, 2);
+        assert!(lobby.covis_skips > 0, "identical co-scene views must skip");
+        assert!(lobby.mapping_iters_saved > 0);
+        assert!(lobby.map_gaussians > 100);
+        let workshop = report.scenes.iter().find(|s| s.scene == "workshop").unwrap();
+        assert_eq!((workshop.sessions, workshop.covis_skips), (1, 0));
+        // session-level accounting agrees with the shard's
+        assert_eq!(report.sessions[0].covis_skips, 0, "rank 0 never skips");
+        assert_eq!(
+            report.sessions[1].covis_skips as u64, lobby.covis_skips,
+            "all lobby skips come from the second session"
+        );
+        assert_eq!(report.sessions[1].scene.as_deref(), Some("lobby"));
+        let json = report.to_json();
+        assert!(json.contains("\"scenes\""));
+        assert!(json.contains("\"mapping_iters_saved\""));
+    }
+
+    #[test]
+    fn threaded_mapping_with_scene_is_rejected() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 32, 24, 1);
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3);
+        let spec = SessionSpec {
+            name: "bad".into(),
+            cfg,
+            intr: data.intr,
+            threaded_mapping: true,
+            scene: Some("lobby".into()),
+        };
+        let err = SlamServer::start(vec![spec], &ServerConfig::default()).unwrap_err();
+        assert!(format!("{err}").contains("threaded_mapping"), "{err}");
     }
 
     #[test]

@@ -329,9 +329,7 @@ pub fn prune_keep_mask(
     let mut keep = vec![true; n];
     let pool =
         crate::render::stage_threads(threads, n, crate::render::pixel_pipeline::PARALLEL_GAUSSIANS);
-    let eval = |i: usize| {
-        store.opacity(i) >= min_opacity && store.get(i).max_scale() <= max_scale
-    };
+    let eval = |i: usize| store.prune_keep(i, min_opacity, max_scale);
     if pool <= 1 {
         for (i, k) in keep.iter_mut().enumerate() {
             *k = eval(i);

@@ -4,6 +4,12 @@
 //! the re-entrant [`SlamSession`] step API ([`session`]) that the
 //! batch [`SlamSystem`] loop and the multi-session
 //! [`crate::serve::SlamServer`] both drive.
+//!
+//! A session maps in one of three modes: inline (the default), on a
+//! session-owned worker thread (`threaded_mapping`), or attached to a
+//! scene-keyed shared shard ([`SlamSession::attach_shared`], built on
+//! [`crate::map_share`]) where a covisibility gate skips keyframes that
+//! peers' contributions already cover.
 
 pub mod algorithms;
 pub mod loss;

@@ -12,7 +12,7 @@
 //! ([`crate::slam::SlamSystem::run`]), a live stream, or a
 //! [`crate::serve::SlamServer`] frame queue all drive the same object.
 //!
-//! Mapping executes in one of two modes:
+//! Mapping executes in one of three modes:
 //!
 //! * **Inline** ([`SlamSession::create`]) — mapping runs on the caller's
 //!   thread, strictly after tracking of the same frame (the paper's
@@ -26,6 +26,18 @@
 //!   for the frame-0 map blocks on the condvar instead of spinning).
 //!   Which map version tracking observes depends on timing, so this mode
 //!   trades the bit-equality contract for pipeline overlap.
+//! * **Shared** ([`SlamSession::attach_shared`]) — the map lives in a
+//!   scene-keyed [`crate::map_share::MapShard`] shared with co-scene
+//!   sessions. At every keyframe the session first claims the shard's
+//!   deterministic `(epoch, rank)` slot (before tracking), then either
+//!   *contributes* a mapping invocation into the shard under its
+//!   publish lock or — when the covisibility gate finds the view
+//!   already covered by peers' keyframes — *skips* it and rides the
+//!   shared map. Tracking reads a version-gated snapshot exactly like
+//!   Worker mode, but refresh points are slot-ordered rather than
+//!   timing-dependent, so co-scene fleets keep the bit-equality
+//!   contract across session join order and worker count; a shard with
+//!   a single session is bit-identical to Inline mode.
 //!
 //! Sessions are **not** `Send` (their render backends may be
 //! thread-bound), so a caller that wants a session on another thread
@@ -39,6 +51,7 @@ use super::tracking::{track_frame, TrackingStats};
 use crate::camera::{Camera, Intrinsics};
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
+use crate::map_share::ShardHandle;
 use crate::math::{Pcg32, Se3};
 use crate::render::backend::{create_backend, BackendKind, RenderBackend};
 use crate::render::backward_geom::GaussianGrads;
@@ -59,6 +72,9 @@ pub struct SlamStats {
     pub track_counters: StageCounters,
     pub map_counters: StageCounters,
     pub mean_track_final_loss: f32,
+    /// Keyframes the shared-map covisibility gate skipped (0 outside
+    /// Shared mode).
+    pub covis_skips: u32,
 }
 
 /// What one [`SlamSession::on_frame`] step did.
@@ -84,6 +100,14 @@ pub struct FrameEvent {
     /// A mapping invocation ran (inline) or was enqueued (worker) for
     /// this frame.
     pub map_scheduled: bool,
+    /// The scheduled invocation actually executed mapping work. Equal
+    /// to `map_scheduled` except in Shared mode, where the covisibility
+    /// gate may skip the invocation (peers' keyframes already cover the
+    /// view).
+    pub map_contributed: bool,
+    /// Covisibility score against the shard's peer keyframes (Shared
+    /// mode keyframes only; `None` otherwise).
+    pub covis_score: Option<f32>,
 }
 
 /// Where mapping executes for a session.
@@ -92,6 +116,10 @@ enum MappingExec {
     Inline { backend: Box<dyn RenderBackend>, adam: Adam },
     /// On a session-owned worker thread (Fig. 2's concurrent schedule).
     Worker(MappingWorker),
+    /// Into a scene-keyed shared [`crate::map_share::MapShard`], gated
+    /// by covisibility (the backend stays session-owned — backends are
+    /// thread-bound; only the store + Adam moments are shared).
+    Shared { backend: Box<dyn RenderBackend>, handle: ShardHandle },
 }
 
 /// A long-lived, stream-driven SLAM session (see the module docs).
@@ -119,8 +147,10 @@ pub struct SlamSession {
     prev_rel: Se3,
     rng: Pcg32,
     frame_idx: u32,
-    /// Last worker-published map version folded into `store` (worker
-    /// mode only — gates the per-frame snapshot clone).
+    /// Keyframes the shared-map covisibility gate skipped (Shared mode).
+    pub covis_skips: u32,
+    /// Last published map version folded into `store` (Worker and
+    /// Shared modes — gates the snapshot clone).
     map_version: u64,
     finished: bool,
 }
@@ -167,6 +197,28 @@ impl SlamSession {
         Ok(Self::assemble(cfg, intr, track_backend, MappingExec::Worker(worker)))
     }
 
+    /// A session whose map lives in a scene-keyed shared
+    /// [`crate::map_share::MapShard`] (see the module docs and
+    /// [`crate::map_share`]). The handle comes from
+    /// [`crate::map_share::SceneRegistry::attach`]; its rank fixes this
+    /// session's position in the shard's deterministic merge order. The
+    /// mapping backend stays session-owned (backends are thread-bound);
+    /// `store` holds the session's version-gated snapshot of the shard.
+    pub fn attach_shared(
+        cfg: SlamConfig,
+        intr: Intrinsics,
+        par: Parallelism,
+        handle: ShardHandle,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let mapping = MappingExec::Shared {
+            backend: create_backend(cfg.mapping.backend, par)?,
+            handle,
+        };
+        Ok(Self::assemble(cfg, intr, track_backend, mapping))
+    }
+
     fn assemble(
         cfg: SlamConfig,
         intr: Intrinsics,
@@ -190,6 +242,7 @@ impl SlamSession {
             prev_rel: Se3::IDENTITY,
             rng: Pcg32::new(cfg.seed),
             frame_idx: 0,
+            covis_skips: 0,
             map_version: 0,
             finished: false,
         }
@@ -212,11 +265,22 @@ impl SlamSession {
         }
         let idx = self.frame_idx;
         self.frame_idx += 1;
+        let map_due = idx % self.cfg.mapping.every == 0;
+
+        // a shared-map session synchronizes at keyframes *before*
+        // tracking: claiming the shard's (epoch, rank) slot and folding
+        // in the newest snapshot here makes every read/merge point a
+        // pure function of slot order — bit-identical across co-scene
+        // join orders and worker interleaves (elsewhere this is a no-op)
+        if map_due {
+            self.shared_sync(idx)?;
+        }
 
         if idx == 0 {
             // anchor: ground-truth first pose (standard SLAM convention)
             self.est_poses.push(frame.gt_w2c);
-            let (mapping, map_counters) = self.run_mapping(frame, frame.gt_w2c, idx)?;
+            let (mapping, map_counters, map_contributed, covis_score) =
+                self.run_mapping(frame, frame.gt_w2c, idx)?;
             return Ok(FrameEvent {
                 frame_index: idx,
                 pose: frame.gt_w2c,
@@ -225,6 +289,8 @@ impl SlamSession {
                 mapping,
                 map_counters,
                 map_scheduled: true,
+                map_contributed,
+                covis_score,
             });
         }
 
@@ -259,11 +325,10 @@ impl SlamSession {
         self.est_poses.push(pose);
 
         // ---- mapping (every N frames, after tracking — Fig. 2) ----
-        let map_due = idx % self.cfg.mapping.every == 0;
-        let (mapping, map_counters) = if map_due {
+        let (mapping, map_counters, map_contributed, covis_score) = if map_due {
             self.run_mapping(frame, pose, idx)?
         } else {
-            (None, StageCounters::new())
+            (None, StageCounters::new(), false, None)
         };
 
         Ok(FrameEvent {
@@ -274,18 +339,41 @@ impl SlamSession {
             mapping,
             map_counters,
             map_scheduled: map_due,
+            map_contributed,
+            covis_score,
         })
+    }
+
+    /// Shared mode: claim the keyframe's `(epoch, rank)` slot on the
+    /// shard and fold in the newest published snapshot (no-op in the
+    /// other modes). Runs before the keyframe is tracked so snapshot
+    /// refreshes are slot-ordered — deterministic — rather than
+    /// timing-dependent.
+    fn shared_sync(&mut self, idx: u32) -> Result<()> {
+        if let MappingExec::Shared { handle, .. } = &self.mapping {
+            let epoch = (idx / self.cfg.mapping.every) as u64;
+            handle.wait_turn(epoch)?;
+            if let Some((store, version)) = handle.snapshot_newer_than(self.map_version)? {
+                self.store = store;
+                self.map_version = version;
+            }
+        }
+        Ok(())
     }
 
     /// One mapping invocation at `pose`: inline it runs to completion
     /// here; with a worker it is enqueued (and, on the anchor frame,
-    /// awaited — tracking cannot start without a bootstrap map).
+    /// awaited — tracking cannot start without a bootstrap map); on a
+    /// shared shard it either contributes under the shard's publish
+    /// lock or is skipped by the covisibility gate. Returns the stats
+    /// (if available now), the charged counters, whether mapping work
+    /// actually executed, and the covisibility score (Shared mode).
     fn run_mapping(
         &mut self,
         frame: &Frame,
         pose: Se3,
         idx: u32,
-    ) -> Result<(Option<MappingStats>, StageCounters)> {
+    ) -> Result<(Option<MappingStats>, StageCounters, bool, Option<f32>)> {
         let capacity = self.track_backend.store_capacity();
         match &mut self.mapping {
             MappingExec::Inline { backend, adam } => {
@@ -304,10 +392,11 @@ impl SlamSession {
                     &mut c,
                 )?;
                 debug_assert_eq!(adam.len(), self.store.len() * GaussianGrads::PARAMS);
+                c.map_contributions = 1;
                 self.map_counters.merge(&c);
                 self.per_map.push(c);
                 self.map_stats.push(stats.clone());
-                Ok((Some(stats), c))
+                Ok((Some(stats), c, true, None))
             }
             MappingExec::Worker(worker) => {
                 worker.enqueue(MapJob {
@@ -322,27 +411,79 @@ impl SlamSession {
                     self.store = store;
                     self.map_version = version;
                 }
-                Ok((None, StageCounters::new()))
+                Ok((None, StageCounters::new(), true, None))
+            }
+            MappingExec::Shared { backend, handle } => {
+                // the slot was claimed in shared_sync (and no peer can
+                // take one in between), so the keyframe set the score
+                // sees is exactly the slot-ordered one
+                let epoch = (idx / self.cfg.mapping.every) as u64;
+                let score = handle.covis_score(frame, pose, self.intr)?;
+                if score >= handle.min_overlap() {
+                    // peers' keyframes already cover this view: consume
+                    // the slot without densify/optimize/prune work
+                    handle.skip(epoch, self.cfg.mapping.iters as u64)?;
+                    self.covis_skips += 1;
+                    let mut c = StageCounters::new();
+                    c.map_covis_skips = 1;
+                    self.map_counters.merge(&c);
+                    return Ok((None, c, false, Some(score)));
+                }
+                let map_cfg = self.cfg.mapping;
+                let rcfg = self.rcfg;
+                let intr = self.intr;
+                let rng = &mut self.rng;
+                let ((stats, c), store, version) =
+                    handle.contribute(epoch, frame, pose, intr, |store, adam| {
+                        let cam = Camera::new(intr, pose);
+                        let cfg = map_cfg.capped_for(capacity, store.len());
+                        let mut c = StageCounters::new();
+                        let stats = map_update(
+                            backend.as_mut(),
+                            store,
+                            adam,
+                            &cam,
+                            frame,
+                            &cfg,
+                            &rcfg,
+                            rng,
+                            &mut c,
+                        )?;
+                        debug_assert_eq!(adam.len(), store.len() * GaussianGrads::PARAMS);
+                        c.map_contributions = 1;
+                        Ok((stats, c))
+                    })?;
+                self.store = store;
+                self.map_version = version;
+                self.map_counters.merge(&c);
+                self.per_map.push(c);
+                self.map_stats.push(stats.clone());
+                Ok((Some(stats), c, true, Some(score)))
             }
         }
     }
 
     /// Drain the session: with a mapping worker, close its queue, join
     /// it, and fold its store, counters, and per-invocation stats into
-    /// the session. Inline sessions are already complete (no-op).
-    /// Idempotent; must be called before [`Self::evaluate`] on a
-    /// worker-mapped session.
+    /// the session; with a shared shard, detach from the turn protocol
+    /// (so co-scene peers never wait on this rank again). Inline
+    /// sessions are already complete (no-op). Idempotent; must be
+    /// called before [`Self::evaluate`] on a worker-mapped session.
     pub fn finish(&mut self) -> Result<()> {
         if self.finished {
             return Ok(());
         }
         self.finished = true;
-        if let MappingExec::Worker(worker) = &mut self.mapping {
-            let out = worker.join()?;
-            self.store = out.store;
-            self.map_counters.merge(&out.counters);
-            self.per_map = out.per_map;
-            self.map_stats = out.stats;
+        match &mut self.mapping {
+            MappingExec::Worker(worker) => {
+                let out = worker.join()?;
+                self.store = out.store;
+                self.map_counters.merge(&out.counters);
+                self.per_map = out.per_map;
+                self.map_stats = out.stats;
+            }
+            MappingExec::Shared { handle, .. } => handle.detach(),
+            MappingExec::Inline { .. } => {}
         }
         Ok(())
     }
@@ -361,14 +502,16 @@ impl SlamSession {
     /// Evaluate against ground truth. Worker-mapped sessions must be
     /// [`Self::finish`]ed first so the final map and mapping counters
     /// are folded in — evaluating earlier would silently report zero
-    /// mapping work, so it panics instead.
-    pub fn evaluate(&self, data: &SyntheticDataset) -> SlamStats {
-        assert!(
-            self.finished || matches!(self.mapping, MappingExec::Inline { .. }),
-            "finish() a threaded-mapping session before evaluate() — its map and \
-             mapping counters are only folded in at finish"
-        );
-        evaluate_stream(
+    /// mapping work, so it errs instead (a server-side misuse must not
+    /// take down the process).
+    pub fn evaluate(&self, data: &SyntheticDataset) -> Result<SlamStats> {
+        if !self.finished && matches!(self.mapping, MappingExec::Worker(_)) {
+            bail!(
+                "finish() a threaded-mapping session before evaluate() — its map and \
+                 mapping counters are only folded in at finish"
+            );
+        }
+        Ok(evaluate_stream(
             &self.est_poses,
             &self.store,
             self.intr,
@@ -376,9 +519,10 @@ impl SlamSession {
             self.per_map.len(),
             self.track_counters,
             self.map_counters,
+            self.covis_skips,
             data,
             &self.rcfg,
-        )
+        ))
     }
 }
 
@@ -396,6 +540,7 @@ pub(crate) fn evaluate_stream(
     mapping_invocations: usize,
     track_counters: StageCounters,
     map_counters: StageCounters,
+    covis_skips: u32,
     data: &SyntheticDataset,
     rcfg: &RenderConfig,
 ) -> SlamStats {
@@ -423,6 +568,7 @@ pub(crate) fn evaluate_stream(
         track_counters,
         map_counters,
         mean_track_final_loss: mean_loss,
+        covis_skips,
     }
 }
 
@@ -545,6 +691,7 @@ impl MappingWorker {
                         return Err(e);
                     }
                 };
+                c.map_contributions = 1;
                 counters.merge(&c);
                 per_map.push(c);
                 stats.push(st);
@@ -707,13 +854,66 @@ mod tests {
             assert!(e.mapping.is_none());
         }
         session.finish().unwrap();
-        let stats = session.evaluate(&data);
+        let stats = session.evaluate(&data).unwrap();
         assert_eq!(stats.frames, 6);
         assert!(stats.mapping_invocations >= 1);
         assert!(stats.n_gaussians > 100, "map too small: {}", stats.n_gaussians);
         assert!(stats.ate_rmse_m < 0.3, "ATE {}", stats.ate_rmse_m);
         // finish is idempotent
         session.finish().unwrap();
+    }
+
+    #[test]
+    fn evaluate_before_finish_on_worker_session_errs() {
+        let data = quick_data(3);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        let mut session =
+            SlamSession::with_threaded_mapping(cfg, data.intr, Parallelism::auto()).unwrap();
+        session.on_frame(&data.frames[0]).unwrap();
+        // misuse must surface as an Err, not a process-killing panic
+        assert!(session.evaluate(&data).is_err());
+        session.finish().unwrap();
+        assert!(session.evaluate(&data).is_ok());
+    }
+
+    #[test]
+    fn shared_map_sessions_skip_covisible_keyframes() {
+        // two sessions on the same stream share a shard: rank 1's
+        // keyframes are fully covered by rank 0's (identical poses), so
+        // every one of its mapping slots is skipped — stepped in rank
+        // order on one thread, exactly like a lockstep fleet
+        let data = quick_data(5);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        let mut reg = crate::map_share::SceneRegistry::new();
+        let ha = reg.attach("room", "a");
+        let hb = reg.attach("room", "b");
+        let mut a = SlamSession::attach_shared(cfg, data.intr, Parallelism::fixed(1), ha).unwrap();
+        let mut b = SlamSession::attach_shared(cfg, data.intr, Parallelism::fixed(1), hb).unwrap();
+        for f in &data.frames {
+            let ea = a.on_frame(f).unwrap();
+            let eb = b.on_frame(f).unwrap();
+            if ea.map_scheduled {
+                assert!(ea.map_contributed, "rank 0 never skips against its own keyframes");
+                assert!(!eb.map_contributed, "identical view must be covisible");
+                assert!(eb.covis_score.unwrap() > 0.99);
+                assert_eq!(eb.map_counters.map_covis_skips, 1);
+            }
+        }
+        a.finish().unwrap();
+        b.finish().unwrap();
+        assert_eq!(a.covis_skips, 0);
+        assert_eq!(b.covis_skips, 2, "keyframes at frames 0 and 4");
+        // the skipping session rides the shared map
+        assert_eq!(a.store.len(), b.store.len());
+        assert!(b.store.len() > 100);
+        let shard_stats = reg.stats();
+        let s = &shard_stats[0];
+        assert_eq!((s.contributions, s.covis_skips), (2, 2));
+        assert!(s.mapping_iters_saved > 0);
+        let stats = b.evaluate(&data).unwrap();
+        assert_eq!(stats.covis_skips, 2);
+        assert_eq!(stats.mapping_invocations, 0);
+        assert!(stats.ate_rmse_m < 0.3, "ATE {}", stats.ate_rmse_m);
     }
 
     #[test]

@@ -63,7 +63,7 @@ impl SlamSystem {
         for frame in &data.frames {
             sys.session.on_frame(frame)?;
         }
-        Ok(sys.session.evaluate(data))
+        sys.session.evaluate(data)
     }
 }
 
