@@ -1,0 +1,120 @@
+//! Fault-tolerant serving demo: a three-session fleet where two
+//! sessions are deliberately sabotaged by the deterministic
+//! fault-injection harness ([`splatonic::fault::FaultPlan`]):
+//!
+//! - `orbit` hits a NaN-corrupted depth frame and a dropped frame —
+//!   the frame watchdog quarantines both and the session finishes
+//!   `DEGRADED`, its metrics evaluated over the surviving stream;
+//! - `corridor` panics mid-stream — the supervisor isolates the
+//!   session as `FAILED` (partial results retained) while the rest of
+//!   the fleet keeps serving;
+//! - `fast-rotation` runs clean and must finish `ok`, bit-identical
+//!   to a fault-free fleet (pinned by `tests/fault_tolerance.rs`).
+//!
+//! ```text
+//! cargo run --release --example serve_faulty -- \
+//!     [--workers=3] [--frames=8] [--width=96] [--height=72] [--budget=0.5]
+//! ```
+//!
+//! The injected schedule is a pure function of the spec strings below,
+//! so every run (any `--workers`) prints the same fleet health.
+
+use splatonic::config::RunConfig;
+use splatonic::dataset::{Flavor, Scenario};
+use splatonic::fault::FaultPlan;
+use splatonic::render::Parallelism;
+use splatonic::serve::{serve, FleetJob, ServerConfig};
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+
+    // --workers is server-level; everything else applies to every job
+    let mut workers = 0usize; // 0 = one worker per session
+    if let Some(pos) = args.iter().position(|a| a == "--workers" || a.starts_with("--workers=")) {
+        let value = if let Some(eq) = args[pos].strip_prefix("--workers=") {
+            let v = eq.to_string();
+            args.remove(pos);
+            v
+        } else {
+            let v = args
+                .get(pos + 1)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("--workers needs a count"))?;
+            args.drain(pos..=pos + 1);
+            v
+        };
+        workers = value.parse()?;
+    }
+
+    // the fleet, with a fault schedule per session (submitted-stream
+    // frame indices — see FaultPlan::parse for the spec surface)
+    let presets: [(&str, Flavor, Scenario, Algorithm, &str); 3] = [
+        ("orbit", Flavor::Replica, Scenario::Orbit, Algorithm::SplaTam, "nan-depth@2,drop@4"),
+        ("corridor", Flavor::Replica, Scenario::Corridor, Algorithm::MonoGs, "panic@5"),
+        ("fast-rotation", Flavor::Tum, Scenario::FastRotation, Algorithm::FlashSlam, ""),
+    ];
+    let mut jobs = Vec::with_capacity(presets.len());
+    for (i, (name, flavor, scenario, algorithm, faults)) in presets.into_iter().enumerate() {
+        let mut run = RunConfig {
+            flavor,
+            scenario,
+            algorithm,
+            sequence: i,
+            width: 96,
+            height: 72,
+            frames: 8,
+            budget: 0.5,
+            ..Default::default()
+        };
+        run.apply_args(&args)?;
+        // the sabotage is per-session, applied after any CLI overrides
+        run.faults = FaultPlan::parse(faults)?;
+        jobs.push(FleetJob { name: name.to_string(), run });
+    }
+
+    println!("=== Splatonic fault-tolerant serving ===");
+    for job in &jobs {
+        println!(
+            "  job `{}`: {:?}/{} {:?} | {}x{} x {} frames | faults: {}",
+            job.name,
+            job.run.flavor,
+            job.run.scenario.name(),
+            job.run.algorithm,
+            job.run.width,
+            job.run.height,
+            job.run.frames,
+            if job.run.faults.is_empty() { "-".to_string() } else { job.run.faults.to_spec() },
+        );
+    }
+
+    let scfg = ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() };
+    let report = serve(&jobs, &scfg)?;
+    report.print();
+
+    // paper-shaped summary lines for EXPERIMENTS.md: per-session health
+    // plus the fleet roll-up (the victim's metrics cover its surviving
+    // prefix; quarantined frames are excluded from ground truth)
+    for s in &report.sessions {
+        println!(
+            "SUMMARY session={} status={} quarantined={} recoveries={} \
+             ate_cm={:.2} psnr_db={:.2} frames={}",
+            s.name,
+            s.status.name(),
+            s.frames_quarantined,
+            s.recoveries,
+            s.ate_rmse_m * 100.0,
+            s.psnr_db,
+            s.frames,
+        );
+    }
+    println!(
+        "SUMMARY fleet_sessions={} failed={} degraded={} frames_quarantined={} workers={}",
+        report.sessions.len(),
+        report.failed_sessions(),
+        report.degraded_sessions(),
+        report.frames_quarantined(),
+        report.workers,
+    );
+    Ok(())
+}

@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let scfg = ServerConfig { workers, budget: Parallelism::auto() };
+    let scfg = ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() };
     let report = serve(&jobs, &scfg)?;
     report.print();
 

@@ -421,7 +421,7 @@ fn main() {
         }
         for &workers in &worker_counts {
             let jobs: Vec<FleetJob> = (0..n_sessions).map(fleet_job).collect();
-            let scfg = ServerConfig { workers, budget: Parallelism::auto() };
+            let scfg = ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() };
             let report = serve(&jobs, &scfg).expect("server sweep run failed");
             println!(
                 "{:>9} {:>8} | {:>10} {:>12.3} {:>14.2}",
@@ -451,7 +451,7 @@ fn main() {
     };
     let shared_jobs: Vec<FleetJob> = (0..3).map(|i| co_job(i, "lobby")).collect();
     let private_jobs: Vec<FleetJob> = (0..3).map(|i| co_job(i, "")).collect();
-    let scfg = ServerConfig { workers: 2, budget: Parallelism::auto() };
+    let scfg = ServerConfig { workers: 2, budget: Parallelism::auto(), ..Default::default() };
     let shared_report = serve(&shared_jobs, &scfg).expect("shared-map fleet failed");
     let private_report = serve(&private_jobs, &scfg).expect("private-map fleet failed");
     // shard bytes include the Adam moments; charge private maps the

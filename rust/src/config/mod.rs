@@ -11,6 +11,7 @@ pub mod toml;
 pub use toml::{TomlDoc, TomlValue};
 
 use crate::dataset::{Flavor, Scenario};
+use crate::fault::FaultPlan;
 pub use crate::render::backend::BackendKind;
 use crate::slam::algorithms::{Algorithm, SlamConfig};
 
@@ -62,6 +63,10 @@ pub struct RunConfig {
     /// Empty (the default) keeps the session's map private. Incompatible
     /// with `threaded_mapping` (shard merges are epoch-ordered).
     pub scene: String,
+    /// Deterministic fault-injection schedule for resilience drills
+    /// (`faults = "nan-depth@3,panic@8"` — see
+    /// [`crate::fault::FaultPlan::parse`]). Empty injects nothing.
+    pub faults: FaultPlan,
 }
 
 impl Default for RunConfig {
@@ -83,6 +88,7 @@ impl Default for RunConfig {
             seed: 7,
             threaded_mapping: false,
             scene: String::new(),
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -183,6 +189,7 @@ impl RunConfig {
             "seed" => self.seed = v.parse()?,
             "threaded_mapping" => self.threaded_mapping = v.parse()?,
             "scene" => self.scene = v.to_string(),
+            "faults" => self.faults = FaultPlan::parse(v)?,
             _ => return Err(anyhow!("unknown config key: {key}")),
         }
         Ok(())
@@ -291,6 +298,19 @@ mod tests {
         assert!(cfg.scene.is_empty());
         cfg.apply_args(&["--scene=workshop".into()]).unwrap();
         assert_eq!(cfg.scene, "workshop");
+    }
+
+    #[test]
+    fn fault_plan_from_toml_and_cli() {
+        let cfg =
+            RunConfig::from_toml("[run]\nfaults = \"nan-depth@3,panic@8\"\n").unwrap();
+        assert_eq!(cfg.faults.events().len(), 2);
+        assert_eq!(cfg.faults.first_panic(), Some(8));
+        let mut cfg = RunConfig::default();
+        assert!(cfg.faults.is_empty());
+        cfg.apply_args(&["--faults=drop@2,slow@4:10".into()]).unwrap();
+        assert_eq!(cfg.faults.events().len(), 2);
+        assert!(RunConfig::from_toml("[run]\nfaults = \"meteor@1\"\n").is_err());
     }
 
     #[test]

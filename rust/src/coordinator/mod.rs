@@ -101,7 +101,7 @@ impl RunReport {
 /// one-session server run plus the simulated hardware costs.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     let job = FleetJob { name: String::new(), run: cfg.clone() };
-    let scfg = ServerConfig { workers: 1, budget: Parallelism::auto() };
+    let scfg = ServerConfig { workers: 1, budget: Parallelism::auto(), ..Default::default() };
     let report = serve(std::slice::from_ref(&job), &scfg)?;
     let s = &report.sessions[0];
 

@@ -33,6 +33,72 @@ pub struct Frame {
     pub gt_w2c: Se3,
 }
 
+impl Frame {
+    /// Reject frames a tracker cannot safely consume: non-finite or
+    /// negative depth (0 = hole is fine), non-finite RGB, dimensions
+    /// that disagree with `intr`, or degenerate intrinsics. A NaN that
+    /// slips past this check propagates through the loss into the pose
+    /// stream, so the serving layer ([`crate::serve::SlamServer`])
+    /// validates every frame at ingest and quarantines rejects instead
+    /// of stepping a session with them.
+    pub fn validate(&self, intr: &Intrinsics) -> anyhow::Result<()> {
+        if intr.width == 0
+            || intr.height == 0
+            || !(intr.fx.is_finite() && intr.fx > 0.0)
+            || !(intr.fy.is_finite() && intr.fy > 0.0)
+            || !intr.cx.is_finite()
+            || !intr.cy.is_finite()
+        {
+            anyhow::bail!(
+                "degenerate intrinsics: {}x{} fx={} fy={} cx={} cy={}",
+                intr.width, intr.height, intr.fx, intr.fy, intr.cx, intr.cy
+            );
+        }
+        if self.rgb.width != intr.width || self.rgb.height != intr.height {
+            anyhow::bail!(
+                "rgb is {}x{} but intrinsics expect {}x{}",
+                self.rgb.width, self.rgb.height, intr.width, intr.height
+            );
+        }
+        if self.depth.width != intr.width || self.depth.height != intr.height {
+            anyhow::bail!(
+                "depth is {}x{} but intrinsics expect {}x{}",
+                self.depth.width, self.depth.height, intr.width, intr.height
+            );
+        }
+        if let Some((i, d)) = self
+            .depth
+            .data
+            .iter()
+            .enumerate()
+            .find(|(_, d)| !d.is_finite() || **d < 0.0)
+        {
+            anyhow::bail!(
+                "invalid depth {d} at pixel ({}, {}) — depth must be finite and >= 0",
+                i as u32 % intr.width,
+                i as u32 / intr.width
+            );
+        }
+        if let Some((i, c)) = self
+            .rgb
+            .data
+            .iter()
+            .enumerate()
+            .find(|(_, c)| !(c.x.is_finite() && c.y.is_finite() && c.z.is_finite()))
+        {
+            anyhow::bail!(
+                "non-finite rgb {c:?} at pixel ({}, {})",
+                i as u32 % intr.width,
+                i as u32 / intr.width
+            );
+        }
+        if !self.gt_w2c.is_finite() {
+            anyhow::bail!("non-finite ground-truth pose {:?}", self.gt_w2c);
+        }
+        Ok(())
+    }
+}
+
 /// Dataset flavor — controls trajectory dynamics and sensor noise.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Flavor {

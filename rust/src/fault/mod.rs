@@ -1,0 +1,329 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a per-session schedule of faults keyed by the
+//! session's *submitted-frame index* (the k-th frame the server worker
+//! dequeues for that session, starting at 0). The plan is data, not
+//! behavior: the [`crate::serve::SlamServer`] worker applies it at the
+//! dequeue point, *before* frame validation, so every fault exercises
+//! the same code path a real failure would:
+//!
+//! * [`FaultKind::NanDepth`] / [`FaultKind::NanRgb`] — corrupt the frame
+//!   like a broken sensor; [`crate::dataset::Frame::validate`] rejects
+//!   it and the worker quarantines the frame (session → Degraded).
+//! * [`FaultKind::Drop`] — the frame never reaches the session
+//!   (transport loss); counted as quarantined.
+//! * [`FaultKind::Panic`] — panic inside the worker's per-frame
+//!   `catch_unwind` while stepping the session (session → Failed, fleet
+//!   keeps running).
+//! * [`FaultKind::Slow`] — sleep before stepping (a stalled pipeline
+//!   stage). Wall-clock only: numerics are untouched, so slow sessions
+//!   stay inside the bit-equality determinism contract.
+//!
+//! Plans are constructed programmatically ([`FaultPlan::panic_at`] and
+//! friends), parsed from a compact spec string ([`FaultPlan::parse`] —
+//! the TOML/CLI `faults = "panic@3,nan-depth@2"` surface), or generated
+//! from a seed ([`FaultPlan::seeded`]). All three are pure functions of
+//! their inputs, which is what makes every fault-tolerance test
+//! reproducible: the same plan against the same stream produces the
+//! same failures, quarantines, and surviving-session bits, at any
+//! worker count.
+
+use crate::dataset::Frame;
+use crate::math::Pcg32;
+use anyhow::{anyhow, bail, Result};
+
+/// One kind of injected fault (see the module docs for how each is
+/// applied by the server worker).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Overwrite part of the frame's depth plane with NaN (sensor
+    /// corruption — rejected by `Frame::validate`, quarantined).
+    NanDepth,
+    /// Overwrite part of the frame's RGB image with NaN.
+    NanRgb,
+    /// The frame never reaches the session (transport loss).
+    Drop,
+    /// Panic inside the worker while stepping the session.
+    Panic,
+    /// Sleep `millis` before stepping the frame (wall-clock only; the
+    /// session's numerics are untouched).
+    Slow { millis: u32 },
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::NanDepth => "nan-depth",
+            FaultKind::NanRgb => "nan-rgb",
+            FaultKind::Drop => "drop",
+            FaultKind::Panic => "panic",
+            FaultKind::Slow { .. } => "slow",
+        }
+    }
+}
+
+/// A scheduled fault: `kind` fires when the session's submitted-frame
+/// index reaches `frame`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub frame: u32,
+    pub kind: FaultKind,
+}
+
+/// A per-session fault schedule (see the module docs). Events are kept
+/// sorted by frame (stable within a frame, in insertion order).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, the spelling every healthy
+    /// [`crate::serve::SessionSpec`] carries.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Insert an event, keeping the schedule sorted by frame (stable —
+    /// same-frame events keep their insertion order, which is the order
+    /// the worker applies them in).
+    pub fn push(&mut self, event: FaultEvent) {
+        let at = self.events.partition_point(|e| e.frame <= event.frame);
+        self.events.insert(at, event);
+    }
+
+    pub fn panic_at(mut self, frame: u32) -> Self {
+        self.push(FaultEvent { frame, kind: FaultKind::Panic });
+        self
+    }
+
+    pub fn nan_depth_at(mut self, frame: u32) -> Self {
+        self.push(FaultEvent { frame, kind: FaultKind::NanDepth });
+        self
+    }
+
+    pub fn nan_rgb_at(mut self, frame: u32) -> Self {
+        self.push(FaultEvent { frame, kind: FaultKind::NanRgb });
+        self
+    }
+
+    pub fn drop_at(mut self, frame: u32) -> Self {
+        self.push(FaultEvent { frame, kind: FaultKind::Drop });
+        self
+    }
+
+    pub fn slow_at(mut self, frame: u32, millis: u32) -> Self {
+        self.push(FaultEvent { frame, kind: FaultKind::Slow { millis } });
+        self
+    }
+
+    /// The faults scheduled for submitted-frame index `frame`, in
+    /// application order.
+    pub fn faults_at(&self, frame: u32) -> impl Iterator<Item = FaultKind> + '_ {
+        self.events
+            .iter()
+            .filter(move |e| e.frame == frame)
+            .map(|e| e.kind)
+    }
+
+    /// Parse the compact spec surface (TOML/CLI `faults = "..."`):
+    /// comma-separated `kind@frame` tokens — `panic@3`, `nan-depth@2`
+    /// (alias `nan`), `nan-rgb@1`, `drop@5`, `slow@4:50` (50 ms).
+    /// Whitespace around tokens is ignored; the empty string is the
+    /// empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::none();
+        for token in spec.split(',') {
+            let token = token.trim();
+            if token.is_empty() {
+                continue;
+            }
+            let (kind_s, at) = token
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault `{token}`: expected kind@frame"))?;
+            let kind_s = kind_s.trim().to_ascii_lowercase();
+            let at = at.trim();
+            let (frame_s, arg) = match at.split_once(':') {
+                Some((f, a)) => (f, Some(a)),
+                None => (at, None),
+            };
+            let frame: u32 = frame_s
+                .parse()
+                .map_err(|_| anyhow!("fault `{token}`: bad frame index `{frame_s}`"))?;
+            let kind = match kind_s.as_str() {
+                "panic" => FaultKind::Panic,
+                "nan" | "nan-depth" | "nan_depth" => FaultKind::NanDepth,
+                "nan-rgb" | "nan_rgb" => FaultKind::NanRgb,
+                "drop" => FaultKind::Drop,
+                "slow" => {
+                    let millis: u32 = arg
+                        .ok_or_else(|| anyhow!("fault `{token}`: slow needs `slow@frame:ms`"))?
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("fault `{token}`: bad millis"))?;
+                    FaultKind::Slow { millis }
+                }
+                other => bail!(
+                    "unknown fault kind `{other}` (expected panic, nan-depth, nan-rgb, \
+                     drop, or slow)"
+                ),
+            };
+            if arg.is_some() && !matches!(kind, FaultKind::Slow { .. }) {
+                bail!("fault `{token}`: only slow takes a `:arg`");
+            }
+            plan.push(FaultEvent { frame, kind });
+        }
+        Ok(plan)
+    }
+
+    /// The canonical spec string ([`Self::parse`]'s inverse).
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Slow { millis } => format!("slow@{}:{millis}", e.frame),
+                kind => format!("{}@{}", kind.name(), e.frame),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// A seeded schedule of *non-fatal* faults (NaN-depth / drop /
+    /// slow-mapping) over `n_frames` frames, each frame faulted with
+    /// probability `rate`. A pure function of `(seed, n_frames, rate)` —
+    /// the reproducible soak-test generator. Chain [`Self::panic_at`] to
+    /// add a deterministic kill.
+    pub fn seeded(seed: u64, n_frames: u32, rate: f32) -> Self {
+        let mut rng = Pcg32::new_stream(seed, 9001);
+        let mut plan = FaultPlan::none();
+        for frame in 0..n_frames {
+            if rng.next_f32() < rate {
+                let kind = match rng.next_below(3) {
+                    0 => FaultKind::NanDepth,
+                    1 => FaultKind::Drop,
+                    _ => FaultKind::Slow { millis: 5 },
+                };
+                plan.push(FaultEvent { frame, kind });
+            }
+        }
+        plan
+    }
+
+    /// The first frame index a [`FaultKind::Panic`] is scheduled at.
+    pub fn first_panic(&self) -> Option<u32> {
+        self.events
+            .iter()
+            .find(|e| e.kind == FaultKind::Panic)
+            .map(|e| e.frame)
+    }
+}
+
+/// Best-effort human-readable panic payload (panics carry a `&str` or
+/// `String` in practice). Used wherever the supervision layer converts
+/// a caught unwind into a `SessionStatus::Failed` reason.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Poke NaNs into the leading pixels of the frame's depth plane —
+/// guaranteed to trip [`crate::dataset::Frame::validate`].
+pub fn corrupt_depth(frame: &mut Frame) {
+    let n = frame.depth.data.len().min(64);
+    for d in &mut frame.depth.data[..n] {
+        *d = f32::NAN;
+    }
+}
+
+/// Poke NaNs into the leading pixels of the frame's RGB image.
+pub fn corrupt_rgb(frame: &mut Frame) {
+    let n = frame.rgb.data.len().min(64);
+    for px in &mut frame.rgb.data[..n] {
+        px.x = f32::NAN;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{Flavor, SyntheticDataset};
+
+    #[test]
+    fn builders_keep_frame_order() {
+        let plan = FaultPlan::none().panic_at(5).nan_depth_at(2).drop_at(5);
+        let frames: Vec<u32> = plan.events().iter().map(|e| e.frame).collect();
+        assert_eq!(frames, vec![2, 5, 5]);
+        // stable within a frame: panic was inserted before drop
+        assert_eq!(plan.events()[1].kind, FaultKind::Panic);
+        assert_eq!(plan.events()[2].kind, FaultKind::Drop);
+        assert_eq!(plan.first_panic(), Some(5));
+        let at5: Vec<FaultKind> = plan.faults_at(5).collect();
+        assert_eq!(at5, vec![FaultKind::Panic, FaultKind::Drop]);
+        assert_eq!(plan.faults_at(3).count(), 0);
+    }
+
+    #[test]
+    fn parse_round_trips_the_canonical_spec() {
+        let plan = FaultPlan::parse("nan-depth@2, panic@3, drop@5, slow@4:50, nan-rgb@1").unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(plan.to_spec(), "nan-rgb@1,nan-depth@2,panic@3,slow@4:50,drop@5");
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+        // aliases and the empty plan
+        assert_eq!(
+            FaultPlan::parse("nan@7").unwrap().events()[0].kind,
+            FaultKind::NanDepth
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("panic").is_err(), "missing @frame");
+        assert!(FaultPlan::parse("explode@3").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("panic@x").is_err(), "bad frame");
+        assert!(FaultPlan::parse("slow@3").is_err(), "slow needs :ms");
+        assert!(FaultPlan::parse("slow@3:fast").is_err(), "bad millis");
+    }
+
+    #[test]
+    fn seeded_plans_are_pure_functions_of_the_seed() {
+        let a = FaultPlan::seeded(0xBAD5EED, 64, 0.3);
+        let b = FaultPlan::seeded(0xBAD5EED, 64, 0.3);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "rate 0.3 over 64 frames should fault");
+        assert!(a.first_panic().is_none(), "seeded plans are non-fatal");
+        let c = FaultPlan::seeded(0xDEADBEEF, 64, 0.3);
+        assert_ne!(a, c, "different seeds should differ");
+        assert!(FaultPlan::seeded(1, 64, 0.0).is_empty());
+    }
+
+    #[test]
+    fn corruption_helpers_break_validation() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 32, 24, 1);
+        let mut f = data.frames[0].clone();
+        f.validate(&data.intr).unwrap();
+        corrupt_depth(&mut f);
+        assert!(f.validate(&data.intr).is_err());
+        let mut f = data.frames[0].clone();
+        corrupt_rgb(&mut f);
+        assert!(f.validate(&data.intr).is_err());
+    }
+}

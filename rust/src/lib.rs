@@ -23,6 +23,7 @@ pub mod camera;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;
+pub mod fault;
 pub mod gaussian;
 pub mod map_share;
 pub mod math;

@@ -34,10 +34,37 @@
 //!
 //! The slot protocol assumes co-scene streams advance roughly in
 //! lockstep (the server's round-robin frame submission provides this);
-//! a session stalled more than [`TURN_TIMEOUT`] behind its peers turns
-//! a would-be deadlock into an error. A dropped or finished session
-//! **detaches** ([`ShardHandle::detach`]), removing its rank from the
-//! turn requirements so peers are not stranded.
+//! a session stalled longer than the shard's turn timeout
+//! ([`SceneRegistry::with_turn_timeout`], default [`TURN_TIMEOUT`],
+//! surfaced as `ServerConfig::shard_turn_timeout_ms` / TOML
+//! `shard_turn_timeout_ms=`) turns a would-be deadlock into an error. A
+//! dropped or finished session **detaches** ([`ShardHandle::detach`]),
+//! removing its rank from the turn requirements so peers are not
+//! stranded.
+//!
+//! # Failure model: quarantine, not poisoning
+//!
+//! A failing contribution must not take the scene down with it. Before
+//! [`MapShard::contribute`] runs the mapping closure it snapshots the
+//! store and Adam moments; if the closure errs — or panics (caught via
+//! `catch_unwind`) — the shard **rolls back** to the snapshot and
+//! **quarantines** the rank: a tombstone records the epoch boundary and
+//! reason, and the rank drops out of the turn requirements exactly like
+//! a detach. The same tombstone is planted by
+//! [`ShardHandle::quarantine`] when the *session* fails outside the
+//! shard (a tracking panic, a rejected frame cascade). Either way the
+//! quarantined rank's earlier contributions stay in the map, and — the
+//! determinism-under-failure contract — the shard's contents afterwards
+//! are **bit-identical to a run in which the failed rank simply stopped
+//! contributing at that epoch**, invariant to worker count and
+//! submission interleave, because which epochs a rank completed is a
+//! pure function of its failure frame. Survivor calls keep succeeding;
+//! only the quarantined rank's own calls err. Shard locks are
+//! poison-tolerant ([`std::sync::PoisonError::into_inner`]): state
+//! consistency is guaranteed by the rollback + version/epoch protocol,
+//! not by mutex poisoning, so a panicking peer thread cannot cascade
+//! `PoisonError` unwraps through the fleet. Per-scene
+//! [`SceneStats::failed_sessions`] reports the tombstone count.
 //!
 //! # Covisibility gating
 //!
@@ -55,18 +82,22 @@
 
 use crate::camera::{Camera, Intrinsics};
 use crate::dataset::Frame;
+use crate::fault::panic_message;
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::math::{Se3, Vec2};
-use anyhow::{bail, Result};
-use std::sync::{Arc, Condvar, Mutex};
+use anyhow::{anyhow, bail, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-/// Upper bound on how long a session waits for its `(epoch, rank)` turn
-/// slot. Co-scene sessions must be driven roughly frame-synchronously
-/// (the server's round-robin submission); a peer stalled longer than
-/// this — unequal stream lengths, a caller feeding one session far
-/// ahead of its co-scene peers — surfaces as an error instead of a
-/// deadlock.
+/// Default upper bound on how long a session waits for its `(epoch,
+/// rank)` turn slot (override per server via
+/// [`SceneRegistry::with_turn_timeout`] /
+/// `ServerConfig::shard_turn_timeout_ms`). Co-scene sessions must be
+/// driven roughly frame-synchronously (the server's round-robin
+/// submission); a peer stalled longer than this — unequal stream
+/// lengths, a caller feeding one session far ahead of its co-scene
+/// peers — surfaces as an error instead of a deadlock.
 pub const TURN_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Covisibility scoring parameters (see [`covisibility_score`]).
@@ -213,6 +244,12 @@ struct Participant {
     /// The next epoch this participant will contribute or skip.
     next_epoch: u64,
     detached: bool,
+    /// Quarantine tombstone: `(epoch boundary, reason)` — the first
+    /// epoch this rank did *not* complete, recorded when a contribution
+    /// failed (rolled back) or the session died
+    /// ([`ShardHandle::quarantine`]). A tombstoned rank is detached from
+    /// the turn requirements; its earlier contributions stay in the map.
+    failure: Option<(u64, String)>,
 }
 
 /// Everything behind the shard's publish lock.
@@ -227,10 +264,17 @@ struct ShardState {
     contributions: u64,
     skips: u64,
     mapping_iters_saved: u64,
-    /// A failed contribution may leave the store half-mutated; the
-    /// first error poisons the shard so peers fail fast instead of
-    /// merging into corrupt state.
-    failed: Option<String>,
+}
+
+/// Tombstone `rank`: record the failure at its current epoch boundary
+/// and drop it out of the turn requirements. Idempotent (the first
+/// failure wins).
+fn quarantine_participant(state: &mut ShardState, rank: usize, reason: String) {
+    let p = &mut state.participants[rank];
+    if p.failure.is_none() {
+        p.failure = Some((p.next_epoch, reason));
+    }
+    p.detached = true;
 }
 
 /// `true` when `(epoch, rank)` is the globally next un-applied slot:
@@ -249,16 +293,20 @@ fn is_turn(state: &ShardState, rank: usize, epoch: u64) -> bool {
 pub struct MapShard {
     scene: String,
     covis: CovisConfig,
+    /// Upper bound on one [`Self::wait_turn`] (see [`TURN_TIMEOUT`]).
+    turn_timeout: Duration,
     state: Mutex<ShardState>,
-    /// Signalled on every slot advance (contribute / skip / detach).
+    /// Signalled on every slot advance (contribute / skip / detach /
+    /// quarantine).
     turn: Condvar,
 }
 
 impl MapShard {
-    pub fn new(scene: &str, covis: CovisConfig) -> Self {
+    pub fn new(scene: &str, covis: CovisConfig, turn_timeout: Duration) -> Self {
         MapShard {
             scene: scene.to_string(),
             covis,
+            turn_timeout,
             state: Mutex::new(ShardState {
                 store: GaussianStore::new(),
                 adam: Adam::new(0, AdamConfig::default()),
@@ -268,7 +316,6 @@ impl MapShard {
                 contributions: 0,
                 skips: 0,
                 mapping_iters_saved: 0,
-                failed: None,
             }),
             turn: Condvar::new(),
         }
@@ -278,25 +325,39 @@ impl MapShard {
         &self.scene
     }
 
+    /// Poison-tolerant state lock: a peer thread that panicked while
+    /// holding the lock has already been rolled back + quarantined by
+    /// [`Self::contribute`], so the state is consistent and the
+    /// `PoisonError` carries no information — unwrap it away instead of
+    /// cascading the panic through every survivor.
+    fn lock_state(&self) -> MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Register a participant; its rank is its registration order, so
     /// registering all sessions from one thread in a fixed order (the
     /// server uses session-id order) fixes the merge order regardless
     /// of which worker threads the sessions later live on.
     fn register(&self, name: &str) -> usize {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.lock_state();
         state.participants.push(Participant {
             name: name.to_string(),
             next_epoch: 0,
             detached: false,
+            failure: None,
         });
         state.participants.len() - 1
     }
 
     fn check_live(&self, state: &ShardState, rank: usize, epoch: u64) -> Result<()> {
-        if let Some(msg) = &state.failed {
-            bail!("map shard `{}` failed: {msg}", self.scene);
-        }
         let p = &state.participants[rank];
+        if let Some((at, reason)) = &p.failure {
+            bail!(
+                "session `{}` quarantined from map shard `{}` at epoch {at}: {reason}",
+                p.name,
+                self.scene
+            );
+        }
         if p.detached {
             bail!("session `{}` already detached from map shard `{}`", p.name, self.scene);
         }
@@ -312,11 +373,12 @@ impl MapShard {
     }
 
     /// Block until `(epoch, rank)` is the next slot (see [`is_turn`]).
-    /// Errs when the shard is poisoned, the epoch is out of sequence,
-    /// or the slot does not open within [`TURN_TIMEOUT`].
+    /// Errs when this rank is quarantined, the epoch is out of
+    /// sequence, or the slot does not open within the shard's turn
+    /// timeout.
     fn wait_turn(&self, rank: usize, epoch: u64) -> Result<()> {
-        let deadline = Instant::now() + TURN_TIMEOUT;
-        let mut state = self.state.lock().unwrap();
+        let deadline = Instant::now() + self.turn_timeout;
+        let mut state = self.lock_state();
         loop {
             self.check_live(&state, rank, epoch)?;
             if is_turn(&state, rank, epoch) {
@@ -332,7 +394,10 @@ impl MapShard {
                     self.scene
                 );
             }
-            let (guard, _) = self.turn.wait_timeout(state, deadline - now).unwrap();
+            let (guard, _) = self
+                .turn
+                .wait_timeout(state, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             state = guard;
         }
     }
@@ -341,10 +406,7 @@ impl MapShard {
     /// newer than `seen` was published (same contract as the mapping
     /// worker's snapshot).
     fn snapshot_newer_than(&self, seen: u64) -> Result<Option<(GaussianStore, u64)>> {
-        let state = self.state.lock().unwrap();
-        if let Some(msg) = &state.failed {
-            bail!("map shard `{}` failed: {msg}", self.scene);
-        }
+        let state = self.lock_state();
         if state.version <= seen {
             return Ok(None);
         }
@@ -356,10 +418,8 @@ impl MapShard {
     /// with the slot held ([`Self::wait_turn`]) so the keyframe set is
     /// the slot-ordered one.
     fn covis_score(&self, rank: usize, frame: &Frame, w2c: Se3, intr: Intrinsics) -> Result<f32> {
-        let state = self.state.lock().unwrap();
-        if let Some(msg) = &state.failed {
-            bail!("map shard `{}` failed: {msg}", self.scene);
-        }
+        let state = self.lock_state();
+        self.check_live(&state, rank, state.participants[rank].next_epoch)?;
         Ok(covisibility_score(frame, w2c, intr, &state.keyframes, rank, &self.covis))
     }
 
@@ -367,8 +427,13 @@ impl MapShard {
     /// moments under the publish lock, record the keyframe, bump the
     /// version, and return `f`'s output plus a post-slot snapshot. The
     /// caller must hold the slot (a prior [`Self::wait_turn`] — no
-    /// peer can take a slot in between, so the order stays fixed). On
-    /// error the shard is poisoned (the store may be half-mutated).
+    /// peer can take a slot in between, so the order stays fixed).
+    ///
+    /// A failing closure (error or panic) does **not** poison the
+    /// shard: the store and Adam moments are rolled back to their
+    /// pre-slot snapshot and the rank is quarantined (see the module
+    /// docs) — survivors continue exactly as if this rank had stopped
+    /// contributing at `epoch`.
     fn contribute<T>(
         &self,
         rank: usize,
@@ -378,12 +443,15 @@ impl MapShard {
         intr: Intrinsics,
         f: impl FnOnce(&mut GaussianStore, &mut Adam) -> Result<T>,
     ) -> Result<(T, GaussianStore, u64)> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.lock_state();
         self.check_live(&state, rank, epoch)?;
         debug_assert!(is_turn(&state, rank, epoch), "contribute without holding the slot");
+        let backup_store = state.store.clone();
+        let backup_adam = state.adam.clone();
         let st = &mut *state;
-        match f(&mut st.store, &mut st.adam) {
-            Ok(out) => {
+        let outcome = catch_unwind(AssertUnwindSafe(|| f(&mut st.store, &mut st.adam)));
+        match outcome {
+            Ok(Ok(out)) => {
                 st.keyframes.push(ShardKeyframe::capture(
                     rank,
                     epoch,
@@ -401,11 +469,25 @@ impl MapShard {
                 self.turn.notify_all();
                 Ok((out, snapshot, version))
             }
-            Err(e) => {
-                st.failed = Some(format!("{e}"));
+            Ok(Err(e)) => {
+                st.store = backup_store;
+                st.adam = backup_adam;
+                quarantine_participant(st, rank, format!("{e}"));
                 drop(state);
                 self.turn.notify_all();
                 Err(e)
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                st.store = backup_store;
+                st.adam = backup_adam;
+                quarantine_participant(st, rank, format!("panicked: {msg}"));
+                drop(state);
+                self.turn.notify_all();
+                Err(anyhow!(
+                    "mapping contribution of rank {rank} on map shard `{}` panicked: {msg}",
+                    self.scene
+                ))
             }
         }
     }
@@ -414,7 +496,7 @@ impl MapShard {
     /// gate decided peers already cover this keyframe. `iters_saved`
     /// credits the skipped `S_m` optimization iterations.
     fn skip(&self, rank: usize, epoch: u64, iters_saved: u64) -> Result<()> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.lock_state();
         self.check_live(&state, rank, epoch)?;
         debug_assert!(is_turn(&state, rank, epoch), "skip without holding the slot");
         state.skips += 1;
@@ -428,7 +510,7 @@ impl MapShard {
     /// Remove `rank` from the turn requirements (stream ended or the
     /// session was dropped) so peers are not stranded. Idempotent.
     fn detach(&self, rank: usize) {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.lock_state();
         if !state.participants[rank].detached {
             state.participants[rank].detached = true;
             drop(state);
@@ -436,11 +518,25 @@ impl MapShard {
         }
     }
 
+    /// Tombstone `rank` after a session-external failure (tracking
+    /// panic, rejected-frame cascade): records the epoch boundary +
+    /// reason and removes the rank from the turn requirements, exactly
+    /// like a failed contribution — survivors' shard contents stay
+    /// bit-identical to a run where this rank stopped at that epoch.
+    /// Idempotent.
+    fn quarantine(&self, rank: usize, reason: &str) {
+        let mut state = self.lock_state();
+        quarantine_participant(&mut state, rank, reason.to_string());
+        drop(state);
+        self.turn.notify_all();
+    }
+
     pub fn stats(&self) -> SceneStats {
-        let state = self.state.lock().unwrap();
+        let state = self.lock_state();
         SceneStats {
             scene: self.scene.clone(),
             sessions: state.participants.len(),
+            failed_sessions: state.participants.iter().filter(|p| p.failure.is_some()).count(),
             map_gaussians: state.store.len(),
             map_bytes: state.store.param_bytes() + state.adam.state_bytes(),
             keyframes: state.keyframes.len(),
@@ -508,6 +604,17 @@ impl ShardHandle {
             self.shard.detach(self.rank);
         }
     }
+
+    /// Quarantine this rank: the owning session failed outside the
+    /// shard (tracking panic, rejected frames). Plants the same
+    /// tombstone as a failed contribution — the rank's earlier
+    /// contributions stay, survivors keep going, and subsequent calls
+    /// through this handle err. Idempotent; marks the handle detached
+    /// so drop does no further work.
+    pub fn quarantine(&mut self, reason: &str) {
+        self.shard.quarantine(self.rank, reason);
+        self.detached = true;
+    }
 }
 
 impl Drop for ShardHandle {
@@ -519,14 +626,29 @@ impl Drop for ShardHandle {
 /// Scene-name → [`MapShard`] registry. Clone-able (shards are shared
 /// behind `Arc`s) so the server can keep reporting access while worker
 /// threads own the handles.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct SceneRegistry {
     shards: Vec<Arc<MapShard>>,
+    /// Turn timeout handed to every shard created by [`Self::attach`]
+    /// (default [`TURN_TIMEOUT`]).
+    turn_timeout: Duration,
+}
+
+impl Default for SceneRegistry {
+    fn default() -> Self {
+        SceneRegistry { shards: Vec::new(), turn_timeout: TURN_TIMEOUT }
+    }
 }
 
 impl SceneRegistry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A registry whose shards use `timeout` instead of the default
+    /// [`TURN_TIMEOUT`] (surfaced as `ServerConfig::shard_turn_timeout_ms`).
+    pub fn with_turn_timeout(timeout: Duration) -> Self {
+        SceneRegistry { shards: Vec::new(), turn_timeout: timeout }
     }
 
     /// Attach `session_name` to the shard of `scene` (creating the
@@ -537,7 +659,7 @@ impl SceneRegistry {
         let shard = match self.shards.iter().find(|s| s.scene() == scene) {
             Some(s) => Arc::clone(s),
             None => {
-                let s = Arc::new(MapShard::new(scene, CovisConfig::default()));
+                let s = Arc::new(MapShard::new(scene, CovisConfig::default(), self.turn_timeout));
                 self.shards.push(Arc::clone(&s));
                 s
             }
@@ -567,6 +689,9 @@ pub struct SceneStats {
     pub scene: String,
     /// Sessions ever attached (including detached ones).
     pub sessions: usize,
+    /// Quarantined ranks (tombstoned by a failed contribution or
+    /// [`ShardHandle::quarantine`]).
+    pub failed_sessions: usize,
     pub map_gaussians: usize,
     /// Store parameters + Adam moments.
     pub map_bytes: usize,
@@ -730,7 +855,7 @@ mod tests {
     }
 
     #[test]
-    fn failed_contribution_poisons_shard() {
+    fn failed_contribution_rolls_back_and_quarantines_only_its_rank() {
         let data = data();
         let frame = &data.frames[0];
         let mut reg = SceneRegistry::new();
@@ -744,9 +869,85 @@ mod tests {
             })
             .unwrap_err();
         assert!(format!("{err}").contains("backend exploded"));
-        let peer = h1.wait_turn(0).unwrap_err();
-        assert!(format!("{peer}").contains("failed"), "{peer}");
-        assert!(h1.snapshot_newer_than(0).is_err());
+        // the half-applied push was rolled back…
+        let stats = &reg.stats()[0];
+        assert_eq!(stats.map_gaussians, 0, "failed contribution must be rolled back");
+        assert_eq!(stats.failed_sessions, 1);
+        // …the failed rank's own calls err with the quarantine reason…
+        let own = h0.wait_turn(1).unwrap_err();
+        assert!(format!("{own}").contains("quarantined"), "{own}");
+        // …and the surviving peer proceeds as if rank 0 stopped at epoch 0
+        h1.wait_turn(0).unwrap();
+        let (_, snap, v) = h1
+            .contribute(0, frame, frame.gt_w2c, data.intr, |store, _| {
+                store.push(Gaussian::isotropic(Vec3::X, 0.1, Vec3::splat(0.5), 0.6));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!((snap.len(), v), (1, 1));
+        assert!(h1.snapshot_newer_than(0).unwrap().is_some());
+    }
+
+    #[test]
+    fn panicking_contribution_rolls_back_and_peers_survive() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        h0.wait_turn(0).unwrap();
+        h0.contribute(0, frame, frame.gt_w2c, data.intr, |store, _| {
+            store.push(Gaussian::isotropic(Vec3::ZERO, 0.1, Vec3::splat(0.5), 0.6));
+            Ok(())
+        })
+        .unwrap();
+        h1.wait_turn(0).unwrap();
+        let err = h1
+            .contribute(0, frame, frame.gt_w2c, data.intr, |store, _| -> Result<()> {
+                store.push(Gaussian::isotropic(Vec3::Y, 0.1, Vec3::splat(0.5), 0.6));
+                panic!("mapping kernel blew up")
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("mapping kernel blew up"), "{err}");
+        let stats = &reg.stats()[0];
+        // rank 0's epoch-0 Gaussian survives; rank 1's partial push is gone
+        assert_eq!(stats.map_gaussians, 1);
+        assert_eq!(stats.failed_sessions, 1);
+        // the tombstone released rank 0's epoch-1 slot (rank 1 dropped
+        // out of the turn requirements)
+        h0.wait_turn(1).unwrap();
+        h0.contribute(1, frame, frame.gt_w2c, data.intr, |_, _| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn quarantined_handle_rejects_calls_and_frees_peers() {
+        let data = data();
+        let frame = data.frames[0].clone();
+        let mut reg = SceneRegistry::new();
+        let mut h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        let waiter = std::thread::spawn(move || {
+            h1.wait_turn(0).unwrap();
+            h1.contribute(0, &frame, frame.gt_w2c, data.intr, |_, _| Ok(()))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        // rank 0's session dies before taking its epoch-0 slot
+        h0.quarantine("tracking panicked at frame 0");
+        waiter.join().unwrap().unwrap();
+        assert!(h0.wait_turn(0).is_err());
+        assert_eq!(reg.stats()[0].failed_sessions, 1);
+    }
+
+    #[test]
+    fn turn_timeout_is_configurable() {
+        let mut reg = SceneRegistry::with_turn_timeout(Duration::from_millis(30));
+        let _h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        // rank 0 never takes epoch 0, so rank 1's wait must err quickly
+        let start = Instant::now();
+        let err = h1.wait_turn(0).unwrap_err();
+        assert!(format!("{err}").contains("timed out"), "{err}");
+        assert!(start.elapsed() < Duration::from_secs(10));
     }
 
     #[test]

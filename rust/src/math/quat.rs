@@ -49,6 +49,11 @@ impl Quat {
         Quat::new(self.w, -self.x, -self.y, -self.z)
     }
 
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.w.is_finite() && self.x.is_finite() && self.y.is_finite() && self.z.is_finite()
+    }
+
     /// Hamilton product.
     pub fn mul(self, o: Quat) -> Quat {
         Quat::new(

@@ -48,6 +48,13 @@ impl Se3 {
         }
     }
 
+    /// All eight parameters are finite — the tracking watchdog's
+    /// divergence test.
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.q.is_finite() && self.t.is_finite()
+    }
+
     pub fn inverse(self) -> Se3 {
         let qi = self.q.normalized().conjugate();
         let ri = qi.to_mat3();

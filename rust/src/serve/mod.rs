@@ -33,8 +33,44 @@
 //!
 //! Because slots synchronize co-scene sessions at keyframes, their
 //! streams must advance roughly in lockstep — [`serve`]'s round-robin
-//! submission provides this. A stalled peer surfaces as a
-//! [`crate::map_share::TURN_TIMEOUT`] error, not a deadlock.
+//! submission provides this. A stalled peer surfaces as a turn-timeout
+//! error ([`ServerConfig::shard_turn_timeout_ms`], default
+//! [`crate::map_share::TURN_TIMEOUT`]), not a deadlock.
+//!
+//! ## Failure model: supervised sessions
+//!
+//! One stream's failure must not take the fleet down. Every per-frame
+//! step runs under a supervisor (`catch_unwind` around
+//! [`SlamSession::on_frame`]): a panicking or erroring session is moved
+//! to the terminal [`SessionStatus::Failed`] state — its remaining
+//! queued frames are drained and dropped, its shared-map rank is
+//! quarantined ([`SlamSession::abort`]) so co-scene survivors keep
+//! their shard bit-identical to a run where the victim simply stopped
+//! at its failure epoch — and every *other* session keeps running
+//! untouched. Incoming frames are validated first
+//! ([`crate::dataset::Frame::validate`]): a frame with non-finite
+//! depth/color or mismatched geometry is **quarantined** (counted,
+//! logged, never fed to the session) rather than fatal, and because a
+//! rejected frame does not advance the session's stream, the surviving
+//! pose trajectory is bit-identical to feeding the stream with the bad
+//! frame removed. Tracking divergences recover *inside* the session
+//! (the watchdog in [`crate::slam::tracking`]) and surface here as
+//! [`SessionStatus::Degraded`].
+//!
+//! [`SlamServer::finish`] therefore returns an outcome for **every**
+//! session — partial results plus a [`SessionStatus`] — instead of one
+//! fatal `Err`; only an all-failed fleet turns [`serve`] into an error.
+//! Fleet health (failed/degraded counts, quarantined frames, watchdog
+//! recoveries) surfaces in [`ServerReport`] and its JSON
+//! (`BENCH_e2e.json`).
+//!
+//! Deterministic fault injection for drills and tests rides the same
+//! path: a [`SessionSpec::faults`] schedule ([`crate::fault::FaultPlan`],
+//! TOML `faults = "panic@8,nan-depth@3"`) corrupts, drops, delays, or
+//! panics exactly at the scheduled submitted-frame indices, on the
+//! worker, before validation — so an injected NaN frame exercises the
+//! real quarantine path and an injected panic exercises the real
+//! supervisor.
 //!
 //! ## Determinism contract
 //!
@@ -75,8 +111,9 @@
 
 use crate::config::RunConfig;
 use crate::dataset::{Frame, SyntheticDataset};
+use crate::fault::{corrupt_depth, corrupt_rgb, panic_message, FaultKind, FaultPlan};
 use crate::gaussian::GaussianStore;
-use crate::map_share::{SceneRegistry, SceneStats, ShardHandle};
+use crate::map_share::{SceneRegistry, SceneStats, ShardHandle, TURN_TIMEOUT};
 use crate::math::Se3;
 use crate::render::{Parallelism, RenderConfig, StageCounters};
 use crate::slam::algorithms::SlamConfig;
@@ -84,7 +121,9 @@ use crate::slam::mapping::MappingStats;
 use crate::slam::session::SlamSession;
 use crate::slam::tracking::TrackingStats;
 use anyhow::{anyhow, bail, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
+use std::time::Duration;
 
 /// Server-wide resources: how many worker threads drive sessions, and
 /// the total render-thread budget they partition.
@@ -97,11 +136,46 @@ pub struct ServerConfig {
     /// ([`Parallelism::share`] of the *session* count, so per-session
     /// numerics cannot depend on the worker count).
     pub budget: Parallelism,
+    /// Upper bound, in milliseconds, a co-scene session waits for its
+    /// shard `(epoch, rank)` turn slot before erroring (default
+    /// [`crate::map_share::TURN_TIMEOUT`]). Lower it in tests/drills
+    /// that deliberately stall a peer; raise it for very uneven
+    /// per-frame costs.
+    pub shard_turn_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { workers: 0, budget: Parallelism::auto() }
+        ServerConfig {
+            workers: 0,
+            budget: Parallelism::auto(),
+            shard_turn_timeout_ms: TURN_TIMEOUT.as_millis() as u64,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from a TOML `[server]` section (`workers`, `threads` — the
+    /// render budget, `0` = auto —, `shard_turn_timeout_ms`). Unknown
+    /// keys are an error to catch typos; a missing section yields the
+    /// defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = crate::config::TomlDoc::parse(text)?;
+        let mut cfg = ServerConfig::default();
+        for (key, value) in doc.section("server") {
+            let v = value.to_string_value();
+            match key {
+                "workers" => cfg.workers = v.parse()?,
+                "threads" => {
+                    let n: usize = v.parse()?;
+                    cfg.budget =
+                        if n == 0 { Parallelism::auto() } else { Parallelism::fixed(n) };
+                }
+                "shard_turn_timeout_ms" => cfg.shard_turn_timeout_ms = v.parse()?,
+                _ => bail!("unknown [server] config key: {key}"),
+            }
+        }
+        Ok(cfg)
     }
 }
 
@@ -119,6 +193,11 @@ pub struct SessionSpec {
     /// [`crate::map_share::MapShard`] (map + Adam moments +
     /// covisibility-gated mapping). `None` keeps a private map.
     pub scene: Option<String>,
+    /// Deterministic fault-injection schedule for this session's stream
+    /// (drills and tests — see the module docs). Applied on the worker,
+    /// keyed by submitted-frame index. [`FaultPlan::none`] (the
+    /// default) injects nothing.
+    pub faults: FaultPlan,
 }
 
 /// The per-session RNG seed: a pure function of the spec's base seed and
@@ -129,6 +208,44 @@ pub fn session_seed(base: u64, session_id: usize) -> u64 {
     base ^ (session_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
+/// Terminal health of one served session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Every submitted frame processed cleanly.
+    Ok,
+    /// The session completed but needed intervention along the way:
+    /// quarantined (rejected/dropped) frames, or tracking-watchdog
+    /// recoveries/divergences. Its results cover the frames it did
+    /// process.
+    Degraded,
+    /// The session died (panic or error) at submitted-frame index
+    /// `frame`; later frames were drained. Its partial results (poses
+    /// and map up to the failure) are still in the outcome.
+    Failed { frame: u32, reason: String },
+}
+
+impl SessionStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, SessionStatus::Ok)
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, SessionStatus::Degraded)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, SessionStatus::Failed { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionStatus::Ok => "ok",
+            SessionStatus::Degraded => "degraded",
+            SessionStatus::Failed { .. } => "failed",
+        }
+    }
+}
+
 /// Everything a finished session leaves behind (all `Send` — the session
 /// itself, holding thread-bound backends, never crosses threads).
 #[derive(Clone, Debug)]
@@ -136,6 +253,16 @@ pub struct SessionOutcome {
     pub name: String,
     /// Scene key the session's map was shared under, if any.
     pub scene: Option<String>,
+    /// Terminal health; partial results below stay valid when `Failed`.
+    pub status: SessionStatus,
+    /// Submitted-stream indices the supervisor quarantined (fault-drop
+    /// or validation reject) — never fed to the session, so the pose
+    /// stream is the submitted stream minus these.
+    pub quarantined_frames: Vec<u32>,
+    /// Tracking-watchdog retry attempts across the stream.
+    pub recoveries: u32,
+    /// Frames whose tracking fell back to the constant-velocity prior.
+    pub divergences: u32,
     pub est_poses: Vec<Se3>,
     pub store: GaussianStore,
     pub track_counters: StageCounters,
@@ -149,11 +276,21 @@ pub struct SessionOutcome {
 }
 
 impl SessionOutcome {
-    /// Strip the `Send` results out of a finished session.
-    fn from_session(name: String, scene: Option<String>, mut s: SlamSession) -> Self {
+    /// Strip the `Send` results out of a finished (or aborted) session.
+    fn from_session(
+        name: String,
+        scene: Option<String>,
+        status: SessionStatus,
+        quarantined_frames: Vec<u32>,
+        mut s: SlamSession,
+    ) -> Self {
         SessionOutcome {
             name,
             scene,
+            status,
+            quarantined_frames,
+            recoveries: s.track_recoveries,
+            divergences: s.track_divergences,
             est_poses: std::mem::take(&mut s.est_poses),
             store: std::mem::take(&mut s.store),
             track_counters: s.track_counters,
@@ -166,14 +303,59 @@ impl SessionOutcome {
         }
     }
 
+    /// A synthesized outcome for a session whose worker died outside
+    /// the per-frame supervisor (construction races, internal bugs) —
+    /// the fleet report still carries one entry per session.
+    fn lost(name: String, scene: Option<String>, reason: String) -> Self {
+        SessionOutcome {
+            name,
+            scene,
+            status: SessionStatus::Failed { frame: 0, reason },
+            quarantined_frames: Vec::new(),
+            recoveries: 0,
+            divergences: 0,
+            est_poses: Vec::new(),
+            store: GaussianStore::new(),
+            track_counters: StageCounters::new(),
+            map_counters: StageCounters::new(),
+            per_frame_track: Vec::new(),
+            per_map: Vec::new(),
+            track_stats: Vec::new(),
+            map_stats: Vec::new(),
+            covis_skips: 0,
+        }
+    }
+
+    /// Frames the supervisor quarantined for this session.
+    pub fn frames_quarantined(&self) -> u32 {
+        self.quarantined_frames.len() as u32
+    }
+
     /// Evaluate this outcome against its sequence's ground truth — the
     /// same metric definitions as [`SlamSession::evaluate`] (one shared
     /// implementation, so server reports cannot drift from `SlamStats`).
+    /// Quarantined frames are removed from the ground-truth stream
+    /// before comparison (the session never consumed them), and a
+    /// failed session's shorter pose stream evaluates over the prefix
+    /// it did process.
     pub fn evaluate(
         &self,
         data: &SyntheticDataset,
         rcfg: &RenderConfig,
     ) -> crate::slam::SlamStats {
+        let kept_storage: Vec<Frame>;
+        let frames: &[Frame] = if self.quarantined_frames.is_empty() {
+            &data.frames
+        } else {
+            kept_storage = data
+                .frames
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !self.quarantined_frames.contains(&(*i as u32)))
+                .map(|(_, f)| f.clone())
+                .collect();
+            &kept_storage
+        };
         crate::slam::session::evaluate_stream(
             &self.est_poses,
             &self.store,
@@ -183,7 +365,7 @@ impl SessionOutcome {
             self.track_counters,
             self.map_counters,
             self.covis_skips,
-            data,
+            frames,
             rcfg,
         )
     }
@@ -206,6 +388,10 @@ pub struct SlamServer {
     txs: Vec<mpsc::SyncSender<(usize, Frame)>>,
     /// session id → worker index.
     assignment: Vec<usize>,
+    /// session id → (name, scene, intrinsics) — kept server-side for
+    /// submit-time validation and for synthesizing a `Failed` outcome
+    /// when a worker dies outside the per-frame supervisor.
+    session_meta: Vec<(String, Option<String>, crate::camera::Intrinsics)>,
     handles: Vec<std::thread::JoinHandle<WorkerResult>>,
     workers: usize,
     threads_per_session: usize,
@@ -245,11 +431,15 @@ impl SlamServer {
         // never of the worker count (see the determinism contract)
         let share = scfg.budget.share(n_sessions);
 
+        let session_meta: Vec<(String, Option<String>, crate::camera::Intrinsics)> =
+            specs.iter().map(|s| (s.name.clone(), s.scene.clone(), s.intr)).collect();
+
         // scene shards attach here, in session-id order on this thread,
         // *before* any worker exists — shard ranks (the merge order) are
         // therefore a pure function of the spec list, never of worker
         // scheduling or join order
-        let mut registry = SceneRegistry::new();
+        let mut registry =
+            SceneRegistry::with_turn_timeout(Duration::from_millis(scfg.shard_turn_timeout_ms));
         let mut per_worker: Vec<Vec<(usize, SessionSpec, Option<ShardHandle>)>> =
             vec![Vec::new(); workers];
         let mut assignment = Vec::with_capacity(n_sessions);
@@ -298,6 +488,7 @@ impl SlamServer {
         Ok(SlamServer {
             txs,
             assignment,
+            session_meta,
             handles,
             workers,
             threads_per_session: share.threads(),
@@ -331,24 +522,38 @@ impl SlamServer {
     /// Queues are bounded ([`SUBMIT_QUEUE_DEPTH`] per worker): when the
     /// owning worker falls behind, this call blocks until it drains —
     /// back-pressure instead of unbounded frame buffering.
+    ///
+    /// The frame is validated against the session's intrinsics before
+    /// it is enqueued — a caller holding obviously-corrupt data learns
+    /// immediately, with context, instead of poisoning the stream.
+    /// (Workers re-validate after fault injection, so the in-stream
+    /// quarantine path stays covered either way.)
     pub fn submit(&self, session: usize, frame: Frame) -> Result<()> {
         let worker = *self
             .assignment
             .get(session)
             .ok_or_else(|| anyhow!("unknown session {session}"))?;
+        let (name, _, intr) = &self.session_meta[session];
+        frame
+            .validate(intr)
+            .with_context(|| format!("submit to session {session} (`{name}`) rejected"))?;
         self.txs[worker].send((session, frame)).map_err(|_| {
-            anyhow!("worker {worker} exited early — SlamServer::finish() returns its error")
+            anyhow!("worker {worker} exited early — SlamServer::finish() reports its sessions")
         })
     }
 
-    /// Close the queues, drain and join every worker, and return the
-    /// session outcomes ordered by session id. The first worker error
-    /// (session failure or panic) is returned instead, if any.
+    /// Close the queues, drain and join every worker, and return one
+    /// [`SessionOutcome`] per session, ordered by session id — always,
+    /// even when sessions failed: a failed session yields its partial
+    /// results under [`SessionStatus::Failed`], and a worker that died
+    /// outside the per-frame supervisor yields synthesized `Failed`
+    /// outcomes for its sessions. The fleet never turns into one opaque
+    /// `Err`.
     pub fn finish(mut self) -> Result<Vec<SessionOutcome>> {
         self.txs.clear(); // drops every sender: workers drain and exit
         let n = self.assignment.len();
         let mut outcomes: Vec<Option<SessionOutcome>> = (0..n).map(|_| None).collect();
-        let mut first_err = None;
+        let mut worker_failures: Vec<String> = Vec::new();
         for h in self.handles.drain(..) {
             match h.join() {
                 Ok(Ok(list)) => {
@@ -356,40 +561,62 @@ impl SlamServer {
                         outcomes[id] = Some(outcome);
                     }
                 }
-                Ok(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow!("server worker panicked"));
-                    }
-                }
+                Ok(Err(e)) => worker_failures.push(format!("{e:#}")),
+                Err(payload) => worker_failures
+                    .push(format!("worker panicked: {}", panic_message(payload.as_ref()))),
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        outcomes
+        // outcomes lost to a dead worker share that worker's failure
+        // message (workers do not say which session they were on when
+        // they died outside the supervisor — the message does)
+        let fallback_reason = worker_failures
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "worker produced no outcome".to_string());
+        Ok(outcomes
             .into_iter()
             .enumerate()
-            .map(|(id, o)| o.ok_or_else(|| anyhow!("session {id} produced no outcome")))
-            .collect()
+            .map(|(id, o)| {
+                o.unwrap_or_else(|| {
+                    let (name, scene, _) = self.session_meta[id].clone();
+                    SessionOutcome::lost(name, scene, fallback_reason.clone())
+                })
+            })
+            .collect())
     }
+}
+
+/// One session as its worker supervises it.
+struct Slot {
+    id: usize,
+    name: String,
+    scene: Option<String>,
+    faults: FaultPlan,
+    session: SlamSession,
+    /// Submitted-stream index of the next frame routed to this session
+    /// (counts quarantined and post-failure frames too — the fault
+    /// schedule and failure reports are keyed by the *submitted*
+    /// stream).
+    next_frame: u32,
+    /// Submitted indices quarantined (fault-drop / validation reject).
+    quarantined: Vec<u32>,
+    /// Terminal failure, if the supervisor caught one.
+    failed: Option<(u32, String)>,
 }
 
 /// One worker: construct the assigned sessions (on this thread — they
 /// are not `Send`), report readiness, then block on the queue and step
-/// sessions until the server closes it.
+/// sessions until the server closes it. Per-frame work runs under the
+/// supervisor (see the module docs): a failing session is isolated,
+/// not fatal — the worker keeps serving its other sessions and returns
+/// an outcome for every one.
 fn worker_entry(
     specs: Vec<(usize, SessionSpec, Option<ShardHandle>)>,
     share: Parallelism,
     rx: mpsc::Receiver<(usize, Frame)>,
     ready: mpsc::Sender<std::result::Result<(), String>>,
 ) -> WorkerResult {
-    let mut sessions: Vec<(usize, String, Option<String>, SlamSession)> =
-        Vec::with_capacity(specs.len());
+    let mut slots: Vec<Slot> = Vec::with_capacity(specs.len());
     for (id, spec, handle) in specs {
         let mut cfg = spec.cfg;
         cfg.seed = session_seed(cfg.seed, id);
@@ -401,7 +628,16 @@ fn worker_entry(
             SlamSession::create(cfg, spec.intr, share)
         };
         match built {
-            Ok(s) => sessions.push((id, spec.name, spec.scene, s)),
+            Ok(s) => slots.push(Slot {
+                id,
+                name: spec.name,
+                scene: spec.scene,
+                faults: spec.faults,
+                session: s,
+                next_frame: 0,
+                quarantined: Vec::new(),
+                failed: None,
+            }),
             Err(e) => {
                 ready.send(Err(format!("{e}"))).ok();
                 return Err(e.context(format!("constructing session {id}")));
@@ -415,22 +651,108 @@ fn worker_entry(
     drop(ready);
 
     while let Ok((sid, frame)) = rx.recv() {
-        let Some((_, name, _, session)) =
-            sessions.iter_mut().find(|(id, _, _, _)| *id == sid)
-        else {
+        let Some(slot) = slots.iter_mut().find(|s| s.id == sid) else {
             bail!("frame for session {sid} routed to the wrong worker");
         };
-        session
-            .on_frame(&frame)
-            .with_context(|| format!("session {sid} (`{name}`) failed"))?;
+        let k = slot.next_frame;
+        slot.next_frame += 1;
+        if slot.failed.is_some() {
+            // terminal: drain this session's queue so siblings on the
+            // same worker (and the submitter) never block on a corpse
+            continue;
+        }
+
+        // deterministic fault injection — before validation, so
+        // injected corruption exercises the real quarantine path
+        let mut frame = frame;
+        let mut panic_due = false;
+        let mut dropped = false;
+        for kind in slot.faults.faults_at(k) {
+            match kind {
+                FaultKind::Drop => dropped = true,
+                FaultKind::NanDepth => corrupt_depth(&mut frame),
+                FaultKind::NanRgb => corrupt_rgb(&mut frame),
+                FaultKind::Panic => panic_due = true,
+                FaultKind::Slow { millis } => {
+                    std::thread::sleep(Duration::from_millis(millis as u64))
+                }
+            }
+        }
+        if dropped {
+            slot.quarantined.push(k);
+            continue;
+        }
+
+        // frame watchdog: a corrupt frame is quarantined (skipped,
+        // counted), never fed to the session and never fatal
+        if let Err(e) = frame.validate(&slot.session.intr) {
+            eprintln!(
+                "[serve] session {} (`{}`): frame {k} quarantined: {e:#}",
+                slot.id, slot.name
+            );
+            slot.quarantined.push(k);
+            continue;
+        }
+
+        // the supervised step: a panic or error here fails THIS
+        // session only — shared resources are released as a failure
+        // (shard quarantine) and the fleet keeps running
+        let step = catch_unwind(AssertUnwindSafe(|| {
+            if panic_due {
+                panic!("fault-injected panic at frame {k}");
+            }
+            slot.session.on_frame(&frame).map(|_| ())
+        }));
+        let failure = match step {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(format!("{e:#}")),
+            Err(payload) => Some(format!("panicked: {}", panic_message(payload.as_ref()))),
+        };
+        if let Some(reason) = failure {
+            eprintln!(
+                "[serve] session {} (`{}`) failed at frame {k}: {reason}",
+                slot.id, slot.name
+            );
+            slot.session.abort(&reason);
+            slot.failed = Some((k, reason));
+        }
     }
 
-    let mut out = Vec::with_capacity(sessions.len());
-    for (id, name, scene, mut session) in sessions {
-        session
-            .finish()
-            .with_context(|| format!("session {id} (`{name}`) mapping worker failed"))?;
-        out.push((id, SessionOutcome::from_session(name, scene, session)));
+    let mut out = Vec::with_capacity(slots.len());
+    for mut slot in slots {
+        let status = match slot.failed.take() {
+            Some((frame, reason)) => SessionStatus::Failed { frame, reason },
+            None => match catch_unwind(AssertUnwindSafe(|| slot.session.finish())) {
+                Ok(Ok(())) => {
+                    if slot.session.track_divergences > 0
+                        || slot.session.track_recoveries > 0
+                        || !slot.quarantined.is_empty()
+                    {
+                        SessionStatus::Degraded
+                    } else {
+                        SessionStatus::Ok
+                    }
+                }
+                Ok(Err(e)) => SessionStatus::Failed {
+                    frame: slot.session.frames_seen(),
+                    reason: format!("mapping worker failed: {e:#}"),
+                },
+                Err(payload) => SessionStatus::Failed {
+                    frame: slot.session.frames_seen(),
+                    reason: format!("finish panicked: {}", panic_message(payload.as_ref())),
+                },
+            },
+        };
+        out.push((
+            slot.id,
+            SessionOutcome::from_session(
+                slot.name,
+                slot.scene,
+                status,
+                slot.quarantined,
+                slot.session,
+            ),
+        ));
     }
     Ok(out)
 }
@@ -457,6 +779,14 @@ pub struct SessionReport {
     pub dataset: String,
     /// Scene key the session's map was shared under, if any.
     pub scene: Option<String>,
+    /// Terminal health (failed sessions report their partial metrics).
+    pub status: SessionStatus,
+    /// Frames the supervisor quarantined (dropped/rejected).
+    pub frames_quarantined: u32,
+    /// Tracking-watchdog retry attempts.
+    pub recoveries: u32,
+    /// Frames that fell back to the constant-velocity prior.
+    pub divergences: u32,
     pub frames: usize,
     pub ate_rmse_m: f32,
     pub psnr_db: f64,
@@ -485,6 +815,26 @@ pub struct ServerReport {
 }
 
 impl ServerReport {
+    /// Sessions that ended [`SessionStatus::Failed`].
+    pub fn failed_sessions(&self) -> usize {
+        self.sessions.iter().filter(|s| s.status.is_failed()).count()
+    }
+
+    /// Sessions that ended [`SessionStatus::Degraded`].
+    pub fn degraded_sessions(&self) -> usize {
+        self.sessions.iter().filter(|s| s.status.is_degraded()).count()
+    }
+
+    /// Frames quarantined across the fleet.
+    pub fn frames_quarantined(&self) -> u64 {
+        self.sessions.iter().map(|s| s.frames_quarantined as u64).sum()
+    }
+
+    /// Tracking-watchdog recoveries across the fleet.
+    pub fn recoveries(&self) -> u64 {
+        self.sessions.iter().map(|s| s.recoveries as u64).sum()
+    }
+
     pub fn print(&self) {
         println!(
             "== splatonic serve: {} session(s) over {} worker(s), {} render thread(s)/session ==",
@@ -494,7 +844,7 @@ impl ServerReport {
         );
         for s in &self.sessions {
             println!(
-                "  `{}` ({}): {} frames | ATE {:.2} cm | PSNR {:.2} dB | {} Gaussians | {} mapping calls{}{}",
+                "  `{}` ({}): {} frames | ATE {:.2} cm | PSNR {:.2} dB | {} Gaussians | {} mapping calls{}{}{}",
                 s.name,
                 s.dataset,
                 s.frames,
@@ -511,14 +861,28 @@ impl ServerReport {
                     Some(scene) => format!(" | scene `{scene}`"),
                     None => String::new(),
                 },
+                match &s.status {
+                    SessionStatus::Ok => String::new(),
+                    SessionStatus::Degraded => format!(
+                        " | DEGRADED ({} quarantined, {} recoveries, {} divergences)",
+                        s.frames_quarantined, s.recoveries, s.divergences
+                    ),
+                    SessionStatus::Failed { frame, reason } =>
+                        format!(" | FAILED at frame {frame}: {reason}"),
+                },
             );
         }
         for sc in &self.scenes {
             println!(
-                "  scene `{}`: {} session(s) | {} Gaussians ({:.2} MiB incl. Adam) | {} keyframes \
+                "  scene `{}`: {} session(s){} | {} Gaussians ({:.2} MiB incl. Adam) | {} keyframes \
                  | {} contributed / {} skipped ({:.0}% skip) | {} mapping iters saved",
                 sc.scene,
                 sc.sessions,
+                if sc.failed_sessions > 0 {
+                    format!(" ({} quarantined)", sc.failed_sessions)
+                } else {
+                    String::new()
+                },
                 sc.map_gaussians,
                 sc.map_bytes as f64 / (1024.0 * 1024.0),
                 sc.keyframes,
@@ -529,8 +893,15 @@ impl ServerReport {
             );
         }
         println!(
-            "  fleet: {} frames in {:.2} s -> {:.1} frames/s",
-            self.total_frames, self.wall_seconds, self.fleet_frames_per_sec
+            "  fleet: {} frames in {:.2} s -> {:.1} frames/s | health: {} ok / {} degraded / {} failed, {} frames quarantined, {} recoveries",
+            self.total_frames,
+            self.wall_seconds,
+            self.fleet_frames_per_sec,
+            self.sessions.len() - self.failed_sessions() - self.degraded_sessions(),
+            self.degraded_sessions(),
+            self.failed_sessions(),
+            self.frames_quarantined(),
+            self.recoveries(),
         );
     }
 
@@ -549,10 +920,22 @@ impl ServerReport {
             "  \"fleet_frames_per_sec\": {:.3},\n",
             self.fleet_frames_per_sec
         ));
+        json.push_str(&format!("  \"failed_sessions\": {},\n", self.failed_sessions()));
+        json.push_str(&format!(
+            "  \"degraded_sessions\": {},\n",
+            self.degraded_sessions()
+        ));
+        json.push_str(&format!(
+            "  \"frames_quarantined\": {},\n",
+            self.frames_quarantined()
+        ));
+        json.push_str(&format!("  \"recoveries\": {},\n", self.recoveries()));
         json.push_str("  \"sessions\": [\n");
         for (i, s) in self.sessions.iter().enumerate() {
             json.push_str(&format!(
-                "    {{\"name\": {}, \"dataset\": {}, \"scene\": {}, \"frames\": {}, \
+                "    {{\"name\": {}, \"dataset\": {}, \"scene\": {}, \"status\": {}, \
+                 \"failure\": {}, \"frames\": {}, \"frames_quarantined\": {}, \
+                 \"recoveries\": {}, \"divergences\": {}, \
                  \"ate_rmse_m\": {:.6}, \
                  \"psnr_db\": {:.3}, \"n_gaussians\": {}, \"track_iters\": {}, \
                  \"mapping_invocations\": {}, \"covis_skips\": {}, \
@@ -563,7 +946,18 @@ impl ServerReport {
                     Some(scene) => json_string(scene),
                     None => "null".to_string(),
                 },
+                json_string(s.status.name()),
+                match &s.status {
+                    SessionStatus::Failed { frame, reason } => format!(
+                        "{{\"frame\": {frame}, \"reason\": {}}}",
+                        json_string(reason)
+                    ),
+                    _ => "null".to_string(),
+                },
                 s.frames,
+                s.frames_quarantined,
+                s.recoveries,
+                s.divergences,
                 s.ate_rmse_m,
                 s.psnr_db,
                 s.n_gaussians,
@@ -578,11 +972,13 @@ impl ServerReport {
         json.push_str("  \"scenes\": [\n");
         for (i, sc) in self.scenes.iter().enumerate() {
             json.push_str(&format!(
-                "    {{\"scene\": {}, \"sessions\": {}, \"map_gaussians\": {}, \
+                "    {{\"scene\": {}, \"sessions\": {}, \"failed_sessions\": {}, \
+                 \"map_gaussians\": {}, \
                  \"map_bytes\": {}, \"keyframes\": {}, \"contributions\": {}, \
                  \"covis_skips\": {}, \"skip_rate\": {:.4}, \"mapping_iters_saved\": {}}}{}\n",
                 json_string(&sc.scene),
                 sc.sessions,
+                sc.failed_sessions,
                 sc.map_gaussians,
                 sc.map_bytes,
                 sc.keyframes,
@@ -647,6 +1043,7 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
             intr: data.intr,
             threaded_mapping: r.threaded_mapping,
             scene: (!r.scene.is_empty()).then(|| r.scene.clone()),
+            faults: r.faults.clone(),
         });
         datasets.push(data);
     }
@@ -671,6 +1068,21 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
     let outcomes = server.finish()?;
     let wall_seconds = start.elapsed().as_secs_f64();
 
+    // a degraded fleet still reports; a fleet with nothing alive is an
+    // error the caller must see
+    if outcomes.iter().all(|o| o.status.is_failed()) {
+        let first = outcomes
+            .iter()
+            .find_map(|o| match &o.status {
+                SessionStatus::Failed { frame, reason } => {
+                    Some(format!("`{}` at frame {frame}: {reason}", o.name))
+                }
+                _ => None,
+            })
+            .unwrap_or_default();
+        bail!("every session in the fleet failed; first failure: {first}");
+    }
+
     let rcfg = RenderConfig::default();
     let mut sessions = Vec::with_capacity(outcomes.len());
     let mut total_frames = 0usize;
@@ -681,6 +1093,10 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
             name: outcome.name.clone(),
             dataset: data.name.clone(),
             scene: outcome.scene.clone(),
+            status: outcome.status.clone(),
+            frames_quarantined: outcome.frames_quarantined(),
+            recoveries: outcome.recoveries,
+            divergences: outcome.divergences,
             frames: stats.frames,
             ate_rmse_m: stats.ate_rmse_m,
             psnr_db: stats.psnr_db,
@@ -769,7 +1185,7 @@ mod tests {
             FleetJob { name: "corridor".into(), run: corridor },
             FleetJob { name: "fast".into(), run: fast },
         ];
-        let scfg = ServerConfig { workers: 3, budget: Parallelism::auto() };
+        let scfg = ServerConfig { workers: 3, budget: Parallelism::auto(), ..Default::default() };
         let report = serve(&jobs, &scfg).unwrap();
         assert_eq!(report.sessions.len(), 3);
         assert_eq!(report.workers, 3);
@@ -791,6 +1207,7 @@ mod tests {
             intr: data.intr,
             threaded_mapping: false,
             scene: None,
+            faults: FaultPlan::none(),
         };
         let server = SlamServer::start(vec![spec], &ServerConfig::default()).unwrap();
         assert_eq!(server.n_sessions(), 1);
@@ -807,7 +1224,8 @@ mod tests {
             FleetJob { name: "a".into(), run: quick_run(2) },
             FleetJob { name: "b".into(), run: quick_run(2) },
         ];
-        let scfg = ServerConfig { workers: 16, budget: Parallelism::fixed(8) };
+        let scfg =
+            ServerConfig { workers: 16, budget: Parallelism::fixed(8), ..Default::default() };
         let report = serve(&jobs, &scfg).unwrap();
         assert_eq!(report.workers, 2, "workers clamp to the session count");
         assert_eq!(report.threads_per_session, 4, "budget splits per session");
@@ -830,7 +1248,7 @@ mod tests {
             FleetJob { name: "bob".into(), run: b },
             FleetJob { name: "carol".into(), run: c },
         ];
-        let scfg = ServerConfig { workers: 2, budget: Parallelism::fixed(2) };
+        let scfg = ServerConfig { workers: 2, budget: Parallelism::fixed(2), ..Default::default() };
         let report = serve(&jobs, &scfg).unwrap();
         assert_eq!(report.scenes.len(), 2);
         let lobby = report.scenes.iter().find(|s| s.scene == "lobby").unwrap();
@@ -862,6 +1280,7 @@ mod tests {
             intr: data.intr,
             threaded_mapping: true,
             scene: Some("lobby".into()),
+            faults: FaultPlan::none(),
         };
         let err = SlamServer::start(vec![spec], &ServerConfig::default()).unwrap_err();
         assert!(format!("{err}").contains("threaded_mapping"), "{err}");
@@ -872,5 +1291,62 @@ mod tests {
         assert_eq!(json_string("plain"), "\"plain\"");
         assert_eq!(json_string("a\"b\\c"), "\"a\\\"b\\\\c\"");
         assert_eq!(json_string("x\ny"), "\"x\\ny\"");
+    }
+
+    #[test]
+    fn server_config_from_toml() {
+        let cfg = ServerConfig::from_toml(
+            "[server]\nworkers = 3\nthreads = 4\nshard_turn_timeout_ms = 2500\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.budget.threads(), 4);
+        assert_eq!(cfg.shard_turn_timeout_ms, 2500);
+        // missing section → defaults
+        let cfg = ServerConfig::from_toml("[run]\nframes = 4\n").unwrap();
+        assert_eq!(cfg.workers, 0);
+        assert_eq!(
+            cfg.shard_turn_timeout_ms,
+            crate::map_share::TURN_TIMEOUT.as_millis() as u64
+        );
+        assert!(ServerConfig::from_toml("[server]\nwrokers = 3\n").is_err(), "typo must err");
+    }
+
+    #[test]
+    fn submit_rejects_corrupt_frames_with_context() {
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 32, 24, 2);
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3);
+        let spec = SessionSpec {
+            name: "only".into(),
+            cfg,
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: None,
+            faults: FaultPlan::none(),
+        };
+        let server = SlamServer::start(vec![spec], &ServerConfig::default()).unwrap();
+        let mut bad = data.frames[0].clone();
+        crate::fault::corrupt_depth(&mut bad);
+        let err = server.submit(0, bad).unwrap_err();
+        assert!(format!("{err:#}").contains("rejected"), "{err:#}");
+        // the stream is unharmed: clean frames still serve
+        server.submit(0, data.frames[0].clone()).unwrap();
+        let outcomes = server.finish().unwrap();
+        assert_eq!(outcomes[0].status, SessionStatus::Ok);
+        assert_eq!(outcomes[0].est_poses.len(), 1);
+    }
+
+    #[test]
+    fn fleet_report_carries_health_fields() {
+        let jobs = [FleetJob { name: String::new(), run: quick_run(3) }];
+        let report = serve(&jobs, &ServerConfig::default()).unwrap();
+        assert_eq!(report.failed_sessions(), 0);
+        assert_eq!(report.degraded_sessions(), 0);
+        assert_eq!(report.frames_quarantined(), 0);
+        assert_eq!(report.sessions[0].status, SessionStatus::Ok);
+        let json = report.to_json();
+        assert!(json.contains("\"failed_sessions\": 0"));
+        assert!(json.contains("\"status\": \"ok\""));
+        assert!(json.contains("\"frames_quarantined\": 0"));
     }
 }

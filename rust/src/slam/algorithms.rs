@@ -76,6 +76,7 @@ impl SlamConfig {
                 backend: BackendKind::SparseCpu,
                 full_frame: false,
                 loss: track_loss,
+                max_step_norm: 5.0,
             },
             mapping: MappingConfig {
                 every: 4,

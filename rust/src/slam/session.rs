@@ -58,7 +58,7 @@ use crate::render::backward_geom::GaussianGrads;
 use crate::render::{Parallelism, RenderConfig, StageCounters};
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 /// End-of-run summary (metrics plus accumulated work streams).
 #[derive(Clone, Debug)]
@@ -149,6 +149,12 @@ pub struct SlamSession {
     frame_idx: u32,
     /// Keyframes the shared-map covisibility gate skipped (Shared mode).
     pub covis_skips: u32,
+    /// Tracking-watchdog recoveries (retry attempts after a detected
+    /// divergence) accumulated across the stream.
+    pub track_recoveries: u32,
+    /// Frames whose tracking diverged on every attempt and fell back to
+    /// the constant-velocity prior.
+    pub track_divergences: u32,
     /// Last published map version folded into `store` (Worker and
     /// Shared modes — gates the snapshot clone).
     map_version: u64,
@@ -243,6 +249,8 @@ impl SlamSession {
             rng: Pcg32::new(cfg.seed),
             frame_idx: 0,
             covis_skips: 0,
+            track_recoveries: 0,
+            track_divergences: 0,
             map_version: 0,
             finished: false,
         }
@@ -259,10 +267,18 @@ impl SlamSession {
     /// Process one frame: track (except frame 0, which is the anchor and
     /// is bootstrapped by mapping), then map every `cfg.mapping.every`
     /// frames — mapping at t strictly after tracking at t (Fig. 2).
+    ///
+    /// The frame is validated first ([`Frame::validate`]); a rejected
+    /// frame does **not** advance the stream — the caller may drop it
+    /// and feed the next one, and the session behaves exactly as if the
+    /// bad frame never arrived.
     pub fn on_frame(&mut self, frame: &Frame) -> Result<FrameEvent> {
         if self.finished {
             bail!("SlamSession::on_frame called after finish()");
         }
+        frame
+            .validate(&self.intr)
+            .with_context(|| format!("frame {} rejected", self.frame_idx))?;
         let idx = self.frame_idx;
         self.frame_idx += 1;
         let map_due = idx % self.cfg.mapping.every == 0;
@@ -319,6 +335,10 @@ impl SlamSession {
         self.track_counters.merge(&c);
         self.per_frame_track.push(c);
         self.track_stats.push(tstats.clone());
+        self.track_recoveries += tstats.recoveries;
+        if tstats.diverged {
+            self.track_divergences += 1;
+        }
 
         let last = *self.est_poses.last().unwrap();
         self.prev_rel = pose.compose(last.inverse());
@@ -488,6 +508,27 @@ impl SlamSession {
         Ok(())
     }
 
+    /// Terminal teardown after the session failed (a panic or error in
+    /// `on_frame`, caught by a supervisor): stop accepting frames and
+    /// release shared resources *as a failure* — a shared shard gets
+    /// [`crate::map_share::ShardHandle::quarantine`]d (tombstone +
+    /// reason) rather than cleanly detached, and a mapping worker is
+    /// joined with its error swallowed (the supervisor already has the
+    /// primary failure). Never errs or panics; idempotent.
+    pub fn abort(&mut self, reason: &str) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        match &mut self.mapping {
+            MappingExec::Worker(worker) => {
+                let _ = worker.join();
+            }
+            MappingExec::Shared { handle, .. } => handle.quarantine(reason),
+            MappingExec::Inline { .. } => {}
+        }
+    }
+
     /// Frames consumed so far.
     pub fn frames_seen(&self) -> u32 {
         self.frame_idx
@@ -520,7 +561,7 @@ impl SlamSession {
             self.track_counters,
             self.map_counters,
             self.covis_skips,
-            data,
+            &data.frames,
             &self.rcfg,
         ))
     }
@@ -531,6 +572,13 @@ impl SlamSession {
 /// [`SlamSession::evaluate`] and the server's per-session reports
 /// ([`crate::serve::SessionOutcome::evaluate`]), so the two surfaces
 /// cannot drift apart.
+///
+/// `frames` must be the ground-truth frames the session *actually
+/// consumed*, in order (a supervisor that quarantined frames passes the
+/// stream minus the rejected ones). A session that failed mid-stream
+/// has fewer poses than frames; the comparison truncates to the common
+/// prefix — metrics over the frames that were processed — and an empty
+/// pose stream evaluates to zeroed metrics instead of asserting.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn evaluate_stream(
     est_poses: &[Se3],
@@ -541,29 +589,38 @@ pub(crate) fn evaluate_stream(
     track_counters: StageCounters,
     map_counters: StageCounters,
     covis_skips: u32,
-    data: &SyntheticDataset,
+    frames: &[Frame],
     rcfg: &RenderConfig,
 ) -> SlamStats {
-    let gt: Vec<Se3> = data.frames.iter().map(|f| f.gt_w2c).collect();
-    let ate = ate_rmse(est_poses, &gt);
-    let psnr = psnr_over_sequence(
-        store,
-        intr,
-        est_poses,
-        &data.frames,
-        (data.frames.len() / 4).max(1),
-        rcfg,
-    );
     let mean_loss = if track_stats.is_empty() {
         0.0
     } else {
         track_stats.iter().map(|s| s.final_loss).sum::<f32>() / track_stats.len() as f32
     };
+    let n = est_poses.len().min(frames.len());
+    if n == 0 {
+        return SlamStats {
+            ate_rmse_m: 0.0,
+            psnr_db: 0.0,
+            n_gaussians: store.len(),
+            frames: 0,
+            mapping_invocations: mapping_invocations as u32,
+            track_counters,
+            map_counters,
+            mean_track_final_loss: mean_loss,
+            covis_skips,
+        };
+    }
+    let est = &est_poses[..n];
+    let frames = &frames[..n];
+    let gt: Vec<Se3> = frames.iter().map(|f| f.gt_w2c).collect();
+    let ate = ate_rmse(est, &gt);
+    let psnr = psnr_over_sequence(store, intr, est, frames, (frames.len() / 4).max(1), rcfg);
     SlamStats {
         ate_rmse_m: ate,
         psnr_db: psnr,
         n_gaussians: store.len(),
-        frames: est_poses.len(),
+        frames: est.len(),
         mapping_invocations: mapping_invocations as u32,
         track_counters,
         map_counters,
@@ -606,8 +663,16 @@ struct MapShared {
 }
 
 impl MapShared {
+    /// Poison-tolerant lock: the publish protocol only ever swaps in a
+    /// fully-built store clone, so a panicking peer cannot leave the
+    /// state half-written — the `failed` flag, not mutex poisoning, is
+    /// the failure signal.
+    fn lock(&self) -> std::sync::MutexGuard<'_, MapState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     fn fail(&self) {
-        self.state.lock().unwrap().failed = true;
+        self.lock().failed = true;
         self.ready.notify_all();
     }
 }
@@ -696,7 +761,7 @@ impl MappingWorker {
                 per_map.push(c);
                 stats.push(st);
                 {
-                    let mut state = worker_shared.state.lock().unwrap();
+                    let mut state = worker_shared.lock();
                     state.store = store.clone();
                     state.version += 1;
                 }
@@ -732,7 +797,7 @@ impl MappingWorker {
     /// `seen` — tracking refreshes its snapshot once per publish, not
     /// once per frame.
     fn latest_newer_than(&self, seen: u64) -> Result<Option<(GaussianStore, u64)>> {
-        let state = self.shared.state.lock().unwrap();
+        let state = self.shared.lock();
         if state.failed {
             bail!("mapping worker failed — finish() returns its error");
         }
@@ -746,9 +811,13 @@ impl MappingWorker {
     /// least `version` completed invocations; returns the published map
     /// and its (possibly later) version.
     fn wait_version(&self, version: u64) -> Result<(GaussianStore, u64)> {
-        let mut state = self.shared.state.lock().unwrap();
+        let mut state = self.shared.lock();
         while state.version < version && !state.failed {
-            state = self.shared.ready.wait(state).unwrap();
+            state = self
+                .shared
+                .ready
+                .wait(state)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         if state.failed {
             bail!("mapping worker failed — finish() returns its error");
@@ -914,6 +983,38 @@ mod tests {
         assert_eq!(stats.covis_skips, 2);
         assert_eq!(stats.mapping_invocations, 0);
         assert!(stats.ate_rmse_m < 0.3, "ATE {}", stats.ate_rmse_m);
+    }
+
+    #[test]
+    fn invalid_frames_are_rejected_without_advancing_the_stream() {
+        let data = quick_data(3);
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3);
+        let mut session = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+        session.on_frame(&data.frames[0]).unwrap();
+        let mut bad = data.frames[1].clone();
+        crate::fault::corrupt_depth(&mut bad);
+        let err = session.on_frame(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("rejected"), "{err:#}");
+        assert_eq!(session.frames_seen(), 1, "a rejected frame must not advance the stream");
+        // the next clean frame takes the rejected one's slot
+        let e = session.on_frame(&data.frames[1]).unwrap();
+        assert_eq!(e.frame_index, 1);
+    }
+
+    #[test]
+    fn abort_quarantines_a_shared_shard() {
+        let data = quick_data(2);
+        let cfg = SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3);
+        let mut reg = crate::map_share::SceneRegistry::new();
+        let ha = reg.attach("room", "a");
+        let mut a = SlamSession::attach_shared(cfg, data.intr, Parallelism::fixed(1), ha).unwrap();
+        a.on_frame(&data.frames[0]).unwrap();
+        a.abort("tracking panicked");
+        assert_eq!(reg.stats()[0].failed_sessions, 1);
+        assert!(a.on_frame(&data.frames[1]).is_err(), "aborted session accepts no frames");
+        // idempotent, and finish() after abort stays a no-op
+        a.abort("again");
+        a.finish().unwrap();
     }
 
     #[test]

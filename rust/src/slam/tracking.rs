@@ -40,6 +40,11 @@ pub struct TrackingConfig {
     /// instead of a sparse sample grid.
     pub full_frame: bool,
     pub loss: LossCfg,
+    /// Watchdog: a single Adam step moving the 7 pose parameters by more
+    /// than this L2 norm is a divergence (healthy steps are ~1e-3 scene
+    /// units; an exploding optimizer overshoots by orders of magnitude
+    /// before producing NaN). Checked alongside non-finite loss/pose.
+    pub max_step_norm: f32,
 }
 
 impl Default for TrackingConfig {
@@ -53,6 +58,7 @@ impl Default for TrackingConfig {
             backend: BackendKind::SparseCpu,
             full_frame: false,
             loss: LossCfg::tracking(),
+            max_step_norm: 5.0,
         }
     }
 }
@@ -60,17 +66,50 @@ impl Default for TrackingConfig {
 /// Per-frame tracking outcome.
 #[derive(Clone, Debug)]
 pub struct TrackingStats {
+    /// Optimization iterations actually executed (summed across the
+    /// initial attempt and any recovery re-run; a divergence stops an
+    /// attempt early).
     pub iterations: u32,
     pub final_loss: f32,
     pub first_loss: f32,
     pub pixels_per_iter: usize,
+    /// The watchdog detected a divergence (non-finite loss/pose or a
+    /// step-norm explosion) and the recovery re-run — reset to the
+    /// constant-velocity prior, widened sample budget — diverged too:
+    /// the returned pose is the prior, not an optimized estimate.
+    pub diverged: bool,
+    /// Recovery re-runs triggered by a detected divergence (0 on a
+    /// healthy frame; at most 1 per frame).
+    pub recoveries: u32,
+}
+
+/// One optimization attempt's outcome (internal to [`track_frame`]).
+struct Attempt {
+    pose: Se3,
+    first_loss: f32,
+    final_loss: f32,
+    pixels_per_iter: usize,
+    /// Iterations executed (== `cfg.iters` unless the watchdog stopped
+    /// the attempt early).
+    iterations: u32,
+    diverged: bool,
 }
 
 /// Optimize the pose of `frame` starting from `init` (constant-velocity
 /// prediction supplied by the system), rendering through `backend`.
 /// The session's scratch is reused across all `S_t` iterations — and
 /// across frames when the caller (the SLAM system) holds the session.
-/// Returns the refined pose.
+///
+/// A per-iteration **watchdog** guards the optimizer: a non-finite loss,
+/// a non-finite pose, or a parameter step larger than
+/// [`TrackingConfig::max_step_norm`] stops the attempt (the checks are
+/// pure observations — a healthy frame's numerics are bit-identical to a
+/// watchdog-free run). On divergence the pose is **reset to `init`**
+/// (the constant-velocity prior) and re-run once with a widened sample
+/// budget (half the tile → ~4× the pixels); if that diverges too, the
+/// prior itself is returned with [`TrackingStats::diverged`] set — a
+/// degraded-but-finite pose instead of a corrupted stream. Returns the
+/// refined (or fallen-back) pose.
 #[allow(clippy::too_many_arguments)]
 pub fn track_frame(
     backend: &mut dyn RenderBackend,
@@ -83,12 +122,72 @@ pub fn track_frame(
     rng: &mut Pcg32,
     counters: &mut StageCounters,
 ) -> Result<(Se3, TrackingStats)> {
+    // full-frame mode has no sample budget to widen: a re-run would be
+    // byte-identical to the first attempt, so fall straight back
+    let max_attempts = if cfg.full_frame { 1 } else { 2 };
+    let mut iterations = 0u32;
+    let mut recoveries = 0u32;
+    for attempt in 0..max_attempts {
+        let tile = if attempt == 0 { cfg.tile } else { (cfg.tile / 2).max(1) };
+        let a =
+            optimize_attempt(backend, store, intr, init, frame, cfg, tile, rcfg, rng, counters)?;
+        iterations += a.iterations;
+        if !a.diverged {
+            return Ok((
+                a.pose,
+                TrackingStats {
+                    iterations,
+                    final_loss: a.final_loss,
+                    first_loss: a.first_loss,
+                    pixels_per_iter: a.pixels_per_iter,
+                    diverged: false,
+                    recoveries,
+                },
+            ));
+        }
+        if attempt + 1 < max_attempts {
+            recoveries += 1;
+        }
+    }
+    // every attempt diverged: hand back the constant-velocity prior
+    // (finite by construction) with sanitized loss fields — a NaN here
+    // would poison the session's mean-loss accounting
+    Ok((
+        init,
+        TrackingStats {
+            iterations,
+            final_loss: 0.0,
+            first_loss: 0.0,
+            pixels_per_iter: 0,
+            diverged: true,
+            recoveries,
+        },
+    ))
+}
+
+/// One watchdog-guarded optimization run over `cfg.iters` iterations at
+/// sample tile `tile`, starting from `init` with fresh Adam state.
+#[allow(clippy::too_many_arguments)]
+fn optimize_attempt(
+    backend: &mut dyn RenderBackend,
+    store: &GaussianStore,
+    intr: crate::camera::Intrinsics,
+    init: Se3,
+    frame: &Frame,
+    cfg: &TrackingConfig,
+    tile: u32,
+    rcfg: &RenderConfig,
+    rng: &mut Pcg32,
+    counters: &mut StageCounters,
+) -> Result<Attempt> {
     let mut pose = init;
     let mut adam = Adam::new(7, AdamConfig::with_lr(1.0));
     let mut first_loss = 0.0f32;
     let mut final_loss = 0.0f32;
     let mut pixels_per_iter = 0usize;
     let mut prev_loss_map: Option<crate::render::image::Plane> = None;
+    let mut diverged = false;
+    let mut iterations = 0u32;
 
     for it in 0..cfg.iters {
         let cam = Camera::new(intr, pose);
@@ -114,7 +213,7 @@ pub fn track_frame(
             (bwd.pose.expect("pose grad"), value, intr.n_pixels())
         } else {
             let pixels =
-                sample_tracking(cfg.strategy, &frame.rgb, cfg.tile, prev_loss_map.as_ref(), rng);
+                sample_tracking(cfg.strategy, &frame.rgb, tile, prev_loss_map.as_ref(), rng);
             let job = RenderJob {
                 cam: &cam,
                 pixels: PixelSet::Sparse(&pixels),
@@ -141,15 +240,24 @@ pub fn track_frame(
             (bwd.pose.expect("pose grad"), l.value, pixels.len())
         };
         pixels_per_iter = n_px;
+        iterations = it + 1;
         if it == 0 {
             first_loss = loss_value;
         }
         final_loss = loss_value;
 
+        // watchdog: a non-finite residual means the pose already left
+        // the basin (or the frame fed NaNs through the loss)
+        if !loss_value.is_finite() {
+            diverged = true;
+            break;
+        }
+
         // Adam step on [q(4) | t(3)] with per-group lr
-        let mut params = [
+        let before = [
             pose.q.w, pose.q.x, pose.q.y, pose.q.z, pose.t.x, pose.t.y, pose.t.z,
         ];
+        let mut params = before;
         let grads = pg.flatten();
         let (lr_q, lr_t) = (cfg.lr_q, cfg.lr_t);
         adam.step_scaled(&mut params, &grads, &|i| if i < 4 { lr_q } else { lr_t });
@@ -157,17 +265,27 @@ pub fn track_frame(
             Quat::new(params[0], params[1], params[2], params[3]),
             Vec3::new(params[4], params[5], params[6]),
         );
+
+        // watchdog: non-finite parameters or a step-norm explosion
+        let step_sq: f32 = params
+            .iter()
+            .zip(&before)
+            .map(|(p, b)| (p - b) * (p - b))
+            .sum();
+        if !pose.is_finite() || !step_sq.is_finite() || step_sq.sqrt() > cfg.max_step_norm {
+            diverged = true;
+            break;
+        }
     }
 
-    Ok((
+    Ok(Attempt {
         pose,
-        TrackingStats {
-            iterations: cfg.iters,
-            final_loss,
-            first_loss,
-            pixels_per_iter,
-        },
-    ))
+        first_loss,
+        final_loss,
+        pixels_per_iter,
+        iterations,
+        diverged,
+    })
 }
 
 /// Every pixel as a sample set (dense baseline helper for tests/benches).
@@ -287,6 +405,62 @@ mod tests {
     fn all_pixels_covers_frame() {
         let px = all_pixels(8, 4);
         assert_eq!(px.len(), 32);
+    }
+
+    #[test]
+    fn watchdog_is_a_pure_observer_on_healthy_frames() {
+        // loosening the threshold must not change a single bit of a
+        // healthy run — the checks only read
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, 2);
+        let frame = &data.frames[1];
+        let init = Se3::new(frame.gt_w2c.q, frame.gt_w2c.t + Vec3::new(0.01, -0.005, 0.008));
+        let run = |max_step_norm: f32| {
+            let cfg = TrackingConfig { iters: 10, tile: 8, max_step_norm, ..Default::default() };
+            let mut backend = create_backend(cfg.backend, Parallelism::fixed(1)).unwrap();
+            let mut rng = Pcg32::new(11);
+            let mut c = StageCounters::new();
+            track_frame(
+                backend.as_mut(), &data.gt_store, data.intr, init, frame, &cfg,
+                &RenderConfig::default(), &mut rng, &mut c,
+            )
+            .unwrap()
+        };
+        let (p_default, s_default) = run(TrackingConfig::default().max_step_norm);
+        let (p_loose, s_loose) = run(1e30);
+        assert_eq!(p_default, p_loose, "watchdog must not perturb healthy numerics");
+        assert!(!s_default.diverged && s_default.recoveries == 0);
+        assert_eq!(s_default.iterations, s_loose.iterations);
+    }
+
+    #[test]
+    fn lr_explosion_falls_back_to_the_prior() {
+        // an absurd learning rate makes every Adam step a step-norm
+        // explosion: both attempts diverge, the constant-velocity prior
+        // comes back finite instead of a NaN pose
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 64, 48, 2);
+        let frame = &data.frames[1];
+        let init = Se3::new(frame.gt_w2c.q, frame.gt_w2c.t + Vec3::new(0.02, 0.0, -0.01));
+        let cfg = TrackingConfig {
+            iters: 6,
+            tile: 8,
+            lr_q: 1e9,
+            lr_t: 1e9,
+            ..Default::default()
+        };
+        let mut backend = create_backend(cfg.backend, Parallelism::fixed(1)).unwrap();
+        let mut rng = Pcg32::new(12);
+        let mut c = StageCounters::new();
+        let (pose, stats) = track_frame(
+            backend.as_mut(), &data.gt_store, data.intr, init, frame, &cfg,
+            &RenderConfig::default(), &mut rng, &mut c,
+        )
+        .unwrap();
+        assert!(stats.diverged, "1e9 lr must trip the step-norm watchdog");
+        assert_eq!(stats.recoveries, 1, "one widened-budget re-run is attempted");
+        assert_eq!(pose, init, "the fallback pose is the prior");
+        assert!(pose.is_finite());
+        assert!(stats.final_loss.is_finite(), "sanitized loss fields");
+        assert_eq!(stats.iterations, 2, "each attempt stops at its first exploding step");
     }
 
     #[test]

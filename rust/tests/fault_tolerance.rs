@@ -1,0 +1,298 @@
+//! Determinism *under failure* — the fault-tolerance contract of the
+//! serving engine (see `serve/mod.rs` "Failure model" and
+//! `map_share/mod.rs` "quarantine, not poisoning"):
+//!
+//! 1. A session killed by a mid-stream panic is isolated: siblings in
+//!    the same fleet finish **bit-identical** to a fault-free run, at
+//!    any worker count, and the victim still yields a partial outcome
+//!    under `SessionStatus::Failed`.
+//! 2. A failed co-scene session is tombstoned at its epoch boundary:
+//!    the survivor's shard contents are bit-identical across worker
+//!    counts (the epochs a rank completed are a pure function of its
+//!    failure frame, not of thread scheduling).
+//! 3. Quarantined frames (fault-dropped or rejected by the frame
+//!    watchdog) do not advance the session's stream: the surviving
+//!    pose/map state is bit-identical to feeding the stream *minus*
+//!    those frames, and evaluation stays finite.
+//!
+//! Like `parallel_determinism.rs`, every assertion is on exact bits
+//! (`f32::to_bits`), and the whole file is expected to pass under any
+//! `SPLATONIC_THREADS` setting.
+
+use splatonic::dataset::{Flavor, Scenario, SyntheticDataset};
+use splatonic::fault::FaultPlan;
+use splatonic::gaussian::GaussianStore;
+use splatonic::math::Se3;
+use splatonic::render::{Parallelism, RenderConfig};
+use splatonic::serve::{
+    ServerConfig, SessionOutcome, SessionSpec, SessionStatus, SlamServer,
+};
+use splatonic::slam::algorithms::{Algorithm, SlamConfig};
+
+fn assert_poses_bit_identical(a: &[Se3], b: &[Se3], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: pose count differs");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.q.w.to_bits(), pb.q.w.to_bits(), "{tag}: pose {i} q.w");
+        assert_eq!(pa.q.x.to_bits(), pb.q.x.to_bits(), "{tag}: pose {i} q.x");
+        assert_eq!(pa.q.y.to_bits(), pb.q.y.to_bits(), "{tag}: pose {i} q.y");
+        assert_eq!(pa.q.z.to_bits(), pb.q.z.to_bits(), "{tag}: pose {i} q.z");
+        assert_eq!(pa.t.x.to_bits(), pb.t.x.to_bits(), "{tag}: pose {i} t.x");
+        assert_eq!(pa.t.y.to_bits(), pb.t.y.to_bits(), "{tag}: pose {i} t.y");
+        assert_eq!(pa.t.z.to_bits(), pb.t.z.to_bits(), "{tag}: pose {i} t.z");
+    }
+}
+
+fn assert_stores_bit_identical(a: &GaussianStore, b: &GaussianStore, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: store size differs");
+    for i in 0..a.len() {
+        assert_eq!(a.means[i].x.to_bits(), b.means[i].x.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.means[i].y.to_bits(), b.means[i].y.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.means[i].z.to_bits(), b.means[i].z.to_bits(), "{tag}: mean {i}");
+        assert_eq!(
+            a.opacity_logits[i].to_bits(),
+            b.opacity_logits[i].to_bits(),
+            "{tag}: opacity {i}"
+        );
+        assert_eq!(a.colors[i].x.to_bits(), b.colors[i].x.to_bits(), "{tag}: color {i}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. Session isolation: a panicking session never taints its siblings
+// ---------------------------------------------------------------------
+
+/// The same heterogeneous 3-session fleet as `parallel_determinism.rs`,
+/// with a fault schedule per session.
+fn run_private_fleet(workers: usize, faults: [FaultPlan; 3]) -> Vec<SessionOutcome> {
+    let cells = [
+        (Flavor::Replica, Scenario::Orbit, Algorithm::SplaTam),
+        (Flavor::Replica, Scenario::Corridor, Algorithm::MonoGs),
+        (Flavor::Tum, Scenario::FastRotation, Algorithm::FlashSlam),
+    ];
+    let mut specs = Vec::new();
+    let mut datasets = Vec::new();
+    for ((i, (flavor, scenario, algo)), faults) in
+        cells.into_iter().enumerate().zip(faults)
+    {
+        let data = SyntheticDataset::generate_scenario(flavor, scenario, i, 48, 32, 6);
+        specs.push(SessionSpec {
+            name: scenario.name().to_string(),
+            cfg: SlamConfig::splatonic(algo).scaled(0.3),
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: None,
+            faults,
+        });
+        datasets.push(data);
+    }
+    let server = SlamServer::start(
+        specs,
+        &ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() },
+    )
+    .unwrap();
+    let longest = datasets.iter().map(|d| d.len()).max().unwrap();
+    for f in 0..longest {
+        for (sid, data) in datasets.iter().enumerate() {
+            if f < data.len() {
+                // must keep succeeding even after a session has failed:
+                // the supervisor drains a corpse's queue, it never
+                // wedges the submitter
+                server.submit(sid, data.frames[f].clone()).unwrap();
+            }
+        }
+    }
+    server.finish().unwrap()
+}
+
+#[test]
+fn injected_panic_fails_one_session_and_leaves_siblings_bit_identical() {
+    let reference = run_private_fleet(1, [(); 3].map(|_| FaultPlan::none()));
+    assert!(reference.iter().all(|o| o.status.is_ok()), "fault-free fleet not Ok");
+
+    for workers in [1usize, 4] {
+        let faulty = run_private_fleet(
+            workers,
+            [FaultPlan::none(), FaultPlan::none().panic_at(3), FaultPlan::none()],
+        );
+        let tag = format!("workers={workers}");
+
+        // the victim: terminal Failed at the injected frame, with its
+        // partial results (frames 0..3 were processed before the kill)
+        match &faulty[1].status {
+            SessionStatus::Failed { frame, reason } => {
+                assert_eq!(*frame, 3, "{tag}: failure frame");
+                assert!(
+                    reason.contains("fault-injected panic"),
+                    "{tag}: reason `{reason}`"
+                );
+            }
+            other => panic!("{tag}: victim status {other:?}, expected Failed"),
+        }
+        assert_eq!(faulty[1].est_poses.len(), 3, "{tag}: victim partial poses");
+        assert!(faulty[1].store.len() > 0, "{tag}: victim partial map lost");
+
+        // the siblings: healthy AND bit-identical to the fault-free
+        // fleet — supervision must not perturb numerics
+        for sid in [0usize, 2] {
+            let tag = format!("{tag} sibling {sid}");
+            assert!(faulty[sid].status.is_ok(), "{tag}: not Ok");
+            assert_poses_bit_identical(
+                &reference[sid].est_poses,
+                &faulty[sid].est_poses,
+                &tag,
+            );
+            assert_stores_bit_identical(&reference[sid].store, &faulty[sid].store, &tag);
+            assert_eq!(
+                reference[sid].track_counters, faulty[sid].track_counters,
+                "{tag}: track counters"
+            );
+            assert_eq!(
+                reference[sid].per_frame_track, faulty[sid].per_frame_track,
+                "{tag}: per-frame counters"
+            );
+        }
+
+        // a Failed outcome still evaluates — over the prefix it tracked
+        let data = SyntheticDataset::generate_scenario(
+            Flavor::Replica,
+            Scenario::Corridor,
+            1,
+            48,
+            32,
+            6,
+        );
+        let stats = faulty[1].evaluate(&data, &RenderConfig::default());
+        assert_eq!(stats.frames, 3, "{tag}: partial evaluation window");
+        assert!(stats.ate_rmse_m.is_finite(), "{tag}: partial ATE not finite");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Shard quarantine: a dead co-scene peer leaves survivors
+//    bit-identical across worker counts
+// ---------------------------------------------------------------------
+
+fn run_shared_pair(workers: usize, victim_faults: FaultPlan) -> Vec<SessionOutcome> {
+    let data = SyntheticDataset::generate(Flavor::Replica, 3, 48, 32, 6);
+    let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+    let mut specs = Vec::new();
+    for (name, faults) in
+        [("hall-a", FaultPlan::none()), ("hall-b", victim_faults)]
+    {
+        specs.push(SessionSpec {
+            name: name.into(),
+            cfg,
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: Some("hall".into()),
+            faults,
+        });
+    }
+    let server = SlamServer::start(
+        specs,
+        &ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() },
+    )
+    .unwrap();
+    // round-robin — co-scene sessions advance the shard in lockstep
+    for f in &data.frames {
+        server.submit(0, f.clone()).unwrap();
+        server.submit(1, f.clone()).unwrap();
+    }
+    server.finish().unwrap()
+}
+
+#[test]
+fn co_scene_peer_failure_is_quarantined_at_a_deterministic_epoch() {
+    // rank 1 dies at submitted frame 3: it contributed exactly epoch 0
+    // (frame 0) in every schedule, so the tombstone lands at epoch 1 no
+    // matter how threads interleave
+    let reference = run_shared_pair(1, FaultPlan::none().panic_at(3));
+    assert!(reference[0].status.is_ok(), "survivor must stay healthy");
+    assert!(
+        matches!(reference[0].status, SessionStatus::Ok),
+        "survivor saw no quarantine/divergence, must be Ok not Degraded"
+    );
+    assert!(matches!(reference[1].status, SessionStatus::Failed { frame: 3, .. }));
+    // the survivor kept mapping past the victim's death
+    assert_eq!(reference[0].est_poses.len(), 6, "survivor tracked the full stream");
+    assert!(reference[0].store.len() > 0);
+
+    for workers in [2usize, 3] {
+        let candidate = run_shared_pair(workers, FaultPlan::none().panic_at(3));
+        let tag = format!("shared-with-failure workers={workers}");
+        assert!(candidate[0].status.is_ok(), "{tag}: survivor status");
+        assert!(matches!(candidate[1].status, SessionStatus::Failed { frame: 3, .. }));
+        assert_poses_bit_identical(
+            &reference[0].est_poses,
+            &candidate[0].est_poses,
+            &tag,
+        );
+        assert_stores_bit_identical(&reference[0].store, &candidate[0].store, &tag);
+        assert_eq!(
+            reference[0].map_counters, candidate[0].map_counters,
+            "{tag}: survivor mapping work differs"
+        );
+        assert_eq!(
+            reference[0].covis_skips, candidate[0].covis_skips,
+            "{tag}: survivor covisibility gate differs"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Frame quarantine: corrupt/dropped frames never advance the stream
+// ---------------------------------------------------------------------
+
+#[test]
+fn quarantined_frames_leave_the_surviving_stream_bit_identical() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 1, 48, 32, 6);
+    let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+    let run = |faults: FaultPlan, keep: &dyn Fn(usize) -> bool| {
+        let spec = SessionSpec {
+            name: "solo".into(),
+            cfg,
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: None,
+            faults,
+        };
+        let server = SlamServer::start(
+            vec![spec],
+            &ServerConfig { workers: 1, budget: Parallelism::auto(), ..Default::default() },
+        )
+        .unwrap();
+        for (i, f) in data.frames.iter().enumerate() {
+            if keep(i) {
+                server.submit(0, f.clone()).unwrap();
+            }
+        }
+        server.finish().unwrap().remove(0)
+    };
+
+    // frame 2's depth is corrupted in flight (watchdog reject), frame 4
+    // is dropped outright — both quarantine without advancing the stream
+    let faulty =
+        run(FaultPlan::none().nan_depth_at(2).drop_at(4), &|_| true);
+    // the clean run never submits those frames at all
+    let clean = run(FaultPlan::none(), &|i| i != 2 && i != 4);
+
+    assert!(faulty.status.is_degraded(), "quarantine must degrade, not fail");
+    assert_eq!(faulty.quarantined_frames, vec![2, 4]);
+    assert_eq!(faulty.frames_quarantined(), 2);
+    assert!(clean.status.is_ok());
+
+    let tag = "stream-minus-quarantined";
+    assert_poses_bit_identical(&clean.est_poses, &faulty.est_poses, tag);
+    assert_stores_bit_identical(&clean.store, &faulty.store, tag);
+    assert_eq!(clean.track_counters, faulty.track_counters);
+    assert_eq!(clean.map_counters, faulty.map_counters);
+    assert_eq!(clean.per_frame_track, faulty.per_frame_track);
+    assert_eq!(clean.per_map, faulty.per_map);
+
+    // evaluation realigns ground truth by removing quarantined indices:
+    // metrics stay finite and cover exactly the surviving frames
+    let stats = faulty.evaluate(&data, &RenderConfig::default());
+    assert_eq!(stats.frames, 4);
+    assert!(stats.ate_rmse_m.is_finite());
+    assert!(stats.psnr_db.is_finite());
+}

@@ -31,6 +31,7 @@
 
 use splatonic::camera::{Camera, Intrinsics};
 use splatonic::dataset::{Flavor, Scenario, SyntheticDataset};
+use splatonic::fault::FaultPlan;
 use splatonic::gaussian::{Gaussian, GaussianStore};
 use splatonic::math::{Pcg32, Quat, Se3, Vec3};
 use splatonic::render::image::Plane;
@@ -414,10 +415,11 @@ fn one_session_server_is_bit_identical_to_slam_system_run() {
         intr: data.intr,
         threaded_mapping: false,
         scene: None,
+        faults: FaultPlan::none(),
     };
     let server = SlamServer::start(
         vec![spec],
-        &ServerConfig { workers: 1, budget: Parallelism::auto() },
+        &ServerConfig { workers: 1, budget: Parallelism::auto(), ..Default::default() },
     )
     .unwrap();
     for f in &data.frames {
@@ -456,6 +458,7 @@ fn fleet() -> (Vec<SessionSpec>, Vec<SyntheticDataset>) {
             intr: data.intr,
             threaded_mapping: false,
             scene: None,
+            faults: FaultPlan::none(),
         });
         datasets.push(data);
     }
@@ -473,7 +476,7 @@ fn run_fleet(workers: usize, order: Interleave) -> Vec<SessionOutcome> {
     let (specs, datasets) = fleet();
     let server = SlamServer::start(
         specs,
-        &ServerConfig { workers, budget: Parallelism::auto() },
+        &ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() },
     )
     .unwrap();
     match order {
@@ -518,11 +521,12 @@ fn run_shared_fleet(workers: usize) -> Vec<SessionOutcome> {
             intr: data.intr,
             threaded_mapping: false,
             scene: Some("hall".into()),
+            faults: FaultPlan::none(),
         });
     }
     let server = SlamServer::start(
         specs,
-        &ServerConfig { workers, budget: Parallelism::auto() },
+        &ServerConfig { workers, budget: Parallelism::auto(), ..Default::default() },
     )
     .unwrap();
     for f in &data.frames {
@@ -575,10 +579,11 @@ fn single_session_shard_is_bit_identical_to_private_run() {
             intr: data.intr,
             threaded_mapping: false,
             scene,
+            faults: FaultPlan::none(),
         };
         let server = SlamServer::start(
             vec![spec],
-            &ServerConfig { workers: 1, budget: Parallelism::auto() },
+            &ServerConfig { workers: 1, budget: Parallelism::auto(), ..Default::default() },
         )
         .unwrap();
         for f in &data.frames {
