@@ -66,6 +66,11 @@
 //! `PoisonError` unwraps through the fleet. Per-scene
 //! [`SceneStats::failed_sessions`] reports the tombstone count.
 //!
+//! The slot-order and poison-tolerance-via-rollback contracts are
+//! catalogued in `docs/DETERMINISM.md` and statically enforced by
+//! `cargo run -p detlint` (rules SPL005/SPL006; the turn-timeout
+//! wall-clock read is an SPL003 scoped allowance in `detlint.toml`).
+//!
 //! # Covisibility gating
 //!
 //! Before contributing a keyframe, a session scores it against the
@@ -801,7 +806,7 @@ mod tests {
             t1.join().unwrap();
             let stats = reg.stats();
             assert_eq!(stats[0].contributions, 6);
-            reg.shards[0].state.lock().unwrap().store.means.clone()
+            reg.shards[0].lock_state().store.means.clone()
         };
         let a = run(false);
         let b = run(true);

@@ -29,7 +29,10 @@
 //! densify/prune passes use the same Gaussian-chunk fan-out with
 //! chunk-order merges. One knob pins the whole hot path: [`auto_threads`]
 //! (the `SPLATONIC_THREADS` env var), or the per-session
-//! `with_threads(n)` constructors.
+//! `with_threads(n)` constructors. The full contract — chunk-order
+//! merges, `total_cmp` float sorts, env resolved once at the
+//! [`Parallelism`] edge — is catalogued in `docs/DETERMINISM.md` and
+//! statically enforced by `cargo run -p detlint` (rules SPL001–SPL004).
 //!
 //! Callers do not drive the pipelines directly: [`backend`] packages each
 //! one as a [`backend::RenderBackend`] **session** with an explicit

@@ -1,0 +1,179 @@
+//! `detlint.toml` — scan roots plus the scoped allowlist. Hand-rolled
+//! parser for the TOML subset the config needs (one `[scan]` table,
+//! `[[allow]]` array-of-tables, string / bool / string-array values),
+//! so the tool stays dependency-free and offline-buildable.
+//!
+//! The allowlist is the approval mechanism for the module-scoped rules
+//! (SPL003/SPL004/SPL006): every rule fires everywhere by default, and
+//! each entry narrows the approval as far as it can — ideally to the
+//! owning function — and must say *why*. A reasonless entry is a config
+//! error, mirroring how reasonless inline suppressions are findings.
+
+use crate::rules::RULES;
+
+/// Parsed `detlint.toml`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    /// Directories (repo-root-relative) to scan.
+    pub roots: Vec<String>,
+    pub allows: Vec<Allow>,
+}
+
+/// One `[[allow]]` entry: suppress `rule` findings under `path`,
+/// optionally narrowed to named enclosing functions and/or test code.
+#[derive(Clone, Debug, Default)]
+pub struct Allow {
+    pub rule: String,
+    /// File path or directory prefix, repo-root-relative.
+    pub path: String,
+    /// When non-empty: only findings lexically inside one of these
+    /// `fn` names are allowed (the telemetry-scoping mechanism).
+    pub functions: Vec<String>,
+    /// When true: only findings inside `#[cfg(test)]` modules or
+    /// `#[test]` functions are allowed.
+    pub in_tests: bool,
+    /// Mandatory justification — a reasonless entry fails config
+    /// validation, mirroring reasonless inline suppressions (SPL000).
+    pub reason: String,
+}
+
+impl Config {
+    /// A config with no roots and no allows — every rule fires raw.
+    /// Used by fixture tests and direct `scan_source` callers.
+    pub fn empty() -> Config {
+        Config::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Config, String> {
+        enum Section {
+            None,
+            Scan,
+            Allow,
+        }
+        let mut cfg = Config::default();
+        let mut section = Section::None;
+        for (idx, raw) in text.lines().enumerate() {
+            let no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[allow]]" {
+                cfg.allows.push(Allow::default());
+                section = Section::Allow;
+                continue;
+            }
+            if line == "[scan]" {
+                section = Section::Scan;
+                continue;
+            }
+            if line.starts_with('[') {
+                return Err(format!("detlint.toml:{no}: unknown section `{line}`"));
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("detlint.toml:{no}: expected `key = value`"))?;
+            let key = k.trim();
+            let val = v.trim();
+            match section {
+                Section::None => {
+                    return Err(format!("detlint.toml:{no}: key `{key}` outside a section"));
+                }
+                Section::Scan => match key {
+                    "roots" => cfg.roots = parse_string_array(val, no)?,
+                    _ => return Err(format!("detlint.toml:{no}: unknown [scan] key `{key}`")),
+                },
+                Section::Allow => {
+                    let a = cfg.allows.last_mut().expect("section implies an entry");
+                    match key {
+                        "rule" => a.rule = parse_string(val, no)?,
+                        "path" => a.path = parse_string(val, no)?,
+                        "functions" => a.functions = parse_string_array(val, no)?,
+                        "in_tests" => a.in_tests = parse_bool(val, no)?,
+                        "reason" => a.reason = parse_string(val, no)?,
+                        _ => {
+                            return Err(format!(
+                                "detlint.toml:{no}: unknown [[allow]] key `{key}`"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.roots.is_empty() {
+            return Err("detlint.toml: [scan] roots must list at least one directory".into());
+        }
+        for (i, a) in self.allows.iter().enumerate() {
+            let at = format!("[[allow]] entry {} ({} on `{}`)", i + 1, a.rule, a.path);
+            if !RULES.contains(&a.rule.as_str()) {
+                return Err(format!(
+                    "detlint.toml: {at}: unknown rule — expected one of {}",
+                    RULES.join(", ")
+                ));
+            }
+            if a.path.is_empty() {
+                return Err(format!("detlint.toml: {at}: missing `path`"));
+            }
+            if a.reason.trim().is_empty() {
+                return Err(format!(
+                    "detlint.toml: {at}: missing `reason` — every allowlist entry must say why \
+                     the hazard is safe there"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Drop a `#` comment, respecting (escape-free) quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(val: &str, no: usize) -> Result<String, String> {
+    let inner = val
+        .strip_prefix('"')
+        .and_then(|v| v.strip_suffix('"'))
+        .ok_or_else(|| format!("detlint.toml:{no}: expected a quoted string, got `{val}`"))?;
+    if inner.contains('"') {
+        return Err(format!("detlint.toml:{no}: embedded quotes are not supported"));
+    }
+    Ok(inner.to_string())
+}
+
+fn parse_bool(val: &str, no: usize) -> Result<bool, String> {
+    match val {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(format!("detlint.toml:{no}: expected true/false, got `{val}`")),
+    }
+}
+
+fn parse_string_array(val: &str, no: usize) -> Result<Vec<String>, String> {
+    let inner = val
+        .strip_prefix('[')
+        .and_then(|v| v.strip_suffix(']'))
+        .ok_or_else(|| format!("detlint.toml:{no}: expected a [\"…\", …] array, got `{val}`"))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue; // trailing comma
+        }
+        out.push(parse_string(part, no)?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,309 @@
+//! Hand-rolled token scanner for the subset of Rust that detlint needs:
+//! enough to tell identifiers and punctuation apart from the insides of
+//! line/block comments, (raw/byte) string literals, and char literals,
+//! with accurate line numbers. Not a parser — no precedence, no AST —
+//! which is exactly why the rules in [`crate::rules`] are written as
+//! local token-sequence patterns.
+//!
+//! Edge cases covered (and pinned by `tests/fixtures.rs`): nested block
+//! comments, `//` inside string literals, raw strings with arbitrary
+//! `#` runs (`r#"…"#`), byte and raw-byte strings, raw identifiers
+//! (`r#fn`), and the char-literal / lifetime ambiguity (`'a'` vs
+//! `'static`).
+
+/// Token classes detlint distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `partial_cmp`, ...).
+    Ident,
+    /// Single punctuation character (`::` arrives as two `:` tokens).
+    Punct,
+    /// Any string literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'static`).
+    Lifetime,
+    /// Numeric literal.
+    Num,
+    /// `// …` comment (text includes the slashes; doc comments too).
+    LineComment,
+    /// `/* … */` comment, nesting respected.
+    BlockComment,
+}
+
+/// One scanned token. `text` is the raw source slice (lossily decoded),
+/// kept so rules can inspect comments for `SAFETY:` / suppressions.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+    /// 1-based line of the token's last character (differs from `line`
+    /// only for multi-line strings and block comments).
+    pub end_line: u32,
+}
+
+/// Scan `src` into a flat token list, comments included.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1 }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+}
+
+impl Lexer<'_> {
+    fn run(mut self) -> Vec<Tok> {
+        let mut out = Vec::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                c if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => out.push(self.line_comment()),
+                b'/' if self.peek(1) == Some(b'*') => out.push(self.block_comment()),
+                b'"' => {
+                    let start = self.i;
+                    out.push(self.string(start));
+                }
+                b'r' | b'b' => out.push(self.r_or_b()),
+                b'\'' => out.push(self.char_or_lifetime()),
+                c if c == b'_' || c.is_ascii_alphabetic() => out.push(self.ident()),
+                c if c.is_ascii_digit() => out.push(self.number()),
+                _ => {
+                    let t = self.tok(TokKind::Punct, self.i, self.i + 1, self.line);
+                    self.i += 1;
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    fn peek(&self, k: usize) -> Option<u8> {
+        self.b.get(self.i + k).copied()
+    }
+
+    fn tok(&self, kind: TokKind, start: usize, end: usize, start_line: u32) -> Tok {
+        let end = end.min(self.b.len());
+        Tok {
+            kind,
+            text: String::from_utf8_lossy(&self.b[start..end]).into_owned(),
+            line: start_line,
+            end_line: self.line,
+        }
+    }
+
+    fn line_comment(&mut self) -> Tok {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        self.tok(TokKind::LineComment, start, self.i, self.line)
+    }
+
+    fn block_comment(&mut self) -> Tok {
+        let start = self.i;
+        let start_line = self.line;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.tok(TokKind::BlockComment, start, self.i, start_line)
+    }
+
+    /// Plain or byte string; `self.i` sits on the opening quote and
+    /// `start` on the first byte of the literal (the `b` prefix, if any).
+    fn string(&mut self, start: usize) -> Tok {
+        let start_line = self.line;
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => {
+                    if self.peek(1) == Some(b'\n') {
+                        self.line += 1;
+                    }
+                    self.i += 2;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.tok(TokKind::Str, start, self.i, start_line)
+    }
+
+    /// `r` / `b` lookahead: raw strings, byte strings, byte chars, raw
+    /// identifiers — or just an identifier that starts with r/b.
+    fn r_or_b(&mut self) -> Tok {
+        if self.b[self.i] == b'b' {
+            match self.peek(1) {
+                Some(b'"') => {
+                    let start = self.i;
+                    self.i += 1;
+                    return self.string(start);
+                }
+                Some(b'\'') => return self.byte_char(),
+                Some(b'r') => {
+                    if let Some(t) = self.try_raw_string(2) {
+                        return t;
+                    }
+                }
+                _ => {}
+            }
+            return self.ident();
+        }
+        if let Some(t) = self.try_raw_string(1) {
+            return t;
+        }
+        self.ident()
+    }
+
+    fn byte_char(&mut self) -> Tok {
+        let start = self.i;
+        let start_line = self.line;
+        self.i += 2; // `b` and the opening quote
+        if self.peek(0) == Some(b'\\') {
+            self.i += 2;
+        } else {
+            self.i += 1;
+        }
+        if self.peek(0) == Some(b'\'') {
+            self.i += 1;
+        }
+        self.tok(TokKind::Char, start, self.i, start_line)
+    }
+
+    /// `prefix` bytes (`r` or `br`), then `#`*N, then `"`; the literal
+    /// ends at `"` followed by exactly N `#`s. Returns `None` (state
+    /// untouched) when the lookahead is not a raw string — e.g. a raw
+    /// identifier like `r#fn`.
+    fn try_raw_string(&mut self, prefix: usize) -> Option<Tok> {
+        let mut j = self.i + prefix;
+        let mut hashes = 0usize;
+        while self.b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.b.get(j) != Some(&b'"') {
+            return None;
+        }
+        let start = self.i;
+        let start_line = self.line;
+        self.i = j + 1;
+        'outer: while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'"' => {
+                    for k in 0..hashes {
+                        if self.b.get(self.i + 1 + k) != Some(&b'#') {
+                            self.i += 1;
+                            continue 'outer;
+                        }
+                    }
+                    self.i += 1 + hashes;
+                    break;
+                }
+                _ => self.i += 1,
+            }
+        }
+        Some(self.tok(TokKind::Str, start, self.i, start_line))
+    }
+
+    /// `'` starts either a char literal (`'a'`, `'\n'`) or a lifetime
+    /// (`'static`): escaped → char; single char then `'` → char;
+    /// anything else → lifetime.
+    fn char_or_lifetime(&mut self) -> Tok {
+        let start = self.i;
+        let start_line = self.line;
+        match self.peek(1) {
+            Some(b'\\') => {
+                self.i += 3; // quote, backslash, escape head
+                while self.i < self.b.len() && self.b[self.i] != b'\'' && self.b[self.i] != b'\n' {
+                    self.i += 1;
+                }
+                if self.peek(0) == Some(b'\'') {
+                    self.i += 1;
+                }
+                self.tok(TokKind::Char, start, self.i, start_line)
+            }
+            Some(c) if c != b'\'' && self.peek(2) == Some(b'\'') => {
+                self.i += 3;
+                self.tok(TokKind::Char, start, self.i, start_line)
+            }
+            _ => {
+                self.i += 1;
+                while self.i < self.b.len()
+                    && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_alphanumeric())
+                {
+                    self.i += 1;
+                }
+                self.tok(TokKind::Lifetime, start, self.i, start_line)
+            }
+        }
+    }
+
+    fn ident(&mut self) -> Tok {
+        let start = self.i;
+        if self.b[self.i] == b'r' && self.peek(1) == Some(b'#') {
+            self.i += 2; // raw identifier: `r#fn`
+        }
+        while self.i < self.b.len()
+            && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_alphanumeric())
+        {
+            self.i += 1;
+        }
+        self.tok(TokKind::Ident, start, self.i, self.line)
+    }
+
+    fn number(&mut self) -> Tok {
+        let start = self.i;
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            if c == b'_' || c.is_ascii_alphanumeric() {
+                self.i += 1;
+            } else if c == b'.' && self.b.get(self.i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                // `1.5` continues the literal; `0..10` does not
+                self.i += 1;
+            } else if (c == b'+' || c == b'-') && matches!(self.b[self.i - 1], b'e' | b'E') {
+                // exponent sign: `1e-3`; the first iteration always
+                // consumes a digit, so `i - 1` is in bounds here
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        self.tok(TokKind::Num, start, self.i, self.line)
+    }
+}

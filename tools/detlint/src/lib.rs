@@ -1,0 +1,117 @@
+//! detlint — the determinism/fault-tolerance contract linter for the
+//! splatonic tree. See `docs/DETERMINISM.md` for the invariant catalog
+//! and [`rules`] for the rule set (SPL001–SPL007).
+//!
+//! Zero dependencies by design: the pass must build and run in every
+//! offline environment that builds the tree, so lexing ([`lexer`]) and
+//! config parsing ([`config`]) are hand-rolled instead of syn/toml.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use config::Config;
+use rules::Finding;
+
+/// The result of scanning a tree: surviving findings plus how many
+/// files were looked at (so "clean" is distinguishable from "scanned
+/// nothing").
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Machine-readable form for CI artifacts (`--format=json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"version\":1,\"files_scanned\":");
+        out.push_str(&self.files_scanned.to_string());
+        out.push_str(",\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"rule\":{},\"path\":{},\"line\":{},\"message\":{},\"snippet\":{}}}",
+                json_str(&f.rule),
+                json_str(&f.path),
+                f.line,
+                json_str(&f.message),
+                json_str(&f.snippet)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Scan the configured roots under `root` (or explicit `targets`,
+/// which may be files or directories, relative to `root`). File order
+/// is sorted so output and JSON artifacts are deterministic.
+pub fn scan_tree(root: &Path, cfg: &Config, targets: &[PathBuf]) -> Result<Report, String> {
+    let roots: Vec<PathBuf> = if targets.is_empty() {
+        cfg.roots.iter().map(|r| root.join(r)).collect()
+    } else {
+        targets
+            .iter()
+            .map(|t| if t.is_absolute() { t.clone() } else { root.join(t) })
+            .collect()
+    };
+    let mut files = Vec::new();
+    for r in &roots {
+        if r.is_file() {
+            files.push(r.clone());
+        } else if r.is_dir() {
+            collect_rs(r, &mut files)?;
+        } else {
+            return Err(format!("scan root `{}` does not exist", r.display()));
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f).map_err(|e| format!("read {}: {e}", f.display()))?;
+        let rel = f.strip_prefix(root).unwrap_or(f).to_string_lossy().replace('\\', "/");
+        findings.extend(rules::scan_source(&rel, &src, cfg));
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.as_str()).cmp(&(b.path.as_str(), b.line, b.rule.as_str()))
+    });
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

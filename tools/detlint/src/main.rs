@@ -1,0 +1,129 @@
+//! CLI for the determinism/fault-tolerance linter.
+//!
+//! ```text
+//! detlint [--format=human|json] [--root=DIR] [--config=FILE] [PATH …]
+//! ```
+//!
+//! With no `--root`, walks up from the current directory to the first
+//! `detlint.toml`. Positional paths (files or directories, root-
+//! relative) override the configured scan roots. Exit codes: 0 clean,
+//! 1 unsuppressed findings, 2 usage/config/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::config::Config;
+
+enum Format {
+    Human,
+    Json,
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("detlint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn real_main() -> Result<ExitCode, String> {
+    let mut format = Format::Human;
+    let mut root: Option<PathBuf> = None;
+    let mut config_path: Option<PathBuf> = None;
+    let mut targets: Vec<PathBuf> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if let Some(v) = a.strip_prefix("--format=") {
+            format = parse_format(v)?;
+        } else if a == "--format" {
+            let v = args.next().ok_or("--format needs a value")?;
+            format = parse_format(&v)?;
+        } else if let Some(v) = a.strip_prefix("--root=") {
+            root = Some(PathBuf::from(v));
+        } else if a == "--root" {
+            root = Some(PathBuf::from(args.next().ok_or("--root needs a value")?));
+        } else if let Some(v) = a.strip_prefix("--config=") {
+            config_path = Some(PathBuf::from(v));
+        } else if a == "--config" {
+            config_path = Some(PathBuf::from(args.next().ok_or("--config needs a value")?));
+        } else if a == "--help" || a == "-h" {
+            println!(
+                "detlint [--format=human|json] [--root=DIR] [--config=FILE] [PATH ...]\n\
+                 Enforces the determinism/fault-tolerance contracts (docs/DETERMINISM.md)."
+            );
+            return Ok(ExitCode::SUCCESS);
+        } else if a.starts_with('-') {
+            return Err(format!("unknown flag `{a}` (see --help)"));
+        } else {
+            targets.push(PathBuf::from(a));
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => match &config_path {
+            Some(c) => c.parent().map(PathBuf::from).unwrap_or_else(|| PathBuf::from(".")),
+            None => find_root()?,
+        },
+    };
+    let cfg_file = config_path.unwrap_or_else(|| root.join("detlint.toml"));
+    let text = std::fs::read_to_string(&cfg_file)
+        .map_err(|e| format!("read {}: {e}", cfg_file.display()))?;
+    let cfg = Config::parse(&text)?;
+    let report = detlint::scan_tree(&root, &cfg, &targets)?;
+
+    match format {
+        Format::Json => println!("{}", report.to_json()),
+        Format::Human => {
+            for f in &report.findings {
+                println!("{}:{}: {} {}", f.path, f.line, f.rule, f.message);
+                if !f.snippet.is_empty() {
+                    println!("    {}", f.snippet);
+                }
+            }
+            if report.findings.is_empty() {
+                println!("detlint: clean — {} file(s), 0 findings", report.files_scanned);
+            } else {
+                println!(
+                    "detlint: {} finding(s) in {} file(s) — see docs/DETERMINISM.md",
+                    report.findings.len(),
+                    report.files_scanned
+                );
+            }
+        }
+    }
+    if report.findings.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::from(1))
+    }
+}
+
+fn parse_format(v: &str) -> Result<Format, String> {
+    match v {
+        "human" => Ok(Format::Human),
+        "json" => Ok(Format::Json),
+        _ => Err(format!("unknown format `{v}` (human|json)")),
+    }
+}
+
+/// Walk up from the current directory to the first `detlint.toml`.
+fn find_root() -> Result<PathBuf, String> {
+    let mut dir = std::env::current_dir().map_err(|e| format!("current dir: {e}"))?;
+    loop {
+        if dir.join("detlint.toml").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            return Err(
+                "no detlint.toml found walking up from the current directory \
+                 (pass --root or --config)"
+                    .to_string(),
+            );
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! The rule set, distilled from the invariants the repo re-earned by
+//! hand across PRs 2–7 (catalogued in `docs/DETERMINISM.md`):
+//!
+//! * **SPL001** — `partial_cmp` float ordering (PR 2: `total_cmp` + a
+//!   deterministic tie-break is the permanent fix).
+//! * **SPL002** — `HashMap`/`HashSet` (nondeterministic iteration
+//!   order; chunk-merge order is the contract).
+//! * **SPL003** — `Instant::now`/`SystemTime::now` outside approved
+//!   telemetry scopes (timing must never steer render/mapping state).
+//! * **SPL004** — `std::env::var` outside the `Parallelism`/runtime
+//!   edge (PR 5: resolve once at the program edge).
+//! * **SPL005** — `.lock()/.read()/.write()` + `.unwrap()/.expect()`
+//!   (PR 7: poison-tolerance via `unwrap_or_else(PoisonError::into_inner)`,
+//!   consistency comes from rollback).
+//! * **SPL006** — `thread::spawn` outside registered worker modules
+//!   (everything else uses `std::thread::scope`).
+//! * **SPL007** — `unsafe` blocks without a `// SAFETY:` comment.
+//!
+//! Rules are local token-sequence patterns over [`crate::lexer`]'s
+//! stream; one pass per file also tracks brace depth, enclosing `fn`
+//! names, and `#[cfg(test)]`/`#[test]` scopes so `detlint.toml` allows
+//! can be narrowed to the owning function or to test code.
+//!
+//! Inline escape hatch: `// detlint::allow(SPL00x): <reason>` on the
+//! offending line or the line directly above. A suppression without a
+//! reason (or naming an unknown rule) is itself a finding — **SPL000**
+//! — and cannot be suppressed.
+
+use crate::config::{Allow, Config};
+use crate::lexer::{lex, Tok, TokKind};
+
+/// All suppressible rule IDs.
+pub const RULES: [&str; 7] = [
+    "SPL001", "SPL002", "SPL003", "SPL004", "SPL005", "SPL006", "SPL007",
+];
+
+/// One lint finding, after allowlist/suppression filtering.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+    /// The trimmed source line, for human output and CI artifacts.
+    pub snippet: String,
+    /// Names of the `fn`s lexically enclosing the finding, outermost
+    /// first (drives `functions = […]` allow scoping).
+    pub enclosing_fns: Vec<String>,
+    /// Inside a `#[cfg(test)]` module or `#[test]` function.
+    pub in_tests: bool,
+}
+
+/// Scan one file's source, returning findings that survive both the
+/// config allowlist and inline suppressions. `path` is repo-relative
+/// and is what allow `path` entries match against.
+pub fn scan_source(path: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let toks = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+
+    let mut comments: Vec<&Tok> = Vec::new();
+    let mut sig: Vec<&Tok> = Vec::new();
+    for t in &toks {
+        match t.kind {
+            TokKind::LineComment | TokKind::BlockComment => comments.push(t),
+            _ => sig.push(t),
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    // (line, rule) pairs: a suppression covers its own line and the next.
+    let mut suppressions: Vec<(u32, String)> = Vec::new();
+    for c in &comments {
+        for sup in parse_suppressions(&c.text, c.line) {
+            match sup.error {
+                None => suppressions.push((sup.line, sup.rule)),
+                Some(msg) => findings.push(Finding {
+                    rule: "SPL000".to_string(),
+                    path: path.to_string(),
+                    line: sup.line,
+                    message: msg,
+                    snippet: snippet_at(&lines, sup.line),
+                    enclosing_fns: Vec::new(),
+                    in_tests: false,
+                }),
+            }
+        }
+    }
+
+    let mut scan = Scan {
+        path,
+        lines: &lines,
+        sig: &sig,
+        comments: &comments,
+        depth: 0,
+        scopes: Vec::new(),
+        pending_fn: None,
+        pending_test_attr: false,
+        findings,
+    };
+    scan.run();
+    let mut findings = scan.findings;
+
+    findings.retain(|f| {
+        if f.rule == "SPL000" {
+            return true;
+        }
+        let inline = suppressions
+            .iter()
+            .any(|(l, r)| *r == f.rule && (*l == f.line || *l + 1 == f.line));
+        if inline {
+            return false;
+        }
+        !cfg.allows.iter().any(|a| allow_matches(a, path, f))
+    });
+    findings.sort_by(|a, b| (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str())));
+    findings
+}
+
+fn allow_matches(a: &Allow, path: &str, f: &Finding) -> bool {
+    if a.rule != f.rule {
+        return false;
+    }
+    let p = a.path.trim_end_matches('/');
+    if path != p && !path.starts_with(&format!("{p}/")) {
+        return false;
+    }
+    if a.in_tests && !f.in_tests {
+        return false;
+    }
+    if !a.functions.is_empty() && !f.enclosing_fns.iter().any(|n| a.functions.contains(n)) {
+        return false;
+    }
+    true
+}
+
+fn snippet_at(lines: &[&str], line: u32) -> String {
+    lines
+        .get(line as usize - 1)
+        .map(|l| l.trim().to_string())
+        .unwrap_or_default()
+}
+
+struct SupResult {
+    line: u32,
+    rule: String,
+    error: Option<String>,
+}
+
+/// Find every `detlint::allow(RULE): reason` marker in one comment.
+fn parse_suppressions(text: &str, start_line: u32) -> Vec<SupResult> {
+    const MARKER: &str = "detlint::allow(";
+    let mut out = Vec::new();
+    let mut search = 0usize;
+    while let Some(pos) = text[search..].find(MARKER) {
+        let at = search + pos;
+        let newlines = text[..at].bytes().filter(|b| *b == b'\n').count() as u32;
+        let line = start_line + newlines;
+        let rest = text[at + MARKER.len()..].lines().next().unwrap_or("");
+        let result = match rest.find(')') {
+            None => SupResult {
+                line,
+                rule: String::new(),
+                error: Some("unterminated `detlint::allow(` suppression".to_string()),
+            },
+            Some(cp) => {
+                let rule = rest[..cp].trim().to_string();
+                let tail = rest[cp + 1..].trim_start();
+                if !RULES.contains(&rule.as_str()) {
+                    SupResult {
+                        line,
+                        error: Some(format!(
+                            "suppression names unknown rule `{rule}` — expected one of {}",
+                            RULES.join(", ")
+                        )),
+                        rule,
+                    }
+                } else if !tail.starts_with(':') || tail[1..].trim().is_empty() {
+                    SupResult {
+                        line,
+                        error: Some(format!(
+                            "suppression for {rule} has no reason — write \
+                             `// detlint::allow({rule}): <why this is safe>`"
+                        )),
+                        rule,
+                    }
+                } else {
+                    SupResult { line, rule, error: None }
+                }
+            }
+        };
+        out.push(result);
+        search = at + MARKER.len();
+    }
+    out
+}
+
+struct Scope {
+    depth: usize,
+    fn_name: Option<String>,
+    is_test: bool,
+}
+
+struct Scan<'a> {
+    path: &'a str,
+    lines: &'a [&'a str],
+    sig: &'a [&'a Tok],
+    comments: &'a [&'a Tok],
+    depth: usize,
+    scopes: Vec<Scope>,
+    pending_fn: Option<String>,
+    pending_test_attr: bool,
+    findings: Vec<Finding>,
+}
+
+impl Scan<'_> {
+    fn run(&mut self) {
+        for i in 0..self.sig.len() {
+            let t = self.sig[i];
+            match t.kind {
+                TokKind::Punct => self.punct(i, &t.text),
+                TokKind::Ident => self.ident(i, t),
+                _ => {}
+            }
+        }
+    }
+
+    fn punct(&mut self, i: usize, text: &str) {
+        match text {
+            "{" => {
+                self.depth += 1;
+                let scope = Scope {
+                    depth: self.depth,
+                    fn_name: self.pending_fn.take(),
+                    is_test: self.pending_test_attr,
+                };
+                self.scopes.push(scope);
+                self.pending_test_attr = false;
+            }
+            "}" => {
+                if self.scopes.last().is_some_and(|s| s.depth == self.depth) {
+                    self.scopes.pop();
+                }
+                self.depth = self.depth.saturating_sub(1);
+            }
+            ";" => {
+                // bodyless fn / attribute on a non-block item
+                self.pending_fn = None;
+                self.pending_test_attr = false;
+            }
+            "#" => {
+                // `#[test]` or `#[cfg(test)]`
+                if self.punct_at(i + 1) == Some('[') {
+                    let test_attr = self.ident_at(i + 2) == Some("test")
+                        && self.punct_at(i + 3) == Some(']');
+                    let cfg_test = self.ident_at(i + 2) == Some("cfg")
+                        && self.punct_at(i + 3) == Some('(')
+                        && self.ident_at(i + 4) == Some("test")
+                        && self.punct_at(i + 5) == Some(')');
+                    if test_attr || cfg_test {
+                        self.pending_test_attr = true;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn ident(&mut self, i: usize, t: &Tok) {
+        match t.text.as_str() {
+            "fn" => {
+                self.pending_fn = self.ident_at(i + 1).map(String::from);
+            }
+            "partial_cmp" => self.push(
+                "SPL001",
+                t.line,
+                "`partial_cmp` orders floats nondeterministically under NaN; use `total_cmp` \
+                 with a deterministic tie-break (PR 2 contract, permanent)",
+            ),
+            "HashMap" | "HashSet" => self.push(
+                "SPL002",
+                t.line,
+                "`HashMap`/`HashSet` iteration order is nondeterministic; use \
+                 `BTreeMap`/`BTreeSet` or sort after collect",
+            ),
+            "Instant" | "SystemTime" if self.path_call(i, &["now"]) => self.push(
+                "SPL003",
+                t.line,
+                "wall-clock read outside an approved telemetry scope; timing must never \
+                 influence render/mapping state (scope it in detlint.toml)",
+            ),
+            "env" if self.path_call(i, &["var", "var_os"]) => self.push(
+                "SPL004",
+                t.line,
+                "environment read outside the Parallelism/runtime edge; resolve once at the \
+                 program edge and pass the value down (PR 5 rule)",
+            ),
+            "thread" if self.path_call(i, &["spawn"]) => self.push(
+                "SPL006",
+                t.line,
+                "`thread::spawn` outside a registered worker module; use `std::thread::scope` \
+                 so joins are structural, or register the module in detlint.toml",
+            ),
+            "lock" | "read" | "write" => {
+                let bare_unwrap = i > 0
+                    && self.punct_at(i - 1) == Some('.')
+                    && self.punct_at(i + 1) == Some('(')
+                    && self.punct_at(i + 2) == Some(')')
+                    && self.punct_at(i + 3) == Some('.')
+                    && matches!(self.ident_at(i + 4), Some("unwrap") | Some("expect"));
+                if bare_unwrap {
+                    self.push(
+                        "SPL005",
+                        t.line,
+                        "lock acquisition unwraps the poison error; use \
+                         `unwrap_or_else(PoisonError::into_inner)` — consistency comes from \
+                         rollback + versioning, not mutex poisoning (PR 7 contract)",
+                    );
+                }
+            }
+            "unsafe" => {
+                if self.punct_at(i + 1) == Some('{') && !self.has_safety_comment(t.line) {
+                    self.push(
+                        "SPL007",
+                        t.line,
+                        "`unsafe` block without a `// SAFETY:` comment justifying the invariants",
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// `sig[i]` then `::` then one of `names`.
+    fn path_call(&self, i: usize, names: &[&str]) -> bool {
+        self.punct_at(i + 1) == Some(':')
+            && self.punct_at(i + 2) == Some(':')
+            && self.ident_at(i + 3).is_some_and(|n| names.contains(&n))
+    }
+
+    fn ident_at(&self, i: usize) -> Option<&str> {
+        self.sig
+            .get(i)
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+    }
+
+    fn punct_at(&self, i: usize) -> Option<char> {
+        self.sig
+            .get(i)
+            .filter(|t| t.kind == TokKind::Punct)
+            .and_then(|t| t.text.chars().next())
+    }
+
+    /// A `SAFETY:` comment on the `unsafe` line or within 3 lines above.
+    fn has_safety_comment(&self, line: u32) -> bool {
+        let lo = line.saturating_sub(3);
+        self.comments
+            .iter()
+            .any(|c| c.text.contains("SAFETY:") && c.end_line >= lo && c.line <= line)
+    }
+
+    fn push(&mut self, rule: &str, line: u32, message: &str) {
+        let finding = Finding {
+            rule: rule.to_string(),
+            path: self.path.to_string(),
+            line,
+            message: message.to_string(),
+            snippet: snippet_at(self.lines, line),
+            enclosing_fns: self.scopes.iter().filter_map(|s| s.fn_name.clone()).collect(),
+            in_tests: self.scopes.iter().any(|s| s.is_test),
+        };
+        self.findings.push(finding);
+    }
+}

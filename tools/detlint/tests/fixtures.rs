@@ -1,0 +1,277 @@
+//! Fixture tests: one firing and one clean snippet per rule, the
+//! suppression contract (reason required), config scoping (functions /
+//! in_tests / path prefixes), and the lexer edge cases the rules
+//! depend on (raw strings, nested block comments, `//` inside strings,
+//! char literals vs lifetimes).
+
+use detlint::config::Config;
+use detlint::rules::scan_source;
+
+/// Rule/line pairs for a snippet scanned with an empty config.
+fn findings(src: &str) -> Vec<(String, u32)> {
+    scan_source("fixture.rs", src, &Config::empty())
+        .into_iter()
+        .map(|f| (f.rule, f.line))
+        .collect()
+}
+
+fn rules_only(src: &str) -> Vec<String> {
+    findings(src).into_iter().map(|(r, _)| r).collect()
+}
+
+// --- SPL001: partial_cmp float sorts ------------------------------------
+
+#[test]
+fn spl001_fires_on_partial_cmp_sort() {
+    let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    assert_eq!(findings(src), vec![("SPL001".to_string(), 2)]);
+}
+
+#[test]
+fn spl001_clean_on_total_cmp() {
+    let src = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- SPL002: hash collections -------------------------------------------
+
+#[test]
+fn spl002_fires_on_hash_map_and_set() {
+    let src = "use std::collections::HashMap;\nuse std::collections::HashSet;\n";
+    assert_eq!(rules_only(src), vec!["SPL002", "SPL002"]);
+}
+
+#[test]
+fn spl002_clean_on_btree() {
+    let src = "use std::collections::BTreeMap;\nuse std::collections::BTreeSet;\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- SPL003: wall-clock reads -------------------------------------------
+
+#[test]
+fn spl003_fires_on_instant_and_system_time() {
+    let src = "fn f() {\n    let t = std::time::Instant::now();\n    let s = \
+               std::time::SystemTime::now();\n}\n";
+    assert_eq!(findings(src), vec![("SPL003".to_string(), 2), ("SPL003".to_string(), 3)]);
+}
+
+#[test]
+fn spl003_clean_on_duration_math() {
+    let src = "fn f() {\n    let d = std::time::Duration::from_millis(5);\n    let e = d * 2;\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- SPL004: environment reads ------------------------------------------
+
+#[test]
+fn spl004_fires_on_env_var_and_var_os() {
+    let src = "fn f() {\n    let a = std::env::var(\"X\");\n    let b = std::env::var_os(\"X\");\n}\n";
+    assert_eq!(findings(src), vec![("SPL004".to_string(), 2), ("SPL004".to_string(), 3)]);
+}
+
+#[test]
+fn spl004_clean_on_env_macro_and_args() {
+    // env!() is compile-time and env::args() is not an env read
+    let src = "fn f() {\n    let m = env!(\"CARGO_MANIFEST_DIR\");\n    let a: Vec<String> = \
+               std::env::args().collect();\n    let _ = (m, a);\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- SPL005: lock poisoning ---------------------------------------------
+
+#[test]
+fn spl005_fires_on_bare_lock_unwrap() {
+    let src = "fn f(m: &std::sync::Mutex<u32>, rw: &std::sync::RwLock<u32>) {\n    let a = \
+               m.lock().unwrap();\n    let b = rw.read().expect(\"poisoned\");\n    let c = \
+               rw.write().unwrap();\n    let _ = (a, b, c);\n}\n";
+    assert_eq!(rules_only(src), vec!["SPL005", "SPL005", "SPL005"]);
+}
+
+#[test]
+fn spl005_clean_on_poison_tolerant_pattern() {
+    let src = "fn f(m: &std::sync::Mutex<u32>) {\n    let g = \
+               m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    let _ = g;\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+#[test]
+fn spl005_clean_on_io_read_with_args() {
+    // `.read(&mut buf)` takes arguments — not a lock acquisition
+    let src = "fn f(r: &mut dyn std::io::Read) {\n    let mut buf = [0u8; 4];\n    \
+               r.read(&mut buf).unwrap();\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- SPL006: unscoped threads -------------------------------------------
+
+#[test]
+fn spl006_fires_on_thread_spawn() {
+    let src = "fn f() {\n    let h = std::thread::spawn(|| 1);\n    h.join().unwrap();\n}\n";
+    assert_eq!(findings(src), vec![("SPL006".to_string(), 2)]);
+}
+
+#[test]
+fn spl006_clean_on_scoped_threads() {
+    let src = "fn f() {\n    std::thread::scope(|s| {\n        s.spawn(|| 1);\n    });\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- SPL007: unsafe without SAFETY --------------------------------------
+
+#[test]
+fn spl007_fires_on_uncommented_unsafe_block() {
+    let src = "fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+    assert_eq!(findings(src), vec![("SPL007".to_string(), 2)]);
+}
+
+#[test]
+fn spl007_clean_with_safety_comment() {
+    let src = "fn f(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is valid\n    \
+               unsafe { *p }\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+#[test]
+fn spl007_ignores_unsafe_fn_declarations() {
+    // the rule covers blocks; an unsafe fn's contract lives in its docs
+    let src = "unsafe fn f(p: *const u32) -> u32 {\n    *p\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- suppressions --------------------------------------------------------
+
+#[test]
+fn suppression_with_reason_covers_same_and_next_line() {
+    let trailing = "fn f() {\n    let t = std::time::Instant::now(); // \
+                    detlint::allow(SPL003): fixture timing\n    let _ = t;\n}\n";
+    assert!(findings(trailing).is_empty());
+    let above = "fn f() {\n    // detlint::allow(SPL003): fixture timing\n    let t = \
+                 std::time::Instant::now();\n    let _ = t;\n}\n";
+    assert!(findings(above).is_empty());
+}
+
+#[test]
+fn suppression_does_not_reach_past_next_line() {
+    let src = "fn f() {\n    // detlint::allow(SPL003): too far away\n\n    let t = \
+               std::time::Instant::now();\n    let _ = t;\n}\n";
+    assert_eq!(findings(src), vec![("SPL003".to_string(), 4)]);
+}
+
+#[test]
+fn suppression_without_reason_is_rejected() {
+    let src = "fn f() {\n    // detlint::allow(SPL003)\n    let t = \
+               std::time::Instant::now();\n    let _ = t;\n}\n";
+    let got = rules_only(src);
+    assert!(got.contains(&"SPL000".to_string()), "missing reason must be SPL000: {got:?}");
+    assert!(got.contains(&"SPL003".to_string()), "reasonless allow must not suppress: {got:?}");
+}
+
+#[test]
+fn suppression_with_unknown_rule_is_rejected() {
+    let src = "fn f() {} // detlint::allow(SPL999): no such rule\n";
+    assert_eq!(rules_only(src), vec!["SPL000"]);
+}
+
+#[test]
+fn suppression_only_covers_its_named_rule() {
+    let src = "fn f() {\n    // detlint::allow(SPL006): wrong rule named\n    let t = \
+               std::time::Instant::now();\n    let _ = t;\n}\n";
+    assert_eq!(findings(src), vec![("SPL003".to_string(), 3)]);
+}
+
+// --- lexer edge cases ----------------------------------------------------
+
+#[test]
+fn lexer_ignores_hazards_inside_strings_and_comments() {
+    let src = concat!(
+        "fn f() -> usize {\n",
+        "    // HashMap partial_cmp thread::spawn Instant::now()\n",
+        "    /* outer /* nested HashSet */ still comment: env::var */\n",
+        "    let a = \"HashMap // not a comment, still a string\";\n",
+        "    let b = r#\"raw partial_cmp \" with quote\"#;\n",
+        "    let c = b\"byte HashSet\";\n",
+        "    a.len() + b.len() + c.len()\n",
+        "}\n"
+    );
+    assert!(findings(src).is_empty(), "got: {:?}", findings(src));
+}
+
+#[test]
+fn lexer_resumes_scanning_after_tricky_literals() {
+    // a string containing `//`, a char literal quote, and a raw string
+    // must not swallow the real finding after them
+    let src = concat!(
+        "fn f() {\n",
+        "    let url = \"https://example.com\";\n",
+        "    let q = '\"';\n",
+        "    let r = r##\"nested \"# almost-close\"##;\n",
+        "    let _ = (url, q, r);\n",
+        "    let t = std::time::Instant::now();\n",
+        "    let _ = t;\n",
+        "}\n"
+    );
+    assert_eq!(findings(src), vec![("SPL003".to_string(), 6)]);
+}
+
+#[test]
+fn lexer_handles_lifetimes_and_raw_identifiers() {
+    let src = "fn f<'a>(x: &'a str, r#fn: u32) -> (&'a str, u32, char) {\n    (x, r#fn, 'x')\n}\n";
+    assert!(findings(src).is_empty());
+}
+
+// --- config scoping ------------------------------------------------------
+
+fn cfg(body: &str) -> Config {
+    let text = format!("[scan]\nroots = [\".\"]\n{body}");
+    Config::parse(&text).expect("fixture config must parse")
+}
+
+#[test]
+fn allow_scoped_to_function_only_covers_that_function() {
+    let c = cfg(
+        "[[allow]]\nrule = \"SPL003\"\npath = \"fixture.rs\"\nfunctions = [\"time_it\"]\n\
+         reason = \"telemetry\"\n",
+    );
+    let inside = "fn time_it() {\n    let t = std::time::Instant::now();\n    let _ = t;\n}\n";
+    assert!(scan_source("fixture.rs", inside, &c).is_empty());
+    let outside = "fn render() {\n    let t = std::time::Instant::now();\n    let _ = t;\n}\n";
+    assert_eq!(scan_source("fixture.rs", outside, &c).len(), 1);
+}
+
+#[test]
+fn allow_scoped_to_tests_only_covers_test_code() {
+    let c = cfg(
+        "[[allow]]\nrule = \"SPL006\"\npath = \"fixture.rs\"\nin_tests = true\n\
+         reason = \"test worker threads\"\n",
+    );
+    let in_tests = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                    std::thread::spawn(|| 1).join().unwrap();\n    }\n}\n";
+    assert!(scan_source("fixture.rs", in_tests, &c).is_empty());
+    let in_prod = "fn f() {\n    std::thread::spawn(|| 1).join().unwrap();\n}\n";
+    assert_eq!(scan_source("fixture.rs", in_prod, &c).len(), 1);
+}
+
+#[test]
+fn allow_path_prefix_covers_nested_files_only() {
+    let c = cfg(
+        "[[allow]]\nrule = \"SPL002\"\npath = \"benches\"\nreason = \"report-only maps\"\n",
+    );
+    let src = "use std::collections::HashMap;\n";
+    assert!(scan_source("benches/report.rs", src, &c).is_empty());
+    assert_eq!(scan_source("benches_extra/report.rs", src, &c).len(), 1);
+    assert_eq!(scan_source("src/lib.rs", src, &c).len(), 1);
+}
+
+#[test]
+fn config_rejects_reasonless_and_unknown_entries() {
+    let no_reason = "[scan]\nroots = [\".\"]\n[[allow]]\nrule = \"SPL003\"\npath = \"x.rs\"\n";
+    assert!(Config::parse(no_reason).is_err());
+    let bad_rule = "[scan]\nroots = [\".\"]\n[[allow]]\nrule = \"SPL042\"\npath = \"x.rs\"\n\
+                    reason = \"nope\"\n";
+    assert!(Config::parse(bad_rule).is_err());
+    let bad_key = "[scan]\nroots = [\".\"]\n[[allow]]\nrule = \"SPL003\"\npath = \"x.rs\"\n\
+                   reason = \"ok\"\nscope = \"everywhere\"\n";
+    assert!(Config::parse(bad_key).is_err());
+    assert!(Config::parse("[scan]\nroots = []\n").is_err());
+}

@@ -1,0 +1,28 @@
+//! The pass must run clean on the repository's own tree with the
+//! checked-in `detlint.toml` — this is the same invariant CI enforces
+//! (`cargo run -p detlint`), pinned here so `cargo test` catches a
+//! violation even without the CI step.
+
+use std::path::PathBuf;
+
+#[test]
+fn repository_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../..")
+        .canonicalize()
+        .expect("repo root resolves");
+    let text = std::fs::read_to_string(root.join("detlint.toml")).expect("detlint.toml exists");
+    let cfg = detlint::config::Config::parse(&text).expect("detlint.toml parses");
+    let report = detlint::scan_tree(&root, &cfg, &[]).expect("scan succeeds");
+    assert!(
+        report.files_scanned >= 60,
+        "expected to scan the whole tree, got {} files",
+        report.files_scanned
+    );
+    let msgs: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: {} {}", f.path, f.line, f.rule, f.message))
+        .collect();
+    assert!(msgs.is_empty(), "detlint findings on the repository tree:\n{}", msgs.join("\n"));
+}
