@@ -1,0 +1,140 @@
+//! Checkpoint/evict/resume demo: the same three-session fleet served
+//! twice — once with unlimited residency, once squeezed through a
+//! single resident slot on one worker
+//! ([`splatonic::serve::ServerConfig::max_resident_sessions`]) so every
+//! session is repeatedly evicted to a disk snapshot and resumed — and
+//! the two reports compared **bit for bit**.
+//!
+//! The paging path must be invisible in the results: the snapshot
+//! captures everything a session's future depends on (map, Adam
+//! moments, PRNG, constant-velocity prior, counters — see
+//! `docs/CHECKPOINT.md`), so ATE/PSNR, map sizes, and per-stage
+//! counters match exactly. The example exits nonzero on any mismatch
+//! (pinned more broadly by `tests/checkpoint_paging.rs`).
+//!
+//! ```text
+//! cargo run --release --example serve_evict -- \
+//!     [--frames=8] [--width=96] [--height=72] [--budget=0.5]
+//! ```
+
+use splatonic::config::RunConfig;
+use splatonic::dataset::{Flavor, Scenario};
+use splatonic::render::Parallelism;
+use splatonic::serve::{serve, FleetJob, ServerConfig, ServerReport};
+use splatonic::slam::algorithms::Algorithm;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+
+    let presets: [(&str, Flavor, Scenario, Algorithm); 3] = [
+        ("orbit", Flavor::Replica, Scenario::Orbit, Algorithm::SplaTam),
+        ("corridor", Flavor::Replica, Scenario::Corridor, Algorithm::MonoGs),
+        ("fast-rotation", Flavor::Tum, Scenario::FastRotation, Algorithm::FlashSlam),
+    ];
+    let mut jobs = Vec::with_capacity(presets.len());
+    for (i, (name, flavor, scenario, algorithm)) in presets.into_iter().enumerate() {
+        let mut run = RunConfig {
+            flavor,
+            scenario,
+            algorithm,
+            sequence: i,
+            width: 96,
+            height: 72,
+            frames: 8,
+            budget: 0.5,
+            ..Default::default()
+        };
+        run.apply_args(&args)?;
+        jobs.push(FleetJob { name: name.to_string(), run });
+    }
+
+    println!("=== Splatonic session checkpoint / evict / resume ===");
+    for job in &jobs {
+        println!(
+            "  job `{}`: {:?}/{} {:?} | {}x{} x {} frames",
+            job.name,
+            job.run.flavor,
+            job.run.scenario.name(),
+            job.run.algorithm,
+            job.run.width,
+            job.run.height,
+            job.run.frames,
+        );
+    }
+
+    println!("\n--- pass 1: unlimited residency (no paging) ---");
+    let unlimited = serve(
+        &jobs,
+        &ServerConfig { workers: 1, budget: Parallelism::auto(), ..Default::default() },
+    )?;
+    unlimited.print();
+
+    println!("\n--- pass 2: one resident slot (every session pages) ---");
+    let paged = serve(
+        &jobs,
+        &ServerConfig {
+            workers: 1,
+            budget: Parallelism::auto(),
+            max_resident_sessions: 1,
+            ..Default::default()
+        },
+    )?;
+    paged.print();
+
+    let evictions: u32 = paged.sessions.iter().map(|s| s.evictions).sum();
+    let mismatches = compare(&unlimited, &paged);
+    for s in &paged.sessions {
+        println!(
+            "SUMMARY session={} status={} evictions={} ate_cm={:.2} psnr_db={:.2} frames={}",
+            s.name,
+            s.status.name(),
+            s.evictions,
+            s.ate_rmse_m * 100.0,
+            s.psnr_db,
+            s.frames,
+        );
+    }
+    println!(
+        "SUMMARY fleet_sessions={} evictions={} bit_identical={}",
+        paged.sessions.len(),
+        evictions,
+        mismatches == 0,
+    );
+
+    if evictions == 0 {
+        anyhow::bail!("a 3-session fleet over 1 resident slot should have evicted");
+    }
+    if mismatches > 0 {
+        anyhow::bail!("paged fleet diverged from the unlimited fleet in {mismatches} field(s)");
+    }
+    println!("\nOK: {evictions} eviction round trip(s), results bit-identical");
+    Ok(())
+}
+
+/// Compare the per-session results of the two passes bit for bit,
+/// printing every mismatch; returns the mismatch count.
+fn compare(unlimited: &ServerReport, paged: &ServerReport) -> usize {
+    let mut mismatches = 0;
+    for (u, p) in unlimited.sessions.iter().zip(&paged.sessions) {
+        let mut check = |field: &str, ok: bool| {
+            if !ok {
+                println!("MISMATCH session={} field={field}", u.name);
+                mismatches += 1;
+            }
+        };
+        check("status", u.status == p.status);
+        check("frames", u.frames == p.frames);
+        check("ate_rmse_m", u.ate_rmse_m.to_bits() == p.ate_rmse_m.to_bits());
+        check("psnr_db", u.psnr_db.to_bits() == p.psnr_db.to_bits());
+        check("n_gaussians", u.n_gaussians == p.n_gaussians);
+        check("track_iters", u.track_iters == p.track_iters);
+        check("mapping_invocations", u.mapping_invocations == p.mapping_invocations);
+        check(
+            "mean_track_final_loss",
+            u.mean_track_final_loss.to_bits() == p.mean_track_final_loss.to_bits(),
+        );
+        check("track_counters", u.track_counters == p.track_counters);
+        check("map_counters", u.map_counters == p.map_counters);
+    }
+    mismatches
+}

@@ -32,7 +32,14 @@
 //! shared-map comparison runs the same co-scene fleet twice — once on
 //! one scene-keyed shard, once on private maps — and records the
 //! map-memory ratio, covisibility skip rate, and mapping iterations
-//! saved (`shared_map` in `BENCH_e2e.json`).
+//! saved (`shared_map` in `BENCH_e2e.json`). A paged-serving cell runs
+//! the 4-session fleet through one resident slot
+//! (checkpoint/evict/resume) so the paging wall-clock overhead joins
+//! the same trajectory — each `server_sweep` entry carries a
+//! `max_resident_sessions` key (0 = unlimited residency).
+//!
+//! `--e2e-only` skips the kernel sweeps and runs just the end-to-end
+//! section (what CI uses to regenerate `BENCH_e2e.json` cheaply).
 
 use splatonic::bench::time_it;
 use splatonic::camera::{Camera, Intrinsics};
@@ -78,6 +85,14 @@ struct Cell {
 }
 
 fn main() {
+    // --e2e-only: skip the kernel sweeps, regenerate BENCH_e2e.json only
+    if !std::env::args().skip(1).any(|a| a == "--e2e-only") {
+        kernel_sweeps();
+    }
+    e2e_bench();
+}
+
+fn kernel_sweeps() {
     let rcfg = RenderConfig::default();
     let cam = Camera::new(Intrinsics::replica_like(320, 240), Se3::IDENTITY);
     let px = SampledPixels::full_grid(320, 240, 16);
@@ -374,7 +389,9 @@ fn main() {
         Ok(()) => println!("wrote BENCH_hotpath.json ({} cells)", cells.len()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
     }
+}
 
+fn e2e_bench() {
     // -- end-to-end: coordinator run + server-throughput sweep ----------
     // (ATE/PSNR/fleet frames-per-sec join the perf trajectory in
     // BENCH_e2e.json; kept at the small e2e scale so the bench suite
@@ -413,7 +430,11 @@ fn main() {
         "{:>9} {:>8} | {:>10} {:>12} {:>14}",
         "sessions", "workers", "frames", "wall s", "fleet fps"
     );
-    let mut sweep: Vec<(usize, usize, String)> = Vec::new();
+    // (max_resident_sessions, too: 0 = unlimited residency, the
+    // pre-paging behavior; the final cell squeezes the 4-session fleet
+    // through one resident slot so checkpoint/evict/resume overhead
+    // shows up in the same trajectory)
+    let mut sweep: Vec<(usize, usize, usize, String)> = Vec::new();
     for &n_sessions in &[1usize, 2, 4] {
         let mut worker_counts = vec![1usize];
         if n_sessions > 1 {
@@ -431,8 +452,28 @@ fn main() {
                 report.wall_seconds,
                 report.fleet_frames_per_sec,
             );
-            sweep.push((n_sessions, report.workers, report.to_json()));
+            sweep.push((n_sessions, report.workers, 0, report.to_json()));
         }
+    }
+    {
+        let jobs: Vec<FleetJob> = (0..4).map(fleet_job).collect();
+        let scfg = ServerConfig {
+            workers: 1,
+            budget: Parallelism::auto(),
+            max_resident_sessions: 1,
+            ..Default::default()
+        };
+        let report = serve(&jobs, &scfg).expect("paged sweep run failed");
+        let evictions: u32 = report.sessions.iter().map(|s| s.evictions).sum();
+        println!(
+            "{:>9} {:>8} | {:>10} {:>12.3} {:>14.2}   (paged: 1 resident slot, {evictions} evictions)",
+            jobs.len(),
+            report.workers,
+            report.total_frames,
+            report.wall_seconds,
+            report.fleet_frames_per_sec,
+        );
+        sweep.push((jobs.len(), report.workers, 1, report.to_json()));
     }
 
     // -- shared-map: the same co-scene fleet on one shard vs private
@@ -493,9 +534,10 @@ fn main() {
     e2e.push_str(single.to_json().trim_end());
     e2e.push_str(",\n");
     e2e.push_str("  \"server_sweep\": [\n");
-    for (i, (sessions, workers, report_json)) in sweep.iter().enumerate() {
+    for (i, (sessions, workers, max_resident, report_json)) in sweep.iter().enumerate() {
         e2e.push_str(&format!(
-            "    {{\"sessions\": {sessions}, \"workers\": {workers}, \"report\": {}}}{}\n",
+            "    {{\"sessions\": {sessions}, \"workers\": {workers}, \
+             \"max_resident_sessions\": {max_resident}, \"report\": {}}}{}\n",
             report_json.trim_end(),
             if i + 1 < sweep.len() { "," } else { "" },
         ));

@@ -1,0 +1,958 @@
+//! Versioned binary snapshots of SLAM session and shard state.
+//!
+//! A server taking long-lived streams cannot keep every session resident
+//! forever; `serve` evicts idle sessions to disk and resumes them on
+//! their next frame (see `docs/CHECKPOINT.md` for the policy). This
+//! module owns the snapshot *format*: a little-endian binary layout that
+//! captures everything a [`crate::slam::SlamSession`] owns — Gaussian
+//! store, Adam moments, PCG32 state, the constant-velocity prior, the
+//! frame cursor, per-stage counters, and the Degraded/quarantine
+//! bookkeeping — so an evict/resume cycle is **bit-identical** to an
+//! uninterrupted run (pinned by `tests/checkpoint_paging.rs`).
+//!
+//! Every snapshot starts with an explicit header:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"SPLCKPT\0"
+//!      8     4  format version (u32 LE) — this build reads FORMAT_VERSION
+//!     12     1  payload kind (1 = session, 2 = scene shard)
+//!     13     8  config fingerprint (u64 LE)
+//! ```
+//!
+//! The version gate means a snapshot written by a different build is
+//! *rejected with a descriptive error*, never misread; the fingerprint
+//! (FNV-1a over the session's `SlamConfig` + `Intrinsics` debug forms,
+//! or over the scene name for shards) rejects a snapshot resumed under a
+//! different configuration, where the bytes would decode but the math
+//! would silently diverge. Floats are serialized via `to_bits`, so NaN
+//! payloads and signed zeros round-trip exactly.
+//!
+//! All frame indices in the format are `u32` — the same width `fault`
+//! and `serve` use — so a cursor can't alias through a truncating cast.
+
+use crate::camera::{Camera, Intrinsics};
+use crate::gaussian::{Adam, AdamConfig, GaussianStore};
+use crate::map_share::{ShardExport, ShardKeyframe};
+use crate::math::{Quat, Se3, Vec3};
+use crate::render::StageCounters;
+use crate::slam::{MappingStats, SlamConfig, TrackingStats};
+use anyhow::{bail, Context, Result};
+
+/// Format revision this build writes and reads. Bump on any layout
+/// change; old snapshots are rejected, not migrated implicitly.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: [u8; 8] = *b"SPLCKPT\0";
+const KIND_SESSION: u8 = 1;
+const KIND_SHARD: u8 = 2;
+const HEADER_LEN: usize = 8 + 4 + 1 + 8;
+
+/// FNV-1a 64 over the debug forms of the session configuration and
+/// camera intrinsics. Any config change — algorithm, iteration budgets,
+/// seed, resolution — changes the fingerprint, and a snapshot taken
+/// under a different fingerprint is rejected at decode time.
+pub fn config_fingerprint(cfg: &SlamConfig, intr: &Intrinsics) -> u64 {
+    fnv1a(format!("{cfg:?}|{intr:?}").as_bytes())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Everything a [`crate::slam::SlamSession`] owns, as plain data. Built
+/// by `SlamSession::checkpoint`, consumed by `SlamSession::restore`.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// Next frame index the session expects (`on_frame` cursor).
+    pub frame_idx: u32,
+    /// Constant-velocity prior: last relative pose.
+    pub prev_rel: Se3,
+    /// PCG32 generator state (`Pcg32::to_parts`).
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    /// Version of the shared shard folded into `store` (0 = private map).
+    pub map_version: u64,
+    pub covis_skips: u32,
+    pub track_recoveries: u32,
+    pub track_divergences: u32,
+    pub est_poses: Vec<Se3>,
+    pub store: GaussianStore,
+    /// Inline-mapping Adam moments; `None` for a shard-attached session
+    /// (the moments live in the shard, which stays resident).
+    pub adam: Option<Adam>,
+    pub track_counters: StageCounters,
+    pub map_counters: StageCounters,
+    pub per_frame_track: Vec<StageCounters>,
+    pub per_map: Vec<StageCounters>,
+    pub track_stats: Vec<TrackingStats>,
+    pub map_stats: Vec<MappingStats>,
+}
+
+/// A session snapshot plus the server-side stream bookkeeping that
+/// travels with it, making the on-disk file self-contained.
+#[derive(Clone, Debug)]
+pub struct SessionCheckpoint {
+    pub state: SessionState,
+    /// The server's dequeue cursor for this session (frames delivered,
+    /// including dropped/quarantined ones — may run ahead of
+    /// `state.frame_idx`).
+    pub next_frame: u32,
+    /// Sorted quarantined frame indices (Degraded bookkeeping).
+    pub quarantined: Vec<u32>,
+    /// Times this session has been evicted (including the eviction that
+    /// wrote this snapshot).
+    pub evictions: u32,
+}
+
+/// Serialize a session snapshot under the given config fingerprint.
+pub fn encode_session(ckpt: &SessionCheckpoint, fingerprint: u64) -> Vec<u8> {
+    let mut w = Writer::new(KIND_SESSION, fingerprint);
+    let s = &ckpt.state;
+    w.u32(s.frame_idx);
+    put_se3(&mut w, &s.prev_rel);
+    w.u64(s.rng_state);
+    w.u64(s.rng_inc);
+    w.u64(s.map_version);
+    w.u32(s.covis_skips);
+    w.u32(s.track_recoveries);
+    w.u32(s.track_divergences);
+    w.u64(s.est_poses.len() as u64);
+    for p in &s.est_poses {
+        put_se3(&mut w, p);
+    }
+    put_store(&mut w, &s.store);
+    match &s.adam {
+        None => w.u8(0),
+        Some(adam) => {
+            w.u8(1);
+            put_adam(&mut w, adam);
+        }
+    }
+    put_counters(&mut w, &s.track_counters);
+    put_counters(&mut w, &s.map_counters);
+    w.u64(s.per_frame_track.len() as u64);
+    for c in &s.per_frame_track {
+        put_counters(&mut w, c);
+    }
+    w.u64(s.per_map.len() as u64);
+    for c in &s.per_map {
+        put_counters(&mut w, c);
+    }
+    w.u64(s.track_stats.len() as u64);
+    for t in &s.track_stats {
+        put_track_stats(&mut w, t);
+    }
+    w.u64(s.map_stats.len() as u64);
+    for m in &s.map_stats {
+        put_map_stats(&mut w, m);
+    }
+    w.u32(ckpt.next_frame);
+    w.u64(ckpt.quarantined.len() as u64);
+    for &q in &ckpt.quarantined {
+        w.u32(q);
+    }
+    w.u32(ckpt.evictions);
+    w.buf
+}
+
+/// Decode a session snapshot, rejecting a wrong magic, format version,
+/// payload kind, or config fingerprint with a descriptive error.
+pub fn decode_session(bytes: &[u8], expected_fingerprint: u64) -> Result<SessionCheckpoint> {
+    let mut r = Reader::open(bytes, KIND_SESSION, Some(expected_fingerprint))?;
+    let frame_idx = r.u32()?;
+    let prev_rel = get_se3(&mut r)?;
+    let rng_state = r.u64()?;
+    let rng_inc = r.u64()?;
+    let map_version = r.u64()?;
+    let covis_skips = r.u32()?;
+    let track_recoveries = r.u32()?;
+    let track_divergences = r.u32()?;
+    let n_poses = r.array_len(SE3_BYTES, "est_poses")?;
+    let mut est_poses = Vec::with_capacity(n_poses);
+    for _ in 0..n_poses {
+        est_poses.push(get_se3(&mut r)?);
+    }
+    let store = get_store(&mut r)?;
+    let adam = match r.u8()? {
+        0 => None,
+        1 => Some(get_adam(&mut r)?),
+        tag => bail!("session snapshot is corrupt: Adam presence tag {tag} (expected 0 or 1)"),
+    };
+    let track_counters = get_counters(&mut r)?;
+    let map_counters = get_counters(&mut r)?;
+    let n = r.array_len(COUNTERS_BYTES, "per_frame_track")?;
+    let mut per_frame_track = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_frame_track.push(get_counters(&mut r)?);
+    }
+    let n = r.array_len(COUNTERS_BYTES, "per_map")?;
+    let mut per_map = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_map.push(get_counters(&mut r)?);
+    }
+    let n = r.array_len(TRACK_STATS_BYTES, "track_stats")?;
+    let mut track_stats = Vec::with_capacity(n);
+    for _ in 0..n {
+        track_stats.push(get_track_stats(&mut r)?);
+    }
+    let n = r.array_len(MAP_STATS_BYTES, "map_stats")?;
+    let mut map_stats = Vec::with_capacity(n);
+    for _ in 0..n {
+        map_stats.push(get_map_stats(&mut r)?);
+    }
+    let next_frame = r.u32()?;
+    let n = r.array_len(4, "quarantined")?;
+    let mut quarantined = Vec::with_capacity(n);
+    for _ in 0..n {
+        quarantined.push(r.u32()?);
+    }
+    let evictions = r.u32()?;
+    r.finish()?;
+    Ok(SessionCheckpoint {
+        state: SessionState {
+            frame_idx,
+            prev_rel,
+            rng_state,
+            rng_inc,
+            map_version,
+            covis_skips,
+            track_recoveries,
+            track_divergences,
+            est_poses,
+            store,
+            adam,
+            track_counters,
+            map_counters,
+            per_frame_track,
+            per_map,
+            track_stats,
+            map_stats,
+        },
+        next_frame,
+        quarantined,
+        evictions,
+    })
+}
+
+/// Serialize a scene shard export (`MapShard::export_state`). The
+/// header fingerprint is derived from the scene name, tying the file to
+/// its scene the same way session snapshots are tied to their config.
+pub fn encode_shard(export: &ShardExport) -> Vec<u8> {
+    let mut w = Writer::new(KIND_SHARD, fnv1a(export.scene.as_bytes()));
+    w.str(&export.scene);
+    put_store(&mut w, &export.store);
+    put_adam(&mut w, &export.adam);
+    w.u64(export.version);
+    w.u64(export.keyframes.len() as u64);
+    for kf in &export.keyframes {
+        put_keyframe(&mut w, kf);
+    }
+    w.u64(export.contributions);
+    w.u64(export.skips);
+    w.u64(export.mapping_iters_saved);
+    w.buf
+}
+
+/// Decode a scene shard export, verifying magic, version, kind, and the
+/// scene-name fingerprint.
+pub fn decode_shard(bytes: &[u8]) -> Result<ShardExport> {
+    let mut r = Reader::open(bytes, KIND_SHARD, None)?;
+    let header_fp = r.fingerprint;
+    let scene = r.str("scene")?;
+    let scene_fp = fnv1a(scene.as_bytes());
+    if scene_fp != header_fp {
+        bail!(
+            "shard snapshot fingerprint {header_fp:#018x} does not match scene `{scene}` \
+             ({scene_fp:#018x}) — the file is corrupt or was relabeled"
+        );
+    }
+    let store = get_store(&mut r)?;
+    let adam = get_adam(&mut r)?;
+    let version = r.u64()?;
+    let n = r.array_len(KEYFRAME_MIN_BYTES, "keyframes")?;
+    let mut keyframes = Vec::with_capacity(n);
+    for _ in 0..n {
+        keyframes.push(get_keyframe(&mut r)?);
+    }
+    let contributions = r.u64()?;
+    let skips = r.u64()?;
+    let mapping_iters_saved = r.u64()?;
+    r.finish()?;
+    Ok(ShardExport {
+        scene,
+        store,
+        adam,
+        version,
+        keyframes,
+        contributions,
+        skips,
+        mapping_iters_saved,
+    })
+}
+
+// ---- little-endian writer / bounds-checked reader ---------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(kind: u8, fingerprint: u64) -> Self {
+        let mut w = Writer { buf: Vec::with_capacity(HEADER_LEN) };
+        w.buf.extend_from_slice(&MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u8(kind);
+        w.u64(fingerprint);
+        w
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    fingerprint: u64,
+}
+
+impl<'a> Reader<'a> {
+    /// Validate the header and position the cursor at the payload.
+    /// `expected_fingerprint = None` defers the fingerprint check to the
+    /// caller (shards verify against the scene name inside the payload).
+    fn open(bytes: &'a [u8], expected_kind: u8, expected_fingerprint: Option<u64>) -> Result<Self> {
+        if bytes.len() < HEADER_LEN {
+            bail!(
+                "not a splatonic checkpoint: {} bytes is shorter than the {HEADER_LEN}-byte header",
+                bytes.len()
+            );
+        }
+        if bytes[..8] != MAGIC {
+            bail!("not a splatonic checkpoint (bad magic {:02x?})", &bytes[..8]);
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported checkpoint format version {version}: this build reads version \
+                 {FORMAT_VERSION} — the snapshot was written by a different build and must be \
+                 regenerated, not migrated implicitly"
+            );
+        }
+        let kind = bytes[12];
+        let kind_name = |k: u8| match k {
+            KIND_SESSION => "session",
+            KIND_SHARD => "scene shard",
+            _ => "unknown",
+        };
+        if kind != expected_kind {
+            bail!(
+                "checkpoint holds a {} ({kind}) payload where a {} ({expected_kind}) was expected",
+                kind_name(kind),
+                kind_name(expected_kind)
+            );
+        }
+        let fingerprint = u64::from_le_bytes(bytes[13..HEADER_LEN].try_into().expect("8 bytes"));
+        if let Some(expected) = expected_fingerprint {
+            if fingerprint != expected {
+                bail!(
+                    "config fingerprint mismatch: snapshot {fingerprint:#018x} vs current \
+                     {expected:#018x} — the session configuration or intrinsics changed since \
+                     this snapshot was taken; resuming would silently misinterpret the state"
+                );
+            }
+        }
+        Ok(Reader { buf: bytes, pos: HEADER_LEN, fingerprint })
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "checkpoint truncated: needed {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("checkpoint is corrupt: bool byte {b} (expected 0 or 1)"),
+        }
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.array_len(1, what)?;
+        let s = std::str::from_utf8(self.take(n)?)
+            .with_context(|| format!("checkpoint field `{what}` is not valid UTF-8"))?;
+        Ok(s.to_string())
+    }
+
+    /// Read a length prefix and bounds-check it against the bytes that
+    /// actually remain, so a corrupt count can't drive a huge
+    /// allocation before the truncation is noticed.
+    fn array_len(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u64()?;
+        let n: usize = n
+            .try_into()
+            .with_context(|| format!("checkpoint field `{what}` length {n} overflows usize"))?;
+        let need = n.checked_mul(elem_bytes).with_context(|| {
+            format!("checkpoint field `{what}` length {n} x {elem_bytes} bytes overflows")
+        })?;
+        if need > self.remaining() {
+            bail!(
+                "checkpoint truncated: field `{what}` declares {n} elements ({need} bytes) but \
+                 only {} bytes remain",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "checkpoint has {} trailing bytes after the payload — the file is corrupt or \
+                 was written by a different build",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---- composite field codecs -------------------------------------------
+
+const SE3_BYTES: usize = 7 * 4;
+const COUNTERS_BYTES: usize = 25 * 8;
+const TRACK_STATS_BYTES: usize = 4 + 4 + 4 + 8 + 1 + 4;
+const MAP_STATS_BYTES: usize = 8 + 8 + 4 + 4 + 8 + 8;
+const STORE_ELEM_BYTES: usize = 14 * 4;
+// minimum per keyframe: rank + epoch + camera intr (6x4) + pose + grids
+const KEYFRAME_MIN_BYTES: usize = 8 + 8 + 6 * 4 + SE3_BYTES + 3 * 4 + 8;
+
+fn put_vec3(w: &mut Writer, v: &Vec3) {
+    w.f32(v.x);
+    w.f32(v.y);
+    w.f32(v.z);
+}
+
+fn get_vec3(r: &mut Reader) -> Result<Vec3> {
+    Ok(Vec3 { x: r.f32()?, y: r.f32()?, z: r.f32()? })
+}
+
+fn put_quat(w: &mut Writer, q: &Quat) {
+    w.f32(q.w);
+    w.f32(q.x);
+    w.f32(q.y);
+    w.f32(q.z);
+}
+
+fn get_quat(r: &mut Reader) -> Result<Quat> {
+    Ok(Quat { w: r.f32()?, x: r.f32()?, y: r.f32()?, z: r.f32()? })
+}
+
+fn put_se3(w: &mut Writer, p: &Se3) {
+    put_quat(w, &p.q);
+    put_vec3(w, &p.t);
+}
+
+fn get_se3(r: &mut Reader) -> Result<Se3> {
+    Ok(Se3 { q: get_quat(r)?, t: get_vec3(r)? })
+}
+
+fn put_store(w: &mut Writer, s: &GaussianStore) {
+    w.u64(s.len() as u64);
+    for v in &s.means {
+        put_vec3(w, v);
+    }
+    for q in &s.rots {
+        put_quat(w, q);
+    }
+    for v in &s.log_scales {
+        put_vec3(w, v);
+    }
+    for &o in &s.opacity_logits {
+        w.f32(o);
+    }
+    for v in &s.colors {
+        put_vec3(w, v);
+    }
+}
+
+fn get_store(r: &mut Reader) -> Result<GaussianStore> {
+    let n = r.array_len(STORE_ELEM_BYTES, "gaussian store")?;
+    let mut means = Vec::with_capacity(n);
+    for _ in 0..n {
+        means.push(get_vec3(r)?);
+    }
+    let mut rots = Vec::with_capacity(n);
+    for _ in 0..n {
+        rots.push(get_quat(r)?);
+    }
+    let mut log_scales = Vec::with_capacity(n);
+    for _ in 0..n {
+        log_scales.push(get_vec3(r)?);
+    }
+    let mut opacity_logits = Vec::with_capacity(n);
+    for _ in 0..n {
+        opacity_logits.push(r.f32()?);
+    }
+    let mut colors = Vec::with_capacity(n);
+    for _ in 0..n {
+        colors.push(get_vec3(r)?);
+    }
+    GaussianStore::from_parts(means, rots, log_scales, opacity_logits, colors)
+}
+
+fn put_adam(w: &mut Writer, adam: &Adam) {
+    let (m, v, t) = adam.to_parts();
+    w.f32(adam.cfg.lr);
+    w.f32(adam.cfg.beta1);
+    w.f32(adam.cfg.beta2);
+    w.f32(adam.cfg.eps);
+    w.u64(t);
+    w.u64(m.len() as u64);
+    for &x in m {
+        w.f32(x);
+    }
+    for &x in v {
+        w.f32(x);
+    }
+}
+
+fn get_adam(r: &mut Reader) -> Result<Adam> {
+    let cfg =
+        AdamConfig { lr: r.f32()?, beta1: r.f32()?, beta2: r.f32()?, eps: r.f32()? };
+    let t = r.u64()?;
+    let n = r.array_len(2 * 4, "adam moments")?;
+    let mut m = Vec::with_capacity(n);
+    for _ in 0..n {
+        m.push(r.f32()?);
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.f32()?);
+    }
+    Adam::from_parts(cfg, m, v, t)
+}
+
+fn put_counters(w: &mut Writer, c: &StageCounters) {
+    // exhaustive destructuring: adding a StageCounters field without
+    // bumping FORMAT_VERSION fails to compile here
+    let StageCounters {
+        proj_gaussians_in,
+        proj_gaussians_out,
+        proj_alpha_checks,
+        proj_bbox_candidates,
+        sort_pairs,
+        sort_compares,
+        raster_pairs_iterated,
+        raster_pairs_integrated,
+        raster_exp_evals,
+        warp_lanes_active,
+        warp_lanes_total,
+        bwd_pairs_iterated,
+        bwd_pairs_integrated,
+        bwd_exp_evals,
+        bwd_atomic_adds,
+        bwd_reduction_ops,
+        bwd_cache_hits,
+        bwd_lanes_active,
+        bwd_lanes_total,
+        bytes_gauss_read,
+        bytes_list_rw,
+        bytes_grad_rw,
+        bytes_image_w,
+        map_contributions,
+        map_covis_skips,
+    } = *c;
+    for v in [
+        proj_gaussians_in,
+        proj_gaussians_out,
+        proj_alpha_checks,
+        proj_bbox_candidates,
+        sort_pairs,
+        sort_compares,
+        raster_pairs_iterated,
+        raster_pairs_integrated,
+        raster_exp_evals,
+        warp_lanes_active,
+        warp_lanes_total,
+        bwd_pairs_iterated,
+        bwd_pairs_integrated,
+        bwd_exp_evals,
+        bwd_atomic_adds,
+        bwd_reduction_ops,
+        bwd_cache_hits,
+        bwd_lanes_active,
+        bwd_lanes_total,
+        bytes_gauss_read,
+        bytes_list_rw,
+        bytes_grad_rw,
+        bytes_image_w,
+        map_contributions,
+        map_covis_skips,
+    ] {
+        w.u64(v);
+    }
+}
+
+fn get_counters(r: &mut Reader) -> Result<StageCounters> {
+    Ok(StageCounters {
+        proj_gaussians_in: r.u64()?,
+        proj_gaussians_out: r.u64()?,
+        proj_alpha_checks: r.u64()?,
+        proj_bbox_candidates: r.u64()?,
+        sort_pairs: r.u64()?,
+        sort_compares: r.u64()?,
+        raster_pairs_iterated: r.u64()?,
+        raster_pairs_integrated: r.u64()?,
+        raster_exp_evals: r.u64()?,
+        warp_lanes_active: r.u64()?,
+        warp_lanes_total: r.u64()?,
+        bwd_pairs_iterated: r.u64()?,
+        bwd_pairs_integrated: r.u64()?,
+        bwd_exp_evals: r.u64()?,
+        bwd_atomic_adds: r.u64()?,
+        bwd_reduction_ops: r.u64()?,
+        bwd_cache_hits: r.u64()?,
+        bwd_lanes_active: r.u64()?,
+        bwd_lanes_total: r.u64()?,
+        bytes_gauss_read: r.u64()?,
+        bytes_list_rw: r.u64()?,
+        bytes_grad_rw: r.u64()?,
+        bytes_image_w: r.u64()?,
+        map_contributions: r.u64()?,
+        map_covis_skips: r.u64()?,
+    })
+}
+
+fn put_track_stats(w: &mut Writer, t: &TrackingStats) {
+    w.u32(t.iterations);
+    w.f32(t.final_loss);
+    w.f32(t.first_loss);
+    w.u64(t.pixels_per_iter as u64);
+    w.bool(t.diverged);
+    w.u32(t.recoveries);
+}
+
+fn get_track_stats(r: &mut Reader) -> Result<TrackingStats> {
+    Ok(TrackingStats {
+        iterations: r.u32()?,
+        final_loss: r.f32()?,
+        first_loss: r.f32()?,
+        pixels_per_iter: get_usize(r, "pixels_per_iter")?,
+        diverged: r.bool()?,
+        recoveries: r.u32()?,
+    })
+}
+
+fn put_map_stats(w: &mut Writer, m: &MappingStats) {
+    w.u64(m.added as u64);
+    w.u64(m.pruned as u64);
+    w.f32(m.first_loss);
+    w.f32(m.final_loss);
+    w.u64(m.sampled_pixels as u64);
+    w.u64(m.unseen_pixels as u64);
+}
+
+fn get_map_stats(r: &mut Reader) -> Result<MappingStats> {
+    Ok(MappingStats {
+        added: get_usize(r, "added")?,
+        pruned: get_usize(r, "pruned")?,
+        first_loss: r.f32()?,
+        final_loss: r.f32()?,
+        sampled_pixels: get_usize(r, "sampled_pixels")?,
+        unseen_pixels: get_usize(r, "unseen_pixels")?,
+    })
+}
+
+fn get_usize(r: &mut Reader, what: &str) -> Result<usize> {
+    let v = r.u64()?;
+    v.try_into().with_context(|| format!("checkpoint field `{what}` value {v} overflows usize"))
+}
+
+fn put_keyframe(w: &mut Writer, kf: &ShardKeyframe) {
+    let (rank, epoch, cam, stride, grid_w, grid_h, depth) = kf.to_parts();
+    w.u64(rank as u64);
+    w.u64(epoch);
+    w.f32(cam.intr.fx);
+    w.f32(cam.intr.fy);
+    w.f32(cam.intr.cx);
+    w.f32(cam.intr.cy);
+    w.u32(cam.intr.width);
+    w.u32(cam.intr.height);
+    put_se3(w, &cam.w2c);
+    w.u32(stride);
+    w.u32(grid_w);
+    w.u32(grid_h);
+    w.u64(depth.len() as u64);
+    for &d in depth {
+        w.f32(d);
+    }
+}
+
+fn get_keyframe(r: &mut Reader) -> Result<ShardKeyframe> {
+    let rank = get_usize(r, "keyframe rank")?;
+    let epoch = r.u64()?;
+    let intr = Intrinsics {
+        fx: r.f32()?,
+        fy: r.f32()?,
+        cx: r.f32()?,
+        cy: r.f32()?,
+        width: r.u32()?,
+        height: r.u32()?,
+    };
+    let w2c = get_se3(r)?;
+    let cam = Camera::new(intr, w2c);
+    let stride = r.u32()?;
+    let grid_w = r.u32()?;
+    let grid_h = r.u32()?;
+    let n = r.array_len(4, "keyframe depth")?;
+    let mut depth = Vec::with_capacity(n);
+    for _ in 0..n {
+        depth.push(r.f32()?);
+    }
+    ShardKeyframe::from_parts(rank, epoch, cam, stride, grid_w, grid_h, depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaussian::Gaussian;
+    use crate::math::Pcg32;
+
+    fn sample_state(n_gaussians: usize, with_adam: bool) -> SessionState {
+        let mut rng = Pcg32::new(77);
+        let mut store = GaussianStore::new();
+        for _ in 0..n_gaussians {
+            store.push(Gaussian::isotropic(
+                Vec3::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0), rng.uniform(0.5, 4.0)),
+                rng.uniform(0.01, 0.1),
+                Vec3::new(rng.next_f32(), rng.next_f32(), rng.next_f32()),
+                0.7,
+            ));
+        }
+        let adam = with_adam.then(|| {
+            let mut a = Adam::new(n_gaussians * 14, AdamConfig::default());
+            let mut p = vec![0.0f32; n_gaussians * 14];
+            let g: Vec<f32> = (0..n_gaussians * 14).map(|i| (i as f32).sin()).collect();
+            a.step(&mut p, &g);
+            a
+        });
+        let mut c = StageCounters::new();
+        c.sort_pairs = 123;
+        c.map_contributions = 4;
+        SessionState {
+            frame_idx: 9,
+            prev_rel: Se3 {
+                q: Quat { w: 0.99, x: 0.01, y: -0.02, z: 0.03 },
+                t: Vec3::new(0.1, -0.2, 0.3),
+            },
+            rng_state: 0xdead_beef_cafe_f00d,
+            rng_inc: 0x1234_5678_9abc_def1,
+            map_version: 5,
+            covis_skips: 2,
+            track_recoveries: 1,
+            track_divergences: 1,
+            est_poses: vec![Se3::IDENTITY, Se3 { q: Quat::IDENTITY, t: Vec3::new(1.0, 2.0, 3.0) }],
+            store,
+            adam,
+            track_counters: c,
+            map_counters: StageCounters::new(),
+            per_frame_track: vec![c, StageCounters::new()],
+            per_map: vec![c],
+            track_stats: vec![TrackingStats {
+                iterations: 12,
+                // non-finite floats must round-trip bit-exactly, not decay
+                final_loss: f32::NAN,
+                first_loss: 0.5,
+                pixels_per_iter: 512,
+                diverged: true,
+                recoveries: 1,
+            }],
+            map_stats: vec![MappingStats {
+                added: 30,
+                pruned: 2,
+                first_loss: 0.9,
+                final_loss: 0.1,
+                sampled_pixels: 1024,
+                unseen_pixels: 17,
+            }],
+        }
+    }
+
+    fn sample_checkpoint(with_adam: bool) -> SessionCheckpoint {
+        SessionCheckpoint {
+            state: sample_state(8, with_adam),
+            next_frame: 11,
+            quarantined: vec![3, 7],
+            evictions: 2,
+        }
+    }
+
+    fn assert_states_equal(a: &SessionState, b: &SessionState) {
+        assert_eq!(a.frame_idx, b.frame_idx);
+        assert_eq!(a.prev_rel.q.w.to_bits(), b.prev_rel.q.w.to_bits());
+        assert_eq!(a.prev_rel.t.x.to_bits(), b.prev_rel.t.x.to_bits());
+        assert_eq!(a.rng_state, b.rng_state);
+        assert_eq!(a.rng_inc, b.rng_inc);
+        assert_eq!(a.map_version, b.map_version);
+        assert_eq!(a.covis_skips, b.covis_skips);
+        assert_eq!(a.est_poses.len(), b.est_poses.len());
+        for (p, q) in a.est_poses.iter().zip(&b.est_poses) {
+            assert_eq!(p.t.z.to_bits(), q.t.z.to_bits());
+        }
+        assert_eq!(a.store.len(), b.store.len());
+        for i in 0..a.store.len() {
+            assert_eq!(a.store.means[i].x.to_bits(), b.store.means[i].x.to_bits());
+            assert_eq!(a.store.opacity_logits[i].to_bits(), b.store.opacity_logits[i].to_bits());
+        }
+        match (&a.adam, &b.adam) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                let (mx, vx, tx) = x.to_parts();
+                let (my, vy, ty) = y.to_parts();
+                assert_eq!(tx, ty);
+                assert_eq!(mx.len(), my.len());
+                for (u, w) in mx.iter().zip(my).chain(vx.iter().zip(vy)) {
+                    assert_eq!(u.to_bits(), w.to_bits());
+                }
+            }
+            _ => panic!("adam presence mismatch"),
+        }
+        assert_eq!(a.track_counters, b.track_counters);
+        assert_eq!(a.per_frame_track, b.per_frame_track);
+        assert_eq!(a.per_map, b.per_map);
+        assert_eq!(a.track_stats.len(), b.track_stats.len());
+        assert_eq!(
+            a.track_stats[0].final_loss.to_bits(),
+            b.track_stats[0].final_loss.to_bits(),
+            "NaN loss must round-trip bit-exactly"
+        );
+        assert_eq!(a.map_stats.len(), b.map_stats.len());
+        assert_eq!(a.map_stats[0].added, b.map_stats[0].added);
+    }
+
+    #[test]
+    fn session_round_trip_is_bit_exact() {
+        for with_adam in [true, false] {
+            let ckpt = sample_checkpoint(with_adam);
+            let bytes = encode_session(&ckpt, 42);
+            let back = decode_session(&bytes, 42).expect("round trip");
+            assert_states_equal(&ckpt.state, &back.state);
+            assert_eq!(back.next_frame, 11);
+            assert_eq!(back.quarantined, vec![3, 7]);
+            assert_eq!(back.evictions, 2);
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_and_intrinsics() {
+        let cfg = SlamConfig::splatonic(crate::slam::Algorithm::SplaTam);
+        let intr = Intrinsics::replica_like(64, 48);
+        let base = config_fingerprint(&cfg, &intr);
+        assert_eq!(base, config_fingerprint(&cfg, &intr), "fingerprint is pure");
+        let mut cfg2 = cfg;
+        cfg2.seed ^= 1;
+        assert_ne!(base, config_fingerprint(&cfg2, &intr), "seed change must re-fingerprint");
+        let intr2 = Intrinsics::replica_like(128, 96);
+        assert_ne!(base, config_fingerprint(&cfg, &intr2), "resolution change must re-fingerprint");
+    }
+
+    #[test]
+    fn wrong_format_version_is_rejected() {
+        let mut bytes = encode_session(&sample_checkpoint(true), 42);
+        bytes[8] = FORMAT_VERSION as u8 + 1; // bump the LE version field
+        let err = decode_session(&bytes, 42).expect_err("version gate");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("format version"), "{msg}");
+        assert!(msg.contains("different build"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_fingerprint_is_rejected() {
+        let bytes = encode_session(&sample_checkpoint(true), 42);
+        let err = decode_session(&bytes, 43).expect_err("fingerprint gate");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        assert!(msg.contains("configuration"), "{msg}");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_are_rejected() {
+        let bytes = encode_session(&sample_checkpoint(false), 1);
+        let mut scribbled = bytes.clone();
+        scribbled[0] = b'X';
+        let err = decode_session(&scribbled, 1).expect_err("magic gate");
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+
+        let err = decode_session(&bytes[..bytes.len() - 3], 1).expect_err("truncation gate");
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0, 0, 0]);
+        let err = decode_session(&padded, 1).expect_err("trailing gate");
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected() {
+        let bytes = encode_session(&sample_checkpoint(false), 1);
+        let err = decode_shard(&bytes).expect_err("kind gate");
+        assert!(format!("{err:#}").contains("session"), "{err:#}");
+    }
+}

@@ -23,7 +23,7 @@
 
 use crate::config::RunConfig;
 use crate::render::{Parallelism, StageCounters};
-use crate::serve::{json_string, serve, FleetJob, ServerConfig};
+use crate::serve::{json_f32, json_f64, json_string, serve, FleetJob, ServerConfig};
 use crate::sim::{AccelModel, Cost, GpuModel};
 use anyhow::Result;
 
@@ -72,25 +72,28 @@ impl RunReport {
         json.push_str("{\n");
         json.push_str(&format!("  \"name\": {},\n", json_string(&self.name)));
         json.push_str(&format!("  \"frames\": {},\n", self.frames));
-        json.push_str(&format!("  \"ate_rmse_m\": {:.6},\n", self.ate_rmse_m));
-        json.push_str(&format!("  \"psnr_db\": {:.3},\n", self.psnr_db));
+        // non-finite metrics (a failed/empty run) serialize as null so
+        // the file always stays machine-parseable — same contract as
+        // ServerReport::to_json
+        json.push_str(&format!("  \"ate_rmse_m\": {},\n", json_f32(self.ate_rmse_m, 6)));
+        json.push_str(&format!("  \"psnr_db\": {},\n", json_f64(self.psnr_db, 3)));
         json.push_str(&format!("  \"n_gaussians\": {},\n", self.n_gaussians));
-        json.push_str(&format!("  \"wall_seconds\": {:.4},\n", self.wall_seconds));
+        json.push_str(&format!("  \"wall_seconds\": {},\n", json_f64(self.wall_seconds, 4)));
         json.push_str(&format!(
-            "  \"gpu_tracking_ms_per_frame\": {:.4},\n",
-            self.gpu_tracking.seconds * 1e3
+            "  \"gpu_tracking_ms_per_frame\": {},\n",
+            json_f64(self.gpu_tracking.seconds * 1e3, 4)
         ));
         json.push_str(&format!(
-            "  \"gpu_tracking_mj_per_frame\": {:.4},\n",
-            self.gpu_tracking.joules * 1e3
+            "  \"gpu_tracking_mj_per_frame\": {},\n",
+            json_f64(self.gpu_tracking.joules * 1e3, 4)
         ));
         json.push_str(&format!(
-            "  \"accel_tracking_ms_per_frame\": {:.4},\n",
-            self.accel_tracking.seconds * 1e3
+            "  \"accel_tracking_ms_per_frame\": {},\n",
+            json_f64(self.accel_tracking.seconds * 1e3, 4)
         ));
         json.push_str(&format!(
-            "  \"accel_tracking_mj_per_frame\": {:.4}\n",
-            self.accel_tracking.joules * 1e3
+            "  \"accel_tracking_mj_per_frame\": {}\n",
+            json_f64(self.accel_tracking.joules * 1e3, 4)
         ));
         json.push_str("}\n");
         json

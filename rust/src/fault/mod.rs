@@ -142,7 +142,9 @@ impl FaultPlan {
     /// comma-separated `kind@frame` tokens — `panic@3`, `nan-depth@2`
     /// (alias `nan`), `nan-rgb@1`, `drop@5`, `slow@4:50` (50 ms).
     /// Whitespace around tokens is ignored; the empty string is the
-    /// empty plan.
+    /// empty plan. Repeating the same kind at the same frame is
+    /// rejected (different kinds at one frame are fine and fire in
+    /// spec order).
     pub fn parse(spec: &str) -> Result<Self> {
         let mut plan = FaultPlan::none();
         for token in spec.split(',') {
@@ -182,6 +184,18 @@ impl FaultPlan {
             };
             if arg.is_some() && !matches!(kind, FaultKind::Slow { .. }) {
                 bail!("fault `{token}`: only slow takes a `:arg`");
+            }
+            // same kind twice at one frame is always a typo (for `slow`
+            // even the intent is ambiguous: two sleeps or a longer one?)
+            if plan
+                .events
+                .iter()
+                .any(|e| e.frame == frame && e.kind.name() == kind.name())
+            {
+                bail!(
+                    "fault `{token}`: duplicate `{}@{frame}` in spec",
+                    kind.name()
+                );
             }
             plan.push(FaultEvent { frame, kind });
         }
@@ -296,11 +310,32 @@ mod tests {
 
     #[test]
     fn parse_rejects_malformed_specs() {
-        assert!(FaultPlan::parse("panic").is_err(), "missing @frame");
-        assert!(FaultPlan::parse("explode@3").is_err(), "unknown kind");
-        assert!(FaultPlan::parse("panic@x").is_err(), "bad frame");
-        assert!(FaultPlan::parse("slow@3").is_err(), "slow needs :ms");
-        assert!(FaultPlan::parse("slow@3:fast").is_err(), "bad millis");
+        let err = |spec: &str| format!("{:#}", FaultPlan::parse(spec).unwrap_err());
+        assert!(err("panic").contains("expected kind@frame"), "{}", err("panic"));
+        assert!(err("explode@3").contains("unknown fault kind `explode`"));
+        assert!(err("panic@x").contains("bad frame index `x`"));
+        // u32 overflow is a bad frame index, not a silent wrap
+        assert!(err("panic@99999999999").contains("bad frame index"));
+        assert!(err("slow@3").contains("slow needs `slow@frame:ms`"));
+        assert!(err("slow@3:fast").contains("bad millis"));
+        assert!(err("drop@2:7").contains("only slow takes a `:arg`"));
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_kind_at_frame() {
+        let err = format!(
+            "{:#}",
+            FaultPlan::parse("drop@4,nan-depth@2,drop@4").unwrap_err()
+        );
+        assert!(err.contains("duplicate `drop@4`"), "{err}");
+        // the alias spelling still collides with the canonical one
+        assert!(FaultPlan::parse("nan@2,nan-depth@2").is_err());
+        // slow with different millis at the same frame is ambiguous
+        assert!(FaultPlan::parse("slow@3:5,slow@3:9").is_err());
+        // different kinds at one frame stay legal (application order =
+        // spec order; pinned by builders_keep_frame_order)
+        let plan = FaultPlan::parse("drop@4,panic@4").unwrap();
+        assert_eq!(plan.len(), 2);
     }
 
     #[test]

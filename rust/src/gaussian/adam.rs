@@ -110,6 +110,26 @@ impl Adam {
     pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
         self.step_scaled(params, grads, &|_| 1.0);
     }
+
+    /// Borrow the full optimizer state `(m, v, t)` for checkpoint
+    /// serialization.
+    pub fn to_parts(&self) -> (&[f32], &[f32], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Rebuild optimizer state from checkpointed moments. Errors if the
+    /// moment vectors disagree in length (a corrupt or truncated
+    /// snapshot), since `step` assumes `m.len() == v.len()`.
+    pub fn from_parts(cfg: AdamConfig, m: Vec<f32>, v: Vec<f32>, t: u64) -> anyhow::Result<Self> {
+        if m.len() != v.len() {
+            anyhow::bail!(
+                "Adam snapshot is inconsistent: {} first moments vs {} second moments",
+                m.len(),
+                v.len()
+            );
+        }
+        Ok(Adam { cfg, m, v, t })
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +190,32 @@ mod tests {
         assert_eq!(adam.len(), 4);
         assert_eq!(adam.m, vec![0.0, 1.0, 4.0, 5.0]);
         assert_eq!(adam.v, vec![0.0, 10.0, 40.0, 50.0]);
+    }
+
+    #[test]
+    fn parts_round_trip_is_bit_exact() {
+        let mut adam = Adam::new(4, AdamConfig::with_lr(0.05));
+        let mut p = [0.0f32; 4];
+        for _ in 0..7 {
+            adam.step(&mut p, &[0.3, -1.0, 2.5, 0.01]);
+        }
+        let (m, v, t) = adam.to_parts();
+        let restored =
+            Adam::from_parts(adam.cfg, m.to_vec(), v.to_vec(), t).expect("consistent parts");
+        let mut p2 = p;
+        let mut adam2 = restored;
+        adam.step(&mut p, &[0.5, 0.5, 0.5, 0.5]);
+        adam2.step(&mut p2, &[0.5, 0.5, 0.5, 0.5]);
+        for i in 0..4 {
+            assert_eq!(p[i].to_bits(), p2[i].to_bits(), "param {i}");
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_mismatched_moments() {
+        let err = Adam::from_parts(AdamConfig::default(), vec![0.0; 3], vec![0.0; 2], 1)
+            .expect_err("length mismatch must be rejected");
+        assert!(format!("{err:#}").contains("3 first moments vs 2"), "{err:#}");
     }
 
     #[test]

@@ -142,6 +142,35 @@ impl GaussianStore {
     pub fn param_bytes(&self) -> usize {
         self.len() * 14 * 4
     }
+
+    /// Assemble a store from its SoA columns, validating that every
+    /// column agrees in length — the checkpoint decoder's constructor,
+    /// where a truncated snapshot would otherwise produce a store whose
+    /// accessors panic on the first ragged index.
+    pub fn from_parts(
+        means: Vec<Vec3>,
+        rots: Vec<Quat>,
+        log_scales: Vec<Vec3>,
+        opacity_logits: Vec<f32>,
+        colors: Vec<Vec3>,
+    ) -> anyhow::Result<Self> {
+        let n = means.len();
+        if rots.len() != n
+            || log_scales.len() != n
+            || opacity_logits.len() != n
+            || colors.len() != n
+        {
+            anyhow::bail!(
+                "GaussianStore snapshot has ragged columns: {n} means, {} rots, {} log_scales, \
+                 {} opacity_logits, {} colors",
+                rots.len(),
+                log_scales.len(),
+                opacity_logits.len(),
+                colors.len()
+            );
+        }
+        Ok(GaussianStore { means, rots, log_scales, opacity_logits, colors })
+    }
 }
 
 #[cfg(test)]
@@ -224,5 +253,30 @@ mod tests {
     fn param_bytes_counts_attributes() {
         let s = sample_store(10);
         assert_eq!(s.param_bytes(), 10 * 14 * 4);
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_rejects_ragged_columns() {
+        let s = sample_store(4);
+        let rebuilt = GaussianStore::from_parts(
+            s.means.clone(),
+            s.rots.clone(),
+            s.log_scales.clone(),
+            s.opacity_logits.clone(),
+            s.colors.clone(),
+        )
+        .expect("consistent columns");
+        assert_eq!(rebuilt.len(), 4);
+        assert_eq!(rebuilt.means, s.means);
+
+        let err = GaussianStore::from_parts(
+            s.means.clone(),
+            s.rots[..3].to_vec(),
+            s.log_scales.clone(),
+            s.opacity_logits.clone(),
+            s.colors.clone(),
+        )
+        .expect_err("ragged columns must be rejected");
+        assert!(format!("{err:#}").contains("ragged"), "{err:#}");
     }
 }

@@ -20,6 +20,7 @@
 
 pub mod bench;
 pub mod camera;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;

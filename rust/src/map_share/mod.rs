@@ -44,13 +44,19 @@
 //!
 //! # Failure model: quarantine, not poisoning
 //!
-//! A failing contribution must not take the scene down with it. Before
-//! [`MapShard::contribute`] runs the mapping closure it snapshots the
-//! store and Adam moments; if the closure errs — or panics (caught via
-//! `catch_unwind`) — the shard **rolls back** to the snapshot and
-//! **quarantines** the rank: a tombstone records the epoch boundary and
-//! reason, and the rank drops out of the turn requirements exactly like
-//! a detach. The same tombstone is planted by
+//! A failing contribution must not take the scene down with it.
+//! [`MapShard::contribute`] runs the mapping closure on a
+//! **copy-on-write working copy** of the store + Adam moments (taken as
+//! cheap `Arc` clones under the lock, deep-copied *outside* it — peers'
+//! covisibility reads and snapshot pulls are never stalled behind a
+//! large-map copy; sound because the caller holds the `(epoch, rank)`
+//! slot, so nothing else can publish meanwhile). Success publishes the
+//! working copy under a re-taken lock after re-verifying the version;
+//! if the closure errs — or panics (caught via `catch_unwind`) — the
+//! working copy is simply **discarded** (the shard never saw the failed
+//! mutation) and the rank is **quarantined**: a tombstone records the
+//! epoch boundary and reason, and the rank drops out of the turn
+//! requirements exactly like a detach. The same tombstone is planted by
 //! [`ShardHandle::quarantine`] when the *session* fails outside the
 //! shard (a tracking panic, a rejected frame cascade). Either way the
 //! quarantined rank's earlier contributions stay in the map, and — the
@@ -84,6 +90,23 @@
 //! iterations plus the densify/prune passes. Own-rank keyframes never
 //! count toward the score, so a single-session shard never skips and
 //! stays bit-identical to a private inline-mapping run.
+//!
+//! # Eviction and persistence
+//!
+//! The paging server (`serve`, `docs/CHECKPOINT.md`) evicts idle
+//! sessions to disk. An evicted co-scene session is **suspended**, not
+//! detached: the server keeps its [`ShardHandle`] in memory
+//! ([`ShardHandle::suspend`] / [`ShardHandle::resume`]), so the rank
+//! keeps its place in the turn order and a resume re-attaches at a
+//! deterministic epoch boundary — the shard's merge order, and thus its
+//! contents, are bit-identical to an uninterrupted run. Suspension is
+//! diagnostics-only for the protocol: a peer that times out on a
+//! suspended rank sees it named as evicted in the error. Whole-shard
+//! state is persistable across runs via [`MapShard::export_state`] →
+//! `checkpoint::encode_shard`, and [`SceneRegistry::restore`] re-seeds
+//! a registry from such a snapshot: sessions attaching afterwards
+//! inherit the map (exported keyframes are re-ranked
+//! [`HISTORICAL_RANK`] so they count as peer coverage for everyone).
 
 use crate::camera::{Camera, Intrinsics};
 use crate::dataset::Frame;
@@ -178,6 +201,35 @@ impl ShardKeyframe {
         ShardKeyframe { rank, epoch, cam: Camera::new(intr, w2c), stride, grid_w, grid_h, depth }
     }
 
+    /// Decompose into plain fields for checkpoint serialization
+    /// (`checkpoint::encode_shard`).
+    pub fn to_parts(&self) -> (usize, u64, Camera, u32, u32, u32, &[f32]) {
+        (self.rank, self.epoch, self.cam, self.stride, self.grid_w, self.grid_h, &self.depth)
+    }
+
+    /// Rebuild a keyframe from checkpointed parts, validating that the
+    /// depth footprint matches the declared grid shape.
+    pub fn from_parts(
+        rank: usize,
+        epoch: u64,
+        cam: Camera,
+        stride: u32,
+        grid_w: u32,
+        grid_h: u32,
+        depth: Vec<f32>,
+    ) -> Result<Self> {
+        if stride == 0 {
+            bail!("keyframe snapshot is corrupt: footprint stride 0");
+        }
+        if depth.len() != (grid_w as usize) * (grid_h as usize) {
+            bail!(
+                "keyframe snapshot is corrupt: {grid_w}x{grid_h} grid with {} depth samples",
+                depth.len()
+            );
+        }
+        Ok(ShardKeyframe { rank, epoch, cam, stride, grid_w, grid_h, depth })
+    }
+
     /// The stored depth nearest to pixel `px`; `None` when the footprint
     /// holds no valid depth there.
     pub fn depth_at(&self, px: Vec2) -> Option<f32> {
@@ -242,6 +294,12 @@ pub fn covisibility_score(
     }
 }
 
+/// Keyframe rank marking a contributor from a previous run, applied by
+/// [`MapShard::export_state`]. No live rank can collide with it, so
+/// historical keyframes count as *peer* coverage for every session
+/// attached after a [`SceneRegistry::restore`].
+pub const HISTORICAL_RANK: usize = usize::MAX;
+
 /// One attached session as the turn protocol sees it.
 #[derive(Clone, Debug)]
 struct Participant {
@@ -249,6 +307,10 @@ struct Participant {
     /// The next epoch this participant will contribute or skip.
     next_epoch: u64,
     detached: bool,
+    /// The owning session is evicted to disk (see the module docs);
+    /// the rank stays in the turn requirements — this flag only names
+    /// the rank as evicted in peer timeout errors and stats.
+    suspended: bool,
     /// Quarantine tombstone: `(epoch boundary, reason)` — the first
     /// epoch this rank did *not* complete, recorded when a contribution
     /// failed (rolled back) or the session died
@@ -257,10 +319,14 @@ struct Participant {
     failure: Option<(u64, String)>,
 }
 
-/// Everything behind the shard's publish lock.
+/// Everything behind the shard's publish lock. Store and Adam moments
+/// sit behind `Arc`s so readers ([`MapShard::snapshot_newer_than`],
+/// [`MapShard::export_state`]) and the contribution path can take cheap
+/// reference clones under the lock and deep-copy *outside* it — the
+/// turn protocol is never stalled behind a large-map copy.
 struct ShardState {
-    store: GaussianStore,
-    adam: Adam,
+    store: Arc<GaussianStore>,
+    adam: Arc<Adam>,
     /// Completed contribution count — gates the per-session snapshot
     /// clone exactly like the mapping worker's published version.
     version: u64,
@@ -313,8 +379,8 @@ impl MapShard {
             covis,
             turn_timeout,
             state: Mutex::new(ShardState {
-                store: GaussianStore::new(),
-                adam: Adam::new(0, AdamConfig::default()),
+                store: Arc::new(GaussianStore::new()),
+                adam: Arc::new(Adam::new(0, AdamConfig::default())),
                 version: 0,
                 keyframes: Vec::new(),
                 participants: Vec::new(),
@@ -349,6 +415,7 @@ impl MapShard {
             name: name.to_string(),
             next_epoch: 0,
             detached: false,
+            suspended: false,
             failure: None,
         });
         state.participants.len() - 1
@@ -391,12 +458,31 @@ impl MapShard {
             }
             let now = Instant::now();
             if now >= deadline {
+                let blockers: Vec<String> = state
+                    .participants
+                    .iter()
+                    .enumerate()
+                    .filter(|&(r, p)| {
+                        !(r == rank
+                            || p.detached
+                            || if r < rank { p.next_epoch > epoch } else { p.next_epoch >= epoch })
+                    })
+                    .map(|(r, p)| {
+                        format!(
+                            "`{}` (rank {r}, at epoch {}{})",
+                            p.name,
+                            p.next_epoch,
+                            if p.suspended { ", evicted to disk" } else { "" }
+                        )
+                    })
+                    .collect();
                 bail!(
                     "session `{}` timed out waiting for its epoch-{epoch} turn on map shard \
-                     `{}` — co-scene sessions must be fed frames roughly in lockstep \
-                     (round-robin submission)",
+                     `{}` — blocked on {} — co-scene sessions must be fed frames roughly in \
+                     lockstep (round-robin submission)",
                     state.participants[rank].name,
-                    self.scene
+                    self.scene,
+                    blockers.join(", ")
                 );
             }
             let (guard, _) = self
@@ -409,13 +495,18 @@ impl MapShard {
 
     /// The shard store and version, cloned only when a contribution
     /// newer than `seen` was published (same contract as the mapping
-    /// worker's snapshot).
+    /// worker's snapshot). Only the `Arc` reference is taken under the
+    /// lock; the deep copy happens after release, so a large-map
+    /// snapshot never stalls the turn protocol.
     fn snapshot_newer_than(&self, seen: u64) -> Result<Option<(GaussianStore, u64)>> {
-        let state = self.lock_state();
-        if state.version <= seen {
-            return Ok(None);
-        }
-        Ok(Some((state.store.clone(), state.version)))
+        let (store_arc, version) = {
+            let state = self.lock_state();
+            if state.version <= seen {
+                return Ok(None);
+            }
+            (Arc::clone(&state.store), state.version)
+        };
+        Ok(Some(((*store_arc).clone(), version)))
     }
 
     /// Covisibility of `frame` against the shard's *peer* keyframes
@@ -428,16 +519,26 @@ impl MapShard {
         Ok(covisibility_score(frame, w2c, intr, &state.keyframes, rank, &self.covis))
     }
 
-    /// Apply slot `(epoch, rank)`: run `f` on the shard's store + Adam
-    /// moments under the publish lock, record the keyframe, bump the
-    /// version, and return `f`'s output plus a post-slot snapshot. The
-    /// caller must hold the slot (a prior [`Self::wait_turn`] — no
-    /// peer can take a slot in between, so the order stays fixed).
+    /// Apply slot `(epoch, rank)`: run `f` on a copy-on-write working
+    /// copy of the shard's store + Adam moments, publish on success,
+    /// record the keyframe, bump the version, and return `f`'s output
+    /// plus a post-slot snapshot. The caller must hold the slot (a
+    /// prior [`Self::wait_turn`] — no peer can take a slot in between,
+    /// so the order stays fixed).
+    ///
+    /// The shard lock is held only for the version check + `Arc` clones
+    /// going in and the publish coming out; the deep copy and the
+    /// mapping closure itself run **outside** the critical section, so
+    /// peers' covisibility reads and snapshot pulls are never stalled
+    /// behind a large-map copy. Slot exclusivity makes this sound — no
+    /// peer can publish between the two lock scopes — and the publish
+    /// re-verifies the version to turn any violation of that invariant
+    /// into a quarantine instead of silent corruption.
     ///
     /// A failing closure (error or panic) does **not** poison the
-    /// shard: the store and Adam moments are rolled back to their
-    /// pre-slot snapshot and the rank is quarantined (see the module
-    /// docs) — survivors continue exactly as if this rank had stopped
+    /// shard: the working copy is discarded — the shard never saw the
+    /// failed mutation — and the rank is quarantined (see the module
+    /// docs); survivors continue exactly as if this rank had stopped
     /// contributing at `epoch`.
     fn contribute<T>(
         &self,
@@ -448,47 +549,68 @@ impl MapShard {
         intr: Intrinsics,
         f: impl FnOnce(&mut GaussianStore, &mut Adam) -> Result<T>,
     ) -> Result<(T, GaussianStore, u64)> {
-        let mut state = self.lock_state();
-        self.check_live(&state, rank, epoch)?;
-        debug_assert!(is_turn(&state, rank, epoch), "contribute without holding the slot");
-        let backup_store = state.store.clone();
-        let backup_adam = state.adam.clone();
-        let st = &mut *state;
-        let outcome = catch_unwind(AssertUnwindSafe(|| f(&mut st.store, &mut st.adam)));
+        let (mut store_arc, mut adam_arc, base_version) = {
+            let state = self.lock_state();
+            self.check_live(&state, rank, epoch)?;
+            debug_assert!(is_turn(&state, rank, epoch), "contribute without holding the slot");
+            (Arc::clone(&state.store), Arc::clone(&state.adam), state.version)
+        };
+        // make_mut deep-copies here (the shard still holds the other
+        // reference) — the expensive copy, outside the lock
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            f(Arc::make_mut(&mut store_arc), Arc::make_mut(&mut adam_arc))
+        }));
         match outcome {
             Ok(Ok(out)) => {
-                st.keyframes.push(ShardKeyframe::capture(
+                let kf = ShardKeyframe::capture(
                     rank,
                     epoch,
                     frame,
                     w2c,
                     intr,
                     self.covis.footprint_stride,
-                ));
-                st.version += 1;
-                st.contributions += 1;
-                st.participants[rank].next_epoch = epoch + 1;
-                let snapshot = st.store.clone();
-                let version = st.version;
-                drop(state);
+                );
+                let version = {
+                    let mut state = self.lock_state();
+                    if state.version != base_version {
+                        let seen = state.version;
+                        quarantine_participant(
+                            &mut state,
+                            rank,
+                            format!(
+                                "shard advanced from version {base_version} to {seen} during \
+                                 the epoch-{epoch} contribution"
+                            ),
+                        );
+                        drop(state);
+                        self.turn.notify_all();
+                        bail!(
+                            "map shard `{}` advanced from version {base_version} to {seen} \
+                             during rank {rank}'s epoch-{epoch} contribution — slot exclusivity \
+                             violated",
+                            self.scene
+                        );
+                    }
+                    state.store = Arc::clone(&store_arc);
+                    state.adam = adam_arc;
+                    state.keyframes.push(kf);
+                    state.version += 1;
+                    state.contributions += 1;
+                    state.participants[rank].next_epoch = epoch + 1;
+                    state.version
+                };
                 self.turn.notify_all();
-                Ok((out, snapshot, version))
+                // the caller's private snapshot: deep copy, also outside
+                // the lock
+                Ok((out, (*store_arc).clone(), version))
             }
             Ok(Err(e)) => {
-                st.store = backup_store;
-                st.adam = backup_adam;
-                quarantine_participant(st, rank, format!("{e}"));
-                drop(state);
-                self.turn.notify_all();
+                self.quarantine(rank, &format!("{e}"));
                 Err(e)
             }
             Err(payload) => {
                 let msg = panic_message(payload.as_ref());
-                st.store = backup_store;
-                st.adam = backup_adam;
-                quarantine_participant(st, rank, format!("panicked: {msg}"));
-                drop(state);
-                self.turn.notify_all();
+                self.quarantine(rank, &format!("panicked: {msg}"));
                 Err(anyhow!(
                     "mapping contribution of rank {rank} on map shard `{}` panicked: {msg}",
                     self.scene
@@ -536,12 +658,56 @@ impl MapShard {
         self.turn.notify_all();
     }
 
+    /// Flip the suspension marker of `rank` (session evicted to disk /
+    /// resumed). Diagnostics only: the rank stays in the turn
+    /// requirements either way (see the module docs).
+    fn set_suspended(&self, rank: usize, suspended: bool) {
+        let mut state = self.lock_state();
+        state.participants[rank].suspended = suspended;
+    }
+
+    /// Snapshot everything needed to persist the shard across runs (the
+    /// payload of `checkpoint::encode_shard`). `Arc` references are
+    /// taken under the lock, the deep copies happen outside it — same
+    /// discipline as [`Self::snapshot_newer_than`]. Keyframes are
+    /// re-ranked [`HISTORICAL_RANK`] so sessions of a future run treat
+    /// them as peer coverage; participants are deliberately absent (a
+    /// restored shard starts with no attached sessions).
+    pub fn export_state(&self) -> ShardExport {
+        let (store_arc, adam_arc, version, mut keyframes, contributions, skips, iters_saved) = {
+            let state = self.lock_state();
+            (
+                Arc::clone(&state.store),
+                Arc::clone(&state.adam),
+                state.version,
+                state.keyframes.clone(),
+                state.contributions,
+                state.skips,
+                state.mapping_iters_saved,
+            )
+        };
+        for kf in &mut keyframes {
+            kf.rank = HISTORICAL_RANK;
+        }
+        ShardExport {
+            scene: self.scene.clone(),
+            store: (*store_arc).clone(),
+            adam: (*adam_arc).clone(),
+            version,
+            keyframes,
+            contributions,
+            skips,
+            mapping_iters_saved: iters_saved,
+        }
+    }
+
     pub fn stats(&self) -> SceneStats {
         let state = self.lock_state();
         SceneStats {
             scene: self.scene.clone(),
             sessions: state.participants.len(),
             failed_sessions: state.participants.iter().filter(|p| p.failure.is_some()).count(),
+            suspended_sessions: state.participants.iter().filter(|p| p.suspended).count(),
             map_gaussians: state.store.len(),
             map_bytes: state.store.param_bytes() + state.adam.state_bytes(),
             keyframes: state.keyframes.len(),
@@ -599,6 +765,20 @@ impl ShardHandle {
 
     pub fn skip(&self, epoch: u64, iters_saved: u64) -> Result<()> {
         self.shard.skip(self.rank, epoch, iters_saved)
+    }
+
+    /// Mark this rank suspended: its session was evicted to disk, and
+    /// this handle stays alive server-side so the rank keeps its place
+    /// in the turn order (the resume re-attaches at a deterministic
+    /// epoch boundary). Peers that time out on the rank see it named as
+    /// evicted in the error.
+    pub fn suspend(&self) {
+        self.shard.set_suspended(self.rank, true);
+    }
+
+    /// Clear the suspension marker (the session was resumed from disk).
+    pub fn resume(&self) {
+        self.shard.set_suspended(self.rank, false);
     }
 
     /// Detach this rank from the turn protocol. Idempotent; also runs
@@ -685,6 +865,74 @@ impl SceneRegistry {
     pub fn stats(&self) -> Vec<SceneStats> {
         self.shards.iter().map(|s| s.stats()).collect()
     }
+
+    /// Export the persistent state of `scene`'s shard
+    /// ([`MapShard::export_state`]) — `None` when no such scene exists.
+    /// The counterpart of [`Self::restore`].
+    pub fn export(&self, scene: &str) -> Option<ShardExport> {
+        self.shards.iter().find(|s| s.scene() == scene).map(|s| s.export_state())
+    }
+
+    /// Re-create the shard of `export.scene` from a persisted snapshot
+    /// ([`MapShard::export_state`] → `checkpoint::encode_shard` /
+    /// `decode_shard`), so sessions attaching afterwards inherit the
+    /// map instead of rebuilding it. Errs when a live shard already
+    /// exists for the scene — restoring over live participants would
+    /// tear the turn protocol's state out from under them.
+    pub fn restore(&mut self, export: ShardExport) -> Result<()> {
+        if self.shards.iter().any(|s| s.scene() == export.scene) {
+            bail!(
+                "cannot restore scene `{}`: a live shard already exists for it",
+                export.scene
+            );
+        }
+        let ShardExport {
+            scene,
+            store,
+            adam,
+            version,
+            keyframes,
+            contributions,
+            skips,
+            mapping_iters_saved,
+        } = export;
+        self.shards.push(Arc::new(MapShard {
+            scene,
+            covis: CovisConfig::default(),
+            turn_timeout: self.turn_timeout,
+            state: Mutex::new(ShardState {
+                store: Arc::new(store),
+                adam: Arc::new(adam),
+                version,
+                keyframes,
+                participants: Vec::new(),
+                contributions,
+                skips,
+                mapping_iters_saved,
+            }),
+            turn: Condvar::new(),
+        }));
+        Ok(())
+    }
+}
+
+/// A shard's persistent state as plain data — what
+/// [`MapShard::export_state`] produces and [`SceneRegistry::restore`]
+/// consumes, serialized by `checkpoint::encode_shard` /
+/// `checkpoint::decode_shard`. Participants are deliberately absent: a
+/// restored shard starts with no attached sessions, and the exported
+/// keyframes carry [`HISTORICAL_RANK`] so they count as peer coverage
+/// for every newly attached session.
+#[derive(Clone, Debug)]
+pub struct ShardExport {
+    pub scene: String,
+    pub store: GaussianStore,
+    pub adam: Adam,
+    pub version: u64,
+    pub keyframes: Vec<ShardKeyframe>,
+    pub contributions: u64,
+    pub skips: u64,
+    pub mapping_iters_saved: u64,
 }
 
 /// Reporting snapshot of one shard (surfaces in
@@ -697,6 +945,9 @@ pub struct SceneStats {
     /// Quarantined ranks (tombstoned by a failed contribution or
     /// [`ShardHandle::quarantine`]).
     pub failed_sessions: usize,
+    /// Ranks whose session is currently evicted to disk
+    /// ([`ShardHandle::suspend`]); they stay in the turn order.
+    pub suspended_sessions: usize,
     pub map_gaussians: usize,
     /// Store parameters + Adam moments.
     pub map_bytes: usize,
@@ -1001,5 +1252,116 @@ mod tests {
         assert!(h.snapshot_newer_than(1).unwrap().is_none(), "already seen");
         let (s2, v2) = h.snapshot_newer_than(0).unwrap().unwrap();
         assert_eq!((s2.len(), v2), (1, 1));
+    }
+
+    #[test]
+    fn suspension_is_visible_in_stats_and_timeout_errors() {
+        let mut reg = SceneRegistry::with_turn_timeout(Duration::from_millis(30));
+        let h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        h0.suspend();
+        assert_eq!(reg.stats()[0].suspended_sessions, 1);
+        // rank 1's epoch-0 turn needs rank 0 to finish epoch 0 first;
+        // the timeout must name the evicted rank
+        let err = h1.wait_turn(0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("evicted to disk"), "{msg}");
+        assert!(msg.contains("`a` (rank 0"), "{msg}");
+        h0.resume();
+        assert_eq!(reg.stats()[0].suspended_sessions, 0);
+    }
+
+    #[test]
+    fn export_restore_lets_new_sessions_inherit_the_map() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let mut h = reg.attach("lobby", "a");
+        h.wait_turn(0).unwrap();
+        h.contribute(0, frame, frame.gt_w2c, data.intr, |store, adam| {
+            store.push(Gaussian::isotropic(Vec3::new(0.5, 0.25, 2.0), 0.1, Vec3::splat(0.5), 0.6));
+            adam.grow(14);
+            Ok(())
+        })
+        .unwrap();
+        h.detach();
+        let export = reg.shards[0].export_state();
+        assert_eq!(export.version, 1);
+        assert_eq!(export.keyframes.len(), 1);
+        assert_eq!(export.keyframes[0].rank, HISTORICAL_RANK);
+
+        // binary round trip through the checkpoint format
+        let bytes = crate::checkpoint::encode_shard(&export);
+        let export = crate::checkpoint::decode_shard(&bytes).expect("shard round trip");
+
+        let mut reg2 = SceneRegistry::new();
+        reg2.restore(export).unwrap();
+        let h2 = reg2.attach("lobby", "late-joiner");
+        assert_eq!(h2.rank(), 0, "restored shard starts with fresh ranks");
+        // the new session inherits the map through the usual
+        // version-gated snapshot…
+        let (snap, v) = h2.snapshot_newer_than(0).unwrap().unwrap();
+        assert_eq!((snap.len(), v), (1, 1));
+        assert_eq!(snap.means[0].x.to_bits(), 0.5f32.to_bits());
+        // …and the historical keyframe counts as peer coverage even for
+        // rank 0 (it can skip instead of rebuilding the map)
+        let score = h2.covis_score(frame, frame.gt_w2c, data.intr).unwrap();
+        assert!(score > 0.99, "historical keyframes must cover the revisit, got {score}");
+        let stats = &reg2.stats()[0];
+        assert_eq!((stats.contributions, stats.keyframes), (1, 1));
+    }
+
+    #[test]
+    fn restore_rejects_a_live_scene() {
+        let data = data();
+        let frame = &data.frames[0];
+        let mut reg = SceneRegistry::new();
+        let h = reg.attach("lobby", "a");
+        h.wait_turn(0).unwrap();
+        h.contribute(0, frame, frame.gt_w2c, data.intr, |_, _| Ok(())).unwrap();
+        let export = reg.shards[0].export_state();
+        let err = reg.restore(export).unwrap_err();
+        assert!(format!("{err}").contains("live shard"), "{err}");
+    }
+
+    #[test]
+    fn contribution_closure_runs_outside_the_shard_lock() {
+        // a peer must be able to pull a snapshot while another rank's
+        // contribution closure is still running — the old implementation
+        // held the state lock across the closure and this would deadlock
+        let data = data();
+        let frame = data.frames[0].clone();
+        let mut reg = SceneRegistry::new();
+        let h0 = reg.attach("room", "a");
+        let h1 = reg.attach("room", "b");
+        h0.wait_turn(0).unwrap();
+        h0.contribute(0, &frame, frame.gt_w2c, data.intr, |store, _| {
+            store.push(Gaussian::isotropic(Vec3::ZERO, 0.1, Vec3::splat(0.5), 0.6));
+            Ok(())
+        })
+        .unwrap();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let shard = Arc::clone(&reg.shards[0]);
+        let snapshotter = std::thread::spawn(move || {
+            rx.recv().unwrap();
+            // runs while rank 1's closure is blocked below
+            shard.snapshot_newer_than(0).unwrap().map(|(s, v)| (s.len(), v))
+        });
+        h1.wait_turn(0).unwrap();
+        let done = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let done_in = Arc::clone(&done);
+        h1.contribute(0, &frame, frame.gt_w2c, data.intr, move |store, _| {
+            tx.send(()).unwrap();
+            // give the snapshotter real time to need the lock
+            std::thread::sleep(Duration::from_millis(50));
+            done_in.store(true, std::sync::atomic::Ordering::SeqCst);
+            store.push(Gaussian::isotropic(Vec3::X, 0.1, Vec3::splat(0.5), 0.6));
+            Ok(())
+        })
+        .unwrap();
+        let got = snapshotter.join().unwrap();
+        assert_eq!(got, Some((1, 1)), "snapshot must see the pre-slot state, not block");
+        assert!(done.load(std::sync::atomic::Ordering::SeqCst));
     }
 }

@@ -72,6 +72,27 @@
 //! real quarantine path and an injected panic exercises the real
 //! supervisor.
 //!
+//! ## Checkpoint / evict / resume (long-lived streams)
+//!
+//! With [`ServerConfig::max_resident_sessions`] set, the server admits
+//! more sessions than it keeps **resident**: a worker holding its
+//! residency cap evicts its least-recently-used idle session to a
+//! versioned binary snapshot on disk (see [`crate::checkpoint`] and
+//! `docs/CHECKPOINT.md` for the format and the eviction policy) and
+//! transparently resumes it when its next frame arrives. Because the
+//! snapshot captures *everything* the stream's future depends on — map,
+//! Adam moments, PRNG, constant-velocity prior, pose history, counters —
+//! an evicted-and-resumed session is **bit-identical** to one that
+//! stayed resident. Shared-map sessions keep their [`ShardHandle`] (and
+//! with it their rank in the shard's merge order) in server memory
+//! while evicted, marked [`ShardHandle::suspend`]ed for diagnostics;
+//! re-admission happens at an epoch boundary by construction, since
+//! eviction only occurs between frames. Recency is a logical
+//! dequeue-tick counter, never wall clock, so eviction choices are a
+//! pure function of the submission order. Sessions with
+//! `threaded_mapping` cannot be snapshotted (their map reads are
+//! timing-dependent) and stay pinned resident.
+//!
 //! ## Determinism contract
 //!
 //! Per-session results are **bit-identical regardless of worker count
@@ -109,6 +130,7 @@
 //! throughput as a machine-readable [`ServerReport`]
 //! ([`ServerReport::to_json`] feeds `BENCH_e2e.json`).
 
+use crate::checkpoint;
 use crate::config::RunConfig;
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::fault::{corrupt_depth, corrupt_rgb, panic_message, FaultKind, FaultPlan};
@@ -122,6 +144,8 @@ use crate::slam::session::SlamSession;
 use crate::slam::tracking::TrackingStats;
 use anyhow::{anyhow, bail, Context, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -140,8 +164,17 @@ pub struct ServerConfig {
     /// shard `(epoch, rank)` turn slot before erroring (default
     /// [`crate::map_share::TURN_TIMEOUT`]). Lower it in tests/drills
     /// that deliberately stall a peer; raise it for very uneven
-    /// per-frame costs.
+    /// per-frame costs. Must be positive — `0` would time every turn
+    /// out immediately and spuriously quarantine healthy sessions.
     pub shard_turn_timeout_ms: u64,
+    /// Fleet-wide cap on sessions kept resident (live backends, arenas,
+    /// map clones) at once; `0` = unlimited (every session stays
+    /// resident, exactly the pre-paging behavior). When more sessions
+    /// are admitted than the cap, each worker pages its
+    /// least-recently-fed sessions to disk snapshots and resumes them
+    /// on demand — see the module docs and `docs/CHECKPOINT.md`. The
+    /// cap partitions per worker (`max(1, cap / workers)`).
+    pub max_resident_sessions: usize,
 }
 
 impl Default for ServerConfig {
@@ -150,15 +183,16 @@ impl Default for ServerConfig {
             workers: 0,
             budget: Parallelism::auto(),
             shard_turn_timeout_ms: TURN_TIMEOUT.as_millis() as u64,
+            max_resident_sessions: 0,
         }
     }
 }
 
 impl ServerConfig {
     /// Load from a TOML `[server]` section (`workers`, `threads` — the
-    /// render budget, `0` = auto —, `shard_turn_timeout_ms`). Unknown
-    /// keys are an error to catch typos; a missing section yields the
-    /// defaults.
+    /// render budget, `0` = auto —, `shard_turn_timeout_ms`,
+    /// `max_resident_sessions`). Unknown keys are an error to catch
+    /// typos; a missing section yields the defaults.
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = crate::config::TomlDoc::parse(text)?;
         let mut cfg = ServerConfig::default();
@@ -171,7 +205,18 @@ impl ServerConfig {
                     cfg.budget =
                         if n == 0 { Parallelism::auto() } else { Parallelism::fixed(n) };
                 }
-                "shard_turn_timeout_ms" => cfg.shard_turn_timeout_ms = v.parse()?,
+                "shard_turn_timeout_ms" => {
+                    let ms: u64 = v.parse()?;
+                    if ms == 0 {
+                        bail!(
+                            "[server] shard_turn_timeout_ms must be positive — 0 would time \
+                             every co-scene turn out immediately (the default is {} ms)",
+                            TURN_TIMEOUT.as_millis()
+                        );
+                    }
+                    cfg.shard_turn_timeout_ms = ms;
+                }
+                "max_resident_sessions" => cfg.max_resident_sessions = v.parse()?,
                 _ => bail!("unknown [server] config key: {key}"),
             }
         }
@@ -257,8 +302,14 @@ pub struct SessionOutcome {
     pub status: SessionStatus,
     /// Submitted-stream indices the supervisor quarantined (fault-drop
     /// or validation reject) — never fed to the session, so the pose
-    /// stream is the submitted stream minus these.
+    /// stream is the submitted stream minus these. Always sorted
+    /// ascending (the supervisor appends in submission order), which
+    /// [`Self::evaluate`] exploits with a binary search.
     pub quarantined_frames: Vec<u32>,
+    /// Times this session was evicted to a disk snapshot and resumed
+    /// ([`ServerConfig::max_resident_sessions`]); observability only —
+    /// results are bit-identical either way.
+    pub evictions: u32,
     /// Tracking-watchdog retry attempts across the stream.
     pub recoveries: u32,
     /// Frames whose tracking fell back to the constant-velocity prior.
@@ -282,6 +333,7 @@ impl SessionOutcome {
         scene: Option<String>,
         status: SessionStatus,
         quarantined_frames: Vec<u32>,
+        evictions: u32,
         mut s: SlamSession,
     ) -> Self {
         SessionOutcome {
@@ -289,6 +341,7 @@ impl SessionOutcome {
             scene,
             status,
             quarantined_frames,
+            evictions,
             recoveries: s.track_recoveries,
             divergences: s.track_divergences,
             est_poses: std::mem::take(&mut s.est_poses),
@@ -312,6 +365,7 @@ impl SessionOutcome {
             scene,
             status: SessionStatus::Failed { frame: 0, reason },
             quarantined_frames: Vec::new(),
+            evictions: 0,
             recoveries: 0,
             divergences: 0,
             est_poses: Vec::new(),
@@ -347,11 +401,18 @@ impl SessionOutcome {
         let frames: &[Frame] = if self.quarantined_frames.is_empty() {
             &data.frames
         } else {
+            // quarantined_frames is sorted (supervisor appends in
+            // submission order): a binary search per frame instead of
+            // the old linear scan, and an explicit u32 conversion
+            // instead of a silently-truncating cast
             kept_storage = data
                 .frames
                 .iter()
                 .enumerate()
-                .filter(|(i, _)| !self.quarantined_frames.contains(&(*i as u32)))
+                .filter(|(i, _)| {
+                    u32::try_from(*i)
+                        .map_or(true, |k| self.quarantined_frames.binary_search(&k).is_err())
+                })
                 .map(|(_, f)| f.clone())
                 .collect();
             &kept_storage
@@ -410,6 +471,13 @@ impl SlamServer {
         if specs.is_empty() {
             bail!("SlamServer needs at least one session");
         }
+        if scfg.shard_turn_timeout_ms == 0 {
+            bail!(
+                "shard_turn_timeout_ms must be positive — 0 would time every co-scene \
+                 turn out immediately (the default is {} ms)",
+                TURN_TIMEOUT.as_millis()
+            );
+        }
         for spec in &specs {
             spec.cfg.validate().with_context(|| format!("session `{}`", spec.name))?;
             if spec.threaded_mapping && spec.scene.is_some() {
@@ -430,6 +498,24 @@ impl SlamServer {
         // partitioned per SESSION count — a pure function of the fleet,
         // never of the worker count (see the determinism contract)
         let share = scfg.budget.share(n_sessions);
+
+        // residency: the fleet-wide cap partitions per worker (each
+        // worker pages only its own sessions — no cross-worker state,
+        // no locks); the checkpoint directory is resolved once, here at
+        // the server edge
+        let resident_cap = if scfg.max_resident_sessions == 0 {
+            0
+        } else {
+            (scfg.max_resident_sessions / workers).max(1)
+        };
+        let ckpt_dir = if resident_cap > 0 {
+            let dir = resolve_checkpoint_dir();
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+            Some(dir)
+        } else {
+            None
+        };
 
         let session_meta: Vec<(String, Option<String>, crate::camera::Intrinsics)> =
             specs.iter().map(|s| (s.name.clone(), s.scene.clone(), s.intr)).collect();
@@ -455,8 +541,9 @@ impl SlamServer {
         for worker_specs in per_worker {
             let (tx, rx) = mpsc::sync_channel::<(usize, Frame)>(SUBMIT_QUEUE_DEPTH);
             let ready = ready_tx.clone();
+            let dir = ckpt_dir.clone();
             handles.push(std::thread::spawn(move || {
-                worker_entry(worker_specs, share, rx, ready)
+                worker_entry(worker_specs, share, resident_cap, dir, rx, ready)
             }));
             txs.push(tx);
         }
@@ -586,22 +673,371 @@ impl SlamServer {
     }
 }
 
-/// One session as its worker supervises it.
-struct Slot {
+/// Process-unique serial for checkpoint directories — concurrent
+/// servers in one process (tests) must never collide on disk.
+static CKPT_DIR_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+/// Where evicted-session snapshots live: `$SPLATONIC_CHECKPOINT_DIR`
+/// (resolved here, once, at the server edge — sessions never read the
+/// environment) or the system temp dir, plus a process-and-server
+/// unique leaf. Purely a disk-I/O location; nothing numeric flows
+/// through it.
+fn resolve_checkpoint_dir() -> PathBuf {
+    let base = match std::env::var_os("SPLATONIC_CHECKPOINT_DIR") {
+        Some(dir) => PathBuf::from(dir),
+        None => std::env::temp_dir(),
+    };
+    let serial = CKPT_DIR_SERIAL.fetch_add(1, Ordering::Relaxed);
+    base.join(format!("splatonic-ckpt-{}-{serial}", std::process::id()))
+}
+
+/// The per-session facts a worker needs whether or not the session is
+/// resident: identity, routing, the (already id-seeded) config the
+/// session was — or will be — built from, and the fault schedule.
+struct SlotMeta {
     id: usize,
     name: String,
     scene: Option<String>,
     faults: FaultPlan,
-    session: SlamSession,
+    /// Spec config with [`session_seed`] already applied — identical at
+    /// construction, checkpoint, and resume, so the config fingerprint
+    /// matches across the eviction round trip.
+    cfg: SlamConfig,
+    intr: crate::camera::Intrinsics,
+    threaded_mapping: bool,
+}
+
+/// Where one session currently lives.
+enum SlotState {
+    /// Resident: live backends, arenas, map — steps frames directly.
+    Live(Box<SlamSession>),
+    /// Admitted but never yet constructed (beyond the residency cap at
+    /// startup). A scened session's [`ShardHandle`] — its rank — is
+    /// held here from [`SlamServer::start`]'s attach pass.
+    Parked(Option<ShardHandle>),
+    /// Paged out: state lives in the snapshot at `path`; a scened
+    /// session's handle stays in memory ([`ShardHandle::suspend`]ed)
+    /// so its rank keeps its place in the shard's merge order.
+    Evicted { path: PathBuf, handle: Option<ShardHandle> },
+    /// Terminal (failed mid-stream, or completed): the outcome is
+    /// final and the residency slot is free.
+    Done(Box<SessionOutcome>),
+}
+
+/// One session as its worker supervises it.
+struct Slot {
+    meta: SlotMeta,
     /// Submitted-stream index of the next frame routed to this session
     /// (counts quarantined and post-failure frames too — the fault
     /// schedule and failure reports are keyed by the *submitted*
     /// stream).
     next_frame: u32,
-    /// Submitted indices quarantined (fault-drop / validation reject).
+    /// Submitted indices quarantined (fault-drop / validation reject),
+    /// ascending.
     quarantined: Vec<u32>,
-    /// Terminal failure, if the supervisor caught one.
-    failed: Option<(u32, String)>,
+    /// Times this session has been evicted to disk.
+    evictions: u32,
+    /// Logical dequeue tick of the last frame fed to this session —
+    /// the LRU recency key. Never wall time (a clock would make
+    /// eviction choices timing-dependent; see docs/DETERMINISM.md).
+    last_used: u64,
+    state: SlotState,
+}
+
+/// Construct a session from its slot facts (first admission — eager at
+/// startup or lazy beyond the cap).
+fn construct_session(
+    meta: &SlotMeta,
+    share: Parallelism,
+    handle: Option<ShardHandle>,
+) -> Result<SlamSession> {
+    match handle {
+        Some(h) => SlamSession::attach_shared(meta.cfg, meta.intr, share, h),
+        None if meta.threaded_mapping => {
+            SlamSession::with_threaded_mapping(meta.cfg, meta.intr, share)
+        }
+        None => SlamSession::create(meta.cfg, meta.intr, share),
+    }
+}
+
+/// Read and decode a slot's snapshot, verifying format version and the
+/// config fingerprint (a stale or foreign snapshot is an error, never
+/// a silently-wrong session).
+fn load_snapshot(meta: &SlotMeta, path: &std::path::Path) -> Result<checkpoint::SessionCheckpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading session snapshot {}", path.display()))?;
+    checkpoint::decode_session(&bytes, checkpoint::config_fingerprint(&meta.cfg, &meta.intr))
+}
+
+/// Page a session back in from disk: decode, clear the shard
+/// suspension marker, rebuild the session bit-identically, delete the
+/// snapshot. A decode failure quarantines the shard rank (the stream
+/// is terminally broken) before surfacing the error.
+fn resume_session(
+    meta: &SlotMeta,
+    share: Parallelism,
+    path: &std::path::Path,
+    handle: Option<ShardHandle>,
+) -> Result<SlamSession> {
+    let ck = match load_snapshot(meta, path) {
+        Ok(ck) => ck,
+        Err(e) => {
+            if let Some(h) = handle {
+                h.quarantine(&format!("resume failed: {e:#}"));
+            }
+            return Err(e);
+        }
+    };
+    if let Some(h) = &handle {
+        h.resume();
+    }
+    let session = SlamSession::restore(meta.cfg, meta.intr, share, ck.state, handle)?;
+    std::fs::remove_file(path).ok();
+    eprintln!(
+        "[serve] session {} (`{}`) resumed from disk at stream frame {}",
+        meta.id,
+        meta.name,
+        session.frames_seen()
+    );
+    Ok(session)
+}
+
+/// Evict the least-recently-fed evictable resident (lowest tick, ties
+/// to the lowest id), skipping `protect` and threaded-mapping sessions
+/// (not snapshottable — their map reads are timing-dependent). Returns
+/// `false` when nothing was evicted — the worker then over-admits
+/// rather than failing a healthy session. The live session is only
+/// torn down after its snapshot is safely on disk.
+fn evict_lru(slots: &mut [Slot], protect: usize, dir: &std::path::Path) -> bool {
+    let victim = slots
+        .iter()
+        .enumerate()
+        .filter(|(i, s)| {
+            *i != protect
+                && !s.meta.threaded_mapping
+                && matches!(s.state, SlotState::Live(_))
+        })
+        .min_by_key(|(_, s)| (s.last_used, s.meta.id))
+        .map(|(i, _)| i);
+    let Some(vi) = victim else {
+        return false;
+    };
+    let slot = &mut slots[vi];
+    let SlotState::Live(session) = &slot.state else {
+        unreachable!("victim filter keeps only live slots");
+    };
+    let written = session.checkpoint().and_then(|state| {
+        let ck = checkpoint::SessionCheckpoint {
+            state,
+            next_frame: slot.next_frame,
+            quarantined: slot.quarantined.clone(),
+            evictions: slot.evictions + 1,
+        };
+        let bytes = checkpoint::encode_session(
+            &ck,
+            checkpoint::config_fingerprint(&slot.meta.cfg, &slot.meta.intr),
+        );
+        let path = dir.join(format!("session-{}.ckpt", slot.meta.id));
+        std::fs::write(&path, bytes)
+            .with_context(|| format!("writing session snapshot {}", path.display()))?;
+        Ok(path)
+    });
+    match written {
+        Ok(path) => {
+            let state = std::mem::replace(&mut slot.state, SlotState::Parked(None));
+            let SlotState::Live(session) = state else {
+                unreachable!("checked live above");
+            };
+            let handle = session.into_shard_handle();
+            if let Some(h) = &handle {
+                h.suspend();
+            }
+            slot.state = SlotState::Evicted { path, handle };
+            slot.evictions += 1;
+            eprintln!(
+                "[serve] session {} (`{}`) evicted to disk (eviction #{})",
+                slot.meta.id, slot.meta.name, slot.evictions
+            );
+            true
+        }
+        Err(e) => {
+            eprintln!(
+                "[serve] session {} (`{}`) could not be evicted ({e:#}) — over-admitting",
+                slot.meta.id, slot.meta.name
+            );
+            false
+        }
+    }
+}
+
+/// Ensure slot `si` is [`SlotState::Live`], first evicting LRU
+/// residents while the worker is at its cap. No-op for residents. An
+/// admission or resume failure is returned as a message; the caller
+/// converts the slot to a terminal outcome.
+fn make_resident(
+    slots: &mut [Slot],
+    si: usize,
+    cap: usize,
+    ckpt_dir: Option<&std::path::Path>,
+    share: Parallelism,
+) -> std::result::Result<(), String> {
+    if matches!(slots[si].state, SlotState::Live(_)) {
+        return Ok(());
+    }
+    if cap > 0 {
+        while slots.iter().filter(|s| matches!(s.state, SlotState::Live(_))).count() >= cap {
+            let evicted = match ckpt_dir {
+                Some(dir) => evict_lru(slots, si, dir),
+                None => false,
+            };
+            if !evicted {
+                eprintln!(
+                    "[serve] resident cap {cap} reached with nothing evictable — over-admitting"
+                );
+                break;
+            }
+        }
+    }
+    let slot = &mut slots[si];
+    let state = std::mem::replace(&mut slot.state, SlotState::Parked(None));
+    let built = match state {
+        SlotState::Parked(handle) => construct_session(&slot.meta, share, handle),
+        SlotState::Evicted { path, handle } => resume_session(&slot.meta, share, &path, handle),
+        SlotState::Live(_) | SlotState::Done(_) => unreachable!("checked by the caller"),
+    };
+    match built {
+        Ok(session) => {
+            slot.state = SlotState::Live(Box::new(session));
+            Ok(())
+        }
+        Err(e) => Err(format!("{e:#}")),
+    }
+}
+
+/// Convert a live slot into its terminal [`SlotState::Done`] outcome,
+/// freeing its residency immediately (a dead session must not occupy a
+/// resident slot until drain).
+fn complete_slot(slot: &mut Slot, status: SessionStatus) {
+    let state = std::mem::replace(&mut slot.state, SlotState::Parked(None));
+    let SlotState::Live(session) = state else {
+        unreachable!("only live sessions complete");
+    };
+    let outcome = SessionOutcome::from_session(
+        slot.meta.name.clone(),
+        slot.meta.scene.clone(),
+        status,
+        slot.quarantined.clone(),
+        slot.evictions,
+        *session,
+    );
+    slot.state = SlotState::Done(Box::new(outcome));
+}
+
+/// Terminal failure for a slot whose session could not be paged in —
+/// there is no live session to strip results from.
+fn fail_absent_slot(slot: &mut Slot, frame: u32, reason: String) {
+    let mut outcome =
+        SessionOutcome::lost(slot.meta.name.clone(), slot.meta.scene.clone(), reason.clone());
+    outcome.status = SessionStatus::Failed { frame, reason };
+    outcome.quarantined_frames = slot.quarantined.clone();
+    outcome.evictions = slot.evictions;
+    slot.state = SlotState::Done(Box::new(outcome));
+}
+
+/// End-of-stream completion of a (still) resident session — the
+/// pre-paging drain logic, verbatim.
+fn finish_live(slot: &mut Slot, mut session: SlamSession) -> SessionOutcome {
+    let status = match catch_unwind(AssertUnwindSafe(|| session.finish())) {
+        Ok(Ok(())) => {
+            if session.track_divergences > 0
+                || session.track_recoveries > 0
+                || !slot.quarantined.is_empty()
+            {
+                SessionStatus::Degraded
+            } else {
+                SessionStatus::Ok
+            }
+        }
+        Ok(Err(e)) => SessionStatus::Failed {
+            frame: session.frames_seen(),
+            reason: format!("mapping worker failed: {e:#}"),
+        },
+        Err(payload) => SessionStatus::Failed {
+            frame: session.frames_seen(),
+            reason: format!("finish panicked: {}", panic_message(payload.as_ref())),
+        },
+    };
+    SessionOutcome::from_session(
+        slot.meta.name.clone(),
+        slot.meta.scene.clone(),
+        status,
+        std::mem::take(&mut slot.quarantined),
+        slot.evictions,
+        session,
+    )
+}
+
+/// Outcome for a session that was never admitted (parked through the
+/// whole stream) — the same shape a zero-frame resident session
+/// produces.
+fn empty_outcome(slot: &Slot) -> SessionOutcome {
+    let status = if slot.quarantined.is_empty() {
+        SessionStatus::Ok
+    } else {
+        SessionStatus::Degraded
+    };
+    SessionOutcome {
+        name: slot.meta.name.clone(),
+        scene: slot.meta.scene.clone(),
+        status,
+        quarantined_frames: slot.quarantined.clone(),
+        evictions: slot.evictions,
+        recoveries: 0,
+        divergences: 0,
+        est_poses: Vec::new(),
+        store: GaussianStore::new(),
+        track_counters: StageCounters::new(),
+        map_counters: StageCounters::new(),
+        per_frame_track: Vec::new(),
+        per_map: Vec::new(),
+        track_stats: Vec::new(),
+        map_stats: Vec::new(),
+        covis_skips: 0,
+    }
+}
+
+/// Outcome for a session that ended the stream evicted: its snapshot
+/// *is* its final state — no backends are revived just to `finish()`.
+/// Field-for-field identical to resuming the session and finishing it
+/// (inline `finish` is a no-op; the shared-handle detach happens at
+/// the call site).
+fn outcome_from_state(slot: &Slot, state: checkpoint::SessionState) -> SessionOutcome {
+    let status = if state.track_divergences > 0
+        || state.track_recoveries > 0
+        || !slot.quarantined.is_empty()
+    {
+        SessionStatus::Degraded
+    } else {
+        SessionStatus::Ok
+    };
+    SessionOutcome {
+        name: slot.meta.name.clone(),
+        scene: slot.meta.scene.clone(),
+        status,
+        quarantined_frames: slot.quarantined.clone(),
+        evictions: slot.evictions,
+        recoveries: state.track_recoveries,
+        divergences: state.track_divergences,
+        est_poses: state.est_poses,
+        store: state.store,
+        track_counters: state.track_counters,
+        map_counters: state.map_counters,
+        per_frame_track: state.per_frame_track,
+        per_map: state.per_map,
+        track_stats: state.track_stats,
+        map_stats: state.map_stats,
+        covis_skips: state.covis_skips,
+    }
 }
 
 /// One worker: construct the assigned sessions (on this thread — they
@@ -609,40 +1045,53 @@ struct Slot {
 /// sessions until the server closes it. Per-frame work runs under the
 /// supervisor (see the module docs): a failing session is isolated,
 /// not fatal — the worker keeps serving its other sessions and returns
-/// an outcome for every one.
+/// an outcome for every one. With a residency cap (`cap > 0`), the
+/// worker keeps at most `cap` sessions live, paging the rest to disk
+/// snapshots (see the module docs' checkpoint section).
 fn worker_entry(
     specs: Vec<(usize, SessionSpec, Option<ShardHandle>)>,
     share: Parallelism,
+    cap: usize,
+    ckpt_dir: Option<PathBuf>,
     rx: mpsc::Receiver<(usize, Frame)>,
     ready: mpsc::Sender<std::result::Result<(), String>>,
 ) -> WorkerResult {
     let mut slots: Vec<Slot> = Vec::with_capacity(specs.len());
-    for (id, spec, handle) in specs {
+    for (slot_idx, (id, spec, handle)) in specs.into_iter().enumerate() {
         let mut cfg = spec.cfg;
         cfg.seed = session_seed(cfg.seed, id);
-        let built = if let Some(handle) = handle {
-            SlamSession::attach_shared(cfg, spec.intr, share, handle)
-        } else if spec.threaded_mapping {
-            SlamSession::with_threaded_mapping(cfg, spec.intr, share)
-        } else {
-            SlamSession::create(cfg, spec.intr, share)
+        let meta = SlotMeta {
+            id,
+            name: spec.name,
+            scene: spec.scene,
+            faults: spec.faults,
+            cfg,
+            intr: spec.intr,
+            threaded_mapping: spec.threaded_mapping,
         };
-        match built {
-            Ok(s) => slots.push(Slot {
-                id,
-                name: spec.name,
-                scene: spec.scene,
-                faults: spec.faults,
-                session: s,
-                next_frame: 0,
-                quarantined: Vec::new(),
-                failed: None,
-            }),
-            Err(e) => {
-                ready.send(Err(format!("{e}"))).ok();
-                return Err(e.context(format!("constructing session {id}")));
+        // the first `cap` sessions construct eagerly (with cap == 0,
+        // all of them — exactly the pre-paging behavior, construction
+        // errors failing server startup); the rest park until their
+        // first frame
+        let state = if cap == 0 || slot_idx < cap {
+            match construct_session(&meta, share, handle) {
+                Ok(s) => SlotState::Live(Box::new(s)),
+                Err(e) => {
+                    ready.send(Err(format!("{e}"))).ok();
+                    return Err(e.context(format!("constructing session {id}")));
+                }
             }
-        }
+        } else {
+            SlotState::Parked(handle)
+        };
+        slots.push(Slot {
+            meta,
+            next_frame: 0,
+            quarantined: Vec::new(),
+            evictions: 0,
+            last_used: 0,
+            state,
+        });
     }
     // drop the readiness sender either way: a sibling worker that dies
     // before reporting must make the barrier's recv fail, not block on
@@ -650,24 +1099,30 @@ fn worker_entry(
     ready.send(Ok(())).ok();
     drop(ready);
 
+    // logical recency clock: one tick per dequeued frame, never wall
+    // time, so eviction choices are a pure function of submission order
+    let mut tick: u64 = 0;
     while let Ok((sid, frame)) = rx.recv() {
-        let Some(slot) = slots.iter_mut().find(|s| s.id == sid) else {
+        tick += 1;
+        let Some(si) = slots.iter().position(|s| s.meta.id == sid) else {
             bail!("frame for session {sid} routed to the wrong worker");
         };
+        let slot = &mut slots[si];
         let k = slot.next_frame;
         slot.next_frame += 1;
-        if slot.failed.is_some() {
+        if matches!(slot.state, SlotState::Done(_)) {
             // terminal: drain this session's queue so siblings on the
             // same worker (and the submitter) never block on a corpse
             continue;
         }
 
         // deterministic fault injection — before validation, so
-        // injected corruption exercises the real quarantine path
+        // injected corruption exercises the real quarantine path; needs
+        // only the schedule, so a dropped frame never pages a session in
         let mut frame = frame;
         let mut panic_due = false;
         let mut dropped = false;
-        for kind in slot.faults.faults_at(k) {
+        for kind in slot.meta.faults.faults_at(k) {
             match kind {
                 FaultKind::Drop => dropped = true,
                 FaultKind::NanDepth => corrupt_depth(&mut frame),
@@ -685,14 +1140,32 @@ fn worker_entry(
 
         // frame watchdog: a corrupt frame is quarantined (skipped,
         // counted), never fed to the session and never fatal
-        if let Err(e) = frame.validate(&slot.session.intr) {
+        if let Err(e) = frame.validate(&slot.meta.intr) {
             eprintln!(
                 "[serve] session {} (`{}`): frame {k} quarantined: {e:#}",
-                slot.id, slot.name
+                slot.meta.id, slot.meta.name
             );
             slot.quarantined.push(k);
             continue;
         }
+
+        // page in (evicting an LRU resident first when at cap) — the
+        // restored session continues bit-identically, so everything
+        // below is oblivious to whether an eviction round trip happened
+        if let Err(reason) = make_resident(&mut slots, si, cap, ckpt_dir.as_deref(), share) {
+            let slot = &mut slots[si];
+            eprintln!(
+                "[serve] session {} (`{}`) failed to page in at frame {k}: {reason}",
+                slot.meta.id, slot.meta.name
+            );
+            fail_absent_slot(slot, k, reason);
+            continue;
+        }
+        let slot = &mut slots[si];
+        slot.last_used = tick;
+        let SlotState::Live(session) = &mut slot.state else {
+            unreachable!("make_resident leaves the slot live");
+        };
 
         // the supervised step: a panic or error here fails THIS
         // session only — shared resources are released as a failure
@@ -701,7 +1174,7 @@ fn worker_entry(
             if panic_due {
                 panic!("fault-injected panic at frame {k}");
             }
-            slot.session.on_frame(&frame).map(|_| ())
+            session.on_frame(&frame).map(|_| ())
         }));
         let failure = match step {
             Ok(Ok(())) => None,
@@ -711,48 +1184,56 @@ fn worker_entry(
         if let Some(reason) = failure {
             eprintln!(
                 "[serve] session {} (`{}`) failed at frame {k}: {reason}",
-                slot.id, slot.name
+                slot.meta.id, slot.meta.name
             );
-            slot.session.abort(&reason);
-            slot.failed = Some((k, reason));
+            session.abort(&reason);
+            // terminal now, not at drain — a corpse must not occupy a
+            // residency slot
+            complete_slot(slot, SessionStatus::Failed { frame: k, reason });
         }
     }
 
+    // end-of-stream drain, in slot (= session id) order
     let mut out = Vec::with_capacity(slots.len());
     for mut slot in slots {
-        let status = match slot.failed.take() {
-            Some((frame, reason)) => SessionStatus::Failed { frame, reason },
-            None => match catch_unwind(AssertUnwindSafe(|| slot.session.finish())) {
-                Ok(Ok(())) => {
-                    if slot.session.track_divergences > 0
-                        || slot.session.track_recoveries > 0
-                        || !slot.quarantined.is_empty()
-                    {
-                        SessionStatus::Degraded
-                    } else {
-                        SessionStatus::Ok
-                    }
+        let id = slot.meta.id;
+        let outcome = match std::mem::replace(&mut slot.state, SlotState::Parked(None)) {
+            SlotState::Done(outcome) => *outcome,
+            SlotState::Live(session) => finish_live(&mut slot, *session),
+            SlotState::Parked(handle) => {
+                if let Some(mut h) = handle {
+                    h.detach();
                 }
-                Ok(Err(e)) => SessionStatus::Failed {
-                    frame: slot.session.frames_seen(),
-                    reason: format!("mapping worker failed: {e:#}"),
-                },
-                Err(payload) => SessionStatus::Failed {
-                    frame: slot.session.frames_seen(),
-                    reason: format!("finish panicked: {}", panic_message(payload.as_ref())),
-                },
+                empty_outcome(&slot)
+            }
+            SlotState::Evicted { path, handle } => match load_snapshot(&slot.meta, &path) {
+                Ok(ck) => {
+                    std::fs::remove_file(&path).ok();
+                    // resume() before detach() so the suspension marker
+                    // clears from the shard's diagnostics
+                    if let Some(mut h) = handle {
+                        h.resume();
+                        h.detach();
+                    }
+                    outcome_from_state(&slot, ck.state)
+                }
+                Err(e) => {
+                    let reason = format!("loading final snapshot: {e:#}");
+                    if let Some(h) = handle {
+                        h.quarantine(&reason);
+                    }
+                    let mut o = SessionOutcome::lost(
+                        slot.meta.name.clone(),
+                        slot.meta.scene.clone(),
+                        reason,
+                    );
+                    o.quarantined_frames = slot.quarantined.clone();
+                    o.evictions = slot.evictions;
+                    o
+                }
             },
         };
-        out.push((
-            slot.id,
-            SessionOutcome::from_session(
-                slot.name,
-                slot.scene,
-                status,
-                slot.quarantined,
-                slot.session,
-            ),
-        ));
+        out.push((id, outcome));
     }
     Ok(out)
 }
@@ -783,6 +1264,9 @@ pub struct SessionReport {
     pub status: SessionStatus,
     /// Frames the supervisor quarantined (dropped/rejected).
     pub frames_quarantined: u32,
+    /// Times the session was evicted to a disk snapshot and resumed
+    /// ([`ServerConfig::max_resident_sessions`]).
+    pub evictions: u32,
     /// Tracking-watchdog retry attempts.
     pub recoveries: u32,
     /// Frames that fell back to the constant-velocity prior.
@@ -844,7 +1328,7 @@ impl ServerReport {
         );
         for s in &self.sessions {
             println!(
-                "  `{}` ({}): {} frames | ATE {:.2} cm | PSNR {:.2} dB | {} Gaussians | {} mapping calls{}{}{}",
+                "  `{}` ({}): {} frames | ATE {:.2} cm | PSNR {:.2} dB | {} Gaussians | {} mapping calls{}{}{}{}",
                 s.name,
                 s.dataset,
                 s.frames,
@@ -854,6 +1338,11 @@ impl ServerReport {
                 s.mapping_invocations,
                 if s.covis_skips > 0 {
                     format!(" | {} covis skips", s.covis_skips)
+                } else {
+                    String::new()
+                },
+                if s.evictions > 0 {
+                    format!(" | {} eviction(s)", s.evictions)
                 } else {
                     String::new()
                 },
@@ -915,10 +1404,13 @@ impl ServerReport {
             self.threads_per_session
         ));
         json.push_str(&format!("  \"total_frames\": {},\n", self.total_frames));
-        json.push_str(&format!("  \"wall_seconds\": {:.4},\n", self.wall_seconds));
         json.push_str(&format!(
-            "  \"fleet_frames_per_sec\": {:.3},\n",
-            self.fleet_frames_per_sec
+            "  \"wall_seconds\": {},\n",
+            json_f64(self.wall_seconds, 4)
+        ));
+        json.push_str(&format!(
+            "  \"fleet_frames_per_sec\": {},\n",
+            json_f64(self.fleet_frames_per_sec, 3)
         ));
         json.push_str(&format!("  \"failed_sessions\": {},\n", self.failed_sessions()));
         json.push_str(&format!(
@@ -935,11 +1427,12 @@ impl ServerReport {
             json.push_str(&format!(
                 "    {{\"name\": {}, \"dataset\": {}, \"scene\": {}, \"status\": {}, \
                  \"failure\": {}, \"frames\": {}, \"frames_quarantined\": {}, \
+                 \"evictions\": {}, \
                  \"recoveries\": {}, \"divergences\": {}, \
-                 \"ate_rmse_m\": {:.6}, \
-                 \"psnr_db\": {:.3}, \"n_gaussians\": {}, \"track_iters\": {}, \
+                 \"ate_rmse_m\": {}, \
+                 \"psnr_db\": {}, \"n_gaussians\": {}, \"track_iters\": {}, \
                  \"mapping_invocations\": {}, \"covis_skips\": {}, \
-                 \"mean_track_final_loss\": {:.6}}}{}\n",
+                 \"mean_track_final_loss\": {}}}{}\n",
                 json_string(&s.name),
                 json_string(&s.dataset),
                 match &s.scene {
@@ -956,15 +1449,16 @@ impl ServerReport {
                 },
                 s.frames,
                 s.frames_quarantined,
+                s.evictions,
                 s.recoveries,
                 s.divergences,
-                s.ate_rmse_m,
-                s.psnr_db,
+                json_f32(s.ate_rmse_m, 6),
+                json_f64(s.psnr_db, 3),
                 s.n_gaussians,
                 s.track_iters,
                 s.mapping_invocations,
                 s.covis_skips,
-                s.mean_track_final_loss,
+                json_f32(s.mean_track_final_loss, 6),
                 if i + 1 < self.sessions.len() { "," } else { "" },
             ));
         }
@@ -975,7 +1469,7 @@ impl ServerReport {
                 "    {{\"scene\": {}, \"sessions\": {}, \"failed_sessions\": {}, \
                  \"map_gaussians\": {}, \
                  \"map_bytes\": {}, \"keyframes\": {}, \"contributions\": {}, \
-                 \"covis_skips\": {}, \"skip_rate\": {:.4}, \"mapping_iters_saved\": {}}}{}\n",
+                 \"covis_skips\": {}, \"skip_rate\": {}, \"mapping_iters_saved\": {}}}{}\n",
                 json_string(&sc.scene),
                 sc.sessions,
                 sc.failed_sessions,
@@ -984,7 +1478,7 @@ impl ServerReport {
                 sc.keyframes,
                 sc.contributions,
                 sc.covis_skips,
-                sc.skip_rate(),
+                json_f64(sc.skip_rate(), 4),
                 sc.mapping_iters_saved,
                 if i + 1 < self.scenes.len() { "," } else { "" },
             ));
@@ -992,6 +1486,27 @@ impl ServerReport {
         json.push_str("  ]\n");
         json.push_str("}\n");
         json
+    }
+}
+
+/// A JSON number from an `f64`: fixed `precision` digits, with
+/// non-finite values serialized as `null` — bare `NaN`/`inf` are not
+/// JSON, and a report carrying a failed session's NaN metrics must not
+/// produce a file `json.load` rejects.
+pub(crate) fn json_f64(v: f64, precision: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.precision$}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// [`json_f64`] for `f32` fields.
+pub(crate) fn json_f32(v: f32, precision: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.precision$}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -1095,6 +1610,7 @@ pub fn serve(jobs: &[FleetJob], scfg: &ServerConfig) -> Result<ServerReport> {
             scene: outcome.scene.clone(),
             status: outcome.status.clone(),
             frames_quarantined: outcome.frames_quarantined(),
+            evictions: outcome.evictions,
             recoveries: outcome.recoveries,
             divergences: outcome.divergences,
             frames: stats.frames,
@@ -1296,20 +1812,144 @@ mod tests {
     #[test]
     fn server_config_from_toml() {
         let cfg = ServerConfig::from_toml(
-            "[server]\nworkers = 3\nthreads = 4\nshard_turn_timeout_ms = 2500\n",
+            "[server]\nworkers = 3\nthreads = 4\nshard_turn_timeout_ms = 2500\n\
+             max_resident_sessions = 2\n",
         )
         .unwrap();
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.budget.threads(), 4);
         assert_eq!(cfg.shard_turn_timeout_ms, 2500);
+        assert_eq!(cfg.max_resident_sessions, 2);
         // missing section → defaults
         let cfg = ServerConfig::from_toml("[run]\nframes = 4\n").unwrap();
         assert_eq!(cfg.workers, 0);
+        assert_eq!(cfg.max_resident_sessions, 0, "default: every session stays resident");
         assert_eq!(
             cfg.shard_turn_timeout_ms,
             crate::map_share::TURN_TIMEOUT.as_millis() as u64
         );
         assert!(ServerConfig::from_toml("[server]\nwrokers = 3\n").is_err(), "typo must err");
+    }
+
+    #[test]
+    fn zero_turn_timeout_is_rejected_at_parse_and_start() {
+        // satellite: shard_turn_timeout_ms = 0 used to make every turn
+        // time out instantly, spuriously quarantining healthy sessions
+        let err =
+            ServerConfig::from_toml("[server]\nshard_turn_timeout_ms = 0\n").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("must be positive"), "{msg}");
+        assert!(
+            msg.contains(&TURN_TIMEOUT.as_millis().to_string()),
+            "the error should name the default: {msg}"
+        );
+
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 32, 24, 1);
+        let spec = SessionSpec {
+            name: "only".into(),
+            cfg: SlamConfig::splatonic(Algorithm::FlashSlam).scaled(0.3),
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: None,
+            faults: FaultPlan::none(),
+        };
+        let scfg = ServerConfig { shard_turn_timeout_ms: 0, ..Default::default() };
+        let err = SlamServer::start(vec![spec], &scfg).unwrap_err();
+        assert!(format!("{err}").contains("must be positive"), "{err}");
+    }
+
+    #[test]
+    fn report_json_serializes_nonfinite_metrics_as_null() {
+        // a Failed session evaluated over zero frames can carry NaN
+        // ATE/PSNR; the JSON must stay machine-parseable (null, not a
+        // bare NaN token)
+        let report = ServerReport {
+            sessions: vec![SessionReport {
+                name: "crashed".into(),
+                dataset: "replica_orbit".into(),
+                scene: None,
+                status: SessionStatus::Failed { frame: 3, reason: "panicked: boom".into() },
+                frames_quarantined: 0,
+                evictions: 0,
+                recoveries: 0,
+                divergences: 0,
+                frames: 3,
+                ate_rmse_m: f32::NAN,
+                psnr_db: f64::NEG_INFINITY,
+                n_gaussians: 0,
+                track_iters: 0,
+                mapping_invocations: 0,
+                covis_skips: 0,
+                mean_track_final_loss: f32::INFINITY,
+                track_counters: StageCounters::new(),
+                map_counters: StageCounters::new(),
+            }],
+            scenes: Vec::new(),
+            workers: 1,
+            threads_per_session: 1,
+            total_frames: 3,
+            wall_seconds: f64::NAN,
+            fleet_frames_per_sec: 0.0,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"ate_rmse_m\": null"), "{json}");
+        assert!(json.contains("\"psnr_db\": null"), "{json}");
+        assert!(json.contains("\"mean_track_final_loss\": null"), "{json}");
+        assert!(json.contains("\"wall_seconds\": null"), "{json}");
+        assert!(!json.contains("NaN"), "bare NaN is not JSON: {json}");
+        assert!(!json.contains("inf"), "bare inf is not JSON: {json}");
+        // the failure payload survives intact
+        assert!(json.contains("\"reason\": \"panicked: boom\""), "{json}");
+    }
+
+    #[test]
+    fn evaluate_skips_quarantined_frames_via_binary_search() {
+        // quarantined_frames is sorted by construction; evaluation must
+        // drop exactly those ground-truth frames
+        let data = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 4);
+        let mut outcome = SessionOutcome::lost("q".into(), None, "unused".into());
+        outcome.status = SessionStatus::Degraded;
+        outcome.quarantined_frames = vec![1, 3];
+        // two poses for the two surviving frames (0 and 2)
+        outcome.est_poses = vec![data.frames[0].gt_w2c, data.frames[2].gt_w2c];
+        let stats = outcome.evaluate(&data, &RenderConfig::default());
+        assert_eq!(stats.frames, 2);
+        assert!(stats.ate_rmse_m < 1e-6, "poses equal gt of the kept frames");
+    }
+
+    #[test]
+    fn paged_fleet_matches_unlimited_fleet_bit_for_bit() {
+        let jobs = [
+            FleetJob { name: "a".into(), run: quick_run(4) },
+            FleetJob { name: "b".into(), run: quick_run(4) },
+            FleetJob { name: "c".into(), run: quick_run(4) },
+        ];
+        let baseline = serve(&jobs, &ServerConfig::default()).unwrap();
+        let paged = serve(
+            &jobs,
+            &ServerConfig { workers: 1, max_resident_sessions: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            paged.sessions.iter().any(|s| s.evictions > 0),
+            "a 3-session fleet over 1 resident slot must evict"
+        );
+        for (b, p) in baseline.sessions.iter().zip(&paged.sessions) {
+            assert_eq!(b.status, SessionStatus::Ok, "`{}`", b.name);
+            assert_eq!(p.status, SessionStatus::Ok, "`{}`", p.name);
+            assert_eq!(
+                b.ate_rmse_m.to_bits(),
+                p.ate_rmse_m.to_bits(),
+                "`{}`: eviction round trips must be invisible",
+                b.name
+            );
+            assert_eq!(b.psnr_db.to_bits(), p.psnr_db.to_bits(), "`{}`", b.name);
+            assert_eq!(b.n_gaussians, p.n_gaussians, "`{}`", b.name);
+            assert_eq!(b.track_counters, p.track_counters, "`{}`", b.name);
+            assert_eq!(b.map_counters, p.map_counters, "`{}`", b.name);
+        }
+        let json = paged.to_json();
+        assert!(json.contains("\"evictions\""), "{json}");
     }
 
     #[test]

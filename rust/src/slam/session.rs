@@ -49,6 +49,7 @@ use super::mapping::{map_update, MappingConfig, MappingStats};
 use super::metrics::{ate_rmse, psnr_over_sequence};
 use super::tracking::{track_frame, TrackingStats};
 use crate::camera::{Camera, Intrinsics};
+use crate::checkpoint::SessionState;
 use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::map_share::ShardHandle;
@@ -565,6 +566,143 @@ impl SlamSession {
             &self.rcfg,
         ))
     }
+
+    /// Snapshot everything the stream's future depends on into a
+    /// [`SessionState`] (see [`crate::checkpoint`] for the on-disk
+    /// format). Restoring the snapshot with [`Self::restore`] under the
+    /// same config continues the stream **bit-identically** — the map,
+    /// optimizer moments, PRNG, constant-velocity prior, pose history,
+    /// and every accumulated counter are captured exactly.
+    ///
+    /// Inline sessions embed their Adam moments; Shared sessions don't
+    /// (the moments live in the shard, which stays resident — the
+    /// server re-attaches the kept [`ShardHandle`] at restore). Worker
+    /// (threaded-mapping) sessions refuse: which map version their
+    /// tracker observes is timing-dependent, so no snapshot could
+    /// restore them bit-identically.
+    pub fn checkpoint(&self) -> Result<SessionState> {
+        if self.finished {
+            bail!("cannot checkpoint a finished session");
+        }
+        let adam = match &self.mapping {
+            MappingExec::Inline { adam, .. } => Some(adam.clone()),
+            MappingExec::Shared { .. } => None,
+            MappingExec::Worker(_) => bail!(
+                "cannot checkpoint a threaded-mapping session — which map version its \
+                 tracker observes is timing-dependent, so a snapshot would not restore \
+                 bit-identically (use inline or shared mapping for evictable sessions)"
+            ),
+        };
+        let (rng_state, rng_inc) = self.rng.to_parts();
+        Ok(SessionState {
+            frame_idx: self.frame_idx,
+            prev_rel: self.prev_rel,
+            rng_state,
+            rng_inc,
+            map_version: self.map_version,
+            covis_skips: self.covis_skips,
+            track_recoveries: self.track_recoveries,
+            track_divergences: self.track_divergences,
+            est_poses: self.est_poses.clone(),
+            store: self.store.clone(),
+            adam,
+            track_counters: self.track_counters,
+            map_counters: self.map_counters,
+            per_frame_track: self.per_frame_track.clone(),
+            per_map: self.per_map.clone(),
+            track_stats: self.track_stats.clone(),
+            map_stats: self.map_stats.clone(),
+        })
+    }
+
+    /// Rebuild a session from a [`Self::checkpoint`] snapshot. Backends
+    /// are constructed fresh (they hold only scratch arenas — no
+    /// numerics flow through them across frames), every captured field
+    /// is reinstated verbatim, and the stream continues at
+    /// `state.frame_idx` exactly as if the eviction never happened.
+    ///
+    /// `handle` re-attaches a shared-map session to its (still
+    /// resident) shard; it must be the same handle the session held at
+    /// checkpoint time so the rank — and with it the shard's merge
+    /// order — is preserved. Exactly one of `handle` / embedded Adam
+    /// moments must be present: both or neither means the snapshot and
+    /// the call disagree about the session's mapping mode.
+    pub fn restore(
+        cfg: SlamConfig,
+        intr: Intrinsics,
+        par: Parallelism,
+        state: SessionState,
+        handle: Option<ShardHandle>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let mapping = match (handle, state.adam) {
+            (Some(handle), None) => MappingExec::Shared {
+                backend: create_backend(cfg.mapping.backend, par)?,
+                handle,
+            },
+            (None, Some(adam)) => {
+                if adam.len() != state.store.len() * GaussianGrads::PARAMS {
+                    bail!(
+                        "session snapshot is inconsistent: {} Adam moments for {} Gaussians \
+                         ({} parameters)",
+                        adam.len(),
+                        state.store.len(),
+                        state.store.len() * GaussianGrads::PARAMS
+                    );
+                }
+                MappingExec::Inline {
+                    backend: create_backend(cfg.mapping.backend, par)?,
+                    adam,
+                }
+            }
+            (Some(_), Some(_)) => bail!(
+                "session snapshot embeds inline Adam moments but a shard handle was \
+                 supplied — an inline snapshot restores without a shard"
+            ),
+            (None, None) => bail!(
+                "session snapshot carries no Adam moments and no shard handle was \
+                 supplied — shared-map snapshots need their shard re-attached at restore"
+            ),
+        };
+        Ok(SlamSession {
+            cfg,
+            rcfg: RenderConfig::default(),
+            intr,
+            store: state.store,
+            est_poses: state.est_poses,
+            track_counters: state.track_counters,
+            map_counters: state.map_counters,
+            per_frame_track: state.per_frame_track,
+            per_map: state.per_map,
+            track_stats: state.track_stats,
+            map_stats: state.map_stats,
+            track_backend,
+            mapping,
+            prev_rel: state.prev_rel,
+            rng: Pcg32::from_parts(state.rng_state, state.rng_inc),
+            frame_idx: state.frame_idx,
+            covis_skips: state.covis_skips,
+            track_recoveries: state.track_recoveries,
+            track_divergences: state.track_divergences,
+            map_version: state.map_version,
+            finished: false,
+        })
+    }
+
+    /// Tear the session down, surrendering its [`ShardHandle`] (if it
+    /// has one) **without detaching** — the rank stays registered in
+    /// the shard's turn protocol so an evicted co-scene session keeps
+    /// its slot in the deterministic merge order. The server parks the
+    /// handle ([`ShardHandle::suspend`]) next to the on-disk snapshot
+    /// and hands it back to [`Self::restore`] on re-admission. Returns
+    /// `None` for private-map sessions.
+    pub fn into_shard_handle(self) -> Option<ShardHandle> {
+        match self.mapping {
+            MappingExec::Shared { handle, .. } => Some(handle),
+            MappingExec::Inline { .. } | MappingExec::Worker(_) => None,
+        }
+    }
 }
 
 /// End-of-run evaluation of one stream's results — the single
@@ -1025,5 +1163,107 @@ mod tests {
         session.on_frame(&data.frames[0]).unwrap();
         session.finish().unwrap();
         assert!(session.on_frame(&data.frames[1]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_restore_continues_bit_identically() {
+        let data = quick_data(6);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        // uninterrupted reference run
+        let mut reference = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+        for f in &data.frames {
+            reference.on_frame(f).unwrap();
+        }
+        // interrupted run: snapshot after 3 frames, restore, continue
+        let mut first = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+        for f in &data.frames[..3] {
+            first.on_frame(f).unwrap();
+        }
+        let state = first.checkpoint().unwrap();
+        assert!(first.into_shard_handle().is_none(), "inline session has no shard");
+        let mut resumed =
+            SlamSession::restore(cfg, data.intr, Parallelism::fixed(1), state, None).unwrap();
+        for f in &data.frames[3..] {
+            resumed.on_frame(f).unwrap();
+        }
+        assert_eq!(reference.est_poses.len(), resumed.est_poses.len());
+        for (i, (a, b)) in reference.est_poses.iter().zip(&resumed.est_poses).enumerate() {
+            assert_eq!(a.t.x.to_bits(), b.t.x.to_bits(), "pose {i}");
+            assert_eq!(a.q.w.to_bits(), b.q.w.to_bits(), "pose {i}");
+        }
+        assert_eq!(reference.store.len(), resumed.store.len());
+        for i in 0..reference.store.len() {
+            assert_eq!(
+                reference.store.opacity_logits[i].to_bits(),
+                resumed.store.opacity_logits[i].to_bits(),
+                "gaussian {i}"
+            );
+        }
+        assert_eq!(reference.track_counters, resumed.track_counters);
+        assert_eq!(reference.map_counters, resumed.map_counters);
+    }
+
+    #[test]
+    fn checkpoint_rejects_worker_and_finished_sessions() {
+        let data = quick_data(2);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        let mut worker =
+            SlamSession::with_threaded_mapping(cfg, data.intr, Parallelism::auto()).unwrap();
+        worker.on_frame(&data.frames[0]).unwrap();
+        let err = worker.checkpoint().unwrap_err();
+        assert!(format!("{err:#}").contains("threaded-mapping"), "{err:#}");
+        worker.finish().unwrap();
+
+        let mut inline = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+        inline.on_frame(&data.frames[0]).unwrap();
+        inline.finish().unwrap();
+        assert!(inline.checkpoint().is_err(), "finished sessions are not evictable");
+    }
+
+    #[test]
+    fn restore_rejects_mode_mismatches() {
+        let data = quick_data(2);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        let mut s = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+        s.on_frame(&data.frames[0]).unwrap();
+        let mut state = s.checkpoint().unwrap();
+        state.adam = None; // now neither moments nor a handle
+        let err = SlamSession::restore(cfg, data.intr, Parallelism::fixed(1), state, None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no Adam moments"), "{err:#}");
+    }
+
+    #[test]
+    fn shared_session_checkpoint_keeps_its_rank_through_the_handle() {
+        let data = quick_data(5);
+        let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+        let mut reg = crate::map_share::SceneRegistry::new();
+        let ha = reg.attach("room", "a");
+        let mut a = SlamSession::attach_shared(cfg, data.intr, Parallelism::fixed(1), ha).unwrap();
+        for f in &data.frames[..3] {
+            a.on_frame(f).unwrap();
+        }
+        let state = a.checkpoint().unwrap();
+        assert!(state.adam.is_none(), "shared snapshots leave the moments in the shard");
+        let handle = a.into_shard_handle().expect("shared session surrenders its handle");
+        handle.suspend();
+        assert_eq!(reg.stats()[0].suspended_sessions, 1);
+        handle.resume();
+        let mut a = SlamSession::restore(
+            cfg,
+            data.intr,
+            Parallelism::fixed(1),
+            state,
+            Some(handle),
+        )
+        .unwrap();
+        for f in &data.frames[3..] {
+            a.on_frame(f).unwrap();
+        }
+        a.finish().unwrap();
+        // the restored rank kept contributing to the same shard
+        assert_eq!(reg.stats()[0].contributions, 2, "keyframes at frames 0 and 4");
+        let stats = a.evaluate(&data).unwrap();
+        assert!(stats.ate_rmse_m < 0.3, "ATE {}", stats.ate_rmse_m);
     }
 }

@@ -1,0 +1,359 @@
+//! The eviction contract of the serving layer (see `serve/mod.rs`
+//! "Checkpoint / evict / resume" and `docs/CHECKPOINT.md`):
+//!
+//! 1. A session snapshotted to disk mid-stream and restored from the
+//!    decoded bytes continues **bit-identically** to one that was never
+//!    interrupted — poses, map, Adam-driven updates, counters.
+//! 2. Snapshots are self-describing and defensive: a wrong format
+//!    version or config fingerprint is rejected with a descriptive
+//!    error, never misread into a silently-diverging session.
+//! 3. A paged fleet (`max_resident_sessions` below the session count)
+//!    produces outcomes bit-identical to an unlimited fleet, at any
+//!    worker count — eviction round trips are invisible in the results.
+//! 4. Co-scene sessions page in at epoch boundaries: paging one of two
+//!    sessions sharing a shard changes nothing about either session's
+//!    bits or the shard's merge bookkeeping.
+//! 5. A scene shard exported to the snapshot format and restored into a
+//!    fresh registry hands late-joining sessions the inherited map.
+//!
+//! Like `parallel_determinism.rs` and `fault_tolerance.rs`, every
+//! assertion is on exact bits (`f32::to_bits`), and the file must pass
+//! under any `SPLATONIC_THREADS` setting.
+
+use splatonic::checkpoint::{
+    config_fingerprint, decode_session, decode_shard, encode_session, encode_shard,
+    SessionCheckpoint,
+};
+use splatonic::dataset::{Flavor, Scenario, SyntheticDataset};
+use splatonic::fault::FaultPlan;
+use splatonic::gaussian::GaussianStore;
+use splatonic::map_share::SceneRegistry;
+use splatonic::math::Se3;
+use splatonic::render::Parallelism;
+use splatonic::serve::{ServerConfig, SessionOutcome, SessionSpec, SlamServer};
+use splatonic::slam::{Algorithm, SlamConfig, SlamSession};
+
+fn assert_poses_bit_identical(a: &[Se3], b: &[Se3], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: pose count differs");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.q.w.to_bits(), pb.q.w.to_bits(), "{tag}: pose {i} q.w");
+        assert_eq!(pa.q.x.to_bits(), pb.q.x.to_bits(), "{tag}: pose {i} q.x");
+        assert_eq!(pa.q.y.to_bits(), pb.q.y.to_bits(), "{tag}: pose {i} q.y");
+        assert_eq!(pa.q.z.to_bits(), pb.q.z.to_bits(), "{tag}: pose {i} q.z");
+        assert_eq!(pa.t.x.to_bits(), pb.t.x.to_bits(), "{tag}: pose {i} t.x");
+        assert_eq!(pa.t.y.to_bits(), pb.t.y.to_bits(), "{tag}: pose {i} t.y");
+        assert_eq!(pa.t.z.to_bits(), pb.t.z.to_bits(), "{tag}: pose {i} t.z");
+    }
+}
+
+fn assert_stores_bit_identical(a: &GaussianStore, b: &GaussianStore, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: store size differs");
+    for i in 0..a.len() {
+        assert_eq!(a.means[i].x.to_bits(), b.means[i].x.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.means[i].y.to_bits(), b.means[i].y.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.means[i].z.to_bits(), b.means[i].z.to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.rots[i].w.to_bits(), b.rots[i].w.to_bits(), "{tag}: rot {i}");
+        assert_eq!(
+            a.log_scales[i].x.to_bits(),
+            b.log_scales[i].x.to_bits(),
+            "{tag}: scale {i}"
+        );
+        assert_eq!(
+            a.opacity_logits[i].to_bits(),
+            b.opacity_logits[i].to_bits(),
+            "{tag}: opacity {i}"
+        );
+        assert_eq!(a.colors[i].x.to_bits(), b.colors[i].x.to_bits(), "{tag}: color {i}");
+    }
+}
+
+fn assert_outcomes_bit_identical(a: &SessionOutcome, b: &SessionOutcome, tag: &str) {
+    assert_eq!(a.status, b.status, "{tag}: status");
+    assert_poses_bit_identical(&a.est_poses, &b.est_poses, tag);
+    assert_stores_bit_identical(&a.store, &b.store, tag);
+    assert_eq!(a.track_counters, b.track_counters, "{tag}: track counters");
+    assert_eq!(a.map_counters, b.map_counters, "{tag}: map counters");
+    assert_eq!(a.per_frame_track, b.per_frame_track, "{tag}: per-frame counters");
+    assert_eq!(a.per_map, b.per_map, "{tag}: per-map counters");
+    assert_eq!(a.covis_skips, b.covis_skips, "{tag}: covis skips");
+    assert_eq!(a.recoveries, b.recoveries, "{tag}: recoveries");
+    assert_eq!(a.divergences, b.divergences, "{tag}: divergences");
+    assert_eq!(a.quarantined_frames, b.quarantined_frames, "{tag}: quarantined");
+}
+
+/// A process-unique scratch file for snapshot bytes.
+fn scratch_file(test: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splatonic-test-{test}-{}.ckpt", std::process::id()))
+}
+
+// ---------------------------------------------------------------------
+// 1. Disk round trip: snapshot → bytes → file → decode → restore
+// ---------------------------------------------------------------------
+
+#[test]
+fn disk_round_trip_resumes_bit_identically() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 6);
+    let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+    let par = Parallelism::fixed(1);
+
+    // the uninterrupted reference
+    let mut reference = SlamSession::create(cfg, data.intr, par).unwrap();
+    for f in &data.frames {
+        reference.process_frame(f).unwrap();
+    }
+    reference.finish().unwrap();
+
+    // the evicted run: 3 frames, full serialization round trip through
+    // an actual file, then the remaining 3 frames
+    let mut first = SlamSession::create(cfg, data.intr, par).unwrap();
+    for f in &data.frames[..3] {
+        first.process_frame(f).unwrap();
+    }
+    let ckpt = SessionCheckpoint {
+        state: first.checkpoint().unwrap(),
+        next_frame: 3,
+        quarantined: Vec::new(),
+        evictions: 1,
+    };
+    drop(first); // the live session is gone — only the bytes survive
+    let fingerprint = config_fingerprint(&cfg, &data.intr);
+    let path = scratch_file("disk-round-trip");
+    std::fs::write(&path, encode_session(&ckpt, fingerprint)).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let back = decode_session(&bytes, fingerprint).unwrap();
+    assert_eq!(back.next_frame, 3);
+    assert_eq!(back.evictions, 1);
+
+    let mut resumed = SlamSession::restore(cfg, data.intr, par, back.state, None).unwrap();
+    assert_eq!(resumed.frames_seen(), 3, "cursor survives the round trip");
+    for f in &data.frames[3..] {
+        resumed.process_frame(f).unwrap();
+    }
+    resumed.finish().unwrap();
+
+    let tag = "disk-round-trip";
+    assert_poses_bit_identical(&reference.est_poses, &resumed.est_poses, tag);
+    assert_stores_bit_identical(&reference.store, &resumed.store, tag);
+    assert_eq!(reference.track_counters, resumed.track_counters, "{tag}: track counters");
+    assert_eq!(reference.map_counters, resumed.map_counters, "{tag}: map counters");
+    assert_eq!(reference.per_frame_track, resumed.per_frame_track, "{tag}: per-frame");
+}
+
+// ---------------------------------------------------------------------
+// 2. Version / fingerprint gates
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_snapshots_are_rejected_with_descriptive_errors() {
+    let data = SyntheticDataset::generate(Flavor::Replica, 0, 48, 32, 3);
+    let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+    let mut session = SlamSession::create(cfg, data.intr, Parallelism::fixed(1)).unwrap();
+    for f in &data.frames {
+        session.process_frame(f).unwrap();
+    }
+    let ckpt = SessionCheckpoint {
+        state: session.checkpoint().unwrap(),
+        next_frame: 3,
+        quarantined: Vec::new(),
+        evictions: 1,
+    };
+    let fingerprint = config_fingerprint(&cfg, &data.intr);
+    let bytes = encode_session(&ckpt, fingerprint);
+
+    // the same snapshot under a different config: the seed alone moves
+    // the fingerprint, and resume must refuse it
+    let mut other_cfg = cfg;
+    other_cfg.seed ^= 1;
+    let err = decode_session(&bytes, config_fingerprint(&other_cfg, &data.intr)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fingerprint mismatch"), "{msg}");
+    assert!(msg.contains("configuration"), "{msg}");
+
+    // a snapshot from a "different build": bump the version field
+    let mut future = bytes.clone();
+    future[8] = future[8].wrapping_add(1);
+    let err = decode_session(&future, fingerprint).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("format version"), "{msg}");
+    assert!(msg.contains("different build"), "{msg}");
+
+    // and the good bytes still decode after all that
+    assert!(decode_session(&bytes, fingerprint).is_ok());
+}
+
+// ---------------------------------------------------------------------
+// 3. Paged fleet ≡ unlimited fleet, at any worker count
+// ---------------------------------------------------------------------
+
+fn run_private_fleet(workers: usize, max_resident: usize) -> Vec<SessionOutcome> {
+    let cells = [
+        (Flavor::Replica, Scenario::Orbit, Algorithm::SplaTam),
+        (Flavor::Replica, Scenario::Corridor, Algorithm::MonoGs),
+        (Flavor::Tum, Scenario::FastRotation, Algorithm::FlashSlam),
+    ];
+    let mut specs = Vec::new();
+    let mut datasets = Vec::new();
+    for (i, (flavor, scenario, algo)) in cells.into_iter().enumerate() {
+        let data = SyntheticDataset::generate_scenario(flavor, scenario, i, 48, 32, 5);
+        specs.push(SessionSpec {
+            name: scenario.name().to_string(),
+            cfg: SlamConfig::splatonic(algo).scaled(0.3),
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: None,
+            faults: FaultPlan::none(),
+        });
+        datasets.push(data);
+    }
+    let server = SlamServer::start(
+        specs,
+        &ServerConfig {
+            workers,
+            budget: Parallelism::auto(),
+            max_resident_sessions: max_resident,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let longest = datasets.iter().map(|d| d.len()).max().unwrap();
+    for f in 0..longest {
+        for (sid, data) in datasets.iter().enumerate() {
+            if f < data.len() {
+                server.submit(sid, data.frames[f].clone()).unwrap();
+            }
+        }
+    }
+    server.finish().unwrap()
+}
+
+#[test]
+fn paged_fleet_is_bit_identical_across_worker_counts() {
+    let reference = run_private_fleet(1, 0); // unlimited residency
+    assert!(reference.iter().all(|o| o.status.is_ok()), "reference fleet not Ok");
+    assert!(reference.iter().all(|o| o.evictions == 0), "unlimited fleet must not evict");
+
+    for workers in [1usize, 2, 3] {
+        let paged = run_private_fleet(workers, 1);
+        let tag = format!("paged workers={workers}");
+        if workers == 1 {
+            // 3 sessions over 1 resident slot on 1 worker: the
+            // round-robin stream forces an eviction on every switch
+            assert!(
+                paged.iter().any(|o| o.evictions > 0),
+                "{tag}: expected evictions, got {:?}",
+                paged.iter().map(|o| o.evictions).collect::<Vec<_>>()
+            );
+        }
+        for (sid, (r, p)) in reference.iter().zip(&paged).enumerate() {
+            assert_outcomes_bit_identical(r, p, &format!("{tag} session {sid}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Co-scene paging: re-admission at the epoch boundary
+// ---------------------------------------------------------------------
+
+fn run_shared_pair(max_resident: usize) -> (Vec<SessionOutcome>, SceneRegistry) {
+    let data = SyntheticDataset::generate(Flavor::Replica, 3, 48, 32, 6);
+    let cfg = SlamConfig::splatonic(Algorithm::SplaTam).scaled(0.3);
+    let specs = ["hall-a", "hall-b"]
+        .into_iter()
+        .map(|name| SessionSpec {
+            name: name.into(),
+            cfg,
+            intr: data.intr,
+            threaded_mapping: false,
+            scene: Some("hall".into()),
+            faults: FaultPlan::none(),
+        })
+        .collect();
+    // both sessions on ONE worker: every frame switch crosses the
+    // residency cap, so the shard sees suspend/resume around every turn
+    let server = SlamServer::start(
+        specs,
+        &ServerConfig {
+            workers: 1,
+            budget: Parallelism::auto(),
+            max_resident_sessions: max_resident,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for f in &data.frames {
+        server.submit(0, f.clone()).unwrap();
+        server.submit(1, f.clone()).unwrap();
+    }
+    let registry = server.scene_registry().clone();
+    let outcomes = server.finish().unwrap();
+    (outcomes, registry)
+}
+
+#[test]
+fn co_scene_sessions_page_in_at_epoch_boundaries() {
+    let (reference, ref_registry) = run_shared_pair(0);
+    assert!(reference.iter().all(|o| !o.status.is_failed()), "reference pair failed");
+
+    let (paged, paged_registry) = run_shared_pair(1);
+    assert!(
+        paged.iter().any(|o| o.evictions > 0),
+        "2 co-scene sessions over 1 resident slot must evict"
+    );
+    for (sid, (r, p)) in reference.iter().zip(&paged).enumerate() {
+        assert_outcomes_bit_identical(r, p, &format!("co-scene session {sid}"));
+    }
+
+    // the shard's merge bookkeeping is untouched by the paging: same
+    // epochs contributed, same covisibility skips, same map — and no
+    // session is left marked suspended after the drain
+    let r = &ref_registry.stats()[0];
+    let p = &paged_registry.stats()[0];
+    assert_eq!(r.contributions, p.contributions, "shard contributions");
+    assert_eq!(r.covis_skips, p.covis_skips, "shard covis skips");
+    assert_eq!(r.keyframes, p.keyframes, "shard keyframes");
+    assert_eq!(r.map_gaussians, p.map_gaussians, "shard map size");
+    assert_eq!(p.suspended_sessions, 0, "suspension markers must clear at drain");
+}
+
+// ---------------------------------------------------------------------
+// 5. Shard export / restore through the snapshot format
+// ---------------------------------------------------------------------
+
+#[test]
+fn exported_shard_restores_for_late_joining_sessions() {
+    let (_outcomes, registry) = run_shared_pair(0);
+    let export = registry.export("hall").expect("scene exists");
+    assert!(registry.export("no-such-scene").is_none());
+
+    let path = scratch_file("shard-export");
+    std::fs::write(&path, encode_shard(&export)).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let back = decode_shard(&bytes).unwrap();
+    assert_eq!(back.scene, "hall");
+    assert_eq!(back.version, export.version);
+    assert_eq!(back.keyframes.len(), export.keyframes.len());
+    assert_stores_bit_identical(&export.store, &back.store, "shard store");
+
+    // a fresh registry inherits the persisted map: a late joiner sees
+    // the full shard contents before contributing anything
+    let mut fresh = SceneRegistry::new();
+    fresh.restore(back).unwrap();
+    let handle = fresh.attach("hall", "late-joiner");
+    assert_eq!(handle.rank(), 0, "restored shards re-rank from zero");
+    let (map, version) = handle
+        .snapshot_newer_than(0)
+        .unwrap()
+        .expect("restored shard must already hold a map");
+    assert_eq!(version, export.version);
+    assert_stores_bit_identical(&export.store, &map, "inherited map");
+    // the inherited map is the fleet's shared map, not an empty seed
+    assert!(map.len() > 100, "shared map should be substantial");
+
+    // restoring over the live scene is refused
+    let err = fresh
+        .restore(registry.export("hall").unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("live shard"), "{err:#}");
+}
