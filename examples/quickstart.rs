@@ -6,7 +6,14 @@
 //!
 //! ```text
 //! cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --backend=simd
 //! ```
+//!
+//! `--backend=<sparse-cpu|simd-cpu|dense-cpu|xla>` picks the engine for
+//! the sparse-sampling half (step 3 onward); the default is the sparse
+//! scalar pipeline. `simd` routes the identical workload through the
+//! 8-wide lane kernels — the printed numbers must not change (the
+//! backends are bit-identical; see docs/DETERMINISM.md).
 
 use splatonic::camera::Camera;
 use splatonic::dataset::{Flavor, SyntheticDataset};
@@ -19,6 +26,17 @@ use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::slam::tracking::{track_frame, TrackingConfig};
 
 fn main() -> anyhow::Result<()> {
+    // --backend=<kind> for the sparse-sampling half (argv, not env —
+    // the SPLATONIC_* env edges stay the only environment reads)
+    let mut sparse_kind = BackendKind::SparseCpu;
+    for arg in std::env::args().skip(1) {
+        if let Some(v) = arg.strip_prefix("--backend=") {
+            sparse_kind = BackendKind::parse(v)?;
+        } else {
+            anyhow::bail!("unknown argument `{arg}` (expected --backend=<kind>)");
+        }
+    }
+
     // 1. a synthetic Replica-like sequence (scene + trajectory + RGB-D)
     let data = SyntheticDataset::generate(Flavor::Replica, 0, 160, 120, 2);
     println!("scene `{}`: {} Gaussians, {} frames of {}x{}",
@@ -49,16 +67,18 @@ fn main() -> anyhow::Result<()> {
     println!("  PSNR vs reference: {dense_psnr:.1} dB");
 
     // 3. Splatonic: sparse sampling (1 px per 16x16 tile) + pixel-based
-    //    rendering with preemptive alpha-checking, through a SparseCpu
-    //    backend session
+    //    rendering with preemptive alpha-checking, through the selected
+    //    backend session (sparse scalar by default, `--backend=simd` for
+    //    the lane kernels — bit-identical output either way)
     let mut rng = Pcg32::new(1);
     let pixels = sample_tracking(TrackingStrategy::Random, &frame.rgb, 16, None, &mut rng);
-    let mut sparse = create_backend(BackendKind::SparseCpu, Parallelism::auto())?;
+    let mut sparse = create_backend(sparse_kind, Parallelism::auto())?;
     let sparse_job =
         RenderJob { cam: &cam, pixels: PixelSet::Sparse(&pixels), rcfg: &rcfg, frame: Some(frame) };
     let sparse_counters = sparse.render(&data.gt_store, &sparse_job)?.counters;
     println!(
-        "sparse render: {} pixels ({}x fewer), {} pairs ({}x fewer), utilization {:.1}%",
+        "sparse render [{}]: {} pixels ({}x fewer), {} pairs ({}x fewer), utilization {:.1}%",
+        sparse_kind.name(),
         pixels.len(),
         data.intr.n_pixels() / pixels.len(),
         sparse_counters.raster_pairs_integrated,

@@ -14,15 +14,21 @@
 //! deterministic per thread count but only tolerance-equal across counts
 //! (partition-dependent float accumulation order).
 //!
-//! A second sweep drives the dense tile pipeline ("Org.") through
-//! [`DenseCpuBackend`] sessions over the same Gaussian counts × thread
-//! counts (the 4-thread cell is always present — it anchors the dense
-//! speedup acceptance gate), plus the sparse/dense forward ratio per
-//! Gaussian count (the paper's fig. 11 comparison).
+//! A second sweep drives the same workload through [`SimdCpuBackend`]
+//! sessions (8-wide lane kernels over the SoA splat arena); its forward
+//! output is bit-identical to the scalar sparse pipeline, so the column
+//! isolates the lane kernels' layout/ILP gain. A third sweep drives the
+//! dense tile pipeline ("Org.") through [`DenseCpuBackend`] sessions
+//! over the same Gaussian counts × thread counts (the 4-thread cell is
+//! always present — it anchors the dense speedup acceptance gate), plus
+//! the sparse/dense forward ratio per Gaussian count (the paper's
+//! fig. 11 comparison) and the simd/scalar forward pairs-per-sec ratio
+//! beside it.
 //!
-//! Besides the tables, both sweeps are written to `BENCH_hotpath.json`
-//! (`cells`, `dense_cells`, `sparse_dense_fwd_ratio`) so the perf
-//! trajectory is tracked across PRs.
+//! Besides the tables, the sweeps are written to `BENCH_hotpath.json`
+//! (`cells`, `simd_cells`, `dense_cells`, `sparse_dense_fwd_ratio`,
+//! `simd_scalar_fwd_ratio`) so the perf trajectory is tracked across
+//! PRs.
 //!
 //! A final end-to-end section drives the serving layer: one coordinator
 //! run (ATE/PSNR/simulated tracking costs) plus a `SlamServer`
@@ -51,7 +57,7 @@ use splatonic::render::pixel_pipeline::SampledPixels;
 use splatonic::render::projection::project_all;
 use splatonic::render::{
     auto_threads, DenseCpuBackend, GradRequest, Parallelism, PixelSet, RenderBackend,
-    RenderConfig, RenderJob, SparseCpuBackend, StageCounters,
+    RenderConfig, RenderJob, SimdCpuBackend, SparseCpuBackend, StageCounters,
 };
 use splatonic::sampling::{sample_tracking, TrackingStrategy};
 use splatonic::serve::{serve, FleetJob, ServerConfig};
@@ -189,6 +195,96 @@ fn kernel_sweeps() {
         }
     }
 
+    // -- SIMD lane-kernel sweep: the identical scene/pixel workload
+    //    through SimdCpuBackend sessions (8-wide default lanes over the
+    //    SoA splat arena). The forward output is bit-identical to the
+    //    scalar sparse sweep above (tests/parallel_determinism.rs), so
+    //    the delta is pure lane-kernel layout/ILP gain. ----------------
+    println!(
+        "\nsimd lane-kernel sweep: 320x240, {} sampled pixels ({} hw threads, 8-wide lanes)",
+        px.len(),
+        hw
+    );
+    println!(
+        "{:>9} {:>8} | {:>12} {:>14} {:>8} | {:>12} {:>14}",
+        "gaussians", "threads", "fwd ms", "fwd pairs/s", "speedup", "bwd ms", "bwd pairs/s"
+    );
+    let mut simd_cells: Vec<Cell> = Vec::new();
+    for &n in &[10_000usize, 50_000, 200_000] {
+        let mut rng = Pcg32::new(42);
+        let store = synth_store(n, &mut rng);
+        let mut c = StageCounters::new();
+        let projected = project_all(&store, &cam, &rcfg, &mut c);
+
+        // pairs/sec denominators match the scalar sweep by the parity
+        // contract; re-probe through the simd session anyway so the cell
+        // is self-contained
+        let (fwd_pairs, bwd_pairs, loss) = {
+            let mut probe = SimdCpuBackend::with_threads(1);
+            let mut c_probe = StageCounters::new();
+            probe.forward_projected(&projected, &rcfg, &px, &mut c_probe);
+            let dldc: Vec<Vec3> =
+                (0..px.len()).map(|i| Vec3::splat(0.1 + (i % 7) as f32 * 0.01)).collect();
+            let dldd: Vec<f32> = (0..px.len()).map(|i| 0.02 * ((i % 3) as f32)).collect();
+            let mut c_bwd = StageCounters::new();
+            let _ = probe.backward_projected(
+                &store, &cam, &rcfg, &projected, &px, &dldc, &dldd, GradRequest::pose(),
+                &mut c_bwd,
+            );
+            (
+                c_probe.proj_alpha_checks.max(1),
+                c_bwd.bwd_pairs_integrated.max(1),
+                (dldc, dldd),
+            )
+        };
+
+        let reps = if n >= 200_000 { 5 } else { 9 };
+        let mut fwd_t1 = 0.0f64;
+        for &threads in &thread_counts {
+            let mut backend = SimdCpuBackend::with_threads(threads);
+            let mut cw = StageCounters::new();
+            backend.forward_projected(&projected, &rcfg, &px, &mut cw);
+
+            let d_fwd = time_it(reps, || {
+                let mut c = StageCounters::new();
+                let out = backend.forward_projected(&projected, &rcfg, &px, &mut c);
+                std::hint::black_box(out);
+            });
+            let d_bwd = time_it(reps, || {
+                let mut c = StageCounters::new();
+                let b = backend.backward_projected(
+                    &store, &cam, &rcfg, &projected, &px, &loss.0, &loss.1,
+                    GradRequest::pose(), &mut c,
+                );
+                std::hint::black_box(&b);
+            });
+            let fwd_s = d_fwd.as_secs_f64();
+            let bwd_s = d_bwd.as_secs_f64();
+            if threads == 1 {
+                fwd_t1 = fwd_s;
+            }
+            println!(
+                "{:>9} {:>8} | {:>12.3} {:>14.3e} {:>7.2}x | {:>12.3} {:>14.3e}",
+                n,
+                threads,
+                fwd_s * 1e3,
+                fwd_pairs as f64 / fwd_s,
+                fwd_t1 / fwd_s,
+                bwd_s * 1e3,
+                bwd_pairs as f64 / bwd_s,
+            );
+            simd_cells.push(Cell {
+                gaussians: n,
+                threads,
+                fwd_ms: fwd_s * 1e3,
+                fwd_pairs_per_s: fwd_pairs as f64 / fwd_s,
+                fwd_speedup: fwd_t1 / fwd_s,
+                bwd_ms: bwd_s * 1e3,
+                bwd_pairs_per_s: bwd_pairs as f64 / bwd_s,
+            });
+        }
+    }
+
     // -- dense tile-pipeline sweep (the "Org." baseline; the paper's
     //    fig. 11 denominator) — full-frame forward + backward through a
     //    DenseCpuBackend session per thread count. The 4-thread cell is
@@ -301,6 +397,29 @@ fn kernel_sweeps() {
         println!("sparse-vs-dense fwd ratio @ {n} Gaussians, {shared_t} threads: {r:.1}x");
     }
 
+    // simd/scalar forward pairs-per-sec ratio per Gaussian count (the
+    // lane kernels' gain over the scalar sparse pipeline on identical
+    // work — reported beside the fig. 11 ratio), at the highest thread
+    // count in the sweep
+    let simd_t = thread_counts.iter().copied().max().unwrap_or(1);
+    let mut simd_ratios: Vec<(usize, f64)> = Vec::new();
+    for &n in &[10_000usize, 50_000, 200_000] {
+        let scalar = cells
+            .iter()
+            .find(|c| c.gaussians == n && c.threads == simd_t)
+            .map(|c| c.fwd_pairs_per_s);
+        let simd = simd_cells
+            .iter()
+            .find(|c| c.gaussians == n && c.threads == simd_t)
+            .map(|c| c.fwd_pairs_per_s);
+        if let (Some(s), Some(v)) = (scalar, simd) {
+            simd_ratios.push((n, v / s));
+        }
+    }
+    for (n, r) in &simd_ratios {
+        println!("simd-vs-scalar fwd ratio @ {n} Gaussians, {simd_t} threads: {r:.2}x");
+    }
+
     // -- end-to-end tracking iteration on the dataset workload ----------
     // (the latency that bounds tracking Hz; the RenderBackend session is
     // reused as tracking does across its optimization iterations)
@@ -358,6 +477,23 @@ fn kernel_sweeps() {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str("  \"simd_cells\": [\n");
+    for (i, cell) in simd_cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"gaussians\": {}, \"threads\": {}, \"fwd_ms\": {:.4}, \
+             \"fwd_pairs_per_s\": {:.1}, \"fwd_speedup\": {:.3}, \"bwd_ms\": {:.4}, \
+             \"bwd_pairs_per_s\": {:.1}}}{}\n",
+            cell.gaussians,
+            cell.threads,
+            cell.fwd_ms,
+            cell.fwd_pairs_per_s,
+            cell.fwd_speedup,
+            cell.bwd_ms,
+            cell.bwd_pairs_per_s,
+            if i + 1 < simd_cells.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"dense_cells\": [\n");
     for (i, cell) in dense_cells.iter().enumerate() {
         json.push_str(&format!(
@@ -380,6 +516,14 @@ fn kernel_sweeps() {
         json.push_str(&format!(
             "    {{\"gaussians\": {n}, \"threads\": {shared_t}, \"ratio\": {r:.3}}}{}\n",
             if i + 1 < ratios.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"simd_scalar_fwd_ratio\": [\n");
+    for (i, (n, r)) in simd_ratios.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"gaussians\": {n}, \"threads\": {simd_t}, \"ratio\": {r:.3}}}{}\n",
+            if i + 1 < simd_ratios.len() { "," } else { "" },
         ));
     }
     json.push_str("  ],\n");

@@ -41,7 +41,8 @@ use anyhow::{bail, Context, Result};
 
 /// Format revision this build writes and reads. Bump on any layout
 /// change; old snapshots are rejected, not migrated implicitly.
-pub const FORMAT_VERSION: u32 = 1;
+/// (v2: `StageCounters` grew `simd_lanes_active`/`simd_lanes_total`.)
+pub const FORMAT_VERSION: u32 = 2;
 
 const MAGIC: [u8; 8] = *b"SPLCKPT\0";
 const KIND_SESSION: u8 = 1;
@@ -604,6 +605,8 @@ fn put_counters(w: &mut Writer, c: &StageCounters) {
         raster_exp_evals,
         warp_lanes_active,
         warp_lanes_total,
+        simd_lanes_active,
+        simd_lanes_total,
         bwd_pairs_iterated,
         bwd_pairs_integrated,
         bwd_exp_evals,
@@ -631,6 +634,8 @@ fn put_counters(w: &mut Writer, c: &StageCounters) {
         raster_exp_evals,
         warp_lanes_active,
         warp_lanes_total,
+        simd_lanes_active,
+        simd_lanes_total,
         bwd_pairs_iterated,
         bwd_pairs_integrated,
         bwd_exp_evals,
@@ -663,6 +668,8 @@ fn get_counters(r: &mut Reader) -> Result<StageCounters> {
         raster_exp_evals: r.u64()?,
         warp_lanes_active: r.u64()?,
         warp_lanes_total: r.u64()?,
+        simd_lanes_active: r.u64()?,
+        simd_lanes_total: r.u64()?,
         bwd_pairs_iterated: r.u64()?,
         bwd_pairs_integrated: r.u64()?,
         bwd_exp_evals: r.u64()?,

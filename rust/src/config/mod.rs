@@ -49,6 +49,9 @@ pub struct RunConfig {
     /// Mapping [`BackendKind`] override (`map_backend = ...`); `None`
     /// derives from `variant`.
     pub map_backend: Option<BackendKind>,
+    /// SIMD kernel lane width for `backend = "simd"` sessions
+    /// (`simd_lanes = 4 | 8 | 16`); other backends ignore it.
+    pub simd_lanes: usize,
     /// Tracking sample tile w_t.
     pub track_tile: u32,
     /// Mapping sample tile w_m.
@@ -82,6 +85,7 @@ impl Default for RunConfig {
             variant: Variant::Splatonic,
             backend: None,
             map_backend: None,
+            simd_lanes: crate::render::simd_pipeline::LANES_DEFAULT,
             track_tile: 16,
             map_tile: 4,
             budget: 1.0,
@@ -112,6 +116,7 @@ impl RunConfig {
         if let Some(kind) = self.map_backend {
             cfg.mapping.backend = kind;
         }
+        cfg.simd_lanes = self.simd_lanes;
         cfg.seed = self.seed;
         cfg.scaled(self.budget)
     }
@@ -183,6 +188,7 @@ impl RunConfig {
             }
             "backend" => self.backend = parse_backend_override(v)?,
             "map_backend" => self.map_backend = parse_backend_override(v)?,
+            "simd_lanes" => self.simd_lanes = v.parse()?,
             "track_tile" => self.track_tile = v.parse()?,
             "map_tile" => self.map_tile = v.parse()?,
             "budget" => self.budget = v.parse()?,
@@ -269,7 +275,9 @@ mod tests {
         cfg.variant = Variant::Splatonic;
         cfg.track_tile = 8;
         let sc = cfg.slam_config();
-        assert_eq!(sc.tracking.backend, BackendKind::SparseCpu);
+        // env-steerable sparse default (sparse-cpu, or simd-cpu under
+        // SPLATONIC_BACKEND=simd in the CI matrix)
+        assert_eq!(sc.tracking.backend, crate::render::backend::default_sparse_backend());
         assert_eq!(sc.tracking.tile, 8);
         // explicit override beats the variant default
         cfg.backend = Some(BackendKind::Xla);
@@ -322,5 +330,20 @@ mod tests {
         assert_eq!(cfg.backend, Some(BackendKind::DenseCpu));
         assert_eq!(cfg.map_backend, Some(BackendKind::SparseCpu));
         assert!(RunConfig::from_toml("[run]\nbackend = \"warp9\"\n").is_err());
+    }
+
+    #[test]
+    fn simd_backend_and_lane_width_from_toml() {
+        let cfg =
+            RunConfig::from_toml("[run]\nbackend = \"simd\"\nsimd_lanes = 4\n").unwrap();
+        assert_eq!(cfg.backend, Some(BackendKind::SimdCpu));
+        assert_eq!(cfg.simd_lanes, 4);
+        let sc = cfg.slam_config();
+        assert_eq!(sc.tracking.backend, BackendKind::SimdCpu);
+        assert_eq!(sc.simd_lanes, 4);
+        // a non-compiled width parses here but is rejected by
+        // SlamConfig::validate (and at backend construction)
+        let cfg = RunConfig::from_toml("[run]\nsimd_lanes = 6\n").unwrap();
+        assert!(cfg.slam_config().validate().is_err());
     }
 }

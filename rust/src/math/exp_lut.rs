@@ -36,6 +36,12 @@ impl ExpLut {
         self.table.len()
     }
 
+    /// The raw table, so tests can pin that every consumer (scalar and
+    /// SIMD pipelines) interpolates the *identical* entries.
+    pub fn table(&self) -> &[f32] {
+        &self.table
+    }
+
     /// Approximate `exp(-x)` for x >= 0 via linear interpolation.
     #[inline]
     pub fn exp_neg(&self, x: f32) -> f32 {

@@ -20,6 +20,9 @@
 //! Backends:
 //! * [`SparseCpuBackend`] — Splatonic's pixel-based pipeline
 //!   (`pixel_pipeline`), multi-threaded over the flat CSR arena.
+//! * [`SimdCpuBackend`] — the same sparse pipeline with SoA-packed
+//!   splats and fixed-width lane kernels (`simd_pipeline`); forward
+//!   output bit-identical to `SparseCpu` per lane width.
 //! * [`DenseCpuBackend`] — the conventional tile-based pipeline
 //!   (`tile_pipeline`): full-frame jobs run the dense rasterizer ("Org."),
 //!   sparse jobs run sparse-on-tile ("Org.+S").
@@ -35,6 +38,9 @@ use super::backward_geom::{GaussianGrads, PoseGrad};
 use super::pixel_pipeline::{
     backward_sparse_with, render_sparse_projected_with, RenderScratch, SampledPixels,
     SparseBackward, SparseRender,
+};
+use super::simd_pipeline::{
+    backward_simd_with, render_simd_projected_with, SimdScratch, LANES_DEFAULT,
 };
 use super::projection::{project_all_with, Projected};
 use super::tile_pipeline::{
@@ -174,11 +180,14 @@ pub trait RenderBackend {
 // ---------------------------------------------------------------------
 
 /// The registered rendering engines, selectable from `SlamConfig` /
-/// launcher TOML (`backend = "sparse-cpu" | "dense-cpu" | "xla"`).
+/// launcher TOML (`backend = "sparse-cpu" | "simd-cpu" | "dense-cpu" |
+/// "xla"`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BackendKind {
     /// Splatonic's pixel-based sparse pipeline on the CPU.
     SparseCpu,
+    /// The sparse pipeline with SoA splat packing + SIMD lane kernels.
+    SimdCpu,
     /// The conventional tile-based pipeline on the CPU.
     DenseCpu,
     /// AOT artifacts executed through PJRT (stub without the
@@ -190,6 +199,7 @@ impl BackendKind {
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::SparseCpu => "sparse-cpu",
+            BackendKind::SimdCpu => "simd-cpu",
             BackendKind::DenseCpu => "dense-cpu",
             BackendKind::Xla => "xla",
         }
@@ -199,26 +209,48 @@ impl BackendKind {
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "sparse-cpu" | "sparse_cpu" | "sparse" | "pixel" => Ok(BackendKind::SparseCpu),
+            "simd-cpu" | "simd_cpu" | "simd" => Ok(BackendKind::SimdCpu),
             "dense-cpu" | "dense_cpu" | "dense" | "tile" => Ok(BackendKind::DenseCpu),
             "xla" => Ok(BackendKind::Xla),
             _ => Err(anyhow!(
-                "unknown backend {s} (expected sparse-cpu, dense-cpu, or xla)"
+                "unknown backend {s} (expected sparse-cpu, simd-cpu, dense-cpu, or xla)"
             )),
         }
     }
 }
 
-type BackendCtor = fn(Parallelism) -> Result<Box<dyn RenderBackend>>;
+/// Construction knobs that are not per-call state: today only the SIMD
+/// kernel lane width. Plumbed from `SlamConfig`/TOML through
+/// [`create_backend_with`] so test harnesses can pin a non-default width
+/// (the fixed-lane-width determinism clause in `docs/DETERMINISM.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackendOptions {
+    /// Lane width for [`BackendKind::SimdCpu`]; must be one of
+    /// [`super::simd_pipeline::SUPPORTED_LANES`]. Other kinds ignore it.
+    pub simd_lanes: usize,
+}
 
-fn new_sparse_cpu(par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+impl Default for BackendOptions {
+    fn default() -> Self {
+        BackendOptions { simd_lanes: LANES_DEFAULT }
+    }
+}
+
+type BackendCtor = fn(Parallelism, &BackendOptions) -> Result<Box<dyn RenderBackend>>;
+
+fn new_sparse_cpu(par: Parallelism, _opts: &BackendOptions) -> Result<Box<dyn RenderBackend>> {
     Ok(Box::new(SparseCpuBackend::with_threads(par.threads())))
 }
 
-fn new_dense_cpu(par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+fn new_simd_cpu(par: Parallelism, opts: &BackendOptions) -> Result<Box<dyn RenderBackend>> {
+    Ok(Box::new(SimdCpuBackend::with_lanes(par.threads(), opts.simd_lanes)?))
+}
+
+fn new_dense_cpu(par: Parallelism, _opts: &BackendOptions) -> Result<Box<dyn RenderBackend>> {
     Ok(Box::new(DenseCpuBackend::with_threads(par.threads())))
 }
 
-fn new_xla(_par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+fn new_xla(_par: Parallelism, _opts: &BackendOptions) -> Result<Box<dyn RenderBackend>> {
     // PJRT executes through its own runtime; the CPU worker budget does
     // not apply to the device-side engine.
     Ok(Box::new(crate::runtime::XlaBackend::create()?))
@@ -229,6 +261,7 @@ fn new_xla(_par: Parallelism) -> Result<Box<dyn RenderBackend>> {
 /// with `--cfg splatonic_xla` and its load-erroring stub otherwise.
 pub const REGISTRY: &[(BackendKind, BackendCtor)] = &[
     (BackendKind::SparseCpu, new_sparse_cpu),
+    (BackendKind::SimdCpu, new_simd_cpu),
     (BackendKind::DenseCpu, new_dense_cpu),
     (BackendKind::Xla, new_xla),
 ];
@@ -238,13 +271,43 @@ pub const REGISTRY: &[(BackendKind, BackendCtor)] = &[
 /// edge** ([`Parallelism::auto`] reads `SPLATONIC_THREADS` once) and
 /// handed down, so a multi-session caller (the serving layer) can give
 /// each session a [`Parallelism::share`] of one machine-wide budget.
+/// Shorthand for [`create_backend_with`] at default [`BackendOptions`].
 pub fn create_backend(kind: BackendKind, par: Parallelism) -> Result<Box<dyn RenderBackend>> {
+    create_backend_with(kind, par, &BackendOptions::default())
+}
+
+/// [`create_backend`] with explicit construction options (lane width).
+pub fn create_backend_with(
+    kind: BackendKind,
+    par: Parallelism,
+    opts: &BackendOptions,
+) -> Result<Box<dyn RenderBackend>> {
     for (k, ctor) in REGISTRY {
         if *k == kind {
-            return ctor(par);
+            return ctor(par, opts);
         }
     }
     Err(anyhow!("backend {} is not registered", kind.name()))
+}
+
+/// The sparse-pipeline engine Splatonic variants default to. Honors a
+/// one-shot `SPLATONIC_BACKEND` override so the CI matrix (and local
+/// A/B runs) can steer every `SlamConfig::splatonic()` session onto the
+/// SIMD engine without touching configs; only sparse-pipeline kinds are
+/// accepted — anything else falls back to `sparse-cpu` (a dense/xla
+/// override would silently change the modeled hardware, and explicit
+/// config fields already cover that).
+pub fn default_sparse_backend() -> BackendKind {
+    use std::sync::OnceLock;
+    static DEFAULT: OnceLock<BackendKind> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        // detlint::allow(SPL004): resolved once per process at the config edge, like SPLATONIC_THREADS in render::auto_threads
+        match std::env::var("SPLATONIC_BACKEND").ok().as_deref().map(BackendKind::parse) {
+            Some(Ok(BackendKind::SparseCpu)) => BackendKind::SparseCpu,
+            Some(Ok(BackendKind::SimdCpu)) => BackendKind::SimdCpu,
+            _ => BackendKind::SparseCpu,
+        }
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -435,6 +498,208 @@ impl RenderBackend for SparseCpuBackend {
         };
         let mut counters = StageCounters::new();
         let bwd = backward_sparse_with(
+            store,
+            job.cam,
+            job.rcfg,
+            &self.projected,
+            &self.out,
+            pixels,
+            grads.dl_dcolor,
+            grads.dl_ddepth,
+            self.cache_gamma,
+            want.pose,
+            want.gauss,
+            &mut counters,
+            &mut self.scratch,
+        );
+        Ok(BackwardOutput { pose: bwd.pose, gauss: bwd.gauss, counters })
+    }
+}
+
+// ---------------------------------------------------------------------
+// SimdCpuBackend
+// ---------------------------------------------------------------------
+
+/// The sparse pixel pipeline on the SIMD lane kernels
+/// (`simd_pipeline`): identical algorithm and job routing to
+/// [`SparseCpuBackend`], but stage 1/2 and the backward walk run the
+/// SoA lane code. Forward output is bit-identical to the sparse session
+/// per lane width; `tests/backend_parity.rs` and
+/// `tests/parallel_determinism.rs` pin both directions.
+#[derive(Debug)]
+pub struct SimdCpuBackend {
+    scratch: SimdScratch,
+    out: SparseRender,
+    projected: Vec<Projected>,
+    /// Cached all-pixels grid for [`PixelSet::Full`] jobs, keyed by dims.
+    full_px: Option<SampledPixels>,
+    full_dims: (u32, u32),
+    /// Γ/C on-chip buffer modeling in backward — see
+    /// [`SparseCpuBackend::cache_gamma`].
+    pub cache_gamma: bool,
+    /// Shape of the last `render()` (pairs the backward call).
+    last_job: Option<SparseJobShape>,
+}
+
+impl Default for SimdCpuBackend {
+    /// Same as [`Self::new`]: Γ/C cache on, the default lane width.
+    fn default() -> Self {
+        SimdCpuBackend {
+            scratch: SimdScratch::new(),
+            out: SparseRender::default(),
+            projected: Vec::new(),
+            full_px: None,
+            full_dims: (0, 0),
+            cache_gamma: true,
+            last_job: None,
+        }
+    }
+}
+
+impl SimdCpuBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Session pinned to an explicit worker-thread count (1 forces the
+    /// sequential path; 0 = auto) at the default lane width.
+    pub fn with_threads(threads: usize) -> Self {
+        SimdCpuBackend { scratch: SimdScratch::with_threads(threads), ..Self::default() }
+    }
+
+    /// Session with an explicit kernel lane width (must be one of
+    /// [`super::simd_pipeline::SUPPORTED_LANES`]).
+    pub fn with_lanes(threads: usize, lanes: usize) -> Result<Self> {
+        Ok(SimdCpuBackend {
+            scratch: SimdScratch::with_lanes(threads, lanes)?,
+            ..Self::default()
+        })
+    }
+
+    /// The kernel lane width this session dispatches to.
+    pub fn lanes(&self) -> usize {
+        self.scratch.lanes()
+    }
+
+    fn full_pixels(&mut self, cam: &Camera) -> &SampledPixels {
+        let dims = (cam.intr.width, cam.intr.height);
+        if self.full_px.is_none() || self.full_dims != dims {
+            self.full_px = Some(SampledPixels::full_grid(dims.0, dims.1, 1));
+            self.full_dims = dims;
+        }
+        self.full_px.as_ref().unwrap()
+    }
+
+    /// Forward from a caller-held projection (benches time the lane
+    /// kernels in isolation). Returns the session's reused buffers.
+    pub fn forward_projected(
+        &mut self,
+        projected: &[Projected],
+        rcfg: &RenderConfig,
+        pixels: &SampledPixels,
+        counters: &mut StageCounters,
+    ) -> &SparseRender {
+        render_simd_projected_with(
+            projected, rcfg, pixels, counters, &mut self.scratch, &mut self.out,
+        );
+        &self.out
+    }
+
+    /// Backward over the forward state left by [`Self::forward_projected`]
+    /// (or the trait's `render()`), with an explicit projection.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_projected(
+        &mut self,
+        store: &GaussianStore,
+        cam: &Camera,
+        rcfg: &RenderConfig,
+        projected: &[Projected],
+        pixels: &SampledPixels,
+        dl_dcolor: &[Vec3],
+        dl_ddepth: &[f32],
+        want: GradRequest,
+        counters: &mut StageCounters,
+    ) -> SparseBackward {
+        backward_simd_with(
+            store,
+            cam,
+            rcfg,
+            projected,
+            &self.out,
+            pixels,
+            dl_dcolor,
+            dl_ddepth,
+            self.cache_gamma,
+            want.pose,
+            want.gauss,
+            counters,
+            &mut self.scratch,
+        )
+    }
+}
+
+impl RenderBackend for SimdCpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::SimdCpu
+    }
+
+    fn threads(&self) -> usize {
+        self.scratch.threads
+    }
+
+    fn render(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+    ) -> Result<RenderOutput<'_>> {
+        if matches!(job.pixels, PixelSet::Full) {
+            // materialize the cache before the disjoint field borrows below
+            self.full_pixels(job.cam);
+        }
+        let mut counters = StageCounters::new();
+        self.projected =
+            project_all_with(store, job.cam, job.rcfg, &mut counters, self.scratch.threads);
+        let (pixels, shape) = match job.pixels {
+            PixelSet::Sparse(px) => (px, SparseJobShape::Sparse(px.len())),
+            PixelSet::Full => (self.full_px.as_ref().unwrap(), SparseJobShape::Full),
+        };
+        render_simd_projected_with(
+            &self.projected,
+            job.rcfg,
+            pixels,
+            &mut counters,
+            &mut self.scratch,
+            &mut self.out,
+        );
+        self.last_job = Some(shape);
+        Ok(RenderOutput {
+            colors: &self.out.colors,
+            depths: &self.out.depths,
+            final_t: &self.out.final_t,
+            counters,
+        })
+    }
+
+    fn backward(
+        &mut self,
+        store: &GaussianStore,
+        job: &RenderJob<'_>,
+        grads: LossGrads<'_>,
+        want: GradRequest,
+    ) -> Result<BackwardOutput> {
+        let Some(last) = self.last_job else {
+            bail!("SimdCpuBackend::backward called before render");
+        };
+        let pixels = match (job.pixels, last) {
+            (PixelSet::Sparse(px), SparseJobShape::Sparse(n)) if px.len() == n => px,
+            (PixelSet::Full, SparseJobShape::Full) => self
+                .full_px
+                .as_ref()
+                .ok_or_else(|| anyhow!("full-frame backward without a full-frame render"))?,
+            _ => bail!("SimdCpuBackend::backward pixel set does not match the last render"),
+        };
+        let mut counters = StageCounters::new();
+        let bwd = backward_simd_with(
             store,
             job.cam,
             job.rcfg,
@@ -710,10 +975,28 @@ mod tests {
         assert_eq!(s.store_capacity(), None);
         let d = create_backend(BackendKind::DenseCpu, Parallelism::fixed(2)).unwrap();
         assert_eq!(d.kind(), BackendKind::DenseCpu);
+        let v = create_backend(BackendKind::SimdCpu, Parallelism::fixed(2)).unwrap();
+        assert_eq!(v.kind(), BackendKind::SimdCpu);
         // every construction path models the same hardware (Γ/C cache on)
         assert!(SparseCpuBackend::new().cache_gamma);
         assert!(SparseCpuBackend::default().cache_gamma);
         assert!(SparseCpuBackend::with_threads(1).cache_gamma);
+        assert!(SimdCpuBackend::new().cache_gamma);
+        assert!(SimdCpuBackend::with_threads(1).cache_gamma);
+    }
+
+    #[test]
+    fn backend_options_steer_the_simd_lane_width() {
+        let opts = BackendOptions { simd_lanes: 4 };
+        let b = create_backend_with(BackendKind::SimdCpu, Parallelism::fixed(1), &opts).unwrap();
+        assert_eq!(b.kind(), BackendKind::SimdCpu);
+        assert_eq!(SimdCpuBackend::with_lanes(1, 4).unwrap().lanes(), 4);
+        // invalid widths fail at construction, not mid-render
+        let bad = BackendOptions { simd_lanes: 5 };
+        assert!(create_backend_with(BackendKind::SimdCpu, Parallelism::fixed(1), &bad).is_err());
+        // non-simd kinds ignore the option
+        assert!(create_backend_with(BackendKind::SparseCpu, Parallelism::fixed(1), &bad).is_ok());
+        assert_eq!(BackendOptions::default().simd_lanes, super::LANES_DEFAULT);
     }
 
     #[test]
@@ -729,11 +1012,17 @@ mod tests {
 
     #[test]
     fn kind_parse_round_trip() {
-        for k in [BackendKind::SparseCpu, BackendKind::DenseCpu, BackendKind::Xla] {
+        for k in [
+            BackendKind::SparseCpu,
+            BackendKind::SimdCpu,
+            BackendKind::DenseCpu,
+            BackendKind::Xla,
+        ] {
             assert_eq!(BackendKind::parse(k.name()).unwrap(), k);
         }
         assert_eq!(BackendKind::parse("tile").unwrap(), BackendKind::DenseCpu);
         assert_eq!(BackendKind::parse("pixel").unwrap(), BackendKind::SparseCpu);
+        assert_eq!(BackendKind::parse("simd").unwrap(), BackendKind::SimdCpu);
         assert!(BackendKind::parse("quantum").is_err());
     }
 
@@ -747,6 +1036,54 @@ mod tests {
         assert!(s.backward(&store, &job, grads, GradRequest::pose()).is_err());
         let mut d = DenseCpuBackend::new();
         assert!(d.backward(&store, &job, grads, GradRequest::pose()).is_err());
+        let mut v = SimdCpuBackend::new();
+        assert!(v.backward(&store, &job, grads, GradRequest::pose()).is_err());
+    }
+
+    #[test]
+    fn simd_session_bit_matches_sparse_session() {
+        let (store, cam) = test_scene();
+        let rcfg = RenderConfig::default();
+        let px = SampledPixels::full_grid(64, 64, 4);
+        let job = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
+
+        let mut sparse = SparseCpuBackend::new();
+        let mut simd = SimdCpuBackend::new();
+        let (ref_colors, ref_t, n) = {
+            let out = sparse.render(&store, &job).unwrap();
+            (out.colors.to_vec(), out.final_t.to_vec(), out.colors.len())
+        };
+        {
+            let out = simd.render(&store, &job).unwrap();
+            assert!(out.counters.simd_lanes_total > 0);
+            for i in 0..n {
+                assert_eq!(out.colors[i], ref_colors[i], "color px {i}");
+                assert_eq!(out.final_t[i].to_bits(), ref_t[i].to_bits(), "final_t px {i}");
+            }
+        }
+
+        // paired backward produces the same pose gradient as the sparse
+        // session (single thread ⇒ same accumulation order per pixel)
+        let dldc = vec![Vec3::splat(1.0); n];
+        let dldd = vec![0.1f32; n];
+        let grads = LossGrads { dl_dcolor: &dldc, dl_ddepth: &dldd };
+        let ps = sparse
+            .backward(&store, &job, grads, GradRequest::pose())
+            .unwrap()
+            .pose
+            .unwrap()
+            .flatten();
+        let pv = simd
+            .backward(&store, &job, grads, GradRequest::pose())
+            .unwrap()
+            .pose
+            .unwrap()
+            .flatten();
+        for k in 0..7 {
+            let d = (ps[k] - pv[k]).abs();
+            let tol = 1e-4 * ps[k].abs().max(1.0);
+            assert!(d <= tol, "pose grad {k}: sparse {} vs simd {}", ps[k], pv[k]);
+        }
     }
 
     #[test]

@@ -41,6 +41,14 @@ pub struct StageCounters {
     /// over pixels; pixel pipeline is Gaussian-parallel and dense).
     pub warp_lanes_active: u64,
     pub warp_lanes_total: u64,
+    /// CPU SIMD lane occupancy of the `SimdCpuBackend` kernels: active
+    /// lane-slots vs. issued lane-slots across stage-1 α-check batches,
+    /// stage-2 composite steps, and backward walk steps. **Telemetry,
+    /// never fed to the sim models** — stage-2/backward grouping follows
+    /// the hit-balanced block partition, so these two (and only these)
+    /// counters may vary with the thread count. Zero on other backends.
+    pub simd_lanes_active: u64,
+    pub simd_lanes_total: u64,
 
     // ---- backward ----
     /// Pixel–Gaussian pairs α-checked in reverse rasterization.
@@ -104,6 +112,8 @@ impl StageCounters {
             raster_exp_evals,
             warp_lanes_active,
             warp_lanes_total,
+            simd_lanes_active,
+            simd_lanes_total,
             bwd_pairs_iterated,
             bwd_pairs_integrated,
             bwd_exp_evals,

@@ -1,20 +1,34 @@
 //! Differentiable 3D Gaussian splatting renderer.
 //!
-//! Two complete pipelines, mirroring the paper (Fig. 3 vs Fig. 13):
+//! Three complete pipelines — the paper's two (Fig. 3 vs Fig. 13) plus a
+//! SIMD realization of the sparse one — packaged as **four backends**
+//! behind the [`backend::RenderBackend`] trait:
 //!
-//! * [`tile_pipeline`] — the conventional **tile-based** pipeline used by
-//!   all 3DGS systems (and by the GPU/GSArch/GauSPU baselines): tile-level
-//!   projection + binning, per-tile depth sort, per-pixel rasterization
-//!   with α-checking inside the inner loop (the source of warp
-//!   divergence), reverse rasterization with atomic gradient aggregation.
-//! * [`pixel_pipeline`] — Splatonic's **pixel-based** pipeline: pixel-level
-//!   projection with *preemptive α-checking* and BBox direct indexing,
-//!   per-pixel depth sort, Gaussian-parallel rasterization, and a backward
-//!   pass that reuses cached per-pixel transmittance (the paper's Γ/C
-//!   on-chip buffer).
+//! * [`backend::SparseCpuBackend`] over [`pixel_pipeline`] — Splatonic's
+//!   **pixel-based** pipeline: pixel-level projection with *preemptive
+//!   α-checking* and BBox direct indexing, per-pixel depth sort,
+//!   Gaussian-parallel rasterization, and a backward pass that reuses
+//!   cached per-pixel transmittance (the paper's Γ/C on-chip buffer).
+//! * [`backend::SimdCpuBackend`] over [`simd_pipeline`] — the same sparse
+//!   algorithm restructured for data parallelism: splats packed once per
+//!   frame into a structure-of-arrays arena, stage-1 α-checking and
+//!   stage-2 compositing/backward executed as fixed-width f32 lane
+//!   kernels (stable Rust, LLVM-auto-vectorized) with a masked scalar
+//!   tail. Forward output is bit-identical to `SparseCpu` per lane width.
+//! * [`backend::DenseCpuBackend`] over [`tile_pipeline`] — the
+//!   conventional **tile-based** pipeline used by all 3DGS systems (and
+//!   by the GPU/GSArch/GauSPU baselines): tile-level projection +
+//!   binning, per-tile depth sort, per-pixel rasterization with
+//!   α-checking inside the inner loop (the source of warp divergence),
+//!   reverse rasterization with atomic gradient aggregation.
+//! * `XlaBackend` ([`crate::runtime`]) — PJRT-executed AOT artifacts
+//!   behind the `splatonic_xla` cfg; the default build registers a stub
+//!   that errors at construction.
 //!
-//! Both pipelines produce *bit-identical work streams* to what the timing
+//! All pipelines produce *bit-identical work streams* to what the timing
 //! simulators consume: every stage increments [`counters::StageCounters`].
+//! (The `simd_lanes_*` occupancy counters are backend telemetry, not sim
+//! inputs.)
 //!
 //! **Every hot stage of both pipelines is multi-threaded** under one
 //! determinism contract — output is bit-identical at any thread count
@@ -31,8 +45,9 @@
 //! (the `SPLATONIC_THREADS` env var), or the per-session
 //! `with_threads(n)` constructors. The full contract — chunk-order
 //! merges, `total_cmp` float sorts, env resolved once at the
-//! [`Parallelism`] edge — is catalogued in `docs/DETERMINISM.md` and
-//! statically enforced by `cargo run -p detlint` (rules SPL001–SPL004).
+//! [`Parallelism`] edge, fixed-lane-width SIMD bit-identity — is
+//! catalogued in `docs/DETERMINISM.md` and statically enforced by
+//! `cargo run -p detlint` (rules SPL001–SPL004).
 //!
 //! Callers do not drive the pipelines directly: [`backend`] packages each
 //! one as a [`backend::RenderBackend`] **session** with an explicit
@@ -59,11 +74,13 @@ pub mod counters;
 pub mod image;
 pub mod pixel_pipeline;
 pub mod projection;
+pub mod simd_pipeline;
 pub mod tile_pipeline;
 
 pub use backend::{
-    create_backend, BackendKind, BackwardOutput, DenseCpuBackend, GradRequest, LossGrads,
-    PixelSet, RenderBackend, RenderJob, RenderOutput, SparseCpuBackend,
+    create_backend, create_backend_with, default_sparse_backend, BackendKind, BackendOptions,
+    BackwardOutput, DenseCpuBackend, GradRequest, LossGrads, PixelSet, RenderBackend, RenderJob,
+    RenderOutput, SimdCpuBackend, SparseCpuBackend,
 };
 pub use backward_geom::{geometry_backward, Grad2d, GaussianGrads, PoseGrad};
 pub use counters::StageCounters;
@@ -72,6 +89,7 @@ pub use pixel_pipeline::{
     HitLists, PixelHit, RenderScratch, SampleGrid, SampledPixels, SparseBackward, SparseRender,
 };
 pub use projection::Projected;
+pub use simd_pipeline::{SimdScratch, SoaSplats, LANES_DEFAULT, SUPPORTED_LANES};
 pub use tile_pipeline::{DenseBackward, DenseRender, DenseScratch, TileLists};
 
 /// Worker-thread count for the parallel render stages: the

@@ -405,44 +405,8 @@ pub fn render_sparse_projected_with(
     };
 
     // -- CSR build: count -> prefix-sum -> fill -------------------------
-    scratch.counts.clear();
-    scratch.counts.resize(n_px, 0);
-    for buf in &scratch.hit_bufs[..used_bufs] {
-        for &(px, _) in buf.iter() {
-            scratch.counts[px as usize] += 1;
-        }
-    }
-    let lists = &mut out.lists;
-    lists.starts.clear();
-    lists.starts.reserve(n_px + 1);
-    lists.starts.push(0);
-    let mut acc = 0u32;
-    for &c in &scratch.counts {
-        acc += c;
-        lists.starts.push(acc);
-    }
-    let total = acc as usize;
-    // grow-only: every slot in [0, total) is overwritten by the scatter
-    // below (the cursor ranges tile the arena exactly), so shrinking
-    // renders just truncate instead of rewriting the whole arena
-    if lists.entries.len() < total {
-        lists
-            .entries
-            .resize(total, PixelHit { proj: 0, alpha: 0.0, depth: 0.0, t_before: 1.0 });
-    } else {
-        lists.entries.truncate(total);
-    }
-    lists.lens.clear();
-    lists.lens.resize(n_px, 0);
-    // counts become write cursors
-    scratch.counts.copy_from_slice(&lists.starts[..n_px]);
-    for buf in &scratch.hit_bufs[..used_bufs] {
-        for &(px, hit) in buf.iter() {
-            let cur = &mut scratch.counts[px as usize];
-            lists.entries[*cur as usize] = hit;
-            *cur += 1;
-        }
-    }
+    let total =
+        scatter_csr(&scratch.hit_bufs[..used_bufs], n_px, &mut scratch.counts, &mut out.lists);
 
     // -- stage 2: per-pixel (depth, proj) sort + Gaussian-parallel
     //    rasterization over hit-balanced pixel ranges -------------------
@@ -518,6 +482,83 @@ pub fn render_sparse_projected_with(
     }
 }
 
+/// CSR build shared by the scalar and SIMD stage-1 paths: count each
+/// pixel's hits across the per-thread buffers, prefix-sum into `starts`,
+/// then scatter the buffer-order entries into the flat arena. Buffer
+/// order is (thread block, emission order) — deterministic for a fixed
+/// thread count — and the per-pixel `(depth, proj)` sort downstream makes
+/// the composite independent of it entirely. Returns the total hit count.
+pub(crate) fn scatter_csr(
+    hit_bufs: &[Vec<(u32, PixelHit)>],
+    n_px: usize,
+    counts: &mut Vec<u32>,
+    lists: &mut HitLists,
+) -> usize {
+    counts.clear();
+    counts.resize(n_px, 0);
+    for buf in hit_bufs {
+        for &(px, _) in buf.iter() {
+            counts[px as usize] += 1;
+        }
+    }
+    lists.starts.clear();
+    lists.starts.reserve(n_px + 1);
+    lists.starts.push(0);
+    let mut acc = 0u32;
+    for &c in counts.iter() {
+        acc += c;
+        lists.starts.push(acc);
+    }
+    let total = acc as usize;
+    // grow-only: every slot in [0, total) is overwritten by the scatter
+    // below (the cursor ranges tile the arena exactly), so shrinking
+    // renders just truncate instead of rewriting the whole arena
+    if lists.entries.len() < total {
+        lists
+            .entries
+            .resize(total, PixelHit { proj: 0, alpha: 0.0, depth: 0.0, t_before: 1.0 });
+    } else {
+        lists.entries.truncate(total);
+    }
+    lists.lens.clear();
+    lists.lens.resize(n_px, 0);
+    // counts become write cursors
+    counts.copy_from_slice(&lists.starts[..n_px]);
+    for buf in hit_bufs {
+        for &(px, hit) in buf.iter() {
+            let cur = &mut counts[px as usize];
+            lists.entries[*cur as usize] = hit;
+            *cur += 1;
+        }
+    }
+    total
+}
+
+/// α-check one (Gaussian, sample) candidate: count it, evaluate α at the
+/// pixel center, append a hit when it clears α*. Both stage-1 paths — the
+/// scalar walk in [`alpha_check_range`] and the SIMD pipeline's masked
+/// scalar tail (`simd_pipeline`) — share this one body, so a candidate's
+/// fate can never depend on which path inspected it.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn alpha_check_one(
+    p: &Projected,
+    pi: u32,
+    sample: u32,
+    px: Vec2,
+    cfg: &RenderConfig,
+    lut: Option<&ExpLut>,
+    buf: &mut Vec<(u32, PixelHit)>,
+    counters: &mut StageCounters,
+) {
+    counters.proj_bbox_candidates += 1;
+    counters.proj_alpha_checks += 1;
+    let (alpha, _) = p.alpha_at(px, cfg, lut);
+    if alpha >= cfg.alpha_thresh {
+        buf.push((sample, PixelHit { proj: pi, alpha, depth: p.depth, t_before: 1.0 }));
+    }
+}
+
 /// Stage-1 worker: α-check Gaussians `[start, end)` against the sampled
 /// pixels inside their bounding box, appending survivors to `buf`.
 #[allow(clippy::too_many_arguments)]
@@ -548,29 +589,13 @@ fn alpha_check_range(
                 let reg = grid.grid_idx[cell];
                 // regular sample of this cell
                 if reg >= 0 {
-                    counters.proj_bbox_candidates += 1;
-                    counters.proj_alpha_checks += 1;
                     let px = pixels.coords[reg as usize];
-                    let (alpha, _) = p.alpha_at(px, cfg, lut);
-                    if alpha >= cfg.alpha_thresh {
-                        buf.push((
-                            reg as u32,
-                            PixelHit { proj: pi as u32, alpha, depth: p.depth, t_before: 1.0 },
-                        ));
-                    }
+                    alpha_check_one(p, pi as u32, reg as u32, px, cfg, lut, buf, counters);
                 }
                 // extra (unseen) samples bucketed in this cell
                 for &ei in &grid.extra_cells[cell] {
-                    counters.proj_bbox_candidates += 1;
-                    counters.proj_alpha_checks += 1;
                     let px = pixels.coords[ei as usize];
-                    let (alpha, _) = p.alpha_at(px, cfg, lut);
-                    if alpha >= cfg.alpha_thresh {
-                        buf.push((
-                            ei,
-                            PixelHit { proj: pi as u32, alpha, depth: p.depth, t_before: 1.0 },
-                        ));
-                    }
+                    alpha_check_one(p, pi as u32, ei, px, cfg, lut, buf, counters);
                 }
             }
         }

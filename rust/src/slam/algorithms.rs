@@ -12,7 +12,8 @@
 use super::loss::LossCfg;
 use super::mapping::MappingConfig;
 use super::tracking::TrackingConfig;
-use crate::render::backend::BackendKind;
+use crate::render::backend::{default_sparse_backend, BackendKind};
+use crate::render::simd_pipeline::{LANES_DEFAULT, SUPPORTED_LANES};
 use crate::sampling::{MappingSamplerConfig, TrackingStrategy};
 
 /// The evaluated 3DGS-SLAM algorithms.
@@ -49,6 +50,11 @@ pub struct SlamConfig {
     pub tracking: TrackingConfig,
     pub mapping: MappingConfig,
     pub seed: u64,
+    /// Kernel lane width for `simd-cpu` backend sessions (one of
+    /// `render::simd_pipeline::SUPPORTED_LANES`; other backends ignore
+    /// it). A config knob — not an env read — so the width is part of
+    /// the checkpoint config fingerprint.
+    pub simd_lanes: usize,
 }
 
 impl SlamConfig {
@@ -73,7 +79,9 @@ impl SlamConfig {
                 lr_t: 2e-3 * lr_scale,
                 tile: 16,
                 strategy: TrackingStrategy::Random,
-                backend: BackendKind::SparseCpu,
+                // sparse pixel pipeline; `SPLATONIC_BACKEND=simd` steers
+                // every splatonic session onto the SIMD lane kernels
+                backend: default_sparse_backend(),
                 full_frame: false,
                 loss: track_loss,
                 max_step_norm: 5.0,
@@ -83,9 +91,11 @@ impl SlamConfig {
                 iters: map_iters,
                 sampler: MappingSamplerConfig::default(),
                 loss: map_loss,
+                backend: default_sparse_backend(),
                 ..Default::default()
             },
             seed: 7,
+            simd_lanes: LANES_DEFAULT,
         }
     }
 
@@ -143,6 +153,13 @@ impl SlamConfig {
                  use variant=splatonic/org+s with backend=xla, or a CPU backend"
             );
         }
+        if !SUPPORTED_LANES.contains(&self.simd_lanes) {
+            anyhow::bail!(
+                "simd_lanes = {} is not a compiled kernel width (supported: {:?})",
+                self.simd_lanes,
+                SUPPORTED_LANES
+            );
+        }
         Ok(())
     }
 }
@@ -171,7 +188,14 @@ mod tests {
     fn variant_backends() {
         let a = Algorithm::SplaTam;
         let splatonic = SlamConfig::splatonic(a);
-        assert_eq!(splatonic.tracking.backend, BackendKind::SparseCpu);
+        // the env-steerable sparse default: sparse-cpu, or simd-cpu
+        // under SPLATONIC_BACKEND=simd (the CI matrix sets it)
+        assert_eq!(splatonic.tracking.backend, default_sparse_backend());
+        assert_eq!(splatonic.mapping.backend, default_sparse_backend());
+        assert!(matches!(
+            splatonic.tracking.backend,
+            BackendKind::SparseCpu | BackendKind::SimdCpu
+        ));
         assert!(!splatonic.tracking.full_frame);
         let org_s = SlamConfig::org_s(a);
         assert_eq!(org_s.tracking.backend, BackendKind::DenseCpu);
@@ -198,6 +222,17 @@ mod tests {
         cfg.tracking.full_frame = false;
         cfg.mapping.backend = BackendKind::SparseCpu;
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn bad_lane_width_rejected_at_validate() {
+        let mut cfg = SlamConfig::splatonic(Algorithm::SplaTam);
+        assert_eq!(cfg.simd_lanes, LANES_DEFAULT);
+        assert!(cfg.validate().is_ok());
+        cfg.simd_lanes = 4;
+        assert!(cfg.validate().is_ok());
+        cfg.simd_lanes = 6;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

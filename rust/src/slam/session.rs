@@ -54,7 +54,7 @@ use crate::dataset::{Frame, SyntheticDataset};
 use crate::gaussian::{Adam, AdamConfig, GaussianStore};
 use crate::map_share::ShardHandle;
 use crate::math::{Pcg32, Se3};
-use crate::render::backend::{create_backend, BackendKind, RenderBackend};
+use crate::render::backend::{create_backend_with, BackendKind, BackendOptions, RenderBackend};
 use crate::render::backward_geom::GaussianGrads;
 use crate::render::{Parallelism, RenderConfig, StageCounters};
 use anyhow::{anyhow, bail, Context, Result};
@@ -171,9 +171,10 @@ impl SlamSession {
     /// infallible.
     pub fn create(cfg: SlamConfig, intr: Intrinsics, par: Parallelism) -> Result<Self> {
         cfg.validate()?;
-        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let opts = BackendOptions { simd_lanes: cfg.simd_lanes };
+        let track_backend = create_backend_with(cfg.tracking.backend, par, &opts)?;
         let mapping = MappingExec::Inline {
-            backend: create_backend(cfg.mapping.backend, par)?,
+            backend: create_backend_with(cfg.mapping.backend, par, &opts)?,
             adam: Adam::new(0, AdamConfig::default()),
         };
         Ok(Self::assemble(cfg, intr, track_backend, mapping))
@@ -192,7 +193,8 @@ impl SlamSession {
         par: Parallelism,
     ) -> Result<Self> {
         cfg.validate()?;
-        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let opts = BackendOptions { simd_lanes: cfg.simd_lanes };
+        let track_backend = create_backend_with(cfg.tracking.backend, par, &opts)?;
         // capacity-bounded tracking engines (fixed-G AOT artifacts) cap
         // map growth — same headroom rule as inline mapping
         let worker = MappingWorker::spawn(
@@ -200,6 +202,7 @@ impl SlamSession {
             track_backend.store_capacity(),
             intr,
             par,
+            opts,
         )?;
         Ok(Self::assemble(cfg, intr, track_backend, MappingExec::Worker(worker)))
     }
@@ -218,9 +221,10 @@ impl SlamSession {
         handle: ShardHandle,
     ) -> Result<Self> {
         cfg.validate()?;
-        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let opts = BackendOptions { simd_lanes: cfg.simd_lanes };
+        let track_backend = create_backend_with(cfg.tracking.backend, par, &opts)?;
         let mapping = MappingExec::Shared {
-            backend: create_backend(cfg.mapping.backend, par)?,
+            backend: create_backend_with(cfg.mapping.backend, par, &opts)?,
             handle,
         };
         Ok(Self::assemble(cfg, intr, track_backend, mapping))
@@ -635,10 +639,11 @@ impl SlamSession {
         handle: Option<ShardHandle>,
     ) -> Result<Self> {
         cfg.validate()?;
-        let track_backend = create_backend(cfg.tracking.backend, par)?;
+        let opts = BackendOptions { simd_lanes: cfg.simd_lanes };
+        let track_backend = create_backend_with(cfg.tracking.backend, par, &opts)?;
         let mapping = match (handle, state.adam) {
             (Some(handle), None) => MappingExec::Shared {
-                backend: create_backend(cfg.mapping.backend, par)?,
+                backend: create_backend_with(cfg.mapping.backend, par, &opts)?,
                 handle,
             },
             (None, Some(adam)) => {
@@ -652,7 +657,7 @@ impl SlamSession {
                     );
                 }
                 MappingExec::Inline {
-                    backend: create_backend(cfg.mapping.backend, par)?,
+                    backend: create_backend_with(cfg.mapping.backend, par, &opts)?,
                     adam,
                 }
             }
@@ -839,6 +844,7 @@ impl MappingWorker {
         track_capacity: Option<usize>,
         intr: Intrinsics,
         par: Parallelism,
+        opts: BackendOptions,
     ) -> Result<Self> {
         let shared = Arc::new(MapShared {
             state: Mutex::new(MapState {
@@ -855,7 +861,7 @@ impl MappingWorker {
         let worker_shared = Arc::clone(&shared);
         let map_kind: BackendKind = map_cfg.backend;
         let handle = std::thread::spawn(move || -> Result<MapWorkerOutcome> {
-            let mut backend = match create_backend(map_kind, par) {
+            let mut backend = match create_backend_with(map_kind, par, &opts) {
                 Ok(b) => {
                     ready_tx.send(Ok(())).ok();
                     b

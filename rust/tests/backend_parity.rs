@@ -1,10 +1,11 @@
-//! Backend parity: the two CPU [`RenderBackend`] sessions implement the
+//! Backend parity: the CPU [`RenderBackend`] sessions implement the
 //! *same math* on different work streams. Rendering a full-resolution
 //! `SampleGrid` through `SparseCpuBackend` must agree per-pixel with the
 //! dense tile pipeline behind `DenseCpuBackend` (within float tolerance),
-//! and the counted work must be plausible: the sparse pipeline's
-//! preemptive α-checking does no more pair work than the tile pipeline's
-//! in-loop α-checking.
+//! the SIMD lane kernels behind `SimdCpuBackend` must agree with the
+//! sparse session bit-for-bit on the forward pass, and the counted work
+//! must be plausible: the sparse pipeline's preemptive α-checking does
+//! no more pair work than the tile pipeline's in-loop α-checking.
 
 use splatonic::camera::Camera;
 use splatonic::dataset::{Flavor, SyntheticDataset};
@@ -12,7 +13,7 @@ use splatonic::math::Vec3;
 use splatonic::render::pixel_pipeline::SampledPixels;
 use splatonic::render::{
     create_backend, BackendKind, DenseCpuBackend, GradRequest, LossGrads, Parallelism, PixelSet,
-    RenderBackend, RenderConfig, RenderJob, SparseCpuBackend, StageCounters,
+    RenderBackend, RenderConfig, RenderJob, SimdCpuBackend, SparseCpuBackend, StageCounters,
 };
 
 struct Captured {
@@ -153,6 +154,95 @@ fn backward_pose_and_gaussian_gradients_agree_across_backends() {
             gs[k],
             gd[k]
         );
+    }
+}
+
+#[test]
+fn simd_backend_matches_sparse_backend() {
+    // the ISSUE's parity bound is ≤1e-4 per pixel; the lane kernels are
+    // written expression-identical to the scalar walk, so we can pin the
+    // stronger property — forward bit-identity — plus equal integrated
+    // pair counts (the sim-model inputs)
+    let (data, cam) = setup();
+    let rcfg = RenderConfig::default();
+    let px = SampledPixels::full_grid(data.intr.width, data.intr.height, 2);
+    let job = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
+
+    let mut sparse = create_backend(BackendKind::SparseCpu, Parallelism::auto()).unwrap();
+    let mut simd = create_backend(BackendKind::SimdCpu, Parallelism::auto()).unwrap();
+    let s = {
+        let out = sparse.render(&data.gt_store, &job).unwrap();
+        Captured {
+            colors: out.colors.to_vec(),
+            depths: out.depths.to_vec(),
+            final_t: out.final_t.to_vec(),
+            counters: out.counters,
+        }
+    };
+    let v = {
+        let out = simd.render(&data.gt_store, &job).unwrap();
+        Captured {
+            colors: out.colors.to_vec(),
+            depths: out.depths.to_vec(),
+            final_t: out.final_t.to_vec(),
+            counters: out.counters,
+        }
+    };
+    assert_eq!(s.colors.len(), v.colors.len());
+    for i in 0..s.colors.len() {
+        assert_eq!(s.colors[i], v.colors[i], "pixel {i} color");
+        assert_eq!(s.depths[i].to_bits(), v.depths[i].to_bits(), "pixel {i} depth");
+        assert_eq!(s.final_t[i].to_bits(), v.final_t[i].to_bits(), "pixel {i} final_t");
+    }
+    // identical algorithmic work counts — only the lane-occupancy
+    // telemetry is simd-specific
+    assert_eq!(s.counters.proj_alpha_checks, v.counters.proj_alpha_checks);
+    assert_eq!(s.counters.proj_bbox_candidates, v.counters.proj_bbox_candidates);
+    assert_eq!(s.counters.raster_pairs_integrated, v.counters.raster_pairs_integrated);
+    assert_eq!(s.counters.sort_pairs, v.counters.sort_pairs);
+    assert_eq!(s.counters.simd_lanes_total, 0, "scalar backend must not touch lane telemetry");
+    assert!(v.counters.simd_lanes_total > 0);
+    assert!(v.counters.simd_lanes_active <= v.counters.simd_lanes_total);
+}
+
+#[test]
+fn simd_backward_gradients_agree_with_sparse_backend() {
+    // backward accumulates in lane order instead of hit order, so the
+    // contract is tolerance equality (the same 1e-3 budget the
+    // cross-thread-count contract uses), pinned at 1 thread to isolate
+    // the lane-order difference.
+    let (data, cam) = setup();
+    let rcfg = RenderConfig::default();
+    let px = SampledPixels::full_grid(data.intr.width, data.intr.height, 2);
+    let n = px.len();
+    let dldc: Vec<Vec3> = (0..n)
+        .map(|i| Vec3::new(0.2 + 0.02 * (i % 3) as f32, 0.3, 0.1 + 0.01 * (i % 5) as f32))
+        .collect();
+    let dldd: Vec<f32> = (0..n).map(|i| 0.05 * ((i % 4) as f32)).collect();
+    let job = RenderJob { cam: &cam, pixels: PixelSet::Sparse(&px), rcfg: &rcfg, frame: None };
+
+    let run = |mut backend: Box<dyn RenderBackend>| {
+        backend.render(&data.gt_store, &job).unwrap();
+        let bwd = backend
+            .backward(
+                &data.gt_store,
+                &job,
+                LossGrads { dl_dcolor: &dldc, dl_ddepth: &dldd },
+                GradRequest::both(),
+            )
+            .unwrap();
+        (bwd.pose.expect("pose grad").flatten(), bwd.gauss.expect("gauss grads").flatten())
+    };
+    let (ps, gs) = run(Box::new(SparseCpuBackend::with_threads(1)));
+    let (pv, gv) = run(Box::new(SimdCpuBackend::with_threads(1)));
+    for k in 0..7 {
+        let tol = 1e-3 * (1.0 + ps[k].abs());
+        assert!((ps[k] - pv[k]).abs() < tol, "pose {k}: sparse {} vs simd {}", ps[k], pv[k]);
+    }
+    assert_eq!(gs.len(), gv.len());
+    for k in 0..gs.len() {
+        let tol = 1e-3 * (1.0 + gs[k].abs());
+        assert!((gs[k] - gv[k]).abs() < tol, "gauss grad {k}: sparse {} vs simd {}", gs[k], gv[k]);
     }
 }
 

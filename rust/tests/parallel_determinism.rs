@@ -5,6 +5,13 @@
 //!   order (depth, proj), so colors/depths/final_t/lists cannot depend on
 //!   the thread count, and per-thread `StageCounters` merge to the exact
 //!   sequential totals;
+//! * **SIMD lane pipeline** — the lane kernels reuse the scalar
+//!   pipeline's chunk partition and block merge order, and every lane
+//!   evaluates the scalar arithmetic term-for-term, so for a fixed lane
+//!   width the forward output is bit-identical at any thread count (and,
+//!   in this implementation, bit-identical to the scalar pipeline at
+//!   *every* compiled width). Only the `simd_lanes_*` telemetry follows
+//!   the stage-2 block partition and is zeroed before comparing;
 //! * **dense tile pipeline** — binning's chunk-order CSR fill plus the
 //!   per-tile (depth, proj) sort make the tile lists thread-count
 //!   invariant, tile-row raster bands write disjoint pixels, and the
@@ -40,6 +47,9 @@ use splatonic::render::pixel_pipeline::{
     SparseRender, PARALLEL_GAUSSIANS, PARALLEL_HITS,
 };
 use splatonic::render::projection::project_all;
+use splatonic::render::simd_pipeline::{
+    backward_simd_with, render_simd_projected_with, SimdScratch, SUPPORTED_LANES,
+};
 use splatonic::render::tile_pipeline::{
     backward_dense_with, render_dense_projected_with, DenseRender, DenseScratch,
 };
@@ -189,6 +199,193 @@ fn threaded_backward_matches_sequential_counters_and_grads() {
     for k in 0..7 {
         let tol = 1e-3 * (1.0 + p1[k].abs());
         assert!((p1[k] - p4[k]).abs() <= tol, "pose grad {k}: {} vs {}", p1[k], p4[k]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// SIMD lane pipeline
+// ---------------------------------------------------------------------
+
+fn simd_render_with(s: &Setup, threads: usize, lanes: usize) -> (SparseRender, StageCounters) {
+    let mut scratch = SimdScratch::with_lanes(threads, lanes).unwrap();
+    let mut out = SparseRender::default();
+    let mut c = StageCounters::new();
+    render_simd_projected_with(&s.projected, &s.cfg, &s.px, &mut c, &mut scratch, &mut out);
+    (out, c)
+}
+
+/// `simd_lanes_active`/`simd_lanes_total` follow the stage-2/backward
+/// block partition, so they are thread-count-variant *telemetry* by
+/// documented design (never simulator inputs). Zero them before
+/// demanding exact counter equality across thread counts.
+fn strip_lane_telemetry(mut c: StageCounters) -> StageCounters {
+    c.simd_lanes_active = 0;
+    c.simd_lanes_total = 0;
+    c
+}
+
+fn assert_sparse_renders_bit_identical(a: &SparseRender, b: &SparseRender, tag: &str) {
+    assert_eq!(a.colors.len(), b.colors.len(), "{tag}: pixel count");
+    for i in 0..a.colors.len() {
+        assert_eq!(
+            a.colors[i].x.to_bits(),
+            b.colors[i].x.to_bits(),
+            "{tag}: color.x bits differ at pixel {i}"
+        );
+        assert_eq!(a.colors[i].y.to_bits(), b.colors[i].y.to_bits(), "{tag}: pixel {i}");
+        assert_eq!(a.colors[i].z.to_bits(), b.colors[i].z.to_bits(), "{tag}: pixel {i}");
+        assert_eq!(a.depths[i].to_bits(), b.depths[i].to_bits(), "{tag}: depth {i}");
+        assert_eq!(a.final_t[i].to_bits(), b.final_t[i].to_bits(), "{tag}: final_t {i}");
+        assert_eq!(a.walk_len[i], b.walk_len[i], "{tag}: walk_len {i}");
+        let (la, lb) = (&a.lists[i], &b.lists[i]);
+        assert_eq!(la.len(), lb.len(), "{tag}: list length differs at pixel {i}");
+        for (ha, hb) in la.iter().zip(lb.iter()) {
+            assert_eq!(ha.proj, hb.proj, "{tag}: hit order at pixel {i}");
+            assert_eq!(ha.alpha.to_bits(), hb.alpha.to_bits(), "{tag}: alpha at pixel {i}");
+            assert_eq!(ha.depth.to_bits(), hb.depth.to_bits(), "{tag}: hit depth at pixel {i}");
+            assert_eq!(ha.t_before.to_bits(), hb.t_before.to_bits(), "{tag}: Γ at pixel {i}");
+        }
+    }
+}
+
+#[test]
+fn threaded_simd_forward_is_bit_identical_to_sequential() {
+    let s = setup();
+    for lanes in SUPPORTED_LANES {
+        let (seq, c_seq) = simd_render_with(&s, 1, lanes);
+        assert!(
+            seq.lists.total_hits() >= PARALLEL_HITS,
+            "scene must cross the stage-2 parallel threshold: {} < {PARALLEL_HITS}",
+            seq.lists.total_hits()
+        );
+        assert!(c_seq.simd_lanes_total > 0, "lane kernels never engaged at width {lanes}");
+        assert!(c_seq.simd_lanes_active <= c_seq.simd_lanes_total);
+        for threads in [2usize, 4, 7] {
+            let (par, c_par) = simd_render_with(&s, threads, lanes);
+            assert_eq!(
+                strip_lane_telemetry(c_seq),
+                strip_lane_telemetry(c_par),
+                "counters diverge at {threads} threads, {lanes} lanes"
+            );
+            let tag = format!("simd lanes={lanes} threads={threads}");
+            assert_sparse_renders_bit_identical(&seq, &par, &tag);
+        }
+        // stronger than the per-lane-width clause requires: each lane
+        // evaluates the scalar arithmetic term-for-term, so every
+        // compiled width reproduces the scalar pipeline bit-for-bit
+        let (scalar, _) = render_with_threads(&s, 1);
+        assert_sparse_renders_bit_identical(&scalar, &seq, &format!("simd-vs-scalar lanes={lanes}"));
+    }
+}
+
+#[test]
+fn threaded_simd_backward_matches_sequential_counters_and_grads() {
+    let s = setup();
+    let (render, _) = simd_render_with(&s, 1, 8);
+    assert!(
+        render.lists.total_hits() >= s.projected.len(),
+        "scene must amortize the parallel backward: {} live hits < {} projected",
+        render.lists.total_hits(),
+        s.projected.len()
+    );
+    let dldc: Vec<Vec3> = (0..render.colors.len())
+        .map(|i| Vec3::new(0.1 + (i % 3) as f32 * 0.05, 0.2, 0.15))
+        .collect();
+    let dldd: Vec<f32> = (0..render.colors.len()).map(|i| 0.02 * ((i % 5) as f32)).collect();
+
+    let run = |threads: usize, lanes: usize| {
+        let mut scratch = SimdScratch::with_lanes(threads, lanes).unwrap();
+        let mut c = StageCounters::new();
+        let bwd = backward_simd_with(
+            &s.store, &s.cam, &s.cfg, &s.projected, &render, &s.px, &dldc, &dldd, true,
+            true, true, &mut c, &mut scratch,
+        );
+        (bwd, c)
+    };
+    let (b1, c1) = run(1, 8);
+    let (b4, c4) = run(4, 8);
+    // per-hit work counters are additive across threads: exact equality
+    // once the schedule-dependent lane telemetry is zeroed
+    assert_eq!(strip_lane_telemetry(c1), strip_lane_telemetry(c4));
+    assert!(c1.simd_lanes_total > 0, "backward lane kernels never engaged");
+    // float accumulation order differs across partitions; gradients must
+    // agree to accumulation tolerance
+    for (g1, g4) in b1.grad2d.iter().zip(b4.grad2d.iter()) {
+        let scale = 1.0 + g1.mean2d.norm() + g1.color.norm() + g1.opacity.abs();
+        assert!((g1.mean2d - g4.mean2d).norm() <= 1e-3 * scale);
+        assert!((g1.color - g4.color).norm() <= 1e-3 * scale);
+        assert!((g1.opacity - g4.opacity).abs() <= 1e-3 * scale);
+    }
+    let p1 = b1.pose.unwrap().flatten();
+    let p4 = b4.pose.unwrap().flatten();
+    for k in 0..7 {
+        let tol = 1e-3 * (1.0 + p1[k].abs());
+        assert!((p1[k] - p4[k]).abs() <= tol, "pose grad {k}: {} vs {}", p1[k], p4[k]);
+    }
+    // the lane width changes only the pixel-interleaved accumulation
+    // order within a block, never the per-hit math: a width-4 backward
+    // agrees with width-8 to the same accumulation tolerance
+    let (bn, _) = run(1, 4);
+    for (g8, gn) in b1.grad2d.iter().zip(bn.grad2d.iter()) {
+        let scale = 1.0 + g8.mean2d.norm() + g8.color.norm() + g8.opacity.abs();
+        assert!((g8.mean2d - gn.mean2d).norm() <= 1e-3 * scale);
+        assert!((g8.color - gn.color).norm() <= 1e-3 * scale);
+        assert!((g8.opacity - gn.opacity).abs() <= 1e-3 * scale);
+    }
+}
+
+#[test]
+fn simd_masked_tail_is_deterministic_for_ragged_counts() {
+    // 10_003 Gaussians: not a multiple of any compiled lane width. The
+    // stage-1 tail keys off each Gaussian's *candidate-pixel* count, so
+    // with arbitrary bbox sizes nearly every Gaussian ends in a masked
+    // scalar tail — the remainder path must uphold the same contract
+    let mut rng = Pcg32::new(0xfeed);
+    let store = big_store(10_003, &mut rng);
+    let cam = Camera::new(
+        Intrinsics::replica_like(160, 120),
+        Se3::new(Quat::from_axis_angle(Vec3::Y, 0.04), Vec3::new(0.02, -0.01, 0.05)),
+    );
+    let cfg = RenderConfig::default();
+    let mut c = StageCounters::new();
+    let projected = project_all(&store, &cam, &cfg, &mut c);
+    assert!(!projected.is_empty(), "scene culled to nothing");
+    let s = Setup { store, cam, projected, px: SampledPixels::full_grid(160, 120, 4), cfg };
+    let (scalar, _) = render_with_threads(&s, 1);
+    for lanes in SUPPORTED_LANES {
+        for threads in [1usize, 3] {
+            let (simd, _) = simd_render_with(&s, threads, lanes);
+            let tag = format!("ragged lanes={lanes} threads={threads}");
+            assert_sparse_renders_bit_identical(&scalar, &simd, &tag);
+        }
+    }
+}
+
+#[test]
+fn simd_sub_lane_hit_lists_are_deterministic() {
+    // a 5-Gaussian scene: every per-pixel hit list is shorter than the
+    // narrowest lane width and the frame sits under both parallel
+    // thresholds, so stage 2's masked lanes and the sequential fallback
+    // carry the whole frame
+    let mut rng = Pcg32::new(0x0515);
+    let store = big_store(5, &mut rng);
+    let cam = Camera::new(Intrinsics::replica_like(64, 48), Se3::default());
+    let cfg = RenderConfig::default();
+    let mut c = StageCounters::new();
+    let projected = project_all(&store, &cam, &cfg, &mut c);
+    assert!(!projected.is_empty(), "scene culled to nothing");
+    let s = Setup { store, cam, projected, px: SampledPixels::full_grid(64, 48, 1), cfg };
+    let (scalar, _) = render_with_threads(&s, 1);
+    assert!(
+        scalar.lists.total_hits() > 0 && scalar.walk_len.iter().all(|&n| n < 8),
+        "every hit list must be sub-lane for this test to bite"
+    );
+    for lanes in SUPPORTED_LANES {
+        for threads in [1usize, 4] {
+            let (simd, _) = simd_render_with(&s, threads, lanes);
+            let tag = format!("sub-lane lanes={lanes} threads={threads}");
+            assert_sparse_renders_bit_identical(&scalar, &simd, &tag);
+        }
     }
 }
 
